@@ -1,0 +1,91 @@
+//! End-to-end driver: proves all three layers compose on a real workload.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_validation
+//! ```
+//!
+//! 1. **Three-way agreement** — the Table-I-shaped 49-pt stencil
+//!    (rx = ry = 12, 96x96) computed by (a) the PJRT-executed JAX/Pallas
+//!    artifact, (b) the native Rust oracle and (c) the CGRA cycle
+//!    simulator must agree to ~1e-12.
+//! 2. **Workload run** — 200 steps of 5-point heat diffusion on a 96x96
+//!    plate driven through the 4-tile coordinator, with the residual
+//!    curve logged and the final state checked against the *fused*
+//!    200-step JAX artifact (`heat2d_run200_96x96` — §IV temporal
+//!    locality on the XLA side).
+//!
+//! The run is recorded in EXPERIMENTS.md.
+
+use anyhow::Result;
+use stencil_cgra::cgra::Machine;
+use stencil_cgra::coordinator::Coordinator;
+use stencil_cgra::runtime::Runtime;
+use stencil_cgra::stencil::spec::{symmetric_taps, y_taps};
+use stencil_cgra::stencil::StencilSpec;
+use stencil_cgra::util::rng::XorShift;
+use stencil_cgra::verify::golden::{max_abs_diff, run_sim, stencil2d_ref};
+
+fn main() -> Result<()> {
+    let machine = Machine::paper();
+    let mut rt = Runtime::open(Runtime::default_dir())?;
+    println!("== e2e validation (PJRT platform: {}) ==\n", rt.platform());
+
+    // ---- Part 1: three-way agreement on the 49-pt stencil ----
+    let spec = StencilSpec::dim2(96, 96, symmetric_taps(12), y_taps(12))?;
+    let mut rng = XorShift::new(0xE2E);
+    let x = rng.normal_vec(96 * 96);
+
+    let t0 = std::time::Instant::now();
+    let pjrt = rt.execute("stencil2d_r12_96x96", &[&x, &spec.cx, &spec.cy])?;
+    let t_pjrt = t0.elapsed();
+    let oracle = stencil2d_ref(&x, &spec);
+    let sim = run_sim(&spec, 4, &machine, &x)?;
+
+    let d1 = max_abs_diff(&pjrt, &oracle);
+    let d2 = max_abs_diff(&sim.output, &oracle);
+    let d3 = max_abs_diff(&sim.output, &pjrt);
+    println!("49-pt stencil, 96x96:");
+    println!("  L1/L2 (pallas via PJRT) vs native oracle: {d1:.2e}");
+    println!("  L3 (CGRA simulator)     vs native oracle: {d2:.2e}");
+    println!("  simulator vs PJRT:                        {d3:.2e}");
+    assert!(d1 < 1e-11 && d2 < 1e-11 && d3 < 1e-11, "layer disagreement");
+    println!("  simulator: {} cycles; PJRT exec: {:.1} ms\n", sim.stats.cycles,
+        t_pjrt.as_secs_f64() * 1e3);
+
+    // ---- Part 2: 200-step heat diffusion through the coordinator ----
+    let (nx, ny, alpha, steps) = (96usize, 96usize, 0.2, 200usize);
+    let heat = StencilSpec::heat2d(nx, ny, alpha);
+    let mut x0 = vec![0.0f64; nx * ny];
+    x0[48 * 96 + 48] = 100.0;
+
+    let coord = Coordinator::new(4, machine.clone());
+    let t1 = std::time::Instant::now();
+    let (final_grid, reports) = coord.run_steps(&heat, 4, &x0, steps)?;
+    let wall = t1.elapsed().as_secs_f64();
+
+    // Residual curve (log every 25 steps).
+    let mut prev = x0.clone();
+    println!("heat diffusion, {nx}x{ny}, {steps} steps on 4 tiles:");
+    for (i, rep) in reports.iter().enumerate() {
+        let res = max_abs_diff(&rep.output, &prev);
+        prev = rep.output.clone();
+        if i % 25 == 0 || i == steps - 1 {
+            println!("  step {i:>3}: residual {res:.4e}, {:.0} GFLOPS", rep.gflops);
+        }
+    }
+
+    // Validate against the FUSED 200-step JAX artifact (one XLA
+    // while-loop — §IV temporal locality at the L2 layer).
+    let fused = rt.execute("heat2d_run200_96x96", &[&x0])?;
+    let d = max_abs_diff(&final_grid, &fused);
+    println!("\ncoordinator(200 x 1-step) vs fused JAX run200: max|err| = {d:.2e}");
+    assert!(d < 1e-10, "temporal drift: {d:.3e}");
+
+    let total_cycles: u64 = reports.iter().map(|r| r.makespan_cycles).sum();
+    let gflops = heat.total_flops() * steps as f64 * machine.clock_ghz / total_cycles as f64;
+    println!(
+        "sustained {gflops:.1} GFLOPS over {steps} steps ({total_cycles} cycles; wall {wall:.1}s)"
+    );
+    println!("\ne2e_validation OK — all layers compose");
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! Quickstart: the paper's running example (§III-A) — a 3-point 1-D
+//! stencil mapped onto the CGRA with 3 workers.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Builds the dataflow graph (readers, filters, MAC chains, writers,
+//! sync), simulates it cycle by cycle, verifies the numerics against the
+//! native oracle and prints the §VIII-style report.
+
+use anyhow::Result;
+use stencil_cgra::cgra::{Machine, Simulator};
+use stencil_cgra::dfg::dot::to_dot;
+use stencil_cgra::roofline;
+use stencil_cgra::stencil::{map1d, StencilSpec};
+use stencil_cgra::util::rng::XorShift;
+use stencil_cgra::verify::golden::{max_abs_diff, stencil1d_ref};
+
+fn main() -> Result<()> {
+    // The (2rx+1)-point stencil of Fig 1 with rx = 1.
+    let n = 4096;
+    let spec = StencilSpec::dim1(n, vec![0.25, 0.5, 0.25])?;
+    let machine = Machine::paper();
+    let workers = 3; // the paper's w = 3 walkthrough
+
+    println!("== stencil-cgra quickstart: 3-pt 1-D stencil, w = {workers} ==\n");
+
+    // 1. Map: stencil -> dataflow graph (§III-A).
+    let graph = map1d::build(&spec, workers)?;
+    println!("DFG: {}", graph.summary());
+    let hist = graph.op_histogram();
+    println!(
+        "     {} MUL, {} MAC, {} filters, {} loads, {} stores",
+        hist[&stencil_cgra::dfg::Op::Mul],
+        hist[&stencil_cgra::dfg::Op::Mac],
+        hist[&stencil_cgra::dfg::Op::Filter],
+        hist[&stencil_cgra::dfg::Op::Load],
+        hist[&stencil_cgra::dfg::Op::Store],
+    );
+
+    // Optional: write the Graphviz rendering (Fig 5-style).
+    std::fs::write("/tmp/quickstart_dfg.dot", to_dot(&graph, "3-pt 1D, 3 workers"))?;
+    println!("     dot written to /tmp/quickstart_dfg.dot\n");
+
+    // 2. Roofline (§VI): is this workload bandwidth- or compute-bound?
+    let a = roofline::analyze(&spec, &machine, workers);
+    println!(
+        "roofline: AI = {:.2} flops/byte -> attainable {:.0} GFLOPS (peak {:.0})",
+        a.arithmetic_intensity, a.attainable_gflops, a.peak_gflops
+    );
+
+    // 3. Simulate (§VIII): functional + timing in one run.
+    let mut rng = XorShift::new(2024);
+    let input = rng.normal_vec(n);
+    let res = Simulator::build(graph, &machine, input.clone(), input.clone())?.run()?;
+
+    // 4. Verify against the native oracle.
+    let want = stencil1d_ref(&input, &spec.cx);
+    let err = max_abs_diff(&res.output, &want);
+    println!("\nsimulated {} cycles, max|err| vs oracle = {err:.2e}", res.stats.cycles);
+    assert!(err < 1e-12);
+
+    let gflops = res.gflops(spec.total_flops(), machine.clock_ghz);
+    println!(
+        "achieved {gflops:.1} GFLOPS = {:.0}% of the {:.0} GFLOPS roofline",
+        100.0 * gflops / a.attainable_gflops,
+        a.attainable_gflops
+    );
+    println!("stats: {}", res.stats.summary());
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,157 @@
+"""AOT pipeline: lower the L2 model (with L1 Pallas kernels inlined) to HLO
+*text* artifacts the Rust runtime loads via the ``xla`` crate.
+
+HLO text — NOT ``lowered.compile()`` or serialized ``HloModuleProto`` — is
+the interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+that xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Run from ``python/``:  ``python -m compile.aot --outdir ../artifacts``
+
+Emits one ``<name>.hlo.txt`` per variant plus ``manifest.txt`` with the
+pipe-separated schema the Rust `runtime::artifact` parser reads:
+
+    name|file|dtype|in0:shape,in1:shape,...|out_shape
+
+Shapes are `x`-separated dims; scalars are `s`.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float64):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shape_str(shape) -> str:
+    return "x".join(str(d) for d in shape) if shape else "s"
+
+
+class Variant:
+    """One AOT artifact: a jit-lowerable fn + its example input specs."""
+
+    def __init__(self, name, fn, in_specs, out_shape, dtype="f64"):
+        self.name = name
+        self.fn = fn
+        self.in_specs = in_specs
+        self.out_shape = out_shape
+        self.dtype = dtype
+
+    def lower_text(self) -> str:
+        return to_hlo_text(jax.jit(self.fn).lower(*self.in_specs))
+
+    def manifest_line(self) -> str:
+        ins = ",".join(_shape_str(s.shape) for s in self.in_specs)
+        return "|".join(
+            [self.name, f"{self.name}.hlo.txt", self.dtype, ins,
+             _shape_str(self.out_shape)]
+        )
+
+
+def build_variants() -> list[Variant]:
+    f64 = jnp.float64
+    vs: list[Variant] = []
+
+    def s1d(name, n, r, block_w=None):
+        fn = lambda x, c: model.stencil1d(x, c, block_w=block_w)  # noqa: E731
+        vs.append(Variant(name, fn, [_spec((n,), f64), _spec((2 * r + 1,), f64)], (n,)))
+
+    def s2d(name, h, w, rx, ry):
+        fn = model.stencil2d
+        vs.append(
+            Variant(
+                name,
+                fn,
+                [_spec((h, w), f64), _spec((2 * rx + 1,), f64), _spec((2 * ry,), f64)],
+                (h, w),
+            )
+        )
+
+    # Small fast-loading validation artifacts.
+    s1d("stencil1d_r1_n256", 256, 1)
+    s1d("stencil1d_r8_n4096", 4096, 8)
+    s2d("stencil2d_r2_64x64", 64, 64, 2, 2)
+    # Table-I shaped (49-pt, rx=ry=12) on a compact grid for PJRT checks.
+    s2d("stencil2d_r12_96x96", 96, 96, 12, 12)
+    # Full Table-I 1D grid (17-pt, rx=8, n=194400).
+    s1d("stencil1d_r8_n194400", 194400, 8, block_w=8192)
+
+    # Heat diffusion: single step + a fused 200-step run (IV temporal
+    # locality: one while-loop, I/O only at the boundary).
+    vs.append(
+        Variant(
+            "heat2d_step_96x96",
+            lambda x: model.heat2d_step(x, 0.2),
+            [_spec((96, 96), f64)],
+            (96, 96),
+        )
+    )
+    vs.append(
+        Variant(
+            "heat2d_run200_96x96",
+            lambda x: model.heat2d_run(x, 200, 0.2),
+            [_spec((96, 96), f64)],
+            (96, 96),
+        )
+    )
+    # Pure-jnp reference artifact: lets the Rust side check pallas-vs-ref
+    # through PJRT as well.
+    vs.append(
+        Variant(
+            "stencil2d_ref_r12_96x96",
+            model.stencil2d_reference,
+            [_spec((96, 96), f64), _spec((25,), f64), _spec((24,), f64)],
+            (96, 96),
+        )
+    )
+    return vs
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated variant names")
+    args = ap.parse_args()
+
+    os.makedirs(args.outdir, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+    manifest = []
+    for v in build_variants():
+        if only and v.name not in only:
+            continue
+        text = v.lower_text()
+        path = os.path.join(args.outdir, f"{v.name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(v.manifest_line())
+        print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+    with open(os.path.join(args.outdir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest)} artifacts to {args.outdir}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

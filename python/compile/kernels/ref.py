@@ -1,0 +1,78 @@
+"""Pure-jnp correctness oracles for the star-stencil kernels.
+
+These mirror the accumulation order of the paper's MAC chains exactly
+(III-A / III-B): the x contribution is a left-to-right chain over taps
+``k = -rx .. +rx`` (MUL on the first tap, MACs after), the y contribution is
+a left-to-right chain over ``k = -ry .. +ry, k != 0`` (the centre tap
+belongs to the x chain), and the final output is ``x_partial + y_partial``.
+The Pallas kernels, the Rust native oracle and the CGRA simulator all use
+the same order so f64 comparisons can use tight tolerances.
+
+Boundary semantics: only interior points (``rx <= i < n - rx`` per
+dimension) are stencil-computed; boundary points are copied from the input
+(Dirichlet boundary), matching the data-drop filters of Fig 6 which keep
+each MUL/MAC silent outside its valid range.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def stencil1d_ref(x: jnp.ndarray, coeffs: jnp.ndarray) -> jnp.ndarray:
+    """(2r+1)-point 1D star stencil, interior-only, boundary copied.
+
+    ``out[i] = sum_k coeffs[k] * x[i - r + k]`` accumulated left-to-right.
+    """
+    n = x.shape[0]
+    taps = coeffs.shape[0]
+    r = (taps - 1) // 2
+    assert taps == 2 * r + 1, "coeffs must have odd length"
+    m = n - 2 * r  # number of interior outputs
+    acc = coeffs[0] * x[0:m]
+    for k in range(1, taps):
+        acc = acc + coeffs[k] * x[k : k + m]
+    return x.at[r : n - r].set(acc)
+
+
+def stencil2d_ref(
+    x: jnp.ndarray, cx: jnp.ndarray, cy: jnp.ndarray
+) -> jnp.ndarray:
+    """(2rx+1 + 2ry)-point 2D star stencil (Fig 8 / Fig 9 generalised).
+
+    ``cx`` has ``2*rx + 1`` taps (includes the centre), ``cy`` has
+    ``2*ry`` taps (centre excluded — it is counted once, in the x chain),
+    ordered ``j-ry, .., j-1, j+1, .., j+ry``.
+    """
+    h, w = x.shape
+    rx = (cx.shape[0] - 1) // 2
+    ry = cy.shape[0] // 2
+    assert cx.shape[0] == 2 * rx + 1
+    assert cy.shape[0] == 2 * ry
+    mh = h - 2 * ry
+    mw = w - 2 * rx
+    # x chain over the interior rows.
+    acc = cx[0] * x[ry : ry + mh, 0:mw]
+    for k in range(1, 2 * rx + 1):
+        acc = acc + cx[k] * x[ry : ry + mh, k : k + mw]
+    # y chain: taps j-ry .. j-1 then j+1 .. j+ry.
+    for t in range(2 * ry):
+        k = t if t < ry else t + 1  # skip the centre row offset ry
+        acc = acc + cy[t] * x[k : k + mh, rx : rx + mw]
+    return x.at[ry : h - ry, rx : w - rx].set(acc)
+
+
+def heat2d_coeffs(alpha: float = 0.2):
+    """5-point Jacobi heat-diffusion coefficients (rx = ry = 1).
+
+    ``out = (1 - 4a) * c + a * (n + s + e + w)`` expressed as star-stencil
+    coefficient vectors for :func:`stencil2d_ref`.
+    """
+    cx = jnp.array([alpha, 1.0 - 4.0 * alpha, alpha])
+    cy = jnp.array([alpha, alpha])
+    return cx, cy
+
+
+def heat2d_step_ref(x: jnp.ndarray, alpha: float = 0.2) -> jnp.ndarray:
+    cx, cy = heat2d_coeffs(alpha)
+    return stencil2d_ref(x, cx.astype(x.dtype), cy.astype(x.dtype))

@@ -1,0 +1,165 @@
+"""L1 — Pallas star-stencil kernels (interpret=True for CPU-PJRT).
+
+Hardware adaptation of the paper's CGRA mapping (DESIGN.md
+Hardware-Adaptation): the CGRA keeps ``2*ry`` rows of the input resident in
+PE queues so every grid point is loaded from memory exactly once and reused
+``2*r`` times; here the same schedule is expressed as a *halo'd VMEM block*
+— each Pallas grid step brings an ``(block_h + 2*ry, block_w + 2*rx)`` tile
+of the input into kernel-local memory once and all taps read it from there.
+The ``block_w`` knob is the strip width of III-B "Blocking" (strip mining).
+
+All kernels accumulate in the exact MAC-chain order of the paper (see
+``ref.py``), so kernel == oracle bit-for-bit in f64 up to fused-multiply
+differences (we use separate mul+add, matching the simulator).
+
+Kernels are lowered with ``interpret=True``: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default VMEM budget used to size blocks (16 MiB, a TPU-core-like figure).
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def vmem_bytes_2d(block_h: int, block_w: int, rx: int, ry: int, itemsize: int) -> int:
+    """Bytes resident per grid step: halo'd input tile + output tile."""
+    in_tile = (block_h + 2 * ry) * (block_w + 2 * rx) * itemsize
+    out_tile = block_h * block_w * itemsize
+    return in_tile + out_tile
+
+
+def choose_block_2d(
+    mh: int, mw: int, rx: int, ry: int, itemsize: int, budget: int = VMEM_BUDGET_BYTES
+) -> tuple[int, int]:
+    """Pick (block_h, block_w) fitting ``budget``, preferring full-width
+    strips (the paper streams whole rows and strip-mines only when the row
+    does not fit on-fabric)."""
+    block_h = max(1, min(mh, 8 * max(1, ry)))
+    block_w = mw
+    while vmem_bytes_2d(block_h, block_w, rx, ry, itemsize) > budget and block_w > 16:
+        block_w = max(16, block_w // 2)
+    while vmem_bytes_2d(block_h, block_w, rx, ry, itemsize) > budget and block_h > 1:
+        block_h = max(1, block_h // 2)
+    return block_h, block_w
+
+
+def _stencil1d_kernel(x_ref, c_ref, o_ref, *, r: int, block_w: int):
+    """One strip of the 1D interior: out[i] = sum_k c[k] * x[i + k]."""
+    i = pl.program_id(0)
+    base = i * block_w
+    xs = x_ref[pl.ds(base, block_w + 2 * r)]
+    acc = c_ref[0] * xs[0:block_w]
+    for k in range(1, 2 * r + 1):
+        acc = acc + c_ref[k] * xs[k : k + block_w]
+    o_ref[...] = acc
+
+
+def stencil1d_interior(
+    x: jnp.ndarray, coeffs: jnp.ndarray, *, block_w: int | None = None
+) -> jnp.ndarray:
+    """Interior of the (2r+1)-point 1D stencil via a Pallas kernel.
+
+    Returns the ``n - 2r`` interior outputs; the caller applies boundary
+    semantics (see ``model.py``).
+    """
+    n = x.shape[0]
+    taps = coeffs.shape[0]
+    r = (taps - 1) // 2
+    assert taps == 2 * r + 1 and taps >= 3, "coeffs must have odd length >= 3"
+    m = n - 2 * r
+    assert m >= 1, "grid smaller than stencil"
+    if block_w is None:
+        block_w = min(m, 4096)
+    block_w = min(block_w, m)
+    grid = _ceil_div(m, block_w)
+    m_pad = grid * block_w
+    # Pad so the last strip's halo'd load stays in range.
+    x_pad = jnp.pad(x, (0, m_pad - m))
+    out = pl.pallas_call(
+        functools.partial(_stencil1d_kernel, r=r, block_w=block_w),
+        grid=(grid,),
+        out_shape=jax.ShapeDtypeStruct((m_pad,), x.dtype),
+        out_specs=pl.BlockSpec((block_w,), lambda i: (i,)),
+        interpret=True,
+    )(x_pad, coeffs)
+    return out[0:m]
+
+
+def _stencil2d_kernel(
+    x_ref, cx_ref, cy_ref, o_ref, *, rx: int, ry: int, block_h: int, block_w: int
+):
+    """One (block_h, block_w) tile of the 2D star-stencil interior.
+
+    Loads the halo'd input tile once (the VMEM analogue of the paper's
+    mandatory 2*ry-row buffering), then runs the x chain followed by the
+    y chain in the canonical order.
+    """
+    bi = pl.program_id(0)
+    bj = pl.program_id(1)
+    base_h = bi * block_h
+    base_w = bj * block_w
+    xs = x_ref[pl.ds(base_h, block_h + 2 * ry), pl.ds(base_w, block_w + 2 * rx)]
+    # x chain (2*rx + 1 taps, includes centre).
+    acc = cx_ref[0] * xs[ry : ry + block_h, 0:block_w]
+    for k in range(1, 2 * rx + 1):
+        acc = acc + cx_ref[k] * xs[ry : ry + block_h, k : k + block_w]
+    # y chain (2*ry taps, centre excluded).
+    for t in range(2 * ry):
+        k = t if t < ry else t + 1
+        acc = acc + cy_ref[t] * xs[k : k + block_h, rx : rx + block_w]
+    o_ref[...] = acc
+
+
+def stencil2d_interior(
+    x: jnp.ndarray,
+    cx: jnp.ndarray,
+    cy: jnp.ndarray,
+    *,
+    block_h: int | None = None,
+    block_w: int | None = None,
+) -> jnp.ndarray:
+    """Interior of the 2D star stencil via a Pallas kernel.
+
+    ``cx``: 2*rx+1 taps (with centre); ``cy``: 2*ry taps (without centre).
+    Returns the ``(h - 2*ry, w - 2*rx)`` interior block.
+    """
+    h, w = x.shape
+    rx = (cx.shape[0] - 1) // 2
+    ry = cy.shape[0] // 2
+    assert cx.shape[0] == 2 * rx + 1 and rx >= 1
+    assert cy.shape[0] == 2 * ry and ry >= 1
+    mh = h - 2 * ry
+    mw = w - 2 * rx
+    assert mh >= 1 and mw >= 1, "grid smaller than stencil"
+    if block_h is None or block_w is None:
+        bh, bw = choose_block_2d(mh, mw, rx, ry, x.dtype.itemsize)
+        block_h = block_h or bh
+        block_w = block_w or bw
+    block_h = min(block_h, mh)
+    block_w = min(block_w, mw)
+    gh = _ceil_div(mh, block_h)
+    gw = _ceil_div(mw, block_w)
+    mh_pad = gh * block_h
+    mw_pad = gw * block_w
+    x_pad = jnp.pad(x, ((0, mh_pad - mh), (0, mw_pad - mw)))
+    out = pl.pallas_call(
+        functools.partial(
+            _stencil2d_kernel, rx=rx, ry=ry, block_h=block_h, block_w=block_w
+        ),
+        grid=(gh, gw),
+        out_shape=jax.ShapeDtypeStruct((mh_pad, mw_pad), x.dtype),
+        out_specs=pl.BlockSpec((block_h, block_w), lambda i, j: (i, j)),
+        interpret=True,
+    )(x_pad, cx, cy)
+    return out[0:mh, 0:mw]

@@ -1,0 +1,85 @@
+"""L2 — JAX compute graph for the star-stencil workloads.
+
+Full-grid semantics on top of the L1 Pallas kernels: interior points are
+stencil-computed, boundary points keep their input values (Dirichlet), the
+same contract the Rust CGRA simulator and the native oracle implement.
+
+Every public function here is jit-compatible and is what ``aot.py`` lowers
+to HLO text for the Rust runtime. Python never runs on the request path:
+these functions execute exactly once per artifact, at build time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import stencil as K
+from .kernels import ref as R
+
+
+def stencil1d(
+    x: jnp.ndarray, coeffs: jnp.ndarray, *, block_w: int | None = None
+) -> jnp.ndarray:
+    """(2r+1)-point 1D star stencil over the full grid (boundary copied)."""
+    taps = coeffs.shape[0]
+    r = (taps - 1) // 2
+    interior = K.stencil1d_interior(x, coeffs, block_w=block_w)
+    return x.at[r : x.shape[0] - r].set(interior)
+
+
+def stencil2d(
+    x: jnp.ndarray,
+    cx: jnp.ndarray,
+    cy: jnp.ndarray,
+    *,
+    block_h: int | None = None,
+    block_w: int | None = None,
+) -> jnp.ndarray:
+    """2D star stencil over the full grid (boundary ring copied)."""
+    rx = (cx.shape[0] - 1) // 2
+    ry = cy.shape[0] // 2
+    interior = K.stencil2d_interior(x, cx, cy, block_h=block_h, block_w=block_w)
+    h, w = x.shape
+    return x.at[ry : h - ry, rx : w - rx].set(interior)
+
+
+def heat2d_step(x: jnp.ndarray, alpha: float = 0.2) -> jnp.ndarray:
+    """One 5-point Jacobi heat-diffusion step (rx = ry = 1)."""
+    cx, cy = R.heat2d_coeffs(alpha)
+    return stencil2d(x, cx.astype(x.dtype), cy.astype(x.dtype))
+
+
+def heat2d_run(x: jnp.ndarray, steps: int, alpha: float = 0.2) -> jnp.ndarray:
+    """``steps`` fused heat-diffusion steps in a single XLA while-loop.
+
+    This is the temporal-locality workload of IV: all intermediate grids
+    stay on-device; I/O happens only at the loop boundary.
+    """
+    return jax.lax.fori_loop(0, steps, lambda _, g: heat2d_step(g, alpha), x)
+
+
+def heat2d_run_with_residual(
+    x: jnp.ndarray, steps: int, alpha: float = 0.2
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Heat run that also returns max |Δ| of the final step (convergence)."""
+    final = heat2d_run(x, steps, alpha)
+    nxt = heat2d_step(final, alpha)
+    return final, jnp.max(jnp.abs(nxt - final))
+
+
+# ---------------------------------------------------------------------------
+# Reference (pure-jnp) variants — used by the tests and lowered alongside the
+# Pallas versions so the Rust side can cross-check kernel-vs-ref *through
+# PJRT* too, not only in pytest.
+# ---------------------------------------------------------------------------
+
+
+def stencil1d_reference(x: jnp.ndarray, coeffs: jnp.ndarray) -> jnp.ndarray:
+    return R.stencil1d_ref(x, coeffs)
+
+
+def stencil2d_reference(
+    x: jnp.ndarray, cx: jnp.ndarray, cy: jnp.ndarray
+) -> jnp.ndarray:
+    return R.stencil2d_ref(x, cx, cy)

@@ -1,0 +1,167 @@
+"""Kernel-vs-ref allclose — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, radii, block sizes and dtypes of the Pallas
+kernels against the pure-jnp oracle in ``ref.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels import ref as R
+from compile.kernels import stencil as K
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# 1D
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,r", [(16, 1), (64, 2), (256, 8), (1000, 12)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_stencil1d_matches_ref(n, r, dtype):
+    g = rng(n * 31 + r)
+    x = jnp.asarray(g.standard_normal(n), dtype=dtype)
+    c = jnp.asarray(g.standard_normal(2 * r + 1), dtype=dtype)
+    got = K.stencil1d_interior(x, c)
+    want = R.stencil1d_ref(x, c)[r : n - r]
+    tol = 1e-12 if dtype == jnp.float64 else 1e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+def test_stencil1d_boundary_copied():
+    g = rng(7)
+    x = jnp.asarray(g.standard_normal(64))
+    c = jnp.asarray(g.standard_normal(5))  # r = 2
+    from compile import model
+
+    out = model.stencil1d(x, c)
+    np.testing.assert_array_equal(np.asarray(out[:2]), np.asarray(x[:2]))
+    np.testing.assert_array_equal(np.asarray(out[-2:]), np.asarray(x[-2:]))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(min_value=8, max_value=300),
+    r=st.integers(min_value=1, max_value=3),
+    block_w=st.integers(min_value=1, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_stencil1d_hypothesis(n, r, block_w, seed):
+    if n - 2 * r < 1:
+        return
+    g = rng(seed)
+    x = jnp.asarray(g.standard_normal(n))
+    c = jnp.asarray(g.standard_normal(2 * r + 1))
+    got = K.stencil1d_interior(x, c, block_w=block_w)
+    want = R.stencil1d_ref(x, c)[r : n - r]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12, atol=1e-12)
+
+
+def test_stencil1d_identity_coeffs():
+    # coeffs = delta at centre → interior equals input interior.
+    x = jnp.arange(32.0)
+    c = jnp.array([0.0, 1.0, 0.0])
+    got = K.stencil1d_interior(x, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x[1:-1]))
+
+
+def test_stencil1d_block_not_dividing():
+    g = rng(3)
+    x = jnp.asarray(g.standard_normal(101))
+    c = jnp.asarray(g.standard_normal(3))
+    got = K.stencil1d_interior(x, c, block_w=17)  # 99 not divisible by 17
+    want = R.stencil1d_ref(x, c)[1:-1]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# 2D
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "h,w,rx,ry",
+    [(8, 8, 1, 1), (16, 24, 2, 1), (32, 32, 2, 2), (64, 48, 4, 4), (96, 96, 12, 12)],
+)
+def test_stencil2d_matches_ref(h, w, rx, ry):
+    g = rng(h * 1000 + w * 10 + rx + ry)
+    x = jnp.asarray(g.standard_normal((h, w)))
+    cx = jnp.asarray(g.standard_normal(2 * rx + 1))
+    cy = jnp.asarray(g.standard_normal(2 * ry))
+    got = K.stencil2d_interior(x, cx, cy)
+    want = R.stencil2d_ref(x, cx, cy)[ry : h - ry, rx : w - rx]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(min_value=6, max_value=48),
+    w=st.integers(min_value=6, max_value=48),
+    rx=st.integers(min_value=1, max_value=2),
+    ry=st.integers(min_value=1, max_value=2),
+    bh=st.integers(min_value=1, max_value=16),
+    bw=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_stencil2d_hypothesis(h, w, rx, ry, bh, bw, seed):
+    if h - 2 * ry < 1 or w - 2 * rx < 1:
+        return
+    g = rng(seed)
+    x = jnp.asarray(g.standard_normal((h, w)))
+    cx = jnp.asarray(g.standard_normal(2 * rx + 1))
+    cy = jnp.asarray(g.standard_normal(2 * ry))
+    got = K.stencil2d_interior(x, cx, cy, block_h=bh, block_w=bw)
+    want = R.stencil2d_ref(x, cx, cy)[ry : h - ry, rx : w - rx]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-11, atol=1e-11)
+
+
+def test_stencil2d_f32():
+    g = rng(11)
+    x = jnp.asarray(g.standard_normal((24, 24)), dtype=jnp.float32)
+    cx = jnp.asarray(g.standard_normal(5), dtype=jnp.float32)
+    cy = jnp.asarray(g.standard_normal(4), dtype=jnp.float32)
+    got = K.stencil2d_interior(x, cx, cy)
+    want = R.stencil2d_ref(x, cx, cy)[2:-2, 2:-2]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_stencil2d_separable_equals_two_1d_passes():
+    """x-only coefficients (cy = 0) reduce to a row-wise 1D stencil."""
+    g = rng(13)
+    x = jnp.asarray(g.standard_normal((12, 40)))
+    cx = jnp.asarray(g.standard_normal(3))
+    cy = jnp.zeros(2)
+    got = K.stencil2d_interior(x, cx, cy)
+    rows = [R.stencil1d_ref(x[j], cx)[1:-1] for j in range(1, 11)]
+    np.testing.assert_allclose(np.asarray(got), np.stack(rows), rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# VMEM sizing knobs
+# ---------------------------------------------------------------------------
+
+
+def test_choose_block_fits_budget():
+    bh, bw = K.choose_block_2d(425, 936, 12, 12, 8)
+    assert K.vmem_bytes_2d(bh, bw, 12, 12, 8) <= K.VMEM_BUDGET_BYTES
+    assert 1 <= bh <= 425 and 1 <= bw <= 936
+
+
+def test_choose_block_prefers_full_width_when_it_fits():
+    bh, bw = K.choose_block_2d(62, 62, 1, 1, 8)
+    assert bw == 62  # row streaming, no strip mining needed
+
+
+def test_vmem_bytes_monotone_in_radius():
+    a = K.vmem_bytes_2d(8, 128, 1, 1, 8)
+    b = K.vmem_bytes_2d(8, 128, 12, 12, 8)
+    assert b > a

@@ -1,0 +1,104 @@
+"""L2 model semantics: full-grid boundary handling, heat diffusion physics,
+temporal fusion, and jit-lowering sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import model
+from compile.kernels import ref as R
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+def test_stencil2d_full_grid_boundary_ring():
+    g = rng(5)
+    x = jnp.asarray(g.standard_normal((20, 30)))
+    cx = jnp.asarray(g.standard_normal(5))  # rx=2
+    cy = jnp.asarray(g.standard_normal(2))  # ry=1
+    out = model.stencil2d(x, cx, cy)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(x[0]))
+    np.testing.assert_array_equal(np.asarray(out[-1]), np.asarray(x[-1]))
+    np.testing.assert_array_equal(np.asarray(out[:, :2]), np.asarray(x[:, :2]))
+    np.testing.assert_array_equal(np.asarray(out[:, -2:]), np.asarray(x[:, -2:]))
+
+
+def test_heat2d_step_matches_physics():
+    """out = (1-4a)c + a(n+s+e+w) for an interior point."""
+    g = rng(9)
+    x = jnp.asarray(g.standard_normal((8, 8)))
+    a = 0.2
+    out = model.heat2d_step(x, a)
+    j, i = 3, 4
+    want = (1 - 4 * a) * x[j, i] + a * (x[j - 1, i] + x[j + 1, i] + x[j, i - 1] + x[j, i + 1])
+    assert abs(float(out[j, i]) - float(want)) < 1e-12
+
+
+def test_heat2d_conserves_with_uniform_field():
+    x = jnp.full((16, 16), 3.5)
+    out = model.heat2d_run(x, 10, 0.2)
+    np.testing.assert_allclose(np.asarray(out), 3.5, rtol=1e-12)
+
+
+def test_heat2d_hotspot_diffuses_and_is_stable():
+    x = jnp.zeros((32, 32)).at[16, 16].set(100.0)
+    out = model.heat2d_run(x, 50, 0.2)
+    o = np.asarray(out)
+    assert o[16, 16] < 100.0  # peak decays
+    assert o.max() <= 100.0 + 1e-9  # maximum principle (stable alpha)
+    assert o[12, 16] > 0.0  # heat spread
+
+
+def test_heat2d_run_equals_iterated_steps():
+    g = rng(21)
+    x = jnp.asarray(g.standard_normal((12, 12)))
+    fused = model.heat2d_run(x, 5, 0.2)
+    step = x
+    for _ in range(5):
+        step = model.heat2d_step(step, 0.2)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(step), rtol=1e-12)
+
+
+def test_heat2d_residual_decreases():
+    x = jnp.zeros((24, 24)).at[12, 12].set(1.0)
+    _, r10 = model.heat2d_run_with_residual(x, 10, 0.2)
+    _, r100 = model.heat2d_run_with_residual(x, 100, 0.2)
+    assert float(r100) < float(r10)
+
+
+def test_model_matches_pure_ref_full_grid():
+    g = rng(33)
+    x = jnp.asarray(g.standard_normal((40, 40)))
+    cx = jnp.asarray(g.standard_normal(7))
+    cy = jnp.asarray(g.standard_normal(6))
+    got = model.stencil2d(x, cx, cy)
+    want = R.stencil2d_ref(x, cx, cy)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize(
+    "fn,specs",
+    [
+        (
+            model.stencil1d,
+            [jax.ShapeDtypeStruct((128,), jnp.float64), jax.ShapeDtypeStruct((17,), jnp.float64)],
+        ),
+        (
+            model.stencil2d,
+            [
+                jax.ShapeDtypeStruct((48, 48), jnp.float64),
+                jax.ShapeDtypeStruct((25,), jnp.float64),
+                jax.ShapeDtypeStruct((24,), jnp.float64),
+            ],
+        ),
+        (lambda x: model.heat2d_run(x, 3, 0.2), [jax.ShapeDtypeStruct((16, 16), jnp.float64)]),
+    ],
+)
+def test_jit_lowers(fn, specs):
+    lowered = jax.jit(fn).lower(*specs)
+    assert lowered.compiler_ir("stablehlo") is not None

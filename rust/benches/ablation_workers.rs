@@ -1,0 +1,124 @@
+//! Ablations of the design choices DESIGN.md calls out:
+//!
+//! * **A. worker count** — measured GFLOPS vs the §VI roofline
+//!   prediction across `w` (the crossover from compute-starved to
+//!   bandwidth-saturated that justifies "6 workers is enough").
+//! * **B. mandatory buffering slack** — queue capacity multiplier vs
+//!   cycles (undersizing throttles; §III-B).
+//! * **C. strip width** — halo re-read overhead vs parallelism when
+//!   blocking for multi-tile execution (§III-B Blocking).
+//! * **D. temporal depth** — §IV pipeline: steps computed per memory
+//!   round-trip vs achieved FLOPs per DRAM byte.
+//!
+//! Run: `cargo bench --bench ablation_workers`
+
+use stencil_cgra::cgra::{Machine, Simulator};
+use stencil_cgra::coordinator::Coordinator;
+use stencil_cgra::stencil::spec::{symmetric_taps, y_taps};
+use stencil_cgra::stencil::{map1d, temporal, StencilSpec};
+use stencil_cgra::util::bench;
+use stencil_cgra::verify::golden::run_sim;
+
+fn main() {
+    let m = Machine::paper();
+
+    bench::section("A. worker-count sweep — 1D 17-pt, n=40000");
+    let spec1 = StencilSpec::dim1(40_000, symmetric_taps(8)).unwrap();
+    let x1 = vec![1.0; 40_000];
+    println!(
+        "{:>3} {:>10} {:>10} {:>10} {:>7}",
+        "w", "cycles", "GFLOPS", "predicted", "ratio"
+    );
+    for w in 1..=8 {
+        let res = run_sim(&spec1, w, &m, &x1).unwrap();
+        let g = res.gflops(spec1.total_flops(), m.clock_ghz);
+        // Prediction: min(worker demand, bandwidth roof).
+        let pred = (w as f64 * spec1.flops_per_output() * m.clock_ghz)
+            .min(m.roofline_gflops(spec1.arithmetic_intensity()));
+        println!(
+            "{w:>3} {:>10} {:>10.1} {:>10.1} {:>6.0}%",
+            res.stats.cycles,
+            g,
+            pred,
+            100.0 * g / pred
+        );
+    }
+
+    bench::section("A'. worker-count sweep — 2D 49-pt, 240x113");
+    let spec2 = StencilSpec::dim2(240, 113, symmetric_taps(12), y_taps(12)).unwrap();
+    let x2 = vec![1.0; spec2.grid_points()];
+    println!("{:>3} {:>10} {:>10} {:>10}", "w", "cycles", "GFLOPS", "predicted");
+    for w in 1..=5 {
+        let res = run_sim(&spec2, w, &m, &x2).unwrap();
+        let g = res.gflops(spec2.total_flops(), m.clock_ghz);
+        let pred = (w as f64 * spec2.flops_per_output() * m.clock_ghz)
+            .min(m.roofline_gflops(spec2.arithmetic_intensity()));
+        println!("{w:>3} {:>10} {:>10.1} {:>10.1}", res.stats.cycles, g, pred);
+    }
+
+    bench::section("B. buffering-slack ablation — 1D 17-pt, n=20000, w=6");
+    let spec = StencilSpec::dim1(20_000, symmetric_taps(8)).unwrap();
+    let x = vec![1.0; 20_000];
+    println!("{:>12} {:>10} {:>9}", "cap scale", "cycles", "status");
+    for (label, scale_num, scale_den) in
+        [("2.0x", 2usize, 1usize), ("1.0x", 1, 1), ("0.5x", 1, 2), ("0.25x", 1, 4)]
+    {
+        let mut g = map1d::build(&spec, 6).unwrap();
+        for ch in &mut g.channels {
+            ch.capacity = (ch.capacity * scale_num / scale_den).max(1);
+        }
+        match Simulator::build(g, &m, x.clone(), x.clone())
+            .unwrap()
+            .run()
+        {
+            Ok(res) => println!("{label:>12} {:>10} {:>9}", res.stats.cycles, "ok"),
+            Err(_) => println!("{label:>12} {:>10} {:>9}", "-", "deadlock/slow"),
+        }
+    }
+
+    bench::section("C. strip-width ablation — 2D 49-pt on 16 tiles (960x449)");
+    let spec = StencilSpec::paper_2d();
+    let x = vec![1.0; spec.grid_points()];
+    println!(
+        "{:>7} {:>7} {:>12} {:>10} {:>12}",
+        "tiles", "strips", "makespan", "GFLOPS", "extra reads"
+    );
+    let base_reads = (spec.grid_points() * 8) as f64;
+    for tiles in [1usize, 2, 4, 8, 16, 32] {
+        let coord = Coordinator::new(tiles, m.clone());
+        let rep = coord.run(&spec, 5, &x).unwrap();
+        let reads: u64 = rep.per_tile.iter().map(|t| t.mem.dram_read_bytes).sum();
+        println!(
+            "{tiles:>7} {:>7} {:>12} {:>10.0} {:>11.1}%",
+            rep.strips,
+            rep.makespan_cycles,
+            rep.gflops,
+            100.0 * (reads as f64 - base_reads) / base_reads
+        );
+    }
+
+    bench::section("D. temporal-depth ablation — 1D 3-pt, n=20000, w=3 (§IV)");
+    let spec = StencilSpec::dim1(20_000, vec![0.25, 0.5, 0.25]).unwrap();
+    let x = vec![1.0; 20_000];
+    println!(
+        "{:>6} {:>10} {:>12} {:>14}",
+        "steps", "cycles", "flops/byte", "GFLOPS"
+    );
+    for steps in [1usize, 2, 4, 8] {
+        let g = temporal::build(&spec, 3, steps).unwrap();
+        let res = Simulator::build(g, &m, x.clone(), x.clone())
+            .unwrap()
+            .run()
+            .unwrap();
+        let flops: f64 = (0..steps)
+            .map(|l| 5.0 * (spec.nx as f64 - 2.0 * ((l + 1) as f64)))
+            .sum();
+        let bytes = res.stats.mem.total_dram_bytes() as f64;
+        println!(
+            "{steps:>6} {:>10} {:>12.2} {:>14.1}",
+            res.stats.cycles,
+            flops / bytes,
+            res.stats.gflops(flops, m.clock_ghz)
+        );
+    }
+}

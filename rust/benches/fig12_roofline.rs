@@ -1,0 +1,83 @@
+//! Regenerates **Fig 12** — the roofline model for stencil1D and
+//! stencil2D on the §VI CGRA (614 GFLOPS compute roof, 100 GB/s) — and
+//! the §VI worker-sizing table, with measured simulator points overlaid.
+//!
+//! Run: `cargo bench --bench fig12_roofline`
+
+use stencil_cgra::cgra::Machine;
+use stencil_cgra::roofline;
+use stencil_cgra::stencil::spec::{symmetric_taps, y_taps};
+use stencil_cgra::stencil::StencilSpec;
+use stencil_cgra::util::bench;
+use stencil_cgra::verify::golden::run_sim;
+
+fn main() {
+    let m = Machine::paper();
+
+    bench::section("Fig 12 — roofline curve (AI vs attainable GFLOPS)");
+    println!("{:>10} {:>12}", "flops/byte", "GFLOPS");
+    for (ai, gf) in roofline::roofline_series(&m, 0.25, 32.0, 22) {
+        println!("{ai:>10.3} {gf:>12.1}");
+    }
+
+    bench::section("§VI analysis points");
+    println!(
+        "{:<12} {:>6} {:>9} {:>9} {:>9} {:>9} {:>3} {:>6}",
+        "stencil", "AI", "bw-roof", "peak", "attain", "demand", "w", "w_max"
+    );
+    for (name, spec) in [
+        ("stencil1D", StencilSpec::paper_1d()),
+        ("stencil2D", StencilSpec::paper_2d()),
+    ] {
+        let w = roofline::optimal_workers(&spec, &m);
+        let a = roofline::analyze(&spec, &m, w);
+        println!(
+            "{:<12} {:>6.2} {:>9.0} {:>9.0} {:>9.0} {:>9.0} {:>3} {:>6}",
+            name,
+            a.arithmetic_intensity,
+            a.bw_gflops,
+            a.peak_gflops,
+            a.attainable_gflops,
+            a.demand_gflops,
+            a.workers,
+            a.max_workers
+        );
+    }
+    println!("(paper: 1D AI 2.06 -> 206 GFLOPS, 6 workers / 237 demand;");
+    println!("        2D AI 5.59 -> 559 GFLOPS, 5 workers / 582 demand)");
+
+    bench::section("measured simulator points vs roofline (scaled grids)");
+    println!(
+        "{:<26} {:>10} {:>10} {:>7}",
+        "workload", "attainable", "measured", "ratio"
+    );
+    for (name, spec, w) in [
+        (
+            "1D 17-pt (n=40000)",
+            StencilSpec::dim1(40000, symmetric_taps(8)).unwrap(),
+            6usize,
+        ),
+        (
+            "2D 49-pt (240x113)",
+            StencilSpec::dim2(240, 113, symmetric_taps(12), y_taps(12)).unwrap(),
+            5,
+        ),
+        (
+            "2D 5-pt heat (128x128)",
+            StencilSpec::heat2d(128, 128, 0.2),
+            5,
+        ),
+    ] {
+        let x = vec![1.0; spec.grid_points()];
+        let res = run_sim(&spec, w, &m, &x).unwrap();
+        let g = res.gflops(spec.total_flops(), m.clock_ghz);
+        let roof = m.roofline_gflops(spec.arithmetic_intensity());
+        println!(
+            "{:<26} {:>10.1} {:>10.1} {:>6.0}%",
+            name,
+            roof,
+            g,
+            100.0 * g / roof
+        );
+    }
+}

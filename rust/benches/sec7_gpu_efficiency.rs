@@ -1,0 +1,98 @@
+//! Regenerates the **§VII GPU numbers**: the SMEM vs register-caching
+//! kernel comparison (1900 vs 2300 GFLOPS) and the efficiency-vs-radius
+//! decay series ("with the increase of arithmetic intensity ... the
+//! efficiency of the stencil dropped on V100").
+//!
+//! Run: `cargo bench --bench sec7_gpu_efficiency`
+
+use stencil_cgra::gpu_model::{GpuStencil, Precision, V100};
+use stencil_cgra::util::bench;
+
+fn main() {
+    let v = V100::paper();
+
+    bench::section("§VII anchors — model vs paper");
+    println!(
+        "{:<34} {:>9} {:>10} {:>10} {:>7} {:>17}",
+        "stencil", "roofline", "smem", "regcache", "eff", "paper"
+    );
+    let rows: Vec<(&str, GpuStencil, &str)> = vec![
+        (
+            "2D rx=ry=12 960x449 dp",
+            GpuStencil::d2(960, 449, 12, 12, Precision::F64),
+            "48% (2300/4800)",
+        ),
+        (
+            "1D rx=8 194400 dp",
+            GpuStencil::d1(194400, 8, Precision::F64),
+            "90%",
+        ),
+        (
+            "2D rx=ry=2 960x449 dp",
+            GpuStencil::d2(960, 449, 2, 2, Precision::F64),
+            "87%",
+        ),
+        (
+            "3D r=4 384x384x128 sp",
+            GpuStencil::d3([384, 384, 128], 4, Precision::F32),
+            "77%",
+        ),
+        (
+            "3D r=4 384x384x128 dp",
+            GpuStencil::d3([384, 384, 128], 4, Precision::F64),
+            "80%",
+        ),
+        (
+            "3D r=8 384^3 sp",
+            GpuStencil::d3([384, 384, 384], 8, Precision::F32),
+            "56%",
+        ),
+        (
+            "3D r=12 512^3 sp",
+            GpuStencil::d3([512, 512, 512], 12, Precision::F32),
+            "36%",
+        ),
+    ];
+    for (name, s, paper) in rows {
+        println!(
+            "{:<34} {:>9.0} {:>10.0} {:>10.0} {:>6.0}% {:>17}",
+            name,
+            v.roofline_gflops(&s),
+            v.smem_gflops(&s),
+            v.regcache_gflops(&s),
+            100.0 * v.regcache_efficiency(&s),
+            paper
+        );
+    }
+
+    bench::section("efficiency vs radius (2D dp, 960x449) — the §VII decay");
+    println!(
+        "{:>4} {:>6} {:>9} {:>6} {:>7} {:>12}",
+        "r", "taps", "regs/thr", "warps", "eff", "GFLOPS"
+    );
+    for r in [1usize, 2, 4, 6, 8, 10, 12, 14, 16] {
+        let s = GpuStencil::d2(960, 449, r, r, Precision::F64);
+        let o = v.occupancy(&s);
+        println!(
+            "{:>4} {:>6} {:>9} {:>6} {:>6.0}% {:>12.0}",
+            r,
+            s.taps(),
+            o.regs_per_thread,
+            o.warps,
+            100.0 * v.regcache_efficiency(&s),
+            v.regcache_gflops(&s)
+        );
+    }
+
+    bench::section("SMEM kernel occupancy walls (§VII narrative)");
+    let s = GpuStencil::d2(960, 449, 12, 12, Precision::F64);
+    let o = v.occupancy(&s);
+    println!(
+        "2D r=12 dp: {} regs/thread -> {} warps (reg limit), {} warps (smem limit), smem/block {}B",
+        o.regs_per_thread, o.warps_reg, o.warps_smem, o.smem_per_block_bytes
+    );
+    println!(
+        "smem-latency hiding needs ~25 warps -> efficiency {:.0}%",
+        100.0 * v.regcache_efficiency(&s)
+    );
+}

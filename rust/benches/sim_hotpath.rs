@@ -1,0 +1,91 @@
+//! §Perf — simulator hot-path throughput (the L3 optimization target).
+//!
+//! Tracks PE-instruction evaluations per second and simulated Mcycles/s
+//! on the Table-I 2-D workload (scaled + full), plus microbenches of the
+//! memory arbiter and channel operations. EXPERIMENTS.md §Perf records
+//! the before/after of each optimization against this bench.
+//!
+//! Run: `cargo bench --bench sim_hotpath`
+
+use stencil_cgra::cgra::channel::Fifo;
+use stencil_cgra::cgra::{Machine, Simulator, Token};
+use stencil_cgra::stencil::spec::{symmetric_taps, y_taps};
+use stencil_cgra::stencil::{map2d, StencilSpec};
+use stencil_cgra::util::bench;
+
+fn sim_throughput(name: &str, spec: &StencilSpec, w: usize, iters: usize) {
+    let m = Machine::paper();
+    let x = vec![1.0; spec.grid_points()];
+    let mut cycles = 0u64;
+    let mut fires = 0u64;
+    let mut nodes = 0usize;
+    let stats = bench::run(name, 1, iters, || {
+        let g = map2d::build(spec, w).unwrap();
+        nodes = g.node_count();
+        let res = Simulator::build(g, &m, x.clone(), x.clone())
+            .unwrap()
+            .run()
+            .unwrap();
+        cycles = res.stats.cycles;
+        fires = res.stats.total_fires();
+    });
+    let pe_steps = cycles as f64 * nodes as f64;
+    println!(
+        "  -> {} nodes, {} cycles, {} fires: {:.1} Mcycles/s, {:.1} M PE-steps/s, {:.1} M fires/s",
+        nodes,
+        cycles,
+        fires,
+        cycles as f64 / stats.mean_s / 1e6,
+        pe_steps / stats.mean_s / 1e6,
+        fires as f64 / stats.mean_s / 1e6,
+    );
+}
+
+fn main() {
+    bench::section("simulator end-to-end throughput");
+    sim_throughput(
+        "2d_49pt_240x113_w5",
+        &StencilSpec::dim2(240, 113, symmetric_taps(12), y_taps(12)).unwrap(),
+        5,
+        5,
+    );
+    sim_throughput(
+        "2d_49pt_table1_960x449_w5",
+        &StencilSpec::paper_2d(),
+        5,
+        3,
+    );
+    sim_throughput("2d_heat_128x128_w5", &StencilSpec::heat2d(128, 128, 0.2), 5, 5);
+
+    bench::section("channel microbench");
+    let mut f = Fifo::new(64, 1);
+    let tok = Token::new(1.0, 0, 0);
+    let stats = bench::run("fifo_push_pop_1M", 2, 10, || {
+        for i in 0..1_000_000u64 {
+            if f.can_push() {
+                f.push(tok, i);
+            }
+            bench::black_box(f.pop(i + 2));
+        }
+    });
+    println!(
+        "  -> {:.1} M push+pop/s",
+        1.0 / stats.mean_s
+    );
+
+    bench::section("memory-arbiter microbench");
+    let m = Machine::paper();
+    let stats = bench::run("mem_100k_loads", 2, 10, || {
+        let mut mem = stencil_cgra::cgra::memory::MemSys::new(
+            &m,
+            vec![1.0; 100_000],
+            vec![0.0; 100_000],
+        );
+        for i in 0..100_000u64 {
+            let (_, _t) = mem.load(i % 100_000, i);
+            mem.step(i);
+        }
+        bench::black_box(&mem);
+    });
+    println!("  -> {:.2} M loads/s", 0.1 / stats.mean_s);
+}

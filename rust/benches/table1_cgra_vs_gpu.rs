@@ -1,0 +1,119 @@
+//! Regenerates **Table I** — comparative analysis of stencils on CGRA
+//! and GPU — plus the §VIII cache note (stencil2D shows more conflict
+//! misses than stencil1D).
+//!
+//! Two CGRA numbers are reported per workload:
+//! * `x16 measured` — 16 tiles actually simulated over strips (includes
+//!   halo re-read overhead the paper's extrapolation ignores);
+//! * `x16 extrapolated` — single-tile simulation x 16, the paper's
+//!   method ("experiments have been done on one CGRA which then got
+//!   extrapolated").
+//!
+//! Run: `cargo bench --bench table1_cgra_vs_gpu`
+
+use stencil_cgra::cgra::Machine;
+use stencil_cgra::coordinator::Coordinator;
+use stencil_cgra::gpu_model::{GpuStencil, Precision, V100};
+use stencil_cgra::stencil::StencilSpec;
+use stencil_cgra::util::bench;
+use stencil_cgra::util::rng::XorShift;
+use stencil_cgra::verify::golden::run_sim;
+
+fn main() {
+    let m = Machine::paper();
+    let v100 = V100::paper();
+    let coord = Coordinator::paper();
+
+    bench::section("Table I — comparative analysis of stencils on CGRA and GPU");
+    println!(
+        "{:<48} {:>10} {:>8} {:>12} {:>8} {:>10}",
+        "workload", "GFLOPS", "%peak", "V100 GFLOPS", "%peak", "CGRA/V100"
+    );
+
+    let mut conflicts = Vec::new();
+    for (name, spec, w, paper_ratio, paper_cgra_pk, paper_gpu_pk) in [
+        (
+            "Stencil 1D (194400, rx=8)",
+            StencilSpec::paper_1d(),
+            6usize,
+            1.9f64,
+            91.0,
+            90.0,
+        ),
+        (
+            "Stencil 2D (960x449, rx=ry=12)",
+            StencilSpec::paper_2d(),
+            5usize,
+            3.03,
+            78.0,
+            48.0,
+        ),
+    ] {
+        let mut rng = XorShift::new(0x7AB1);
+        let input = rng.normal_vec(spec.grid_points());
+
+        // Single tile (timed).
+        let t0 = std::time::Instant::now();
+        let single = run_sim(&spec, w, &m, &input).unwrap();
+        let wall_single = t0.elapsed().as_secs_f64();
+        let tile_gflops = single.gflops(spec.total_flops(), m.clock_ghz);
+        let tile_roof = m.roofline_gflops(spec.arithmetic_intensity());
+        conflicts.push((name, single.stats.mem.clone()));
+
+        // 16 tiles measured.
+        let rep = coord.run(&spec, w, &input).unwrap();
+        let array_roof = 16.0 * tile_roof;
+
+        // GPU baseline.
+        let g = GpuStencil::from_spec(&spec, Precision::F64);
+        let gpu = v100.best_gflops(&g);
+        let gpu_roof = v100.roofline_gflops(&g);
+
+        let extrap = 16.0 * tile_gflops;
+        println!(
+            "{:<48} {:>10.0} {:>7.0}% {:>12.0} {:>7.0}% {:>9.2}x",
+            format!("{name} x16 measured"),
+            rep.gflops,
+            100.0 * rep.gflops / array_roof,
+            gpu,
+            100.0 * gpu / gpu_roof,
+            rep.gflops / gpu
+        );
+        println!(
+            "{:<48} {:>10.0} {:>7.0}% {:>12} {:>8} {:>9.2}x",
+            format!("{name} x16 extrapolated"),
+            extrap,
+            100.0 * tile_gflops / tile_roof,
+            "-",
+            "-",
+            extrap / gpu
+        );
+        println!(
+            "{:<48} {:>10} {:>8} {:>12} {:>8} {:>9.2}x",
+            "  (paper)",
+            "-",
+            format!("{paper_cgra_pk:.0}%"),
+            "-",
+            format!("{paper_gpu_pk:.0}%"),
+            paper_ratio
+        );
+        println!(
+            "  single tile: {} cycles, {:.1} GFLOPS ({:.0}% of {:.0} roof); sim wall {:.2}s\n",
+            single.stats.cycles,
+            tile_gflops,
+            100.0 * tile_gflops / tile_roof,
+            tile_roof,
+            wall_single
+        );
+    }
+
+    bench::section("§VIII cache note — conflict misses (stencil2D > stencil1D)");
+    for (name, mem) in conflicts {
+        println!(
+            "{name:<34} conflict_misses={:<8} misses={:<8} reuse={:.1}%",
+            mem.conflict_misses,
+            mem.misses,
+            100.0 * mem.reuse_ratio()
+        );
+    }
+}

@@ -1,0 +1,131 @@
+//! Machine description of the target CGRA.
+//!
+//! Defaults follow §VI's assumptions: clock 1.2 GHz, 256 double-precision
+//! MAC-capable PEs, 100 GB/s memory bandwidth — giving the 614 GFLOPS
+//! compute roof of Fig 12. The physical grid is larger than the MAC count
+//! because filters, copies, loads/stores and control units occupy non-MAC
+//! PEs (§III-A counts them separately from the DP ops).
+
+/// CGRA machine parameters (one tile).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Machine {
+    /// Core clock in GHz.
+    pub clock_ghz: f64,
+    /// Physical PE grid height.
+    pub grid_rows: usize,
+    /// Physical PE grid width.
+    pub grid_cols: usize,
+    /// Number of PEs capable of double-precision MUL/MAC (the §VI "Number
+    /// of MACs = 256").
+    pub mac_pes: usize,
+    /// DRAM bandwidth in GB/s (one tile).
+    pub bw_gbps: f64,
+    /// DRAM access latency in cycles.
+    pub dram_latency: u32,
+    /// Shared-cache capacity in KiB.
+    pub cache_kib: usize,
+    /// Cache line size in bytes.
+    pub cache_line: usize,
+    /// Cache hit latency in cycles.
+    pub cache_hit_latency: u32,
+    /// Outstanding loads per load PE. Reader workers are decoupled
+    /// access/execute pairs streaming from scratchpad-backed prefetch
+    /// queues (§II-A), so this must cover the DRAM latency to stream at
+    /// one load per cycle.
+    pub mshr_per_load: usize,
+    /// Maximum triggered instructions a PE can hold (TIA limit).
+    pub max_instr_per_pe: usize,
+    /// Network hops traversed per cycle (the paper estimates PE-to-PE
+    /// communication ~6x faster than V100 register-to-SMEM).
+    pub hops_per_cycle: usize,
+}
+
+impl Default for Machine {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
+impl Machine {
+    /// The §VI target: 1.2 GHz, 256 MACs, 100 GB/s.
+    pub fn paper() -> Self {
+        Self {
+            clock_ghz: 1.2,
+            grid_rows: 24,
+            grid_cols: 32,
+            mac_pes: 256,
+            bw_gbps: 100.0,
+            dram_latency: 100,
+            cache_kib: 512,
+            cache_line: 64,
+            cache_hit_latency: 6,
+            mshr_per_load: 160,
+            max_instr_per_pe: 16,
+            hops_per_cycle: 4,
+        }
+    }
+
+    /// A small fabric for unit tests (forces instruction packing).
+    pub fn tiny() -> Self {
+        Self {
+            grid_rows: 4,
+            grid_cols: 4,
+            mac_pes: 16,
+            ..Self::paper()
+        }
+    }
+
+    /// Peak double-precision GFLOPS: `2 * MACs * clock` (§VI: 614).
+    pub fn peak_gflops(&self) -> f64 {
+        2.0 * self.mac_pes as f64 * self.clock_ghz
+    }
+
+    /// DRAM bytes deliverable per cycle.
+    pub fn bytes_per_cycle(&self) -> f64 {
+        self.bw_gbps / self.clock_ghz
+    }
+
+    /// Total PEs on the fabric.
+    pub fn total_pes(&self) -> usize {
+        self.grid_rows * self.grid_cols
+    }
+
+    /// Roofline-attainable GFLOPS at arithmetic intensity `ai` (Fig 12).
+    pub fn roofline_gflops(&self, ai: f64) -> f64 {
+        (self.bw_gbps * ai).min(self.peak_gflops())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_peak_is_614_gflops() {
+        let m = Machine::paper();
+        assert!((m.peak_gflops() - 614.4).abs() < 0.1);
+    }
+
+    #[test]
+    fn paper_bytes_per_cycle() {
+        let m = Machine::paper();
+        assert!((m.bytes_per_cycle() - 83.33).abs() < 0.01);
+    }
+
+    #[test]
+    fn roofline_crossover() {
+        let m = Machine::paper();
+        // §VI: AI 2.06 -> 206 GFLOPS (bandwidth-bound).
+        assert!((m.roofline_gflops(2.06) - 206.0).abs() < 0.5);
+        // AI 5.59 -> 559 GFLOPS (still bandwidth-bound).
+        assert!((m.roofline_gflops(5.59) - 559.0).abs() < 0.5);
+        // Very high AI -> compute-bound at 614.
+        assert!((m.roofline_gflops(100.0) - m.peak_gflops()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn grid_holds_more_than_macs() {
+        let m = Machine::paper();
+        assert!(m.total_pes() > m.mac_pes);
+    }
+}

@@ -1,0 +1,48 @@
+//! Functional + timing cycle simulator of the target CGRA (§II-A, §VIII).
+//!
+//! The paper evaluates on "a modified version of a previously proposed
+//! CGRA [7]" (the triggered-instruction architecture) with a
+//! cycle-accurate simulator of "CGRA PEs, scratchpads, private cache,
+//! shared cache, and communication network". That simulator is
+//! proprietary; this module is the from-scratch substitute (DESIGN.md
+//! "Substitutions" #1):
+//!
+//! * [`machine`] — the machine description (§VI's 1.2 GHz / 256 MACs /
+//!   100 GB/s assumptions are the defaults).
+//! * [`channel`] — bounded FIFOs with latency: the PE input/output queues
+//!   and on-chip links.
+//! * [`memory`] — shared cache + bandwidth-limited DRAM channel with
+//!   MSHR-style line merging.
+//! * [`placement`] — logical DFG → physical PE grid (Fig 4) and
+//!   route-length-derived channel latencies.
+//! * [`sim`] — the cycle loop executing triggered instructions: the run
+//!   produces the actual output grid *and* the cycle count, so one
+//!   simulation is both the correctness and the performance experiment.
+//! * [`stats`] — utilization, traffic, cache and stall counters.
+
+pub mod channel;
+pub mod machine;
+pub mod memory;
+pub mod placement;
+pub mod sim;
+pub mod stats;
+
+pub use machine::Machine;
+pub use sim::{SimResult, Simulator};
+
+/// A value flowing through the fabric, tagged with the grid coordinates
+/// the control units generated for it (§III-A: control units produce
+/// "addresses and row/column id corresponding to the load/store
+/// operations"). For address tokens `val` carries the flat address.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Token {
+    pub val: f64,
+    pub row: u32,
+    pub col: u32,
+}
+
+impl Token {
+    pub fn new(val: f64, row: u32, col: u32) -> Self {
+        Self { val, row, col }
+    }
+}

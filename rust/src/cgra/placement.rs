@@ -1,0 +1,212 @@
+//! Placement: logical DFG nodes → physical PE grid positions (Fig 4), and
+//! the channel latency/capacity consequences of the routes.
+//!
+//! Layout strategy mirrors Fig 4: control + reader nodes occupy the top
+//! rows; each compute worker gets a vertical band of columns and its
+//! nodes snake down the band in declaration order, which places a MAC
+//! chain contiguously (PEs in the same row end up holding the same tap
+//! across workers — the "PEs in the same row share the same coefficient"
+//! property). If the graph exceeds the fabric, up to
+//! `max_instr_per_pe` instructions share a PE (TIA supports multiple
+//! triggered instructions per PE; sharing costs issue bandwidth, which
+//! the simulator models by firing one instruction per PE per cycle).
+
+use anyhow::{ensure, Result};
+
+use crate::dfg::Graph;
+
+use super::machine::Machine;
+
+/// Physical coordinates of each node plus route statistics.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    /// `(row, col)` per node id.
+    pub pe_of: Vec<(u16, u16)>,
+    /// Number of instructions sharing each PE (`grid_rows * grid_cols`).
+    pub occupancy: Vec<u8>,
+    pub max_route_hops: u32,
+    pub avg_route_hops: f64,
+}
+
+impl Placement {
+    pub fn pe_index(&self, node: usize, m: &Machine) -> usize {
+        let (r, c) = self.pe_of[node];
+        r as usize * m.grid_cols + c as usize
+    }
+}
+
+fn manhattan(a: (u16, u16), b: (u16, u16)) -> u32 {
+    (a.0 as i32 - b.0 as i32).unsigned_abs() + (a.1 as i32 - b.1 as i32).unsigned_abs()
+}
+
+/// Place `g` on `m`'s grid and update each channel's `latency` (1 cycle
+/// plus the route's hop time) and `capacity` (at least latency + 2, so a
+/// long route can still stream at full rate under credit flow control).
+pub fn place(g: &mut Graph, m: &Machine) -> Result<Placement> {
+    ensure!(
+        g.dp_ops() <= m.mac_pes,
+        "{} DP ops exceed the fabric's {} MAC PEs (reduce workers)",
+        g.dp_ops(),
+        m.mac_pes
+    );
+    let total_slots = m.total_pes() * m.max_instr_per_pe;
+    ensure!(
+        g.node_count() <= total_slots,
+        "{} nodes exceed {} instruction slots",
+        g.node_count(),
+        total_slots
+    );
+
+    let rows = m.grid_rows;
+    let cols = m.grid_cols;
+    let mut occupancy = vec![0u8; rows * cols];
+    let mut pe_of = vec![(0u16, 0u16); g.node_count()];
+
+    // Partition nodes: worker-less (control/readers) vs per-worker.
+    let max_worker = g.nodes.iter().filter_map(|n| n.worker).max();
+    let shared: Vec<usize> =
+        g.nodes.iter().filter(|n| n.worker.is_none()).map(|n| n.id).collect();
+
+    // Top band for shared nodes: as many rows as needed.
+    let top_rows = shared.len().div_ceil(cols).min(rows);
+    let mut place_at = |id: usize, r: usize, c: usize, occ: &mut Vec<u8>| {
+        pe_of[id] = (r as u16, c as u16);
+        occ[r * cols + c] += 1;
+    };
+    for (i, &id) in shared.iter().enumerate() {
+        // Wrap into instruction slots if the top band overflows.
+        let slot = i % (top_rows * cols).max(1);
+        place_at(id, slot / cols, slot % cols, &mut occupancy);
+    }
+
+    // Vertical bands for workers.
+    if let Some(mw) = max_worker {
+        let nworkers = mw + 1;
+        let band_cols = (cols / nworkers).max(1);
+        let body_rows = rows - top_rows.min(rows - 1);
+        for w in 0..nworkers {
+            let c0 = (w * band_cols) % cols;
+            let nodes: Vec<usize> = g
+                .nodes
+                .iter()
+                .filter(|n| n.worker == Some(w))
+                .map(|n| n.id)
+                .collect();
+            let band_slots = body_rows * band_cols;
+            for (i, &id) in nodes.iter().enumerate() {
+                let slot = i % band_slots.max(1);
+                // Snake down the band: consecutive nodes adjacent.
+                let r = top_rows + slot % body_rows;
+                let snake_col = slot / body_rows;
+                let c = c0 + if (snake_col & 1) == 0 {
+                    snake_col
+                } else {
+                    snake_col // columns within band are already adjacent
+                } % band_cols;
+                place_at(id, r.min(rows - 1), c.min(cols - 1), &mut occupancy);
+            }
+        }
+    }
+
+    // Verify instruction-slot limits.
+    for (i, &o) in occupancy.iter().enumerate() {
+        ensure!(
+            (o as usize) <= m.max_instr_per_pe,
+            "PE {} holds {} instructions (limit {})",
+            i,
+            o,
+            m.max_instr_per_pe
+        );
+    }
+
+    // Route-derived channel latency + capacity floors.
+    let mut max_hops = 0u32;
+    let mut sum_hops = 0u64;
+    for ch in &mut g.channels {
+        let hops = manhattan(pe_of[ch.src], pe_of[ch.dst]);
+        max_hops = max_hops.max(hops);
+        sum_hops += hops as u64;
+        let lat = 1 + hops.div_ceil(m.hops_per_cycle as u32);
+        ch.latency = lat;
+        ch.capacity = ch.capacity.max(lat as usize + 2);
+    }
+    let avg = if g.channels.is_empty() {
+        0.0
+    } else {
+        sum_hops as f64 / g.channels.len() as f64
+    };
+    Ok(Placement {
+        pe_of,
+        occupancy,
+        max_route_hops: max_hops,
+        avg_route_hops: avg,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::{map1d, map2d, StencilSpec};
+
+    #[test]
+    fn paper_1d_fits_one_instr_per_pe() {
+        let spec = StencilSpec::paper_1d();
+        let mut g = map1d::build(&spec, 6).unwrap();
+        let m = Machine::paper();
+        let p = place(&mut g, &m).unwrap();
+        assert!(p.occupancy.iter().all(|&o| o <= m.max_instr_per_pe as u8));
+        // Every channel got a route-derived latency and enough capacity.
+        for ch in &g.channels {
+            assert!(ch.latency >= 1);
+            assert!(ch.capacity >= ch.latency as usize + 2);
+        }
+    }
+
+    #[test]
+    fn paper_2d_fits_mac_budget() {
+        let spec = StencilSpec::paper_2d();
+        let mut g = map2d::build(&spec, 5).unwrap();
+        let m = Machine::paper();
+        assert!(g.dp_ops() <= m.mac_pes);
+        let p = place(&mut g, &m).unwrap();
+        assert!(p.max_route_hops > 0);
+    }
+
+    #[test]
+    fn too_many_workers_rejected_by_mac_budget() {
+        // 6 workers * 49 DP = 294 > 256 — the §VI constraint that only 5
+        // workers fit the 2-D stencil.
+        let spec = StencilSpec::paper_2d();
+        let mut g = map2d::build(&spec, 6).unwrap();
+        let m = Machine::paper();
+        assert!(place(&mut g, &m).is_err());
+    }
+
+    #[test]
+    fn rows_share_coefficients_fig4() {
+        // For the 1-D mapping, MAC for tap t of every worker should land
+        // on the same grid row (same coefficient per row, Fig 4).
+        let spec = StencilSpec::dim1(64, crate::stencil::spec::symmetric_taps(2)).unwrap();
+        let mut g = map1d::build(&spec, 3).unwrap();
+        let m = Machine::paper();
+        let p = place(&mut g, &m).unwrap();
+        let row_of = |name: &str| p.pe_of[g.find(name).unwrap()].0;
+        for t in 1..5 {
+            let r0 = row_of(&format!("w0.mac{t}"));
+            let r1 = row_of(&format!("w1.mac{t}"));
+            let r2 = row_of(&format!("w2.mac{t}"));
+            assert_eq!(r0, r1);
+            assert_eq!(r1, r2);
+        }
+    }
+
+    #[test]
+    fn tiny_fabric_packs_instructions() {
+        let spec = StencilSpec::dim1(32, vec![0.25, 0.5, 0.25]).unwrap();
+        let mut g = map1d::build(&spec, 2).unwrap();
+        let m = Machine::tiny();
+        let p = place(&mut g, &m).unwrap();
+        // 4x4 grid with ~20 nodes: someone must share.
+        assert!(p.occupancy.iter().any(|&o| o > 1));
+    }
+}

@@ -1,0 +1,818 @@
+//! The cycle loop: triggered-instruction execution of a DFG (§II-A).
+//!
+//! Each DFG node is one triggered instruction mapped to a PE by
+//! [`super::placement`]. An instruction *triggers* when its required
+//! input queues hold visible tokens and its output queues have credit;
+//! each PE fires at most one instruction per cycle (TIA's scheduler), so
+//! instruction packing on a small fabric costs issue bandwidth exactly as
+//! it should.
+//!
+//! The simulator is functional + timing in one pass: tokens carry real
+//! f64 payloads, so the run yields the output grid (checked against the
+//! PJRT-executed JAX artifact by `verify`) *and* the cycle count that
+//! feeds the §VIII performance tables.
+//!
+//! Determinism: PEs are evaluated in a fixed order, pushes become visible
+//! only `latency >= 1` cycles later (so evaluation order cannot leak
+//! within a cycle), and the memory arbiter is FIFO. Every run is
+//! bit-reproducible.
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use crate::dfg::node::{AddrIter, FilterSpec, Op, Stage};
+use crate::dfg::Graph;
+
+use super::channel::Fifo;
+use super::machine::Machine;
+use super::memory::{MemSys, Ticket};
+use super::placement::{self, Placement};
+use super::stats::SimStats;
+use super::Token;
+
+const NO_CHAN: u32 = u32::MAX;
+
+/// Runtime state of one instruction.
+struct NodeRt {
+    op: Op,
+    stage: Stage,
+    coeff: f64,
+    filter: Option<FilterSpec>,
+    filter_idx: u64,
+    agen: Option<AddrIter>,
+    agen_pos: u64,
+    agen_len: u64,
+    expected: u64,
+    count: u64,
+    emitted: bool,
+    /// Input channel per port (NO_CHAN when unconnected).
+    ins: Vec<u32>,
+    /// Output channels per port (fan-out lists).
+    outs: Vec<Vec<u32>>,
+    /// Hot-path copies (§Perf): first/second input channel and the port-0
+    /// fan-out, accessed without the nested-Vec indirection.
+    in0: u32,
+    in1: u32,
+    out0: Box<[u32]>,
+    /// In-order outstanding memory operations (Load/Store).
+    inflight: VecDeque<(Ticket, Token)>,
+    fires: u64,
+}
+
+/// Result of a completed simulation.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Final contents of the output grid.
+    pub output: Vec<f64>,
+    pub stats: SimStats,
+}
+
+impl SimResult {
+    /// Achieved GFLOPS for a workload of `flops` at `clock_ghz`.
+    pub fn gflops(&self, flops: f64, clock_ghz: f64) -> f64 {
+        self.stats.gflops(flops, clock_ghz)
+    }
+}
+
+pub struct Simulator {
+    nodes: Vec<NodeRt>,
+    chans: Vec<Fifo>,
+    mem: MemSys,
+    /// Instructions grouped by PE, in placement order.
+    pe_instrs: Vec<Vec<u32>>,
+    /// Fast path when every PE holds exactly one instruction: flat
+    /// topological evaluation order (None when instructions share PEs).
+    flat_order: Option<Vec<u32>>,
+    /// Quiet-period threshold for deadlock detection.
+    deadlock_quiet: u64,
+    max_cycles: u64,
+    stats: SimStats,
+    mshr: usize,
+    done_node: usize,
+    /// Node names (diagnostics only).
+    names: Vec<String>,
+}
+
+impl Simulator {
+    /// Build a simulator for `graph` on machine `m`.
+    ///
+    /// `input` is the source grid; `output` the initial contents of the
+    /// destination (pre-filled with boundary values by the caller).
+    /// Placement runs here and fixes channel latencies/capacities.
+    pub fn build(
+        mut graph: Graph,
+        m: &Machine,
+        input: Vec<f64>,
+        output: Vec<f64>,
+    ) -> Result<Self> {
+        crate::dfg::validate::validate(&graph)?;
+        let plc: Placement = placement::place(&mut graph, m)?;
+
+        let chans: Vec<Fifo> = graph
+            .channels
+            .iter()
+            .map(|c| Fifo::new(c.capacity, c.latency))
+            .collect();
+
+        let mut done_node = None;
+        let mut nodes = Vec::with_capacity(graph.node_count());
+        let mut names = Vec::with_capacity(graph.node_count());
+        for n in &graph.nodes {
+            if n.op == Op::DoneTree {
+                done_node = Some(n.id);
+            }
+            let max_in = (0..16)
+                .rev()
+                .find(|&p| graph.input(n.id, p).is_some())
+                .map(|p| p as usize + 1)
+                .unwrap_or(0);
+            let ins = (0..max_in)
+                .map(|p| graph.input(n.id, p as u8).map(|c| c as u32).unwrap_or(NO_CHAN))
+                .collect::<Vec<_>>();
+            let mut outs: Vec<Vec<u32>> = Vec::new();
+            for p in 0..4u8 {
+                let v: Vec<u32> = graph.outputs(n.id, p).iter().map(|&c| c as u32).collect();
+                if v.is_empty() && p > 0 {
+                    break;
+                }
+                outs.push(v);
+            }
+            let agen_len = n.agen.map(|a| a.len()).unwrap_or(0);
+            let in0 = ins.first().copied().unwrap_or(NO_CHAN);
+            let in1 = ins.get(1).copied().unwrap_or(NO_CHAN);
+            let out0: Box<[u32]> =
+                outs.first().cloned().unwrap_or_default().into_boxed_slice();
+            nodes.push(NodeRt {
+                op: n.op,
+                stage: n.stage,
+                coeff: n.coeff.unwrap_or(0.0),
+                filter: n.filter,
+                filter_idx: 0,
+                agen: n.agen,
+                agen_pos: 0,
+                agen_len,
+                expected: n.expected.unwrap_or(u64::MAX),
+                count: 0,
+                emitted: false,
+                ins,
+                outs,
+                in0,
+                in1,
+                out0,
+                inflight: VecDeque::new(),
+                fires: 0,
+            });
+            names.push(n.name.clone());
+        }
+        let Some(done_node) = done_node else {
+            bail!("graph has no DoneTree — the simulator cannot detect completion");
+        };
+
+        // Group instructions by PE (placement order = priority order).
+        let mut pe_instrs: Vec<Vec<u32>> = vec![Vec::new(); m.total_pes()];
+        for id in 0..nodes.len() {
+            pe_instrs[plc.pe_index(id, m)].push(id as u32);
+        }
+        pe_instrs.retain(|v| !v.is_empty());
+        // Hot-loop fast path (§Perf): when no PE shares instructions the
+        // per-PE arbitration is a no-op, so evaluate a flat node list in
+        // topological order (producers before consumers — better cache
+        // locality along the dataflow).
+        let flat_order: Option<Vec<u32>> = if pe_instrs.iter().all(|v| v.len() == 1) {
+            graph
+                .topo_order()
+                .map(|o| o.into_iter().map(|i| i as u32).collect())
+        } else {
+            None
+        };
+
+        let max_lat = graph.channels.iter().map(|c| c.latency).max().unwrap_or(1);
+        let mut stats = SimStats::default();
+        stats.dp_ops = graph.dp_ops();
+        stats.node_count = graph.node_count();
+
+        Ok(Self {
+            nodes,
+            chans,
+            mem: MemSys::new(m, input, output),
+            pe_instrs,
+            flat_order,
+            deadlock_quiet: m.dram_latency as u64 + max_lat as u64 + 256,
+            max_cycles: 200_000_000,
+            stats,
+            mshr: m.mshr_per_load,
+            done_node,
+            names,
+        })
+    }
+
+    /// Override the safety cap on simulated cycles.
+    pub fn with_max_cycles(mut self, c: u64) -> Self {
+        self.max_cycles = c;
+        self
+    }
+
+    /// Run to completion (DoneTree fires) and return the output + stats.
+    pub fn run(mut self) -> Result<SimResult> {
+        let mut now: u64 = 0;
+        let mut last_progress: u64 = 0;
+        while !self.nodes[self.done_node].emitted {
+            now += 1;
+            let mem_prog = self.mem.step(now);
+            let mut fired = false;
+            if let Some(order) = &self.flat_order {
+                for &id in order {
+                    fired |= fire(
+                        &mut self.nodes[id as usize],
+                        &mut self.chans,
+                        &mut self.mem,
+                        &mut self.stats,
+                        self.mshr,
+                        now,
+                    );
+                }
+            } else {
+                for pe in 0..self.pe_instrs.len() {
+                    for k in 0..self.pe_instrs[pe].len() {
+                        let id = self.pe_instrs[pe][k] as usize;
+                        if fire(
+                            &mut self.nodes[id],
+                            &mut self.chans,
+                            &mut self.mem,
+                            &mut self.stats,
+                            self.mshr,
+                            now,
+                        ) {
+                            fired = true;
+                            break; // one instruction per PE per cycle
+                        }
+                    }
+                }
+            }
+            if fired || mem_prog {
+                last_progress = now;
+            } else if now - last_progress > self.deadlock_quiet {
+                bail!(self.deadlock_report(now));
+            }
+            if now > self.max_cycles {
+                bail!("simulation exceeded {} cycles", self.max_cycles);
+            }
+        }
+        self.stats.cycles = now;
+        self.stats.max_queue_occupancy = self
+            .chans
+            .iter()
+            .map(|c| c.max_occupancy)
+            .max()
+            .unwrap_or(0);
+        let (output, mem_stats) = self.mem.into_output();
+        self.stats.mem = mem_stats;
+        Ok(SimResult {
+            output,
+            stats: self.stats,
+        })
+    }
+
+    /// Human-readable account of why nothing can make progress.
+    fn deadlock_report(&self, now: u64) -> String {
+        let mut lines = vec![format!(
+            "deadlock: no progress for {} cycles (at cycle {})",
+            self.deadlock_quiet, now
+        )];
+        for (id, n) in self.nodes.iter().enumerate() {
+            if n.emitted && matches!(n.op, Op::SyncCount | Op::DoneTree) {
+                continue;
+            }
+            let waiting_in: Vec<String> = n
+                .ins
+                .iter()
+                .enumerate()
+                .filter(|(_, &c)| c != NO_CHAN && self.chans[c as usize].peek(now).is_none())
+                .map(|(p, _)| format!("in{p} empty"))
+                .collect();
+            let blocked_out: Vec<String> = n
+                .outs
+                .iter()
+                .flatten()
+                .filter(|&&c| !self.chans[c as usize].can_push())
+                .map(|&c| format!("out ch{c} full"))
+                .collect();
+            if !waiting_in.is_empty() || !blocked_out.is_empty() {
+                if lines.len() < 24 {
+                    lines.push(format!(
+                        "  {}: {} {}",
+                        self.names[id],
+                        waiting_in.join(","),
+                        blocked_out.join(",")
+                    ));
+                }
+            }
+        }
+        lines.join("\n")
+    }
+}
+
+#[inline]
+fn can_push_all(chans: &[Fifo], outs: &[u32]) -> bool {
+    outs.iter().all(|&c| chans[c as usize].can_push())
+}
+
+#[inline]
+fn push_all(chans: &mut [Fifo], outs: &[u32], t: Token, now: u64) {
+    for &c in outs {
+        chans[c as usize].push(t, now);
+    }
+}
+
+/// Attempt to fire one instruction; returns true if it made progress.
+fn fire(
+    n: &mut NodeRt,
+    chans: &mut [Fifo],
+    mem: &mut MemSys,
+    stats: &mut SimStats,
+    mshr: usize,
+    now: u64,
+) -> bool {
+    let fired = match n.op {
+        Op::AddrGen => {
+            if n.agen_pos < n.agen_len && can_push_all(chans, &n.out0) {
+                let (row, col, addr) = n.agen.as_ref().unwrap().token(n.agen_pos);
+                n.agen_pos += 1;
+                push_all(chans, &n.out0, Token::new(addr as f64, row, col), now);
+                true
+            } else {
+                false
+            }
+        }
+        Op::Load => {
+            let mut acted = false;
+            // Deliver the oldest completed response (in order).
+            if let Some(&(t, tok)) = n.inflight.front() {
+                if mem.done(t, now) && can_push_all(chans, &n.out0) {
+                    n.inflight.pop_front();
+                    push_all(chans, &n.out0, tok, now);
+                    acted = true;
+                }
+            }
+            // Issue a new request (address generator + load PE pair).
+            if n.inflight.len() < mshr {
+                let ch = n.in0 as usize;
+                if let Some(addr_tok) = chans[ch].peek(now).copied() {
+                    chans[ch].pop(now);
+                    let (val, t) = mem.load(addr_tok.val as u64, now);
+                    n.inflight
+                        .push_back((t, Token::new(val, addr_tok.row, addr_tok.col)));
+                    acted = true;
+                }
+            }
+            acted
+        }
+        Op::Store => {
+            let mut acted = false;
+            if let Some(&(t, tok)) = n.inflight.front() {
+                if mem.done(t, now) && can_push_all(chans, &n.out0) {
+                    n.inflight.pop_front();
+                    push_all(chans, &n.out0, tok, now);
+                    acted = true;
+                }
+            }
+            if n.inflight.len() < mshr {
+                let (a, d) = (n.in0 as usize, n.in1 as usize);
+                if chans[a].peek(now).is_some() && chans[d].peek(now).is_some() {
+                    let addr_tok = chans[a].pop(now).unwrap();
+                    let data_tok = chans[d].pop(now).unwrap();
+                    let t = mem.store(addr_tok.val as u64, data_tok.val, now);
+                    n.inflight
+                        .push_back((t, Token::new(1.0, addr_tok.row, addr_tok.col)));
+                    acted = true;
+                }
+            }
+            acted
+        }
+        Op::Mul => {
+            let ch = n.in0 as usize;
+            if chans[ch].peek(now).is_some() && can_push_all(chans, &n.out0) {
+                let d = chans[ch].pop(now).unwrap();
+                stats.dp_fires += 1;
+                push_all(
+                    chans,
+                    &n.out0,
+                    Token::new(n.coeff * d.val, d.row, d.col),
+                    now,
+                );
+                true
+            } else {
+                false
+            }
+        }
+        Op::Mac => {
+            let (p, d) = (n.in0 as usize, n.in1 as usize);
+            if chans[p].peek(now).is_some()
+                && chans[d].peek(now).is_some()
+                && can_push_all(chans, &n.out0)
+            {
+                let part = chans[p].pop(now).unwrap();
+                let data = chans[d].pop(now).unwrap();
+                stats.dp_fires += 1;
+                push_all(
+                    chans,
+                    &n.out0,
+                    Token::new(part.val + n.coeff * data.val, data.row, data.col),
+                    now,
+                );
+                true
+            } else {
+                false
+            }
+        }
+        Op::Add => {
+            let (a, b) = (n.in0 as usize, n.in1 as usize);
+            if chans[a].peek(now).is_some()
+                && chans[b].peek(now).is_some()
+                && can_push_all(chans, &n.out0)
+            {
+                let x = chans[a].pop(now).unwrap();
+                let y = chans[b].pop(now).unwrap();
+                stats.dp_fires += 1;
+                push_all(chans, &n.out0, Token::new(x.val + y.val, x.row, x.col), now);
+                true
+            } else {
+                false
+            }
+        }
+        Op::Copy | Op::Shift => {
+            let ch = n.in0 as usize;
+            if chans[ch].peek(now).is_some() && can_push_all(chans, &n.out0) {
+                let t = chans[ch].pop(now).unwrap();
+                push_all(chans, &n.out0, t, now);
+                true
+            } else {
+                false
+            }
+        }
+        Op::Filter => {
+            let ch = n.in0 as usize;
+            if let Some(&tok) = chans[ch].peek(now) {
+                let pass = n
+                    .filter
+                    .as_ref()
+                    .map(|f| f.passes(n.filter_idx, tok.row, tok.col))
+                    .unwrap_or(true);
+                if pass {
+                    if can_push_all(chans, &n.out0) {
+                        chans[ch].pop(now);
+                        n.filter_idx += 1;
+                        push_all(chans, &n.out0, tok, now);
+                        true
+                    } else {
+                        false
+                    }
+                } else {
+                    // Dropping needs no credit.
+                    chans[ch].pop(now);
+                    n.filter_idx += 1;
+                    true
+                }
+            } else {
+                false
+            }
+        }
+        Op::Mux => {
+            // in0 = select stream, in1 = data; pass data when sel != 0.
+            let (s, d) = (n.in0 as usize, n.in1 as usize);
+            if chans[s].peek(now).is_some() && chans[d].peek(now).is_some() {
+                let pass = chans[s].peek(now).unwrap().val != 0.0;
+                if pass && !can_push_all(chans, &n.out0) {
+                    return false;
+                }
+                chans[s].pop(now);
+                let data = chans[d].pop(now).unwrap();
+                if pass {
+                    push_all(chans, &n.out0, data, now);
+                }
+                true
+            } else {
+                false
+            }
+        }
+        Op::Demux => {
+            // Route by row parity band: port = row % nports.
+            let ch = n.in0 as usize;
+            if let Some(&tok) = chans[ch].peek(now) {
+                let nports = n.outs.len().max(1);
+                let port = (tok.row as usize) % nports;
+                if can_push_all(chans, &n.outs[port]) {
+                    chans[ch].pop(now);
+                    push_all(chans, &n.outs[port], tok, now);
+                    true
+                } else {
+                    false
+                }
+            } else {
+                false
+            }
+        }
+        Op::Cmp => {
+            let (a, b) = (n.in0 as usize, n.in1 as usize);
+            if chans[a].peek(now).is_some()
+                && chans[b].peek(now).is_some()
+                && can_push_all(chans, &n.out0)
+            {
+                let x = chans[a].pop(now).unwrap();
+                let y = chans[b].pop(now).unwrap();
+                let v = if x.val <= y.val { 1.0 } else { 0.0 };
+                push_all(chans, &n.out0, Token::new(v, x.row, x.col), now);
+                true
+            } else {
+                false
+            }
+        }
+        Op::Or => {
+            let (a, b) = (n.in0 as usize, n.in1 as usize);
+            if chans[a].peek(now).is_some()
+                && chans[b].peek(now).is_some()
+                && can_push_all(chans, &n.out0)
+            {
+                let x = chans[a].pop(now).unwrap();
+                let y = chans[b].pop(now).unwrap();
+                let v = if x.val != 0.0 || y.val != 0.0 { 1.0 } else { 0.0 };
+                push_all(chans, &n.out0, Token::new(v, x.row, x.col), now);
+                true
+            } else {
+                false
+            }
+        }
+        Op::SyncCount => {
+            let mut acted = false;
+            let ch = n.in0 as usize;
+            if chans[ch].peek(now).is_some() {
+                chans[ch].pop(now);
+                n.count += 1;
+                acted = true;
+            }
+            if !n.emitted && n.count >= n.expected {
+                let outs_ok = n.outs.first().map(|o| can_push_all(chans, o)).unwrap_or(true);
+                if outs_ok {
+                    if let Some(o) = n.outs.first() {
+                        push_all(chans, o, Token::new(n.count as f64, 0, 0), now);
+                    }
+                    n.emitted = true;
+                    acted = true;
+                }
+            }
+            acted
+        }
+        Op::DoneTree => {
+            if n.emitted {
+                false
+            } else {
+                let all = n
+                    .ins
+                    .iter()
+                    .all(|&c| c != NO_CHAN && chans[c as usize].peek(now).is_some());
+                if all {
+                    for &c in &n.ins {
+                        chans[c as usize].pop(now);
+                    }
+                    n.emitted = true;
+                    if let Some(o) = n.outs.first() {
+                        if can_push_all(chans, o) {
+                            push_all(chans, o, Token::new(1.0, 0, 0), now);
+                        }
+                    }
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+        Op::Const => {
+            let limit = if n.expected == u64::MAX { u64::MAX } else { n.expected };
+            if n.count < limit && can_push_all(chans, &n.out0) {
+                n.count += 1;
+                push_all(chans, &n.out0, Token::new(n.coeff, 0, 0), now);
+                true
+            } else {
+                false
+            }
+        }
+    };
+    if fired {
+        n.fires += 1;
+        stats.record_fire(n.stage);
+    }
+    fired
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::{map1d, map2d, StencilSpec};
+    use crate::util::rng::XorShift;
+
+    /// Native oracle: 1-D star stencil, interior-only, left-to-right.
+    fn ref_1d(x: &[f64], c: &[f64]) -> Vec<f64> {
+        let r = (c.len() - 1) / 2;
+        let mut out = x.to_vec();
+        for o in r..x.len() - r {
+            let mut acc = c[0] * x[o - r];
+            for (k, &ck) in c.iter().enumerate().skip(1) {
+                acc += ck * x[o - r + k];
+            }
+            out[o] = acc;
+        }
+        out
+    }
+
+    fn run_1d(spec: &StencilSpec, w: usize, input: Vec<f64>) -> SimResult {
+        let g = map1d::build(spec, w).unwrap();
+        let m = Machine::paper();
+        let out0 = input.clone();
+        Simulator::build(g, &m, input, out0).unwrap().run().unwrap()
+    }
+
+    #[test]
+    fn simulates_3pt_1d_correctly() {
+        let spec = StencilSpec::dim1(32, vec![0.25, 0.5, 0.25]).unwrap();
+        let mut rng = XorShift::new(1);
+        let x = rng.normal_vec(32);
+        let res = run_1d(&spec, 3, x.clone());
+        let want = ref_1d(&x, &spec.cx);
+        for i in 0..32 {
+            assert!(
+                (res.output[i] - want[i]).abs() < 1e-12,
+                "i={i}: {} vs {}",
+                res.output[i],
+                want[i]
+            );
+        }
+        assert!(res.stats.cycles > 0);
+    }
+
+    #[test]
+    fn simulates_17pt_1d_all_worker_counts() {
+        let spec = StencilSpec::dim1(200, crate::stencil::spec::symmetric_taps(8)).unwrap();
+        let mut rng = XorShift::new(7);
+        let x = rng.normal_vec(200);
+        let want = ref_1d(&x, &spec.cx);
+        for w in [1, 2, 3, 6] {
+            let res = run_1d(&spec, w, x.clone());
+            for i in 0..200 {
+                assert!((res.output[i] - want[i]).abs() < 1e-12, "w={w} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn dp_fire_count_matches_work() {
+        let spec = StencilSpec::dim1(64, vec![0.25, 0.5, 0.25]).unwrap();
+        let res = run_1d(&spec, 2, vec![1.0; 64]);
+        // Each of the 62 interior outputs takes 3 DP fires.
+        assert_eq!(res.stats.dp_fires, 62 * 3);
+    }
+
+    #[test]
+    fn memory_traffic_is_read_once_write_once() {
+        let spec = StencilSpec::dim1(512, crate::stencil::spec::symmetric_taps(4)).unwrap();
+        let res = run_1d(&spec, 4, vec![1.0; 512]);
+        // Reads: ceil(512*8 / 64) lines = 64 fills = 4096 bytes.
+        assert_eq!(res.stats.mem.dram_read_bytes, 512 * 8);
+        // Writes: interior only.
+        assert_eq!(res.stats.mem.dram_write_bytes, (512 - 8) * 8);
+        // Every grid point loaded exactly once.
+        assert_eq!(res.stats.mem.loads, 512);
+    }
+
+    /// Native oracle: 2-D star stencil matching ref.py's chain order.
+    fn ref_2d(x: &[f64], nx: usize, ny: usize, spec: &StencilSpec) -> Vec<f64> {
+        let (rx, ry) = (spec.rx, spec.ry);
+        let mut out = x.to_vec();
+        for r in ry..ny - ry {
+            for c in rx..nx - rx {
+                let mut acc = spec.cx[0] * x[r * nx + c - rx];
+                for t in 1..2 * rx + 1 {
+                    acc += spec.cx[t] * x[r * nx + c - rx + t];
+                }
+                for u in 0..2 * ry {
+                    let k = if u < ry { u } else { u + 1 };
+                    let rr = r + k - ry;
+                    acc += spec.cy[u] * x[rr * nx + c];
+                }
+                out[r * nx + c] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn simulates_5pt_2d_correctly() {
+        let spec = StencilSpec::heat2d(20, 14, 0.2);
+        let mut rng = XorShift::new(3);
+        let x = rng.normal_vec(20 * 14);
+        let g = map2d::build(&spec, 3).unwrap();
+        let res = Simulator::build(g, &Machine::paper(), x.clone(), x.clone())
+            .unwrap()
+            .run()
+            .unwrap();
+        let want = ref_2d(&x, 20, 14, &spec);
+        for i in 0..x.len() {
+            assert!(
+                (res.output[i] - want[i]).abs() < 1e-12,
+                "i={i}: {} vs {}",
+                res.output[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn simulates_wide_radius_2d() {
+        let spec = StencilSpec::dim2(
+            30,
+            22,
+            crate::stencil::spec::symmetric_taps(3),
+            crate::stencil::spec::y_taps(2),
+        )
+        .unwrap();
+        let mut rng = XorShift::new(11);
+        let x = rng.normal_vec(30 * 22);
+        for w in [1, 2, 4] {
+            let g = map2d::build(&spec, w).unwrap();
+            let res = Simulator::build(g, &Machine::paper(), x.clone(), x.clone())
+                .unwrap()
+                .run()
+                .unwrap();
+            let want = ref_2d(&x, 30, 22, &spec);
+            for i in 0..x.len() {
+                assert!((res.output[i] - want[i]).abs() < 1e-11, "w={w} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn boundary_untouched() {
+        let spec = StencilSpec::heat2d(12, 10, 0.2);
+        let x: Vec<f64> = (0..120).map(|i| i as f64).collect();
+        let g = map2d::build(&spec, 2).unwrap();
+        let res = Simulator::build(g, &Machine::paper(), x.clone(), x.clone())
+            .unwrap()
+            .run()
+            .unwrap();
+        for c in 0..12 {
+            assert_eq!(res.output[c], x[c]); // top row
+            assert_eq!(res.output[9 * 12 + c], x[9 * 12 + c]); // bottom row
+        }
+        for r in 0..10 {
+            assert_eq!(res.output[r * 12], x[r * 12]); // left col
+            assert_eq!(res.output[r * 12 + 11], x[r * 12 + 11]); // right col
+        }
+    }
+
+    #[test]
+    fn undersized_buffering_deadlocks_with_report() {
+        // §III-B: strip the mandatory buffering and the pipeline must
+        // deadlock (failure injection).
+        let spec = StencilSpec::dim2(
+            24,
+            18,
+            crate::stencil::spec::symmetric_taps(1),
+            crate::stencil::spec::y_taps(3), // ry = 3 needs deep buffers
+        )
+        .unwrap();
+        let mut g = map2d::build(&spec, 2).unwrap();
+        for ch in &mut g.channels {
+            ch.capacity = ch.capacity.min(2); // sabotage
+        }
+        // Bypass placement's capacity floor by building directly on a
+        // machine with instant routing.
+        let m = Machine::paper();
+        let x = vec![1.0; 24 * 18];
+        // Placement re-raises capacity to lat+2 which is still < needed.
+        let err = Simulator::build(g, &m, x.clone(), x)
+            .unwrap()
+            .run()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("deadlock"), "{err}");
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let spec = StencilSpec::heat2d(16, 12, 0.2);
+        let mut rng = XorShift::new(5);
+        let x = rng.normal_vec(16 * 12);
+        let run = || {
+            let g = map2d::build(&spec, 2).unwrap();
+            Simulator::build(g, &Machine::paper(), x.clone(), x.clone())
+                .unwrap()
+                .run()
+                .unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.stats.cycles, b.stats.cycles);
+        assert_eq!(a.output, b.output);
+        assert_eq!(a.stats.mem, b.stats.mem);
+    }
+}

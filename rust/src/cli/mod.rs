@@ -1,0 +1,324 @@
+//! Hand-rolled CLI for the `scgra` launcher (no clap in the offline
+//! vendor set). Subcommands map 1:1 onto the paper's artifacts:
+//!
+//! ```text
+//! scgra info                         machine + artifact inventory
+//! scgra dfg      --stencil S [-w N] [--dot F] [--asm F]   §V emitters
+//! scgra roofline [--stencil S]                            §VI analysis
+//! scgra run      --stencil S [-w N] [--tiles N] [--steps N]  simulate
+//! scgra compare                                           Table I
+//! scgra validate                                          3-layer check
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cgra::Machine;
+use crate::config::Config;
+use crate::coordinator::Coordinator;
+use crate::gpu_model::{GpuStencil, Precision, V100};
+use crate::roofline;
+use crate::stencil::{map1d, map2d, StencilSpec};
+use crate::util::rng::XorShift;
+use crate::verify::golden::{max_abs_diff, run_sim, stencil1d_ref, stencil2d_ref};
+
+/// Parsed command line: subcommand + `--flag value` pairs.
+pub struct Args {
+    pub cmd: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Self> {
+        let cmd = argv.first().cloned().unwrap_or_else(|| "help".into());
+        let mut flags = HashMap::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            let key = a
+                .strip_prefix("--")
+                .or_else(|| a.strip_prefix('-'))
+                .with_context(|| format!("expected flag, got `{a}`"))?;
+            let val = if i + 1 < argv.len() && !argv[i + 1].starts_with('-') {
+                i += 1;
+                argv[i].clone()
+            } else {
+                "true".to_string()
+            };
+            flags.insert(key.to_string(), val);
+            i += 1;
+        }
+        Ok(Self { cmd, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")),
+        }
+    }
+}
+
+fn stencil_by_name(name: &str) -> Result<StencilSpec> {
+    Ok(match name {
+        "paper1d" | "1d17" => StencilSpec::paper_1d(),
+        "paper2d" | "2d49" => StencilSpec::paper_2d(),
+        "heat2d" => StencilSpec::heat2d(96, 96, 0.2),
+        "3pt" => StencilSpec::dim1(4096, vec![0.25, 0.5, 0.25])?,
+        other => bail!("unknown stencil `{other}` (paper1d|paper2d|heat2d|3pt)"),
+    })
+}
+
+/// Entry point shared by `main.rs` (returns instead of exiting for
+/// testability).
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    let (machine, run_defaults) = match args.get("config") {
+        Some(path) => {
+            let c = Config::load(path)?;
+            (c.machine()?, Some(c))
+        }
+        None => (Machine::paper(), None),
+    };
+    match args.cmd.as_str() {
+        "help" | "--help" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        "info" => cmd_info(&machine),
+        "dfg" => cmd_dfg(&args, &machine),
+        "roofline" => cmd_roofline(&args, &machine),
+        "run" => cmd_run(&args, &machine, run_defaults.as_ref()),
+        "compare" => cmd_compare(&machine),
+        "validate" => cmd_validate(&machine),
+        other => bail!("unknown command `{other}`\n{HELP}"),
+    }
+}
+
+const HELP: &str = "scgra — stencils on a coarse-grained reconfigurable spatial architecture
+USAGE: scgra <info|dfg|roofline|run|compare|validate> [--flags]
+  --stencil paper1d|paper2d|heat2d|3pt   workload (default paper2d)
+  --workers N                            compute workers (0 = roofline pick)
+  --tiles N                              CGRA tiles (default 1)
+  --steps N                              host-driven time steps (default 1)
+  --dot FILE / --asm FILE                emit Graphviz / assembly (dfg)
+  --config FILE                          TOML machine/run config";
+
+fn cmd_info(m: &Machine) -> Result<()> {
+    println!("machine: {:.1} GHz, {} MAC PEs, {} GB/s -> peak {:.0} GFLOPS",
+        m.clock_ghz, m.mac_pes, m.bw_gbps, m.peak_gflops());
+    println!("fabric:  {}x{} PEs, cache {} KiB, DRAM latency {} cyc",
+        m.grid_rows, m.grid_cols, m.cache_kib, m.dram_latency);
+    match crate::runtime::Runtime::open(crate::runtime::Runtime::default_dir()) {
+        Ok(rt) => println!("artifacts ({}): {}", rt.platform(), rt.names().join(", ")),
+        Err(e) => println!("artifacts: unavailable ({e}) — run `make artifacts`"),
+    }
+    Ok(())
+}
+
+fn cmd_dfg(args: &Args, m: &Machine) -> Result<()> {
+    let spec = stencil_by_name(args.get("stencil").unwrap_or("paper2d"))?;
+    let w = match args.num("workers", 0usize)? {
+        0 => roofline::optimal_workers(&spec, m),
+        w => w,
+    };
+    let g = if spec.is_1d() {
+        map1d::build(&spec, w)?
+    } else {
+        map2d::build(&spec, w)?
+    };
+    let title = format!(
+        "{}x{} r=({},{}) {}-pt stencil, {} workers",
+        spec.nx, spec.ny, spec.rx, spec.ry, spec.points(), w
+    );
+    println!("{title}: {}", g.summary());
+    if let Some(path) = args.get("dot") {
+        std::fs::write(path, crate::dfg::dot::to_dot(&g, &title))?;
+        println!("wrote {path}");
+    }
+    if let Some(path) = args.get("asm") {
+        std::fs::write(path, crate::dfg::asm::to_asm(&g, &title))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_roofline(args: &Args, m: &Machine) -> Result<()> {
+    let specs: Vec<(&str, StencilSpec)> = match args.get("stencil") {
+        Some(s) => vec![(s, stencil_by_name(s)?)],
+        None => vec![
+            ("stencil1D", StencilSpec::paper_1d()),
+            ("stencil2D", StencilSpec::paper_2d()),
+        ],
+    };
+    println!("{:<12} {:>6} {:>10} {:>10} {:>10} {:>8} {:>6}",
+        "stencil", "AI", "bw-roof", "peak", "attain", "demand", "w");
+    for (name, spec) in specs {
+        let w = roofline::optimal_workers(&spec, m);
+        let a = roofline::analyze(&spec, m, w);
+        println!(
+            "{:<12} {:>6.2} {:>10.0} {:>10.0} {:>10.0} {:>8.0} {:>6}",
+            name, a.arithmetic_intensity, a.bw_gflops, a.peak_gflops,
+            a.attainable_gflops, a.demand_gflops, a.workers
+        );
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args, m: &Machine, cfg: Option<&Config>) -> Result<()> {
+    let spec = match (args.get("stencil"), cfg) {
+        (Some(s), _) => stencil_by_name(s)?,
+        (None, Some(c)) => c.stencil()?,
+        (None, None) => StencilSpec::paper_2d(),
+    };
+    let defaults = cfg.map(|c| c.run_params()).transpose()?.unwrap_or(
+        crate::config::RunParams { workers: 0, tiles: 1, steps: 1, seed: 42 },
+    );
+    let w = match args.num("workers", defaults.workers)? {
+        0 => roofline::optimal_workers(&spec, m),
+        w => w,
+    };
+    let tiles = args.num("tiles", defaults.tiles)?;
+    let steps = args.num("steps", defaults.steps)?;
+    let mut rng = XorShift::new(defaults.seed);
+    let input = rng.normal_vec(spec.grid_points());
+
+    let coord = Coordinator::new(tiles, m.clone());
+    println!(
+        "running {}x{} {}-pt stencil, w={w}, tiles={tiles}, steps={steps}",
+        spec.nx, spec.ny, spec.points()
+    );
+    let (out, reports) = coord.run_steps(&spec, w, &input, steps)?;
+    for (i, r) in reports.iter().enumerate() {
+        println!(
+            "step {i}: {} strips, makespan {} cyc, {:.1} GFLOPS ({:.0}% of roofline)",
+            r.strips,
+            r.makespan_cycles,
+            r.gflops,
+            100.0 * r.gflops
+                / (tiles as f64 * m.roofline_gflops(spec.arithmetic_intensity())),
+        );
+    }
+    // Quick correctness spot check on the first step.
+    let first = &reports[0];
+    let want = if spec.is_1d() {
+        stencil1d_ref(&input, &spec.cx)
+    } else {
+        stencil2d_ref(&input, &spec)
+    };
+    println!(
+        "step-0 max|err| vs oracle: {:.2e}; final grid checksum {:.6}",
+        max_abs_diff(&first.output, &want),
+        out.iter().sum::<f64>()
+    );
+    Ok(())
+}
+
+fn cmd_compare(m: &Machine) -> Result<()> {
+    // Table I: 16 CGRA tiles vs one V100.
+    let coord = Coordinator::new(16, m.clone());
+    let v100 = V100::paper();
+    println!("Table I — comparative analysis of stencils on CGRA and GPU");
+    for (name, spec, w) in [
+        ("Stencil 1D (grid=194400, rx=8)", StencilSpec::paper_1d(), 6usize),
+        ("Stencil 2D (960x449, rx=ry=12)", StencilSpec::paper_2d(), 5usize),
+    ] {
+        let mut rng = XorShift::new(7);
+        let input = rng.normal_vec(spec.grid_points());
+        let rep = coord.run(&spec, w, &input)?;
+        let cgra_roof =
+            coord.tiles as f64 * m.roofline_gflops(spec.arithmetic_intensity());
+        let g = GpuStencil::from_spec(&spec, Precision::F64);
+        let gpu = v100.best_gflops(&g);
+        let gpu_roof = v100.roofline_gflops(&g);
+        println!("\n{name}");
+        println!("  CGRA x16: {:>8.0} GFLOPS  ({:>4.1}% of {:.0} roof)",
+            rep.gflops, 100.0 * rep.gflops / cgra_roof, cgra_roof);
+        println!("  V100:     {:>8.0} GFLOPS  ({:>4.1}% of {:.0} roof)",
+            gpu, 100.0 * gpu / gpu_roof, gpu_roof);
+        println!("  normalized GFLOPS (CGRA/V100): {:.2}x", rep.gflops / gpu);
+    }
+    Ok(())
+}
+
+fn cmd_validate(m: &Machine) -> Result<()> {
+    // Three-layer agreement on the 49-pt stencil: simulator vs native
+    // oracle vs the PJRT-executed JAX/Pallas artifact.
+    let spec = StencilSpec::dim2(
+        96,
+        96,
+        crate::stencil::spec::symmetric_taps(12),
+        crate::stencil::spec::y_taps(12),
+    )?;
+    let mut rng = XorShift::new(123);
+    let x = rng.normal_vec(96 * 96);
+
+    let sim = run_sim(&spec, 4, m, &x)?;
+    let oracle = stencil2d_ref(&x, &spec);
+    let d_sim = max_abs_diff(&sim.output, &oracle);
+    println!("simulator vs oracle:  max|err| = {d_sim:.2e}");
+
+    let mut rt = crate::runtime::Runtime::open(crate::runtime::Runtime::default_dir())?;
+    let pjrt = rt.execute("stencil2d_r12_96x96", &[&x, &spec.cx, &spec.cy])?;
+    let d_pjrt = max_abs_diff(&pjrt, &oracle);
+    println!("PJRT (pallas) vs oracle: max|err| = {d_pjrt:.2e}");
+    let d_cross = max_abs_diff(&pjrt, &sim.output);
+    println!("PJRT vs simulator:    max|err| = {d_cross:.2e}");
+    anyhow::ensure!(d_sim < 1e-9 && d_pjrt < 1e-9 && d_cross < 1e-9, "validation failed");
+    println!("all three layers agree ✓");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags() {
+        let a = Args::parse(&sv(&["run", "--workers", "5", "--tiles", "16"])).unwrap();
+        assert_eq!(a.cmd, "run");
+        assert_eq!(a.num("workers", 0usize).unwrap(), 5);
+        assert_eq!(a.num("tiles", 1usize).unwrap(), 16);
+        assert_eq!(a.num("steps", 1usize).unwrap(), 1);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = Args::parse(&sv(&["dfg", "--verbose"])).unwrap();
+        assert_eq!(a.get("verbose"), Some("true"));
+    }
+
+    #[test]
+    fn stencil_names_resolve() {
+        assert_eq!(stencil_by_name("paper1d").unwrap().points(), 17);
+        assert_eq!(stencil_by_name("2d49").unwrap().points(), 49);
+        assert!(stencil_by_name("bogus").is_err());
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(&sv(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn roofline_command_runs() {
+        run(&sv(&["roofline"])).unwrap();
+    }
+
+    #[test]
+    fn dfg_command_runs_small() {
+        run(&sv(&["dfg", "--stencil", "3pt", "--workers", "2"])).unwrap();
+    }
+}

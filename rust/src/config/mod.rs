@@ -1,0 +1,207 @@
+//! Config system: a small TOML-subset parser (sections, `key = value`
+//! with numbers / strings / booleans, `#` comments) mapped onto the
+//! machine and run descriptions. No external crates are available in the
+//! offline vendor set, so the parser lives here; `configs/*.toml` ship
+//! ready-made machine and experiment files.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cgra::Machine;
+use crate::stencil::StencilSpec;
+
+/// Parsed key-value configuration grouped by `[section]`.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    sections: HashMap<String, HashMap<String, String>>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut sections: HashMap<String, HashMap<String, String>> = HashMap::new();
+        let mut current = String::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                current = name.trim().to_string();
+                sections.entry(current.clone()).or_default();
+            } else if let Some((k, v)) = line.split_once('=') {
+                let val = v.trim().trim_matches('"').to_string();
+                sections
+                    .entry(current.clone())
+                    .or_default()
+                    .insert(k.trim().to_string(), val);
+            } else {
+                bail!("config line {}: expected `key = value` or `[section]`", i + 1);
+            }
+        }
+        Ok(Self { sections })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    fn num<T: std::str::FromStr>(&self, section: &str, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("[{section}] {key} = {v}: {e}")),
+        }
+    }
+
+    /// Build a [`Machine`] from `[machine]`, defaulting to the paper's.
+    pub fn machine(&self) -> Result<Machine> {
+        let d = Machine::paper();
+        Ok(Machine {
+            clock_ghz: self.num("machine", "clock_ghz", d.clock_ghz)?,
+            grid_rows: self.num("machine", "grid_rows", d.grid_rows)?,
+            grid_cols: self.num("machine", "grid_cols", d.grid_cols)?,
+            mac_pes: self.num("machine", "mac_pes", d.mac_pes)?,
+            bw_gbps: self.num("machine", "bw_gbps", d.bw_gbps)?,
+            dram_latency: self.num("machine", "dram_latency", d.dram_latency)?,
+            cache_kib: self.num("machine", "cache_kib", d.cache_kib)?,
+            cache_line: self.num("machine", "cache_line", d.cache_line)?,
+            cache_hit_latency: self.num("machine", "cache_hit_latency", d.cache_hit_latency)?,
+            mshr_per_load: self.num("machine", "mshr_per_load", d.mshr_per_load)?,
+            max_instr_per_pe: self.num("machine", "max_instr_per_pe", d.max_instr_per_pe)?,
+            hops_per_cycle: self.num("machine", "hops_per_cycle", d.hops_per_cycle)?,
+        })
+    }
+
+    /// Build a [`StencilSpec`] from `[stencil]`:
+    /// `preset = paper1d|paper2d|heat2d`, or explicit
+    /// `nx/ny/rx/ry` with generated symmetric taps.
+    pub fn stencil(&self) -> Result<StencilSpec> {
+        if let Some(p) = self.get("stencil", "preset") {
+            return match p {
+                "paper1d" => Ok(StencilSpec::paper_1d()),
+                "paper2d" => Ok(StencilSpec::paper_2d()),
+                "heat2d" => {
+                    let nx = self.num("stencil", "nx", 96usize)?;
+                    let ny = self.num("stencil", "ny", 96usize)?;
+                    let alpha = self.num("stencil", "alpha", 0.2f64)?;
+                    Ok(StencilSpec::heat2d(nx, ny, alpha))
+                }
+                other => bail!("unknown stencil preset `{other}`"),
+            };
+        }
+        let nx = self.num("stencil", "nx", 4096usize)?;
+        let ny = self.num("stencil", "ny", 1usize)?;
+        let rx = self.num("stencil", "rx", 1usize)?;
+        let ry = self.num("stencil", "ry", 0usize)?;
+        if ny <= 1 || ry == 0 {
+            StencilSpec::dim1(nx, crate::stencil::spec::symmetric_taps(rx))
+        } else {
+            StencilSpec::dim2(
+                nx,
+                ny,
+                crate::stencil::spec::symmetric_taps(rx),
+                crate::stencil::spec::y_taps(ry),
+            )
+        }
+    }
+
+    /// `[run]` knobs: workers (0 = roofline-optimal), tiles, steps.
+    pub fn run_params(&self) -> Result<RunParams> {
+        Ok(RunParams {
+            workers: self.num("run", "workers", 0usize)?,
+            tiles: self.num("run", "tiles", 1usize)?,
+            steps: self.num("run", "steps", 1usize)?,
+            seed: self.num("run", "seed", 42u64)?,
+        })
+    }
+}
+
+/// `[run]` section contents.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RunParams {
+    /// 0 means "choose via the §VI roofline".
+    pub workers: usize,
+    pub tiles: usize,
+    pub steps: usize,
+    pub seed: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# sample experiment
+[machine]
+clock_ghz = 1.2
+mac_pes = 256
+bw_gbps = 100  # one tile
+
+[stencil]
+preset = "paper2d"
+
+[run]
+workers = 5
+tiles = 16
+"#;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("machine", "mac_pes"), Some("256"));
+        assert_eq!(c.get("run", "tiles"), Some("16"));
+        assert_eq!(c.get("machine", "bw_gbps"), Some("100"));
+    }
+
+    #[test]
+    fn machine_round_trip() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let m = c.machine().unwrap();
+        assert_eq!(m.mac_pes, 256);
+        assert!((m.peak_gflops() - 614.4).abs() < 0.1);
+    }
+
+    #[test]
+    fn stencil_preset() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let s = c.stencil().unwrap();
+        assert_eq!(s.points(), 49);
+    }
+
+    #[test]
+    fn explicit_stencil_params() {
+        let c = Config::parse("[stencil]\nnx = 128\nny = 64\nrx = 2\nry = 3\n").unwrap();
+        let s = c.stencil().unwrap();
+        assert_eq!((s.nx, s.ny, s.rx, s.ry), (128, 64, 2, 3));
+    }
+
+    #[test]
+    fn defaults_when_sections_missing() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.machine().unwrap(), Machine::paper());
+        assert_eq!(c.run_params().unwrap().tiles, 1);
+    }
+
+    #[test]
+    fn bad_line_is_error() {
+        assert!(Config::parse("not a kv line").is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let c = Config::parse("[machine]\nmac_pes = many\n").unwrap();
+        assert!(c.machine().is_err());
+    }
+}

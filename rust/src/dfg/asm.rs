@@ -1,0 +1,261 @@
+//! High-level assembly emission — the text program the §V tool "emits for
+//! the created DFG". One line per instruction with its immediates and
+//! channel wiring; `# comments` carry stage/worker grouping.
+//!
+//! Format (stable; parsed back by [`parse`] for round-trip tests):
+//!
+//! ```text
+//! pe <name> <mnemonic> [worker=<w>] [coeff=<f>] [filter=bits:m,n,p|rowcol:rl,rh,cl,ch]
+//!    [agen=rl,rh,cs,ch,stride,width] [expected=<n>] in=[ch0,ch1,...] out=[ch2,...]
+//! chan <id> <src>:<port> -> <dst>:<port> cap=<c> lat=<l>
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use super::graph::{Graph, DEFAULT_CAPACITY};
+use super::node::{AddrIter, FilterSpec, Node, Op, Stage};
+
+fn op_from_mnemonic(m: &str) -> Option<Op> {
+    Some(match m {
+        "mul" => Op::Mul,
+        "mac" => Op::Mac,
+        "add" => Op::Add,
+        "copy" => Op::Copy,
+        "filter" => Op::Filter,
+        "mux" => Op::Mux,
+        "demux" => Op::Demux,
+        "cmp" => Op::Cmp,
+        "or" => Op::Or,
+        "shift" => Op::Shift,
+        "ld" => Op::Load,
+        "st" => Op::Store,
+        "agen" => Op::AddrGen,
+        "sync" => Op::SyncCount,
+        "done" => Op::DoneTree,
+        "const" => Op::Const,
+        _ => return None,
+    })
+}
+
+fn stage_from_name(s: &str) -> Option<Stage> {
+    Some(match s {
+        "control" => Stage::Control,
+        "reader" => Stage::Reader,
+        "compute" => Stage::Compute,
+        "writer" => Stage::Writer,
+        "sync" => Stage::Sync,
+        _ => return None,
+    })
+}
+
+/// Emit the high-level assembly program for a DFG.
+pub fn to_asm(g: &Graph, title: &str) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("# tia-asm: {title}\n"));
+    s.push_str(&format!("# {}\n", g.summary()));
+    for n in &g.nodes {
+        s.push_str(&format!("pe {} {} stage={}", n.name, n.op.mnemonic(), n.stage.name()));
+        if let Some(w) = n.worker {
+            s.push_str(&format!(" worker={w}"));
+        }
+        if let Some(c) = n.coeff {
+            s.push_str(&format!(" coeff={c:e}"));
+        }
+        match n.filter {
+            Some(FilterSpec::Bits { m, n: nn, p }) => {
+                s.push_str(&format!(" filter=bits:{m},{nn},{p}"))
+            }
+            Some(FilterSpec::RowCol { row_lo, row_hi, col_lo, col_hi }) => s.push_str(
+                &format!(" filter=rowcol:{row_lo},{row_hi},{col_lo},{col_hi}"),
+            ),
+            None => {}
+        }
+        if let Some(a) = n.agen {
+            s.push_str(&format!(
+                " agen={},{},{},{},{},{}",
+                a.row_lo, a.row_hi, a.col_start, a.col_hi, a.col_stride, a.width
+            ));
+        }
+        if let Some(e) = n.expected {
+            s.push_str(&format!(" expected={e}"));
+        }
+        s.push('\n');
+    }
+    for c in &g.channels {
+        s.push_str(&format!(
+            "chan {} {}:{} -> {}:{} cap={} lat={}\n",
+            c.id,
+            g.node(c.src).name,
+            c.src_port,
+            g.node(c.dst).name,
+            c.dst_port,
+            c.capacity,
+            c.latency
+        ));
+    }
+    s
+}
+
+/// Parse the assembly format back into a graph (round-trip testing and a
+/// path to feed externally-authored programs to the simulator).
+pub fn parse(text: &str) -> Result<Graph> {
+    let mut g = Graph::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        match it.next() {
+            Some("pe") => {
+                let name = it.next().context("pe: missing name")?;
+                let mn = it.next().context("pe: missing mnemonic")?;
+                let op = op_from_mnemonic(mn)
+                    .with_context(|| format!("line {}: bad op `{mn}`", lineno + 1))?;
+                let mut node = Node::new(0, name, op, Stage::Compute);
+                for kv in it {
+                    let (k, v) = kv
+                        .split_once('=')
+                        .with_context(|| format!("line {}: bad attr `{kv}`", lineno + 1))?;
+                    match k {
+                        "stage" => {
+                            node.stage = stage_from_name(v)
+                                .with_context(|| format!("bad stage `{v}`"))?
+                        }
+                        "worker" => node.worker = Some(v.parse()?),
+                        "coeff" => node.coeff = Some(v.parse()?),
+                        "expected" => node.expected = Some(v.parse()?),
+                        "filter" => {
+                            let (kind, args) =
+                                v.split_once(':').context("bad filter")?;
+                            let nums: Vec<u64> = args
+                                .split(',')
+                                .map(|x| x.parse::<u64>())
+                                .collect::<std::result::Result<_, _>>()?;
+                            node.filter = Some(match kind {
+                                "bits" => FilterSpec::Bits {
+                                    m: nums[0],
+                                    n: nums[1],
+                                    p: nums[2],
+                                },
+                                "rowcol" => FilterSpec::RowCol {
+                                    row_lo: nums[0] as u32,
+                                    row_hi: nums[1] as u32,
+                                    col_lo: nums[2] as u32,
+                                    col_hi: nums[3] as u32,
+                                },
+                                _ => bail!("bad filter kind `{kind}`"),
+                            });
+                        }
+                        "agen" => {
+                            let nums: Vec<u32> = v
+                                .split(',')
+                                .map(|x| x.parse::<u32>())
+                                .collect::<std::result::Result<_, _>>()?;
+                            node.agen = Some(AddrIter {
+                                row_lo: nums[0],
+                                row_hi: nums[1],
+                                col_start: nums[2],
+                                col_hi: nums[3],
+                                col_stride: nums[4],
+                                width: nums[5],
+                            });
+                        }
+                        _ => bail!("line {}: unknown attr `{k}`", lineno + 1),
+                    }
+                }
+                g.add_node(node);
+            }
+            Some("chan") => {
+                let _id = it.next().context("chan: missing id")?;
+                let src = it.next().context("chan: missing src")?;
+                let arrow = it.next().context("chan: missing ->")?;
+                if arrow != "->" {
+                    bail!("line {}: expected ->", lineno + 1);
+                }
+                let dst = it.next().context("chan: missing dst")?;
+                let mut cap = DEFAULT_CAPACITY;
+                let mut lat = 1u32;
+                for kv in it {
+                    let (k, v) = kv.split_once('=').context("bad attr")?;
+                    match k {
+                        "cap" => cap = v.parse()?,
+                        "lat" => lat = v.parse()?,
+                        _ => bail!("unknown chan attr `{k}`"),
+                    }
+                }
+                let (sn, sp) = src.rsplit_once(':').context("bad src")?;
+                let (dn, dp) = dst.rsplit_once(':').context("bad dst")?;
+                let s_id = g.find(sn).with_context(|| format!("unknown node `{sn}`"))?;
+                let d_id = g.find(dn).with_context(|| format!("unknown node `{dn}`"))?;
+                let ch = g.connect(s_id, sp.parse()?, d_id, dp.parse()?, cap);
+                g.channels[ch].latency = lat;
+            }
+            Some(other) => bail!("line {}: unknown directive `{other}`", lineno + 1),
+            None => {}
+        }
+    }
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::builder::Dsl;
+
+    fn sample() -> Graph {
+        let mut d = Dsl::new();
+        d.op("cu", Op::AddrGen, Stage::Control)
+            .agen(AddrIter::dim1(1, 3, 10))
+            .out("a");
+        d.op("ld", Op::Load, Stage::Reader).worker(0).input(0, "a").out("d");
+        d.op("f", Op::Filter, Stage::Compute)
+            .worker(0)
+            .filter(FilterSpec::Bits { m: 0, n: 8, p: 2 })
+            .input(0, "d")
+            .out("fd");
+        d.op("m", Op::Mul, Stage::Compute)
+            .worker(0)
+            .coeff(0.5)
+            .input_cap(0, "fd", 16)
+            .out("p");
+        d.op("sy", Op::SyncCount, Stage::Sync)
+            .expected(8)
+            .input(0, "p");
+        d.build().unwrap()
+    }
+
+    #[test]
+    fn asm_round_trips() {
+        let g = sample();
+        let text = to_asm(&g, "sample");
+        let g2 = parse(&text).unwrap();
+        assert_eq!(g.node_count(), g2.node_count());
+        assert_eq!(g.channel_count(), g2.channel_count());
+        assert_eq!(g.dp_ops(), g2.dp_ops());
+        // Immediates survive.
+        let m = g2.find("m").unwrap();
+        assert_eq!(g2.node(m).coeff, Some(0.5));
+        let f = g2.find("f").unwrap();
+        assert_eq!(g2.node(f).filter, Some(FilterSpec::Bits { m: 0, n: 8, p: 2 }));
+        let cu = g2.find("cu").unwrap();
+        assert_eq!(g2.node(cu).agen, Some(AddrIter::dim1(1, 3, 10)));
+        // Capacities survive.
+        let mid = g2.find("m").unwrap();
+        let ch = g2.input(mid, 0).unwrap();
+        assert_eq!(g2.channels[ch].capacity, 16);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse("bogus line here").is_err());
+        assert!(parse("pe x unknown_op").is_err());
+        assert!(parse("chan 0 a:0 -> b:0").is_err()); // unknown nodes
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let g = parse("# hi\n\n# more\n").unwrap();
+        assert_eq!(g.node_count(), 0);
+    }
+}

@@ -1,0 +1,252 @@
+//! The §V DSL: a parametric builder that "provides essential APIs to add
+//! PEs and connect their inputs and outputs ... and automatically connects
+//! the operations internally based on the input/output names of each
+//! operation".
+//!
+//! Ops publish named output *signals*; inputs reference signals by name.
+//! Resolution is deferred to [`Dsl::build`], so declaration order does not
+//! matter — exactly the auto-wiring behaviour the paper describes.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::graph::{Graph, DEFAULT_CAPACITY};
+use super::node::{AddrIter, FilterSpec, Node, Op, Stage};
+
+/// Deferred connection request: `signal -> (node, port, capacity)`.
+#[derive(Debug, Clone)]
+struct Pending {
+    signal: String,
+    dst_name: String,
+    dst_port: u8,
+    capacity: usize,
+}
+
+/// Signal-name based DFG builder.
+#[derive(Debug, Default)]
+pub struct Dsl {
+    graph: Graph,
+    /// signal name -> (producer node id, output port).
+    signals: HashMap<String, (usize, u8)>,
+    pending: Vec<Pending>,
+}
+
+/// Fluent handle for configuring one node.
+pub struct NodeRef<'a> {
+    dsl: &'a mut Dsl,
+    id: usize,
+}
+
+impl Dsl {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Declare a PE/instruction. `name` must be unique.
+    pub fn op(&mut self, name: &str, op: Op, stage: Stage) -> NodeRef<'_> {
+        let id = self.graph.add_node(Node::new(0, name, op, stage));
+        NodeRef { dsl: self, id }
+    }
+
+    /// Number of nodes declared so far.
+    pub fn len(&self) -> usize {
+        self.graph.node_count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resolve all deferred signal references and return the graph.
+    pub fn build(mut self) -> Result<Graph> {
+        for p in std::mem::take(&mut self.pending) {
+            let &(src, src_port) = self
+                .signals
+                .get(&p.signal)
+                .with_context(|| format!("unresolved signal `{}`", p.signal))?;
+            let dst = self
+                .graph
+                .find(&p.dst_name)
+                .with_context(|| format!("unknown node `{}`", p.dst_name))?;
+            self.graph
+                .connect(src, src_port, dst, p.dst_port, p.capacity);
+        }
+        // Arity check: every op must have its declared number of inputs.
+        for n in &self.graph.nodes {
+            let want = n.op.arity();
+            let got = self.graph.input_count(n.id);
+            if want != usize::MAX && got != want {
+                bail!(
+                    "node `{}` ({}) has {} inputs, expected {}",
+                    n.name,
+                    n.op.mnemonic(),
+                    got,
+                    want
+                );
+            }
+            if n.op == Op::DoneTree {
+                let exp = n.expected.unwrap_or(0) as usize;
+                if got != exp {
+                    bail!(
+                        "done tree `{}` has {} inputs, expected {}",
+                        n.name,
+                        got,
+                        exp
+                    );
+                }
+            }
+        }
+        Ok(self.graph)
+    }
+}
+
+impl<'a> NodeRef<'a> {
+    fn node(&mut self) -> &mut Node {
+        &mut self.dsl.graph.nodes[self.id]
+    }
+
+    /// Assign the logical worker this node belongs to.
+    pub fn worker(mut self, w: usize) -> Self {
+        self.node().worker = Some(w);
+        self
+    }
+
+    /// Coefficient immediate (Mul/Mac/Const).
+    pub fn coeff(mut self, c: f64) -> Self {
+        self.node().coeff = Some(c);
+        self
+    }
+
+    /// Filter configuration (Filter).
+    pub fn filter(mut self, f: FilterSpec) -> Self {
+        self.node().filter = Some(f);
+        self
+    }
+
+    /// Address iterator (AddrGen).
+    pub fn agen(mut self, a: AddrIter) -> Self {
+        self.node().agen = Some(a);
+        self
+    }
+
+    /// Expected count (SyncCount / DoneTree input count).
+    pub fn expected(mut self, e: u64) -> Self {
+        self.node().expected = Some(e);
+        self
+    }
+
+    /// Publish output port 0 under `signal`.
+    pub fn out(self, signal: &str) -> Self {
+        self.out_port(0, signal)
+    }
+
+    /// Publish output port `port` under `signal`.
+    pub fn out_port(self, port: u8, signal: &str) -> Self {
+        let id = self.id;
+        let prev = self.dsl.signals.insert(signal.to_string(), (id, port));
+        assert!(prev.is_none(), "signal `{signal}` published twice");
+        self
+    }
+
+    /// Connect input port (in declaration order) from `signal` with the
+    /// default queue capacity.
+    pub fn input(self, port: u8, signal: &str) -> Self {
+        self.input_cap(port, signal, DEFAULT_CAPACITY)
+    }
+
+    /// Connect input port from `signal` with an explicit queue capacity
+    /// (mandatory buffering, §III-B).
+    pub fn input_cap(mut self, port: u8, signal: &str, capacity: usize) -> Self {
+        let dst_name = self.node().name.clone();
+        self.dsl.pending.push(Pending {
+            signal: signal.to_string(),
+            dst_name,
+            dst_port: port,
+            capacity,
+        });
+        self
+    }
+
+    pub fn id(&self) -> usize {
+        self.id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_wires_by_signal_name() {
+        let mut d = Dsl::new();
+        d.op("r0", Op::AddrGen, Stage::Control)
+            .agen(AddrIter::dim1(0, 1, 8))
+            .out("addrs");
+        d.op("ld", Op::Load, Stage::Reader)
+            .input(0, "addrs")
+            .out("data");
+        d.op("m", Op::Mul, Stage::Compute)
+            .coeff(2.0)
+            .input(0, "data")
+            .out("partial");
+        let g = d.build().unwrap();
+        assert_eq!(g.node_count(), 3);
+        assert_eq!(g.channel_count(), 2);
+        let ld = g.find("ld").unwrap();
+        let m = g.find("m").unwrap();
+        assert_eq!(g.channels[g.input(m, 0).unwrap()].src, ld);
+    }
+
+    #[test]
+    fn declaration_order_does_not_matter() {
+        let mut d = Dsl::new();
+        // Consumer first, producer second: §V auto-connect still works.
+        d.op("consumer", Op::Load, Stage::Reader).input(0, "sig");
+        d.op("producer", Op::AddrGen, Stage::Control)
+            .agen(AddrIter::dim1(0, 1, 4))
+            .out("sig");
+        let g = d.build().unwrap();
+        assert_eq!(g.channel_count(), 1);
+    }
+
+    #[test]
+    fn unresolved_signal_is_error() {
+        let mut d = Dsl::new();
+        d.op("ld", Op::Load, Stage::Reader).input(0, "missing");
+        assert!(d.build().is_err());
+    }
+
+    #[test]
+    fn arity_is_checked() {
+        let mut d = Dsl::new();
+        // Mac needs 2 inputs; give it 1.
+        d.op("src", Op::AddrGen, Stage::Control)
+            .agen(AddrIter::dim1(0, 1, 4))
+            .out("s");
+        d.op("mac", Op::Mac, Stage::Compute).coeff(1.0).input(0, "s");
+        let err = d.build().unwrap_err().to_string();
+        assert!(err.contains("expected 2"), "{err}");
+    }
+
+    #[test]
+    #[should_panic(expected = "published twice")]
+    fn duplicate_signal_rejected() {
+        let mut d = Dsl::new();
+        d.op("a", Op::AddrGen, Stage::Control).out("s");
+        d.op("b", Op::AddrGen, Stage::Control).out("s");
+    }
+
+    #[test]
+    fn fan_out_from_one_signal() {
+        let mut d = Dsl::new();
+        d.op("g", Op::AddrGen, Stage::Control)
+            .agen(AddrIter::dim1(0, 1, 4))
+            .out("s");
+        d.op("a", Op::Load, Stage::Reader).input(0, "s");
+        d.op("b", Op::Load, Stage::Reader).input(0, "s");
+        let g = d.build().unwrap();
+        let gid = g.find("g").unwrap();
+        assert_eq!(g.outputs(gid, 0).len(), 2);
+    }
+}

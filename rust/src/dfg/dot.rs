@@ -1,0 +1,112 @@
+//! Graphviz emission for DFGs, following the Fig 7 legend: mux =
+//! light-yellow, mul = orange, mac = red, demux = light-blue, add =
+//! green, address generators/indices = cyan, everything else gray.
+
+use std::fmt::Write;
+
+use super::graph::Graph;
+use super::node::Op;
+
+fn color(op: Op) -> &'static str {
+    match op {
+        Op::Mux => "lightyellow",
+        Op::Mul => "orange",
+        Op::Mac => "red",
+        Op::Demux => "lightblue",
+        Op::Add => "green",
+        Op::AddrGen | Op::Const => "cyan",
+        Op::Load | Op::Store => "khaki",
+        Op::Filter => "plum",
+        Op::SyncCount | Op::DoneTree => "palegreen",
+        _ => "gray",
+    }
+}
+
+/// Render the graph as Graphviz dot, clustered by logical worker so the
+/// layout mirrors Fig 7 / Fig 11.
+pub fn to_dot(g: &Graph, title: &str) -> String {
+    let mut s = String::new();
+    writeln!(s, "digraph dfg {{").unwrap();
+    writeln!(s, "  label=\"{}\\n{}\";", title, g.summary()).unwrap();
+    writeln!(s, "  rankdir=TB; node [style=filled, shape=ellipse];").unwrap();
+
+    // Cluster nodes per worker; worker-less nodes go to the top level.
+    let max_worker = g.nodes.iter().filter_map(|n| n.worker).max();
+    if let Some(mw) = max_worker {
+        for w in 0..=mw {
+            writeln!(s, "  subgraph cluster_w{w} {{").unwrap();
+            writeln!(s, "    label=\"worker {w}\"; color=gray;").unwrap();
+            for n in g.nodes.iter().filter(|n| n.worker == Some(w)) {
+                writeln!(
+                    s,
+                    "    n{} [label=\"{}\\n{}\", fillcolor={}];",
+                    n.id,
+                    n.name,
+                    n.op.mnemonic(),
+                    color(n.op)
+                )
+                .unwrap();
+            }
+            writeln!(s, "  }}").unwrap();
+        }
+    }
+    for n in g.nodes.iter().filter(|n| n.worker.is_none()) {
+        writeln!(
+            s,
+            "  n{} [label=\"{}\\n{}\", fillcolor={}];",
+            n.id,
+            n.name,
+            n.op.mnemonic(),
+            color(n.op)
+        )
+        .unwrap();
+    }
+    for c in &g.channels {
+        let cap = if c.capacity != super::graph::DEFAULT_CAPACITY {
+            format!(" [label=\"cap={}\"]", c.capacity)
+        } else {
+            String::new()
+        };
+        writeln!(s, "  n{} -> n{}{};", c.src, c.dst, cap).unwrap();
+    }
+    writeln!(s, "}}").unwrap();
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::builder::Dsl;
+    use crate::dfg::node::{AddrIter, Op, Stage};
+
+    fn tiny() -> Graph {
+        let mut d = Dsl::new();
+        d.op("g", Op::AddrGen, Stage::Control)
+            .agen(AddrIter::dim1(0, 1, 4))
+            .out("a");
+        d.op("ld", Op::Load, Stage::Reader).worker(0).input(0, "a").out("d");
+        d.op("m", Op::Mul, Stage::Compute)
+            .worker(0)
+            .coeff(1.0)
+            .input(0, "d")
+            .out("p");
+        d.build().unwrap()
+    }
+
+    #[test]
+    fn dot_contains_nodes_edges_and_legend_colors() {
+        let dot = to_dot(&tiny(), "tiny");
+        assert!(dot.starts_with("digraph"));
+        assert!(dot.contains("fillcolor=orange")); // mul
+        assert!(dot.contains("cluster_w0"));
+        assert!(dot.contains("->"));
+        assert!(dot.trim_end().ends_with('}'));
+    }
+
+    #[test]
+    fn dot_edge_count_matches_graph() {
+        let g = tiny();
+        let dot = to_dot(&g, "t");
+        assert_eq!(dot.matches("->").count(), g.channel_count());
+    }
+}

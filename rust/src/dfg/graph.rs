@@ -1,0 +1,283 @@
+//! The dataflow graph container: nodes + channels, plus the structural
+//! queries the mapper, placer, simulator and emitters rely on.
+
+use std::collections::HashMap;
+
+use super::node::{Node, Op, Stage};
+
+pub type NodeId = usize;
+pub type ChannelId = usize;
+
+/// A producer→consumer FIFO edge. `capacity` includes any mandatory
+/// buffering the mapper assigned (§III-B); `latency` is filled in by
+/// placement (network hops) and defaults to 1 cycle.
+#[derive(Debug, Clone)]
+pub struct Channel {
+    pub id: ChannelId,
+    pub src: NodeId,
+    pub src_port: u8,
+    pub dst: NodeId,
+    pub dst_port: u8,
+    pub capacity: usize,
+    pub latency: u32,
+}
+
+/// Default channel capacity: the paper's PEs have small input/output
+/// queues; 4 matches the TIA evaluation's queue depth.
+pub const DEFAULT_CAPACITY: usize = 4;
+
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    pub channels: Vec<Channel>,
+    /// Inputs of each node, indexed by input port: `ins[node][port]`.
+    ins: Vec<Vec<Option<ChannelId>>>,
+    /// Outputs of each node per output port (fan-out allowed):
+    /// `outs[node][port] -> Vec<ChannelId>`.
+    outs: Vec<Vec<Vec<ChannelId>>>,
+    by_name: HashMap<String, NodeId>,
+}
+
+impl Graph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a node; names must be unique.
+    pub fn add_node(&mut self, mut node: Node) -> NodeId {
+        let id = self.nodes.len();
+        node.id = id;
+        assert!(
+            self.by_name.insert(node.name.clone(), id).is_none(),
+            "duplicate node name {}",
+            node.name
+        );
+        self.nodes.push(node);
+        self.ins.push(Vec::new());
+        self.outs.push(Vec::new());
+        id
+    }
+
+    /// Connect `src.out[src_port]` to `dst.in[dst_port]`.
+    pub fn connect(
+        &mut self,
+        src: NodeId,
+        src_port: u8,
+        dst: NodeId,
+        dst_port: u8,
+        capacity: usize,
+    ) -> ChannelId {
+        let id = self.channels.len();
+        self.channels.push(Channel {
+            id,
+            src,
+            src_port,
+            dst,
+            dst_port,
+            capacity,
+            latency: 1,
+        });
+        let ins = &mut self.ins[dst];
+        if ins.len() <= dst_port as usize {
+            ins.resize(dst_port as usize + 1, None);
+        }
+        assert!(
+            ins[dst_port as usize].is_none(),
+            "input port {}:{} already connected",
+            self.nodes[dst].name,
+            dst_port
+        );
+        ins[dst_port as usize] = Some(id);
+        let outs = &mut self.outs[src];
+        if outs.len() <= src_port as usize {
+            outs.resize(src_port as usize + 1, Vec::new());
+        }
+        outs[src_port as usize].push(id);
+        id
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn find(&self, name: &str) -> Option<NodeId> {
+        self.by_name.get(name).copied()
+    }
+
+    /// Input channel on `port`, if connected.
+    pub fn input(&self, node: NodeId, port: u8) -> Option<ChannelId> {
+        self.ins[node].get(port as usize).copied().flatten()
+    }
+
+    /// All input channels of a node (ports in order, unconnected skipped).
+    pub fn inputs(&self, node: NodeId) -> impl Iterator<Item = ChannelId> + '_ {
+        self.ins[node].iter().filter_map(|c| *c)
+    }
+
+    /// Number of connected input ports.
+    pub fn input_count(&self, node: NodeId) -> usize {
+        self.ins[node].iter().filter(|c| c.is_some()).count()
+    }
+
+    /// Fan-out list of `node.out[port]`.
+    pub fn outputs(&self, node: NodeId, port: u8) -> &[ChannelId] {
+        self.outs[node]
+            .get(port as usize)
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// All outgoing channels of a node across ports.
+    pub fn all_outputs(&self, node: NodeId) -> impl Iterator<Item = ChannelId> + '_ {
+        self.outs[node].iter().flatten().copied()
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn channel_count(&self) -> usize {
+        self.channels.len()
+    }
+
+    /// Count of double-precision datapath ops (the §VI roofline count).
+    pub fn dp_ops(&self) -> usize {
+        self.nodes.iter().filter(|n| n.op.is_dp()).count()
+    }
+
+    /// Node count per op kind.
+    pub fn op_histogram(&self) -> HashMap<Op, usize> {
+        let mut h = HashMap::new();
+        for n in &self.nodes {
+            *h.entry(n.op).or_insert(0) += 1;
+        }
+        h
+    }
+
+    /// Node count per stage.
+    pub fn stage_histogram(&self) -> HashMap<Stage, usize> {
+        let mut h = HashMap::new();
+        for n in &self.nodes {
+            *h.entry(n.stage).or_insert(0) += 1;
+        }
+        h
+    }
+
+    /// Topological order; `None` if the graph has a cycle. Stencil DFGs
+    /// are pipelines and must be acyclic.
+    pub fn topo_order(&self) -> Option<Vec<NodeId>> {
+        let n = self.nodes.len();
+        let mut indeg = vec![0usize; n];
+        for c in &self.channels {
+            indeg[c.dst] += 1;
+        }
+        let mut stack: Vec<NodeId> =
+            (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(u) = stack.pop() {
+            order.push(u);
+            for c in self.all_outputs(u) {
+                let v = self.channels[c].dst;
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    stack.push(v);
+                }
+            }
+        }
+        (order.len() == n).then_some(order)
+    }
+
+    /// Summary line used by the CLI and tests (mirrors Fig 7's caption:
+    /// "17 point stencil 6 workers, 102 DP ops").
+    pub fn summary(&self) -> String {
+        format!(
+            "{} nodes, {} channels, {} DP ops",
+            self.node_count(),
+            self.channel_count(),
+            self.dp_ops()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::node::{Node, Op, Stage};
+
+    fn n(g: &mut Graph, name: &str, op: Op) -> NodeId {
+        g.add_node(Node::new(0, name, op, Stage::Compute))
+    }
+
+    #[test]
+    fn connect_and_query() {
+        let mut g = Graph::new();
+        let a = n(&mut g, "a", Op::Mul);
+        let b = n(&mut g, "b", Op::Mac);
+        let c = g.connect(a, 0, b, 0, 4);
+        assert_eq!(g.input(b, 0), Some(c));
+        assert_eq!(g.outputs(a, 0), &[c]);
+        assert_eq!(g.find("b"), Some(b));
+        assert_eq!(g.input_count(b), 1);
+    }
+
+    #[test]
+    fn fan_out_allowed() {
+        let mut g = Graph::new();
+        let a = n(&mut g, "a", Op::Load);
+        let b = n(&mut g, "b", Op::Mul);
+        let c = n(&mut g, "c", Op::Mul);
+        g.connect(a, 0, b, 0, 4);
+        g.connect(a, 0, c, 0, 4);
+        assert_eq!(g.outputs(a, 0).len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "already connected")]
+    fn double_input_rejected() {
+        let mut g = Graph::new();
+        let a = n(&mut g, "a", Op::Load);
+        let b = n(&mut g, "b", Op::Mul);
+        g.connect(a, 0, b, 0, 4);
+        g.connect(a, 0, b, 0, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate node name")]
+    fn duplicate_name_rejected() {
+        let mut g = Graph::new();
+        n(&mut g, "a", Op::Mul);
+        n(&mut g, "a", Op::Mul);
+    }
+
+    #[test]
+    fn topo_order_linear_chain() {
+        let mut g = Graph::new();
+        let a = n(&mut g, "a", Op::Mul);
+        let b = n(&mut g, "b", Op::Mac);
+        let c = n(&mut g, "c", Op::Mac);
+        g.connect(a, 0, b, 0, 4);
+        g.connect(b, 0, c, 0, 4);
+        let order = g.topo_order().unwrap();
+        let pos = |x: NodeId| order.iter().position(|&y| y == x).unwrap();
+        assert!(pos(a) < pos(b) && pos(b) < pos(c));
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = Graph::new();
+        let a = n(&mut g, "a", Op::Mac);
+        let b = n(&mut g, "b", Op::Mac);
+        g.connect(a, 0, b, 0, 4);
+        g.connect(b, 0, a, 0, 4);
+        assert!(g.topo_order().is_none());
+    }
+
+    #[test]
+    fn dp_count() {
+        let mut g = Graph::new();
+        n(&mut g, "m", Op::Mul);
+        n(&mut g, "f", Op::Filter);
+        n(&mut g, "a", Op::Mac);
+        assert_eq!(g.dp_ops(), 2);
+    }
+}

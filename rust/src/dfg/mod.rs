@@ -1,0 +1,19 @@
+//! Dataflow-graph IR for the CGRA (§II-A, §V).
+//!
+//! An algorithm for the CGRA is a graph whose nodes are instructions and
+//! whose edges are producer→consumer channels (bounded FIFOs). The stencil
+//! mapper ([`crate::stencil`]) builds these graphs through the [`builder`]
+//! DSL; the simulator ([`crate::cgra`]) executes them; [`dot`] and [`asm`]
+//! emit Graphviz and high-level assembly, the two artifact formats the
+//! paper's §V tool produces.
+
+pub mod asm;
+pub mod builder;
+pub mod dot;
+pub mod graph;
+pub mod node;
+pub mod validate;
+
+pub use builder::Dsl;
+pub use graph::{Channel, ChannelId, Graph, NodeId};
+pub use node::{AddrIter, FilterSpec, Node, Op, Stage};

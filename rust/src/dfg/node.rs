@@ -1,0 +1,308 @@
+//! DFG node definitions: the instruction set the paper's PEs are
+//! configured with (Fig 7 legend), plus the parameter blocks for the
+//! control units (address generators), data filters and sync counters.
+
+/// Operation kinds. The datapath ops (`Mul`, `Mac`, `Add`) are the
+/// double-precision ops the roofline counts; the rest are stream plumbing
+/// and control (gray/cyan/yellow/blue ovals in Fig 7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Op {
+    /// `out = coeff * in` — the first tap of a MAC chain.
+    Mul,
+    /// `out = partial + coeff * in` — fused multiply-add tap.
+    Mac,
+    /// `out = a + b` — partial-sum combination.
+    Add,
+    /// Repeater / explicit broadcast helper.
+    Copy,
+    /// Drop-or-pass by [`FilterSpec`] — the data-filtering PEs of §III-A.
+    Filter,
+    /// Merge control streams (Fig 7 light-yellow ovals).
+    Mux,
+    /// Distribute a stream (Fig 7 light-blue ovals).
+    Demux,
+    /// Compare (used by row-id filtering / loop control).
+    Cmp,
+    /// Logical or (done-signal combining).
+    Or,
+    /// Shift (index arithmetic in control units).
+    Shift,
+    /// Memory load: consumes an address token, produces a data token.
+    Load,
+    /// Memory store: consumes address + data tokens, produces an ack.
+    Store,
+    /// Control unit: generates (addr, row, col) tokens from an [`AddrIter`].
+    AddrGen,
+    /// Synchronization worker: counts acks, fires `done` at `expected`.
+    SyncCount,
+    /// Combines per-worker done signals into the host "done" (§III-A).
+    DoneTree,
+    /// Emits a compile-time constant stream (coefficient injection).
+    Const,
+}
+
+impl Op {
+    /// Is this one of the double-precision datapath ops the roofline
+    /// model counts (1 MUL + 2r MACs per worker, §VI)?
+    pub fn is_dp(self) -> bool {
+        matches!(self, Op::Mul | Op::Mac | Op::Add)
+    }
+
+    /// Mnemonic used by the assembly emitter.
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            Op::Mul => "mul",
+            Op::Mac => "mac",
+            Op::Add => "add",
+            Op::Copy => "copy",
+            Op::Filter => "filter",
+            Op::Mux => "mux",
+            Op::Demux => "demux",
+            Op::Cmp => "cmp",
+            Op::Or => "or",
+            Op::Shift => "shift",
+            Op::Load => "ld",
+            Op::Store => "st",
+            Op::AddrGen => "agen",
+            Op::SyncCount => "sync",
+            Op::DoneTree => "done",
+            Op::Const => "const",
+        }
+    }
+
+    /// Number of input ports the op consumes each firing.
+    pub fn arity(self) -> usize {
+        match self {
+            Op::AddrGen | Op::Const => 0,
+            Op::Mul | Op::Copy | Op::Filter | Op::Load | Op::SyncCount | Op::Shift
+            | Op::Demux => 1,
+            Op::Mac | Op::Add | Op::Store | Op::Cmp | Op::Or | Op::Mux => 2,
+            Op::DoneTree => usize::MAX, // variadic; set per node
+        }
+    }
+}
+
+/// Pipeline stage a node belongs to (§III-A's four stages + control).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stage {
+    Control,
+    Reader,
+    Compute,
+    Writer,
+    Sync,
+}
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Control => "control",
+            Stage::Reader => "reader",
+            Stage::Compute => "compute",
+            Stage::Writer => "writer",
+            Stage::Sync => "sync",
+        }
+    }
+}
+
+/// Data filter configuration (§III-A "Data-filtering PEs", Fig 6).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FilterSpec {
+    /// Bit-pattern scheme: the stream is passed through the pattern
+    /// `0^m 1^n 0^p`, repeated every `m + n + p` tokens (one repetition
+    /// per grid row; a 1-D stencil uses a single repetition).
+    Bits { m: u64, n: u64, p: u64 },
+    /// Row/column-id scheme: pass tokens whose tags satisfy
+    /// `row_lo <= row < row_hi && col_lo <= col < col_hi`.
+    RowCol {
+        row_lo: u32,
+        row_hi: u32,
+        col_lo: u32,
+        col_hi: u32,
+    },
+}
+
+impl FilterSpec {
+    /// Does a token with stream index `idx` / tags `(row, col)` pass?
+    #[inline]
+    pub fn passes(&self, idx: u64, row: u32, col: u32) -> bool {
+        match *self {
+            FilterSpec::Bits { m, n, p } => {
+                let period = m + n + p;
+                debug_assert!(period > 0);
+                let pos = idx % period;
+                pos >= m && pos < m + n
+            }
+            FilterSpec::RowCol {
+                row_lo,
+                row_hi,
+                col_lo,
+                col_hi,
+            } => row >= row_lo && row < row_hi && col >= col_lo && col < col_hi,
+        }
+    }
+}
+
+/// Address-stream generator for the control units attached to reader and
+/// writer workers: iterates row-major over rows `[row_lo, row_hi)` and
+/// columns `col_start, col_start + col_stride, ... < col_hi`, producing
+/// `addr = row * width + col` plus the (row, col) tags.
+///
+/// A 1-D grid is the single-row case (`row_lo = 0, row_hi = 1,
+/// width = n`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AddrIter {
+    pub row_lo: u32,
+    pub row_hi: u32,
+    pub col_start: u32,
+    pub col_hi: u32,
+    pub col_stride: u32,
+    pub width: u32,
+}
+
+impl AddrIter {
+    /// Single-row (1-D) iteration over `col_start, +stride, .. < n`.
+    pub fn dim1(col_start: u32, col_stride: u32, n: u32) -> Self {
+        Self {
+            row_lo: 0,
+            row_hi: 1,
+            col_start,
+            col_hi: n,
+            col_stride,
+            width: n,
+        }
+    }
+
+    /// Number of tokens the stream will produce.
+    pub fn len(&self) -> u64 {
+        if self.row_hi <= self.row_lo || self.col_hi <= self.col_start {
+            return 0;
+        }
+        let per_row =
+            ((self.col_hi - self.col_start - 1) / self.col_stride + 1) as u64;
+        per_row * (self.row_hi - self.row_lo) as u64
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The `k`-th (row, col, addr) token, row-major.
+    #[inline]
+    pub fn token(&self, k: u64) -> (u32, u32, u64) {
+        let per_row = ((self.col_hi - self.col_start - 1) / self.col_stride + 1) as u64;
+        let row = self.row_lo + (k / per_row) as u32;
+        let col = self.col_start + (k % per_row) as u32 * self.col_stride;
+        (row, col, row as u64 * self.width as u64 + col as u64)
+    }
+}
+
+/// One DFG node: an instruction with its immediates.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: usize,
+    /// Unique hierarchical name, e.g. `w0.x.mac3` (worker 0, x chain).
+    pub name: String,
+    pub op: Op,
+    pub stage: Stage,
+    /// Logical worker index (§III-A), if the node belongs to one.
+    pub worker: Option<usize>,
+    /// Coefficient immediate for `Mul` / `Mac` / `Const`.
+    pub coeff: Option<f64>,
+    /// Filter configuration for `Filter`.
+    pub filter: Option<FilterSpec>,
+    /// Address iterator for `AddrGen`.
+    pub agen: Option<AddrIter>,
+    /// Expected ack count for `SyncCount` / input count for `DoneTree`.
+    pub expected: Option<u64>,
+}
+
+impl Node {
+    pub fn new(id: usize, name: impl Into<String>, op: Op, stage: Stage) -> Self {
+        Self {
+            id,
+            name: name.into(),
+            op,
+            stage,
+            worker: None,
+            coeff: None,
+            filter: None,
+            agen: None,
+            expected: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_filter_pattern() {
+        // 0^1 1^3 0^2 over 6 tokens: pass indices 1,2,3.
+        let f = FilterSpec::Bits { m: 1, n: 3, p: 2 };
+        let got: Vec<bool> = (0..6).map(|i| f.passes(i, 0, 0)).collect();
+        assert_eq!(got, vec![false, true, true, true, false, false]);
+        // Repeats with the period (per-row in 2-D).
+        assert!(f.passes(7, 0, 0));
+        assert!(!f.passes(6, 0, 0));
+    }
+
+    #[test]
+    fn rowcol_filter_interior() {
+        let f = FilterSpec::RowCol {
+            row_lo: 1,
+            row_hi: 3,
+            col_lo: 2,
+            col_hi: 5,
+        };
+        assert!(f.passes(0, 1, 2));
+        assert!(f.passes(0, 2, 4));
+        assert!(!f.passes(0, 0, 2));
+        assert!(!f.passes(0, 3, 2));
+        assert!(!f.passes(0, 1, 1));
+        assert!(!f.passes(0, 1, 5));
+    }
+
+    #[test]
+    fn addr_iter_1d() {
+        // Reader 1 of w=3 over n=10: cols 1,4,7.
+        let it = AddrIter::dim1(1, 3, 10);
+        assert_eq!(it.len(), 3);
+        assert_eq!(it.token(0), (0, 1, 1));
+        assert_eq!(it.token(1), (0, 4, 4));
+        assert_eq!(it.token(2), (0, 7, 7));
+    }
+
+    #[test]
+    fn addr_iter_2d_row_major() {
+        let it = AddrIter {
+            row_lo: 1,
+            row_hi: 3,
+            col_start: 0,
+            col_hi: 4,
+            col_stride: 2,
+            width: 4,
+        };
+        // rows 1..3, cols {0, 2}: tokens (1,0) (1,2) (2,0) (2,2).
+        assert_eq!(it.len(), 4);
+        assert_eq!(it.token(0), (1, 0, 4));
+        assert_eq!(it.token(1), (1, 2, 6));
+        assert_eq!(it.token(2), (2, 0, 8));
+        assert_eq!(it.token(3), (2, 2, 10));
+    }
+
+    #[test]
+    fn addr_iter_empty() {
+        let it = AddrIter::dim1(5, 1, 5);
+        assert!(it.is_empty());
+    }
+
+    #[test]
+    fn dp_ops_classified() {
+        assert!(Op::Mul.is_dp());
+        assert!(Op::Mac.is_dp());
+        assert!(Op::Add.is_dp());
+        assert!(!Op::Filter.is_dp());
+        assert!(!Op::Load.is_dp());
+    }
+}

@@ -1,0 +1,141 @@
+//! Structural validation of DFGs before simulation: arity, acyclicity,
+//! parameter presence, and reachability. The mapper's output must always
+//! pass; the checks exist to catch hand-authored assembly and future
+//! mapper bugs early, with actionable messages.
+
+use anyhow::{bail, Result};
+
+use super::graph::Graph;
+use super::node::Op;
+
+/// All validation errors found in `g` (empty = valid).
+pub fn check(g: &Graph) -> Vec<String> {
+    let mut errs = Vec::new();
+
+    for n in &g.nodes {
+        let want = n.op.arity();
+        let got = g.input_count(n.id);
+        if want != usize::MAX && got != want {
+            errs.push(format!(
+                "node `{}` ({}): {} inputs, expected {}",
+                n.name,
+                n.op.mnemonic(),
+                got,
+                want
+            ));
+        }
+        match n.op {
+            Op::Mul | Op::Mac if n.coeff.is_none() => {
+                errs.push(format!("node `{}`: missing coeff", n.name))
+            }
+            Op::Filter if n.filter.is_none() => {
+                errs.push(format!("node `{}`: missing filter spec", n.name))
+            }
+            Op::AddrGen if n.agen.is_none() => {
+                errs.push(format!("node `{}`: missing agen spec", n.name))
+            }
+            Op::SyncCount | Op::DoneTree if n.expected.is_none() => {
+                errs.push(format!("node `{}`: missing expected count", n.name))
+            }
+            _ => {}
+        }
+        // Every non-sink op must drive something.
+        let has_out = g.all_outputs(n.id).next().is_some();
+        let is_sink = matches!(n.op, Op::Store | Op::SyncCount | Op::DoneTree);
+        if !has_out && !is_sink {
+            errs.push(format!(
+                "node `{}` ({}) drives nothing",
+                n.name,
+                n.op.mnemonic()
+            ));
+        }
+    }
+
+    if g.topo_order().is_none() {
+        errs.push("graph has a cycle".to_string());
+    }
+
+    for c in &g.channels {
+        if c.capacity == 0 {
+            errs.push(format!(
+                "channel {} ({} -> {}): zero capacity deadlocks",
+                c.id,
+                g.node(c.src).name,
+                g.node(c.dst).name
+            ));
+        }
+    }
+    errs
+}
+
+/// Validate or fail with every finding listed.
+pub fn validate(g: &Graph) -> Result<()> {
+    let errs = check(g);
+    if errs.is_empty() {
+        Ok(())
+    } else {
+        bail!("DFG validation failed:\n  {}", errs.join("\n  "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::builder::Dsl;
+    use crate::dfg::node::{AddrIter, Node, Op, Stage};
+
+    #[test]
+    fn valid_pipeline_passes() {
+        let mut d = Dsl::new();
+        d.op("g", Op::AddrGen, Stage::Control)
+            .agen(AddrIter::dim1(0, 1, 4))
+            .out("a");
+        d.op("ld", Op::Load, Stage::Reader).input(0, "a").out("d");
+        d.op("m", Op::Mul, Stage::Compute).coeff(1.0).input(0, "d").out("p");
+        d.op("st_a", Op::AddrGen, Stage::Control)
+            .agen(AddrIter::dim1(0, 1, 4))
+            .out("wa");
+        d.op("st", Op::Store, Stage::Writer)
+            .input(0, "wa")
+            .input(1, "p")
+            .out("ack");
+        d.op("sy", Op::SyncCount, Stage::Sync).expected(4).input(0, "ack");
+        let g = d.build().unwrap();
+        assert!(validate(&g).is_ok(), "{:?}", check(&g));
+    }
+
+    #[test]
+    fn missing_coeff_flagged() {
+        let mut g = Graph::new();
+        let a = g.add_node(Node::new(0, "g", Op::AddrGen, Stage::Control));
+        g.nodes[a].agen = Some(AddrIter::dim1(0, 1, 4));
+        let m = g.add_node(Node::new(0, "m", Op::Mul, Stage::Compute));
+        let s = g.add_node(Node::new(0, "s", Op::SyncCount, Stage::Sync));
+        g.nodes[s].expected = Some(4);
+        g.connect(a, 0, m, 0, 4);
+        g.connect(m, 0, s, 0, 4);
+        let errs = check(&g);
+        assert!(errs.iter().any(|e| e.contains("missing coeff")), "{errs:?}");
+    }
+
+    #[test]
+    fn dangling_output_flagged() {
+        let mut g = Graph::new();
+        let a = g.add_node(Node::new(0, "g", Op::AddrGen, Stage::Control));
+        g.nodes[a].agen = Some(AddrIter::dim1(0, 1, 4));
+        let errs = check(&g);
+        assert!(errs.iter().any(|e| e.contains("drives nothing")), "{errs:?}");
+    }
+
+    #[test]
+    fn zero_capacity_flagged() {
+        let mut g = Graph::new();
+        let a = g.add_node(Node::new(0, "g", Op::AddrGen, Stage::Control));
+        g.nodes[a].agen = Some(AddrIter::dim1(0, 1, 4));
+        let s = g.add_node(Node::new(0, "s", Op::SyncCount, Stage::Sync));
+        g.nodes[s].expected = Some(4);
+        g.connect(a, 0, s, 0, 0);
+        let errs = check(&g);
+        assert!(errs.iter().any(|e| e.contains("zero capacity")), "{errs:?}");
+    }
+}

@@ -1,0 +1,232 @@
+//! The V100 occupancy + kernel performance model (§VII).
+//!
+//! Modeling chain for the register-caching kernel:
+//!
+//! 1. registers/thread grow with the taps held in registers
+//!    (`48 + 4 * (rx + ry + rz)` — the circular shift window per dim);
+//! 2. SMEM/block is the halo'd 32x8 tile the warp stages;
+//! 3. resident warps = min(register-file limit, SMEM limit, HW max);
+//! 4. SMEM latency (~25 cycles, §VII) needs ~25 eligible warps to hide;
+//!    efficiency = 0.9 * min(1, warps / 25) — the 0.9 covers
+//!    `__syncthreads` and residual bank conflicts;
+//! 5. GFLOPS = efficiency * roofline(AI).
+//!
+//! The SMEM (thread-per-cell) kernel is instead bound by redundant SMEM
+//! traffic: every output re-reads all `taps` neighbours from SMEM at the
+//! ~60 % utilization the paper measured.
+
+use super::{GpuStencil, Precision};
+
+/// V100 hardware constants (SXM2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct V100 {
+    /// Peak copy bandwidth assumed by the paper (GB/s).
+    pub bw_gbps: f64,
+    /// Peak FP64 GFLOPS.
+    pub peak_dp_gflops: f64,
+    /// Peak FP32 GFLOPS.
+    pub peak_sp_gflops: f64,
+    pub sms: usize,
+    pub regs_per_sm: usize,
+    pub smem_kib_per_sm: usize,
+    pub max_warps_per_sm: usize,
+    /// SMEM read latency in cycles (§VII: "more than 25 clocks").
+    pub smem_latency: f64,
+    /// SMEM bytes per SM per clock.
+    pub smem_bytes_per_clk: f64,
+    /// Core clock (GHz).
+    pub clock_ghz: f64,
+    /// Measured SMEM bandwidth utilization (§VII: "around 60%").
+    pub smem_utilization: f64,
+    /// Sync + residual-bank-conflict discount.
+    pub sync_discount: f64,
+}
+
+impl Default for V100 {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
+impl V100 {
+    pub fn paper() -> Self {
+        Self {
+            bw_gbps: 850.0,
+            peak_dp_gflops: 7800.0,
+            peak_sp_gflops: 15700.0,
+            sms: 80,
+            regs_per_sm: 65536,
+            smem_kib_per_sm: 96,
+            max_warps_per_sm: 64,
+            smem_latency: 25.0,
+            smem_bytes_per_clk: 128.0,
+            clock_ghz: 1.38,
+            smem_utilization: 0.6,
+            sync_discount: 0.9,
+        }
+    }
+
+    fn peak(&self, p: Precision) -> f64 {
+        match p {
+            Precision::F32 => self.peak_sp_gflops,
+            Precision::F64 => self.peak_dp_gflops,
+        }
+    }
+
+    /// Memory roofline for the workload: `min(BW * AI, peak)` — the
+    /// Table-I "peak" (4.8 TFLOPS for the 2-D stencil at AI 5.59).
+    pub fn roofline_gflops(&self, s: &GpuStencil) -> f64 {
+        (self.bw_gbps * s.arithmetic_intensity()).min(self.peak(s.precision))
+    }
+
+    /// Occupancy of the register-caching kernel.
+    pub fn occupancy(&self, s: &GpuStencil) -> Occupancy {
+        let r_sum: usize = s.r.iter().sum();
+        let regs_per_thread = 48 + 4 * r_sum;
+        let warps_reg = self.regs_per_sm / (32 * regs_per_thread);
+        // 32x8-element tile + halo staged in SMEM per 256-thread block.
+        let tile_b =
+            ((32 + 2 * s.r[0]) * (8 + 2 * s.r[1])) as f64 * s.precision.bytes();
+        let blocks_smem =
+            ((self.smem_kib_per_sm * 1024) as f64 / tile_b).floor().max(1.0) as usize;
+        let warps_smem = blocks_smem * 8; // 256 threads = 8 warps/block
+        let warps = warps_reg.min(warps_smem).min(self.max_warps_per_sm);
+        Occupancy {
+            regs_per_thread,
+            warps_reg,
+            smem_per_block_bytes: tile_b as usize,
+            warps_smem,
+            warps,
+        }
+    }
+
+    /// Fraction of the roofline the register-caching kernel achieves.
+    pub fn regcache_efficiency(&self, s: &GpuStencil) -> f64 {
+        let occ = self.occupancy(s);
+        self.sync_discount * (occ.warps as f64 / self.smem_latency).min(1.0)
+    }
+
+    /// Register-caching kernel GFLOPS (the §VII "2300 GFLOPS" kernel).
+    pub fn regcache_gflops(&self, s: &GpuStencil) -> f64 {
+        self.regcache_efficiency(s) * self.roofline_gflops(s)
+    }
+
+    /// SMEM (thread-per-cell) kernel GFLOPS (the §VII "1900 GFLOPS"
+    /// kernel): redundant-SMEM-traffic bound.
+    pub fn smem_gflops(&self, s: &GpuStencil) -> f64 {
+        let smem_bw = self.sms as f64
+            * self.smem_bytes_per_clk
+            * self.clock_ghz
+            * self.smem_utilization; // GB/s of usable SMEM bandwidth
+        let bytes_per_output = s.taps() as f64 * s.precision.bytes();
+        let smem_bound = smem_bw / bytes_per_output * s.flops_per_output();
+        // Sync + bank-conflict discount applies to whichever roof binds:
+        // even a bandwidth-bound SMEM kernel pays __syncthreads.
+        smem_bound.min(self.roofline_gflops(s)) * self.sync_discount
+    }
+
+    /// The best GPU implementation — what Table I compares against.
+    pub fn best_gflops(&self, s: &GpuStencil) -> f64 {
+        self.regcache_gflops(s).max(self.smem_gflops(s))
+    }
+}
+
+/// Occupancy breakdown of the register-caching kernel.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Occupancy {
+    pub regs_per_thread: usize,
+    pub warps_reg: usize,
+    pub smem_per_block_bytes: usize,
+    pub warps_smem: usize,
+    /// Resident warps per SM after all limits.
+    pub warps: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const V: fn() -> V100 = V100::paper;
+
+    #[test]
+    fn anchor_2d_r12_dp_is_48_pct_and_2300_gflops() {
+        // Table I: V100 achieves 48% of the 4.8 TFLOPS roofline = 2.3 TF.
+        let s = GpuStencil::d2(960, 449, 12, 12, Precision::F64);
+        let roof = V().roofline_gflops(&s);
+        assert!((roof - 4750.0).abs() < 60.0, "roof {roof}");
+        let eff = V().regcache_efficiency(&s);
+        assert!((eff - 0.48).abs() < 0.08, "eff {eff}");
+        let g = V().regcache_gflops(&s);
+        assert!((g - 2300.0).abs() < 200.0, "gflops {g}");
+    }
+
+    #[test]
+    fn anchor_1d_r8_dp_is_90_pct() {
+        let s = GpuStencil::d1(194400, 8, Precision::F64);
+        let eff = V().regcache_efficiency(&s);
+        assert!((eff - 0.90).abs() < 0.05, "eff {eff}");
+    }
+
+    #[test]
+    fn anchor_2d_r2_dp_is_87_pct() {
+        // §VIII-A: "a 2D stencil with rx=ry=2 achieved 87% of peak".
+        let s = GpuStencil::d2(960, 449, 2, 2, Precision::F64);
+        let eff = V().regcache_efficiency(&s);
+        assert!((eff - 0.87).abs() < 0.05, "eff {eff}");
+    }
+
+    #[test]
+    fn anchor_3d_r8_sp_is_56_pct() {
+        let s = GpuStencil::d3([384, 384, 384], 8, Precision::F32);
+        let eff = V().regcache_efficiency(&s);
+        assert!((eff - 0.56).abs() < 0.08, "eff {eff}");
+    }
+
+    #[test]
+    fn anchor_3d_r12_sp_is_36_pct() {
+        let s = GpuStencil::d3([512, 512, 512], 12, Precision::F32);
+        let eff = V().regcache_efficiency(&s);
+        assert!((eff - 0.36).abs() < 0.06, "eff {eff}");
+    }
+
+    #[test]
+    fn anchor_maruyama_3d_r4() {
+        // §VII: 77% SP / 80% DP on the 384x384x128 grid, r=4.
+        let sp = GpuStencil::d3([384, 384, 128], 4, Precision::F32);
+        let dp = GpuStencil::d3([384, 384, 128], 4, Precision::F64);
+        let esp = V().regcache_efficiency(&sp);
+        let edp = V().regcache_efficiency(&dp);
+        assert!((esp - 0.77).abs() < 0.08, "sp {esp}");
+        assert!((edp - 0.80).abs() < 0.08, "dp {edp}");
+    }
+
+    #[test]
+    fn smem_kernel_is_slower_than_regcache_for_2d_r12() {
+        // §VII: 1900 (SMEM) vs 2300 (register caching).
+        let s = GpuStencil::d2(960, 449, 12, 12, Precision::F64);
+        let smem = V().smem_gflops(&s);
+        let reg = V().regcache_gflops(&s);
+        assert!(smem < reg, "{smem} !< {reg}");
+        assert!((smem - 1900.0).abs() < 300.0, "smem {smem}");
+    }
+
+    #[test]
+    fn efficiency_declines_with_radius() {
+        let mut last = f64::INFINITY;
+        for r in [2usize, 4, 8, 12] {
+            let s = GpuStencil::d2(960, 449, r, r, Precision::F64);
+            let e = V().regcache_efficiency(&s);
+            assert!(e <= last + 1e-12, "r={r}: {e} > {last}");
+            last = e;
+        }
+    }
+
+    #[test]
+    fn occupancy_limits_identified() {
+        let s = GpuStencil::d2(960, 449, 12, 12, Precision::F64);
+        let o = V().occupancy(&s);
+        // §VII: "the bottleneck is the register file size".
+        assert!(o.warps_reg < o.warps_smem, "{o:?}");
+        assert_eq!(o.warps, o.warps_reg.min(o.warps_smem).min(64));
+    }
+}

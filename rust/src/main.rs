@@ -1,0 +1,11 @@
+//! `scgra` — launcher for the stencil-CGRA reproduction.
+//!
+//! See `scgra help` (or `rust/src/cli/mod.rs`) for the subcommands; the
+//! library documentation lives on [`stencil_cgra`].
+
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    stencil_cgra::cli::run(&argv)
+}

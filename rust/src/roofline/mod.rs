@@ -1,0 +1,145 @@
+//! §VI — roofline performance analysis.
+//!
+//! "The roofline analysis helps us to choose the optimal number of
+//! workers for a given stencil based on its arithmetic_intensity and the
+//! compute and bandwidth capacity of the target CGRA."
+//!
+//! The model has two roofs: the bandwidth roof `BW * AI` and the compute
+//! roof `2 * #MACs * clock` (614 GFLOPS for the §VI machine). A worker
+//! executes `2*(points-1) + 1` FLOPs per cycle when fully fed, so `w`
+//! workers demand `w * flops_per_output * clock` GFLOPS; the optimizer
+//! picks the smallest `w` that saturates the attainable roof, capped by
+//! the MAC budget (`#MACs / points` workers fit).
+
+use crate::cgra::Machine;
+use crate::stencil::StencilSpec;
+
+/// One point of the roofline analysis for a given stencil + machine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Analysis {
+    pub arithmetic_intensity: f64,
+    /// Bandwidth-bound GFLOPS (`BW * AI`).
+    pub bw_gflops: f64,
+    /// Machine compute roof.
+    pub peak_gflops: f64,
+    /// `min(bw, peak)` — Fig 12's attainable point.
+    pub attainable_gflops: f64,
+    /// GFLOPS demanded by `w` workers at full rate.
+    pub demand_gflops: f64,
+    /// Chosen worker count.
+    pub workers: usize,
+    /// Maximum workers the MAC budget allows.
+    pub max_workers: usize,
+}
+
+/// GFLOPS a single worker demands when firing every cycle.
+pub fn worker_demand_gflops(spec: &StencilSpec, m: &Machine) -> f64 {
+    spec.flops_per_output() * m.clock_ghz
+}
+
+/// Maximum workers that fit the MAC budget (§VI: `Y / #MACs_per_worker`).
+pub fn max_workers(spec: &StencilSpec, m: &Machine) -> usize {
+    (m.mac_pes / spec.points()).max(1)
+}
+
+/// Smallest worker count whose demand saturates the attainable roof,
+/// capped by the MAC budget — §VI's "6 workers should be good enough to
+/// saturate the achievable memory bandwidth" for the 17-pt 1-D stencil.
+pub fn optimal_workers(spec: &StencilSpec, m: &Machine) -> usize {
+    let attainable = m.roofline_gflops(spec.arithmetic_intensity());
+    let per_worker = worker_demand_gflops(spec, m);
+    let need = (attainable / per_worker).ceil() as usize;
+    need.clamp(1, max_workers(spec, m))
+}
+
+/// Full §VI analysis for `spec` with `w` workers (pass
+/// [`optimal_workers`] for the paper's choice).
+pub fn analyze(spec: &StencilSpec, m: &Machine, w: usize) -> Analysis {
+    let ai = spec.arithmetic_intensity();
+    Analysis {
+        arithmetic_intensity: ai,
+        bw_gflops: m.bw_gbps * ai,
+        peak_gflops: m.peak_gflops(),
+        attainable_gflops: m.roofline_gflops(ai),
+        demand_gflops: w as f64 * worker_demand_gflops(spec, m),
+        workers: w,
+        max_workers: max_workers(spec, m),
+    }
+}
+
+/// The (AI, attainable-GFLOPS) series of Fig 12: log-spaced arithmetic
+/// intensities from `lo` to `hi`.
+pub fn roofline_series(m: &Machine, lo: f64, hi: f64, points: usize) -> Vec<(f64, f64)> {
+    assert!(points >= 2 && lo > 0.0 && hi > lo);
+    let step = (hi / lo).powf(1.0 / (points - 1) as f64);
+    (0..points)
+        .map(|i| {
+            let ai = lo * step.powi(i as i32);
+            (ai, m.roofline_gflops(ai))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_1d_worker_choice_is_6() {
+        let spec = StencilSpec::paper_1d();
+        let m = Machine::paper();
+        assert_eq!(optimal_workers(&spec, &m), 6);
+        let a = analyze(&spec, &m, 6);
+        // §VI: 6 workers demand 237 GFLOPS >= the 206 GFLOPS bw roof.
+        assert!((a.demand_gflops - 237.6).abs() < 0.5, "{}", a.demand_gflops);
+        assert!((a.attainable_gflops - 206.0).abs() < 1.0);
+        assert!(a.demand_gflops >= a.attainable_gflops);
+    }
+
+    #[test]
+    fn paper_2d_worker_choice_is_5() {
+        let spec = StencilSpec::paper_2d();
+        let m = Machine::paper();
+        // §VI: only 5 workers fit (5 * 49 = 245 <= 256 MACs).
+        assert_eq!(max_workers(&spec, &m), 5);
+        assert_eq!(optimal_workers(&spec, &m), 5);
+        let a = analyze(&spec, &m, 5);
+        // §VI: 1.2 * (48*2*5 + 5) = 582 GFLOPS demand, 559 attainable.
+        assert!((a.demand_gflops - 582.0).abs() < 0.5, "{}", a.demand_gflops);
+        assert!((a.attainable_gflops - 559.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn one_extra_worker_would_not_fit_2d() {
+        let spec = StencilSpec::paper_2d();
+        let m = Machine::paper();
+        assert!(6 * spec.points() > m.mac_pes);
+    }
+
+    #[test]
+    fn series_is_monotone_then_flat() {
+        let m = Machine::paper();
+        let s = roofline_series(&m, 0.1, 100.0, 32);
+        assert_eq!(s.len(), 32);
+        for w in s.windows(2) {
+            assert!(w[1].1 >= w[0].1 - 1e-9);
+        }
+        assert!((s.last().unwrap().1 - m.peak_gflops()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn low_ai_is_bw_bound_high_ai_compute_bound() {
+        let m = Machine::paper();
+        let spec = StencilSpec::paper_1d();
+        let a = analyze(&spec, &m, 6);
+        assert!(a.bw_gflops < a.peak_gflops); // bw-bound workload
+        assert_eq!(a.attainable_gflops, a.bw_gflops);
+    }
+
+    #[test]
+    fn optimal_workers_at_least_one() {
+        let spec = StencilSpec::dim1(64, vec![0.2, 0.2, 0.2]).unwrap();
+        let m = Machine::paper();
+        assert!(optimal_workers(&spec, &m) >= 1);
+    }
+}

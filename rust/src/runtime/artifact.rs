@@ -1,0 +1,106 @@
+//! Artifact manifest parsing.
+//!
+//! `python/compile/aot.py` writes one line per artifact:
+//!
+//! ```text
+//! name|file.hlo.txt|dtype|in0,in1,...|out
+//! ```
+//!
+//! where each shape is `x`-separated dims (`96x96`, `25`) or `s` for a
+//! scalar.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub dtype: String,
+    pub in_shapes: Vec<Vec<usize>>,
+    pub out_shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactMeta>,
+}
+
+fn parse_shape(s: &str) -> Result<Vec<usize>> {
+    if s == "s" {
+        return Ok(vec![]);
+    }
+    s.split('x')
+        .map(|d| d.parse::<usize>().with_context(|| format!("bad dim `{d}`")))
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split('|').collect();
+            if parts.len() != 5 {
+                bail!("manifest line {}: expected 5 fields, got {}", i + 1, parts.len());
+            }
+            entries.push(ArtifactMeta {
+                name: parts[0].to_string(),
+                file: parts[1].to_string(),
+                dtype: parts[2].to_string(),
+                in_shapes: parts[3]
+                    .split(',')
+                    .map(parse_shape)
+                    .collect::<Result<_>>()?,
+                out_shape: parse_shape(parts[4])?,
+            });
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_aot_schema() {
+        let m = Manifest::parse(
+            "stencil2d_r12_96x96|stencil2d_r12_96x96.hlo.txt|f64|96x96,25,24|96x96\n",
+        )
+        .unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = &m.entries[0];
+        assert_eq!(e.name, "stencil2d_r12_96x96");
+        assert_eq!(e.in_shapes, vec![vec![96, 96], vec![25], vec![24]]);
+        assert_eq!(e.out_shape, vec![96, 96]);
+    }
+
+    #[test]
+    fn scalar_shape() {
+        assert_eq!(parse_shape("s").unwrap(), Vec::<usize>::new());
+        assert_eq!(parse_shape("194400").unwrap(), vec![194400]);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Manifest::parse("just|three|fields").is_err());
+        assert!(Manifest::parse("a|b|c|1xq|2").is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let m = Manifest::parse("# header\n\nn|f|f64|4|4\n").unwrap();
+        assert_eq!(m.entries.len(), 1);
+    }
+}

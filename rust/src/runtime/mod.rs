@@ -1,0 +1,125 @@
+//! PJRT runtime — the L3↔L2 bridge.
+//!
+//! Loads the HLO-text artifacts `python/compile/aot.py` produced (JAX
+//! model with the Pallas kernels inlined), compiles them once on the
+//! PJRT CPU client, and executes them from Rust. Python never runs on
+//! this path: the artifacts are self-contained.
+//!
+//! HLO *text* is the interchange format — jax >= 0.5 emits serialized
+//! protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifact;
+
+pub use artifact::{ArtifactMeta, Manifest};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Compile-once, execute-many runtime over `artifacts/`.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads `manifest.txt`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.txt"))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            manifest,
+            dir,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// The default artifact location relative to the repo root.
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.manifest.entries.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.manifest.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Compile (or fetch the cached executable for) `name`.
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let meta = self
+                .meta(name)
+                .with_context(|| format!("unknown artifact `{name}`"))?
+                .clone();
+            let path = self.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling `{name}`"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute artifact `name` on f64 inputs (shapes per the manifest).
+    /// Returns the flattened f64 output.
+    pub fn execute(&mut self, name: &str, inputs: &[&[f64]]) -> Result<Vec<f64>> {
+        let meta = self
+            .meta(name)
+            .with_context(|| format!("unknown artifact `{name}`"))?
+            .clone();
+        if inputs.len() != meta.in_shapes.len() {
+            bail!(
+                "`{name}` expects {} inputs, got {}",
+                meta.in_shapes.len(),
+                inputs.len()
+            );
+        }
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (i, (data, shape)) in inputs.iter().zip(&meta.in_shapes).enumerate() {
+            let want: usize = shape.iter().product();
+            if data.len() != want {
+                bail!("`{name}` input {i}: {} elements, expected {want}", data.len());
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data).reshape(&dims)?;
+            lits.push(lit);
+        }
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f64>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT-dependent tests live in rust/tests/runtime_integration.rs so a
+    // missing artifacts/ directory fails loudly there, not here. This
+    // unit test only covers error paths that need no artifacts.
+    #[test]
+    fn open_missing_dir_errors() {
+        assert!(Runtime::open("/nonexistent/path").is_err());
+    }
+}

@@ -1,0 +1,168 @@
+//! §III-B "Blocking" — strip mining when the fabric cannot buffer
+//! `2*ry` rows of the grid.
+//!
+//! The length of the rows kept inside the CGRA queues is limited by
+//! on-fabric storage; if `x_dim` is too large, the grid is blocked into
+//! vertical strips with `rx`-wide halos so that each strip's mandatory
+//! buffering fits. The coordinator executes strips independently (they
+//! only share read-only halo input), which is also the §IV / §VIII-A
+//! multi-tile decomposition unit.
+
+use anyhow::{ensure, Result};
+
+use super::map2d::required_buffer_tokens;
+use super::spec::StencilSpec;
+
+/// One vertical strip: output columns `[out_lo, out_hi)` of the global
+/// grid, computed from input columns `[in_lo, in_hi)` (halo included).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Strip {
+    pub out_lo: usize,
+    pub out_hi: usize,
+    pub in_lo: usize,
+    pub in_hi: usize,
+}
+
+impl Strip {
+    /// Width of the strip's input sub-grid.
+    pub fn in_width(&self) -> usize {
+        self.in_hi - self.in_lo
+    }
+
+    /// Number of output columns this strip owns.
+    pub fn out_width(&self) -> usize {
+        self.out_hi - self.out_lo
+    }
+}
+
+/// Plan vertical strips whose output columns tile the interior
+/// `[rx, nx - rx)` exactly, each strip `out_width <= block_w`.
+pub fn strips_for_width(spec: &StencilSpec, block_w: usize) -> Vec<Strip> {
+    let rx = spec.rx;
+    let interior = spec.nx - 2 * rx;
+    let mut strips = Vec::new();
+    let mut lo = rx;
+    while lo < rx + interior {
+        let hi = usize::min(lo + block_w, rx + interior);
+        strips.push(Strip {
+            out_lo: lo,
+            out_hi: hi,
+            in_lo: lo - rx,
+            in_hi: hi + rx,
+        });
+        lo = hi;
+    }
+    strips
+}
+
+/// Largest strip width whose per-strip mandatory buffering fits
+/// `budget_tokens`, and the resulting plan. Errors if even the minimum
+/// strip (one output column wave per worker) cannot fit.
+pub fn plan(
+    spec: &StencilSpec,
+    w: usize,
+    budget_tokens: usize,
+) -> Result<(usize, Vec<Strip>)> {
+    ensure!(!spec.is_1d(), "blocking applies to 2-D stencils");
+    let interior = spec.nx - 2 * spec.rx;
+    // Buffering is monotone in strip width → binary search the widest
+    // feasible block_w.
+    let fits = |bw: usize| {
+        let sub = spec.strip(0, bw + 2 * spec.rx);
+        required_buffer_tokens(&sub, w) <= budget_tokens
+    };
+    ensure!(
+        fits(w.max(1)),
+        "even a {}-column strip exceeds the fabric budget of {} tokens",
+        w,
+        budget_tokens
+    );
+    let (mut lo, mut hi) = (w, interior); // lo feasible, search up to full width
+    while lo < hi {
+        let mid = (lo + hi + 1) / 2;
+        if fits(mid) {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    Ok((lo, strips_for_width(spec, lo)))
+}
+
+/// Default on-fabric token budget: 256 PEs with (paper §II-A) small
+/// input/output queues plus scratchpad-backed spill — sized so the
+/// Table-I 2-D workload (960 cols, rx=ry=12, w=5) runs without strip
+/// mining, matching the paper's single-CGRA simulation.
+pub const DEFAULT_FABRIC_TOKENS: usize = 64 * 1024;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_tile_the_interior_exactly() {
+        let spec = StencilSpec::paper_2d();
+        for bw in [64, 100, 936, 937, 1000] {
+            let strips = strips_for_width(&spec, bw);
+            assert_eq!(strips[0].out_lo, spec.rx);
+            assert_eq!(strips.last().unwrap().out_hi, spec.nx - spec.rx);
+            for w in strips.windows(2) {
+                assert_eq!(w[0].out_hi, w[1].out_lo, "gap/overlap");
+            }
+            let total: usize = strips.iter().map(|s| s.out_width()).sum();
+            assert_eq!(total, spec.nx - 2 * spec.rx);
+        }
+    }
+
+    #[test]
+    fn halos_extend_by_rx() {
+        let spec = StencilSpec::paper_2d();
+        for s in strips_for_width(&spec, 200) {
+            assert_eq!(s.in_lo + spec.rx, s.out_lo);
+            assert_eq!(s.in_hi - spec.rx, s.out_hi);
+            assert!(s.in_hi <= spec.nx);
+        }
+    }
+
+    #[test]
+    fn paper_2d_fits_default_budget_unblocked() {
+        let spec = StencilSpec::paper_2d();
+        let (bw, strips) = plan(&spec, 5, DEFAULT_FABRIC_TOKENS).unwrap();
+        assert_eq!(bw, spec.nx - 2 * spec.rx, "no strip mining needed");
+        assert_eq!(strips.len(), 1);
+    }
+
+    #[test]
+    fn small_budget_forces_strips() {
+        let spec = StencilSpec::paper_2d();
+        // Full width needs ~37k tokens; 22k forces strip mining but still
+        // admits a minimal strip.
+        let (bw, strips) = plan(&spec, 5, 22_000).unwrap();
+        assert!(bw < spec.nx - 2 * spec.rx);
+        assert!(strips.len() > 1);
+        // Monotonicity: smaller budget, narrower strips.
+        let (bw2, _) = plan(&spec, 5, 17_000).unwrap();
+        assert!(bw2 <= bw);
+    }
+
+    #[test]
+    fn impossible_budget_is_an_error() {
+        let spec = StencilSpec::paper_2d();
+        assert!(plan(&spec, 5, 10).is_err());
+    }
+
+    #[test]
+    fn plan_width_is_maximal() {
+        // The returned width must be feasible and width+1 infeasible
+        // (unless full interior).
+        let spec = StencilSpec::paper_2d();
+        let budget = 25_000;
+        let (bw, _) = plan(&spec, 5, budget).unwrap();
+        let sub = spec.strip(0, bw + 2 * spec.rx);
+        assert!(required_buffer_tokens(&sub, 5) <= budget);
+        if bw < spec.nx - 2 * spec.rx {
+            let sub2 = spec.strip(0, bw + 1 + 2 * spec.rx);
+            assert!(required_buffer_tokens(&sub2, 5) > budget);
+        }
+    }
+}

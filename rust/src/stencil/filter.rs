@@ -1,0 +1,235 @@
+//! Data-filtering PE configuration (§III-A "Data-filtering PEs", Fig 6).
+//!
+//! A reader worker broadcasts every value it loads down its column of
+//! MUL/MAC PEs; each tap only needs a subset, so a filter PE in front of
+//! each tap drops the "not-needed" tokens. The paper gives two schemes —
+//! the `0^m 1^n 0^p` bit pattern and the row/col-id compare — and this
+//! module derives both *analytically* from the stencil geometry, worker
+//! count and tap position.
+//!
+//! Geometry conventions (see `stencil::mod`): reader `ρ` loads columns
+//! `c ≡ ρ (mod w)` in ascending row-major order; compute worker `j` owns
+//! output columns `o ≡ j (mod w)`. Tap `t` of worker `j`'s x chain
+//! (`t = 0 .. 2rx`) therefore consumes columns `o + t - rx`, which live in
+//! reader `(j + t + w - rx % w ... ) mod w`'s stream.
+
+use crate::dfg::node::FilterSpec;
+
+/// Reader that feeds x-chain tap `t` of worker `j` (offset `t - rx`).
+pub fn x_tap_reader(j: usize, t: usize, rx: usize, w: usize) -> usize {
+    // (j + t - rx) mod w, computed without underflow.
+    (j + t + w * (rx / w + 1) - rx) % w
+}
+
+/// Reader that feeds every y-chain tap of worker `j`: the one loading the
+/// worker's own output columns (§III-B — "all MUL/MAC's input comes from
+/// only one particular reader worker").
+pub fn y_tap_reader(j: usize, w: usize) -> usize {
+    j % w
+}
+
+/// Number of columns `c ≡ ρ (mod w)` with `c < hi` (tokens per row a
+/// reader produces before column `hi`).
+fn count_cols(rho: usize, w: usize, hi: usize) -> u64 {
+    if hi <= rho {
+        0
+    } else {
+        ((hi - rho - 1) / w + 1) as u64
+    }
+}
+
+/// §III-A bit-pattern filter for x-chain tap `t` of worker `j` on a 1-D
+/// grid of `nx` points: pass tokens whose column maps to a valid interior
+/// output `o = c - (t - rx) ∈ [rx, nx - rx)`.
+///
+/// Returns the per-row (here: whole-stream) `0^m 1^n 0^p` pattern. The
+/// paper's radius-1, w=1 example yields `1^(N-2) 0^2` for the MUL,
+/// `0 1^(N-2) 0` and `0^2 1^(N-2)` for the MACs.
+pub fn x_tap_bits(j: usize, t: usize, rx: usize, w: usize, nx: usize) -> FilterSpec {
+    let rho = x_tap_reader(j, t, rx, w);
+    let total = count_cols(rho, w, nx);
+    // Valid token columns: c ∈ [t, nx - 2rx + t)  (so that o ∈ [rx, nx-rx)).
+    let lo = count_cols(rho, w, t);
+    let hi = count_cols(rho, w, nx - 2 * rx + t);
+    FilterSpec::Bits {
+        m: lo,
+        n: hi - lo,
+        p: total - hi,
+    }
+}
+
+/// Row/col-id filter for x-chain tap `t` of worker `j` on an
+/// `nx` x `ny` grid: pass tokens tagged with interior rows and the tap's
+/// shifted column window.
+pub fn x_tap_rowcol(t: usize, rx: usize, ry: usize, nx: usize, ny: usize) -> FilterSpec {
+    FilterSpec::RowCol {
+        row_lo: ry as u32,
+        row_hi: (ny - ry) as u32,
+        col_lo: t as u32,
+        col_hi: (nx - 2 * rx + t) as u32,
+    }
+}
+
+/// Row/col-id filter for y-chain tap `u` (`u = 0 .. 2ry-1`, row offset
+/// `off = (u < ry ? u : u+1) - ry`): pass tokens whose row is the tap's
+/// shifted interior row window and whose column is an interior output
+/// column.
+pub fn y_tap_rowcol(u: usize, rx: usize, ry: usize, nx: usize, ny: usize) -> FilterSpec {
+    let k = if u < ry { u } else { u + 1 }; // skip the centre row
+    let off = k as i64 - ry as i64;
+    FilterSpec::RowCol {
+        row_lo: (ry as i64 + off) as u32,
+        row_hi: (ny as i64 - ry as i64 + off) as u32,
+        col_lo: rx as u32,
+        col_hi: (nx - rx) as u32,
+    }
+}
+
+/// Row offset of y-chain tap `u` relative to the output row.
+pub fn y_tap_offset(u: usize, ry: usize) -> i64 {
+    let k = if u < ry { u } else { u + 1 };
+    k as i64 - ry as i64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShift;
+
+    #[test]
+    fn paper_fig6_patterns() {
+        // 3-pt stencil (rx=1), one worker, one reader, grid N.
+        let n = 10usize;
+        // MUL (t=0): 1^(N-2) 0 0
+        assert_eq!(
+            x_tap_bits(0, 0, 1, 1, n),
+            FilterSpec::Bits { m: 0, n: (n - 2) as u64, p: 2 }
+        );
+        // first MAC (t=1): 0 1^(N-2) 0
+        assert_eq!(
+            x_tap_bits(0, 1, 1, 1, n),
+            FilterSpec::Bits { m: 1, n: (n - 2) as u64, p: 1 }
+        );
+        // second MAC (t=2): 0 0 1^(N-2)
+        assert_eq!(
+            x_tap_bits(0, 2, 1, 1, n),
+            FilterSpec::Bits { m: 2, n: (n - 2) as u64, p: 0 }
+        );
+    }
+
+    #[test]
+    fn x_tap_reader_matches_paper_interleave() {
+        // rx=1, w=3 (Fig 3/5): worker 0's MUL (t=0) eats in[o-1] — the
+        // stream of reader 2 when o ≡ 0 (cols ≡ -1 ≡ 2 mod 3).
+        assert_eq!(x_tap_reader(0, 0, 1, 3), 2);
+        assert_eq!(x_tap_reader(0, 1, 1, 3), 0);
+        assert_eq!(x_tap_reader(0, 2, 1, 3), 1);
+        // Worker 1's taps shift by one reader.
+        assert_eq!(x_tap_reader(1, 0, 1, 3), 0);
+    }
+
+    /// The pairing invariant the whole mapping rests on: for every tap,
+    /// the k-th *passed* token of its (filtered) reader stream is exactly
+    /// the input the k-th output of that worker needs.
+    #[test]
+    fn kth_passed_token_matches_kth_output_1d() {
+        let mut rng = XorShift::new(0xF00D);
+        for _case in 0..200 {
+            let rx = rng.range(1, 5);
+            let w = rng.range(1, 7);
+            let nx = rng.range(2 * rx + 2, 80);
+            for j in 0..w {
+                // Worker j's outputs, in order.
+                let outputs: Vec<usize> = (rx..nx - rx)
+                    .filter(|o| o % w == j % w)
+                    .collect();
+                for t in 0..=2 * rx {
+                    let rho = x_tap_reader(j, t, rx, w);
+                    let spec = x_tap_bits(j, t, rx, w, nx);
+                    // Reader rho's stream of columns.
+                    let stream: Vec<usize> =
+                        (rho..nx).step_by(w).collect();
+                    let passed: Vec<usize> = stream
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, _)| spec.passes(*i as u64, 0, 0))
+                        .map(|(_, c)| *c)
+                        .collect();
+                    assert_eq!(
+                        passed.len(),
+                        outputs.len(),
+                        "tap {t} worker {j} (w={w} nx={nx} rx={rx})"
+                    );
+                    for (k, &o) in outputs.iter().enumerate() {
+                        // Token column must be o + t - rx.
+                        let want = (o + t) as i64 - rx as i64;
+                        assert_eq!(passed[k] as i64, want, "k={k}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Same invariant for the 2-D row/col scheme: per tap, passed tokens
+    /// enumerate (row-major) exactly the worker's outputs, shifted by the
+    /// tap offset.
+    #[test]
+    fn kth_passed_token_matches_kth_output_2d() {
+        let mut rng = XorShift::new(0xBEEF);
+        for _case in 0..100 {
+            let rx = rng.range(1, 4);
+            let ry = rng.range(1, 4);
+            let w = rng.range(1, 5);
+            let nx = rng.range(2 * rx + 2, 24);
+            let ny = rng.range(2 * ry + 2, 20);
+            for j in 0..w {
+                let outputs: Vec<(usize, usize)> = (ry..ny - ry)
+                    .flat_map(|r| {
+                        (rx..nx - rx)
+                            .filter(move |c| c % w == j % w)
+                            .map(move |c| (r, c))
+                    })
+                    .collect();
+                // x-chain taps.
+                for t in 0..=2 * rx {
+                    let rho = x_tap_reader(j, t, rx, w);
+                    let spec = x_tap_rowcol(t, rx, ry, nx, ny);
+                    let passed: Vec<(usize, usize)> = (0..ny)
+                        .flat_map(|r| (rho..nx).step_by(w).map(move |c| (r, c)))
+                        .filter(|&(r, c)| spec.passes(0, r as u32, c as u32))
+                        .collect();
+                    assert_eq!(passed.len(), outputs.len(), "x tap {t}");
+                    for (k, &(orow, ocol)) in outputs.iter().enumerate() {
+                        assert_eq!(passed[k].0, orow);
+                        assert_eq!(
+                            passed[k].1 as i64,
+                            (ocol + t) as i64 - rx as i64
+                        );
+                    }
+                }
+                // y-chain taps.
+                for u in 0..2 * ry {
+                    let rho = y_tap_reader(j, w);
+                    let spec = y_tap_rowcol(u, rx, ry, nx, ny);
+                    let off = y_tap_offset(u, ry);
+                    let passed: Vec<(usize, usize)> = (0..ny)
+                        .flat_map(|r| (rho..nx).step_by(w).map(move |c| (r, c)))
+                        .filter(|&(r, c)| spec.passes(0, r as u32, c as u32))
+                        .collect();
+                    assert_eq!(passed.len(), outputs.len(), "y tap {u}");
+                    for (k, &(orow, ocol)) in outputs.iter().enumerate() {
+                        assert_eq!(passed[k].0 as i64, orow as i64 + off);
+                        assert_eq!(passed[k].1, ocol);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn y_tap_offsets_skip_centre() {
+        // ry = 2: offsets -2, -1, +1, +2.
+        let offs: Vec<i64> = (0..4).map(|u| y_tap_offset(u, 2)).collect();
+        assert_eq!(offs, vec![-2, -1, 1, 2]);
+    }
+}

@@ -1,0 +1,209 @@
+//! §III-A — mapping a (2rx+1)-point 1-D stencil onto the CGRA.
+//!
+//! The computation is a four-stage pipeline (read, compute, write, sync),
+//! each stage run by `w` interleaved logical workers:
+//!
+//! * **Readers** load the input grid round-robin (Fig 3): reader `ρ` loads
+//!   columns `c ≡ ρ (mod w)` and broadcasts each value down its column of
+//!   filters (Fig 4 — PEs in the same column receive data from the same
+//!   reader).
+//! * **Compute workers** are MAC chains (Fig 5): worker `j` owns outputs
+//!   `o ≡ j (mod w)` and runs `1 MUL + 2rx MACs`, one PE per coefficient
+//!   (PEs in the same row share a coefficient).
+//! * **Data filters** in front of every tap drop the broadcast tokens the
+//!   tap does not need, using the `0^m 1^n 0^p` patterns of Fig 6.
+//! * **Writers** store outputs via their control units' address streams;
+//!   **sync workers** count the acks and a done-tree signals the host.
+
+use anyhow::{ensure, Result};
+
+use crate::dfg::node::{AddrIter, Op, Stage};
+use crate::dfg::{Dsl, Graph};
+
+use super::filter::{x_tap_bits, x_tap_reader};
+use super::spec::StencilSpec;
+use super::{first_output_col, outputs_per_row};
+
+/// Extra queue slack beyond the analytic wave backlog (covers network
+/// latency and pipeline jitter).
+pub const QUEUE_SLACK: usize = 4;
+
+/// Capacity the data queue feeding chain position `t` needs (t = 0 is the
+/// MUL): the systolic pipeline skew — MAC `t` fires output `i` roughly
+/// `t * L` cycles after the data wave for output `i` arrives, where `L`
+/// (~2 cycles) is the per-stage partial-forwarding latency on the mesh —
+/// plus the x-wave jitter of `2rx/w` waves between earliest and latest
+/// tap. Undersizing this throttles the whole pipeline: the tap's filter
+/// stalls, the reader broadcast stalls behind it, and every worker slows
+/// (measured: 76% -> 95% of roofline on the Table-I 1-D workload when
+/// the skew term uses 2t instead of t).
+pub fn tap_capacity_1d(rx: usize, w: usize, t: usize) -> usize {
+    2 * t + 2 * rx / w + QUEUE_SLACK
+}
+
+/// Build the §III-A dataflow graph for `spec` with `w` workers.
+///
+/// The resulting graph computes the interior outputs `[rx, nx - rx)`;
+/// boundary points are copied by the caller (see `verify::golden`).
+pub fn build(spec: &StencilSpec, w: usize) -> Result<Graph> {
+    ensure!(spec.is_1d(), "map1d requires a 1-D spec");
+    ensure!(w >= 1, "need at least one worker");
+    let nx = spec.nx;
+    let rx = spec.rx;
+    let taps = 2 * rx + 1;
+
+    let mut d = Dsl::new();
+
+    // Readers + their control units (§III-A "Control Units").
+    for rho in 0..w {
+        d.op(&format!("r{rho}.cu"), Op::AddrGen, Stage::Control)
+            .agen(AddrIter::dim1(rho as u32, w as u32, nx as u32))
+            .out(&format!("r{rho}.addr"));
+        d.op(&format!("r{rho}.ld"), Op::Load, Stage::Reader)
+            .input(0, &format!("r{rho}.addr"))
+            .out(&format!("r{rho}.data"));
+    }
+
+    for j in 0..w {
+        // Data filters: one per tap, fed by the tap's reader broadcast.
+        for t in 0..taps {
+            let rho = x_tap_reader(j, t, rx, w);
+            d.op(&format!("w{j}.f{t}"), Op::Filter, Stage::Compute)
+                .worker(j)
+                .filter(x_tap_bits(j, t, rx, w, nx))
+                .input(0, &format!("r{rho}.data"))
+                .out(&format!("w{j}.t{t}"));
+        }
+        // MAC chain: MUL on tap 0, MACs after (Fig 5).
+        d.op(&format!("w{j}.mul"), Op::Mul, Stage::Compute)
+            .worker(j)
+            .coeff(spec.cx[0])
+            .input_cap(0, &format!("w{j}.t0"), tap_capacity_1d(rx, w, 0))
+            .out(&format!("w{j}.p0"));
+        for t in 1..taps {
+            d.op(&format!("w{j}.mac{t}"), Op::Mac, Stage::Compute)
+                .worker(j)
+                .coeff(spec.cx[t])
+                .input(0, &format!("w{j}.p{}", t - 1))
+                .input_cap(1, &format!("w{j}.t{t}"), tap_capacity_1d(rx, w, t))
+                .out(&format!("w{j}.p{t}"));
+        }
+        // Writer + its control unit.
+        let first = first_output_col(j, w, rx);
+        let count = outputs_per_row(j, w, nx, rx) as u64;
+        d.op(&format!("w{j}.st.cu"), Op::AddrGen, Stage::Control)
+            .agen(AddrIter::dim1(first as u32, w as u32, (nx - rx) as u32))
+            .out(&format!("w{j}.staddr"));
+        d.op(&format!("w{j}.st"), Op::Store, Stage::Writer)
+            .worker(j)
+            .input(0, &format!("w{j}.staddr"))
+            .input(1, &format!("w{j}.p{}", taps - 1))
+            .out(&format!("w{j}.ack"));
+        // Synchronization worker: counts this writer's stores (§III-A).
+        d.op(&format!("w{j}.sync"), Op::SyncCount, Stage::Sync)
+            .worker(j)
+            .expected(count)
+            .input(0, &format!("w{j}.ack"))
+            .out(&format!("w{j}.done"));
+    }
+
+    // Combine per-worker done signals into the host "done".
+    let mut done = d.op("done", Op::DoneTree, Stage::Sync).expected(w as u64);
+    for j in 0..w {
+        done = done.input(j as u8, &format!("w{j}.done"));
+    }
+    drop(done);
+
+    let g = d.build()?;
+    crate::dfg::validate::validate(&g)?;
+    Ok(g)
+}
+
+/// DP-op count the graph *should* have: `w * (2rx + 1)` — Fig 7's
+/// "6 workers, 102 DP ops" for the 17-pt stencil.
+pub fn expected_dp_ops(spec: &StencilSpec, w: usize) -> usize {
+    w * spec.points()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::node::Op;
+
+    fn spec_3pt(nx: usize) -> StencilSpec {
+        StencilSpec::dim1(nx, vec![0.25, 0.5, 0.25]).unwrap()
+    }
+
+    #[test]
+    fn builds_paper_running_example() {
+        // 3-pt stencil, 3 workers (Fig 3-5).
+        let g = build(&spec_3pt(32), 3).unwrap();
+        // Per worker: 1 MUL + 2 MAC + 3 filters + st.cu + st + sync = 9,
+        // plus readers: (cu + ld) * 3, plus done: 1.
+        assert_eq!(g.dp_ops(), 9);
+        let h = g.op_histogram();
+        assert_eq!(h[&Op::Mul], 3);
+        assert_eq!(h[&Op::Mac], 6);
+        assert_eq!(h[&Op::Filter], 9);
+        assert_eq!(h[&Op::Load], 3);
+        assert_eq!(h[&Op::Store], 3);
+        assert_eq!(h[&Op::SyncCount], 3);
+        assert_eq!(h[&Op::AddrGen], 6);
+        assert_eq!(h[&Op::DoneTree], 1);
+    }
+
+    #[test]
+    fn fig7_structure_17pt_6_workers() {
+        // Fig 7: nx = 194400, rx = 8, 17-pt, 6 workers, 102 DP ops.
+        let spec = StencilSpec::paper_1d();
+        let g = build(&spec, 6).unwrap();
+        assert_eq!(g.dp_ops(), 102);
+        assert_eq!(g.dp_ops(), expected_dp_ops(&spec, 6));
+        let h = g.op_histogram();
+        assert_eq!(h[&Op::Mul], 6);
+        assert_eq!(h[&Op::Mac], 96);
+        assert_eq!(h[&Op::Filter], 6 * 17);
+    }
+
+    #[test]
+    fn single_worker_works() {
+        let g = build(&spec_3pt(16), 1).unwrap();
+        assert_eq!(g.dp_ops(), 3);
+    }
+
+    #[test]
+    fn sync_counts_partition_interior() {
+        let spec = spec_3pt(29);
+        let g = build(&spec, 4).unwrap();
+        let total: u64 = g
+            .nodes
+            .iter()
+            .filter(|n| n.op == Op::SyncCount)
+            .map(|n| n.expected.unwrap())
+            .sum();
+        assert_eq!(total, (spec.nx - 2 * spec.rx) as u64);
+    }
+
+    #[test]
+    fn graph_is_valid_across_widths() {
+        let spec = StencilSpec::dim1(64, crate::stencil::spec::symmetric_taps(3)).unwrap();
+        for w in 1..=8 {
+            let g = build(&spec, w).unwrap();
+            assert!(crate::dfg::validate::check(&g).is_empty(), "w={w}");
+            assert_eq!(g.dp_ops(), w * 7);
+        }
+    }
+
+    #[test]
+    fn mandatory_capacity_grows_with_radius_and_position() {
+        assert!(tap_capacity_1d(8, 1, 0) > tap_capacity_1d(1, 1, 0));
+        assert!(tap_capacity_1d(8, 6, 0) < tap_capacity_1d(8, 1, 0));
+        assert!(tap_capacity_1d(8, 6, 16) > tap_capacity_1d(8, 6, 0));
+    }
+
+    #[test]
+    fn rejects_2d_spec() {
+        let s = StencilSpec::heat2d(16, 16, 0.2);
+        assert!(build(&s, 2).is_err());
+    }
+}

@@ -1,0 +1,314 @@
+//! §III-B — mapping a 2-D star stencil onto the CGRA.
+//!
+//! Natural extension of the 1-D algorithm (Fig 9): the x contribution is
+//! computed exactly like stencil1D; the y contribution continues the same
+//! MAC chain (the paper counts `48 MAC + 1 MUL = 49 DP ops` per worker for
+//! `rx = ry = 12` — one MUL plus a fused chain over all remaining taps, so
+//! the partial sums of the x and y dimensions are combined by the chain
+//! itself).
+//!
+//! Key §III-B properties implemented here:
+//!
+//! * **Reader sharing** — no separate readers for the y dimension: the
+//!   same `w` readers feed both chains; y-chain taps of worker `j` all
+//!   come from the single reader that loads the worker's own output
+//!   columns.
+//! * **Mandatory buffering via PE-to-PE forwarding** — §II's "data loaded
+//!   can be passed from a PE to a neighbor PE directly and thus reused":
+//!   each reader stream flows through a *delay line* of `2*ry` copy PEs,
+//!   each stage holding one row's worth of the stream. A tap with row
+//!   offset `off` reads the line at stage `ry - off`, so every tap of an
+//!   output receives its token at the same wall-time and the fabric holds
+//!   exactly the paper's goal of `2*ry*x_dim` values (+ pipeline-skew
+//!   queues), not one copy per tap.
+//! * **Row/col-id filtering** — 2-D filters use the paper's second scheme
+//!   (compare the row id of the token), since the bit-pattern period
+//!   varies per row when `nx % w != 0`.
+//!
+//! Undersized delay stages deadlock the pipeline — demonstrated by a
+//! failure-injection test in `rust/tests/`.
+
+use anyhow::{ensure, Result};
+
+use crate::dfg::node::{AddrIter, Op, Stage};
+use crate::dfg::{Dsl, Graph};
+
+use super::filter::{
+    x_tap_reader, x_tap_rowcol, y_tap_offset, y_tap_reader, y_tap_rowcol,
+};
+use super::map1d::QUEUE_SLACK;
+use super::spec::StencilSpec;
+use super::{first_output_col, outputs_per_row};
+
+/// Raw (pre-filter) tokens reader `rho` produces per grid row.
+pub fn raw_per_row(spec: &StencilSpec, rho: usize, w: usize) -> usize {
+    if spec.nx <= rho {
+        0
+    } else {
+        (spec.nx - rho - 1) / w + 1
+    }
+}
+
+/// Capacity of one delay-line stage of reader `rho`: one row of the raw
+/// stream plus slack. The line's total capacity between two tap points
+/// must cover their row distance or the graph deadlocks (§III-B
+/// "Mandatory Buffering").
+pub fn stage_capacity(spec: &StencilSpec, rho: usize, w: usize) -> usize {
+    raw_per_row(spec, rho, w) + QUEUE_SLACK
+}
+
+/// Capacity of the data queue feeding chain position `k` (0 = the MUL):
+/// the systolic pipeline skew (MAC `k` fires output `i` at wave
+/// `i + k*L`, with `L` ~ 2 cycles of per-stage partial latency on the
+/// mesh) plus the x-wave jitter. See `map1d::tap_capacity_1d`.
+pub fn chain_capacity(spec: &StencilSpec, w: usize, k: usize) -> usize {
+    2 * k + 2 * spec.rx / w + QUEUE_SLACK
+}
+
+/// Total mandatory buffering (tokens) the mapping needs: delay-line
+/// stages + chain data queues — the quantity §III-B compares against
+/// on-fabric storage to decide strip mining (see [`super::blocking`]).
+/// The delay-line part is the paper's `2*ry*x_dim` goal.
+pub fn required_buffer_tokens(spec: &StencilSpec, w: usize) -> usize {
+    let mut total = 0;
+    for rho in 0..w {
+        total += 2 * spec.ry * stage_capacity(spec, rho, w);
+    }
+    let chain_len = 2 * spec.rx + 1 + 2 * spec.ry;
+    for _j in 0..w {
+        for k in 0..chain_len {
+            total += chain_capacity(spec, w, k);
+        }
+    }
+    total
+}
+
+/// Build the §III-B dataflow graph for `spec` with `w` workers.
+pub fn build(spec: &StencilSpec, w: usize) -> Result<Graph> {
+    ensure!(!spec.is_1d(), "map2d requires a 2-D spec (use map1d)");
+    ensure!(w >= 1, "need at least one worker");
+    let (nx, ny, rx, ry) = (spec.nx, spec.ny, spec.rx, spec.ry);
+    let x_taps = 2 * rx + 1;
+    let y_taps = 2 * ry;
+
+    let mut d = Dsl::new();
+
+    // Shared readers: row-major over the whole grid, interleaved by
+    // column (one reader per congruence class), each followed by its
+    // 2*ry-stage delay line. Stage `s` of reader `rho` publishes signal
+    // `r{rho}.d{s}`; stage 0 is the load itself.
+    for rho in 0..w {
+        d.op(&format!("r{rho}.cu"), Op::AddrGen, Stage::Control)
+            .agen(AddrIter {
+                row_lo: 0,
+                row_hi: ny as u32,
+                col_start: rho as u32,
+                col_hi: nx as u32,
+                col_stride: w as u32,
+                width: nx as u32,
+            })
+            .out(&format!("r{rho}.addr"));
+        d.op(&format!("r{rho}.ld"), Op::Load, Stage::Reader)
+            .input(0, &format!("r{rho}.addr"))
+            .out(&format!("r{rho}.d0"));
+        let cap = stage_capacity(spec, rho, w);
+        for s in 1..=y_taps {
+            d.op(&format!("r{rho}.copy{s}"), Op::Copy, Stage::Reader)
+                .input_cap(0, &format!("r{rho}.d{}", s - 1), cap)
+                .out(&format!("r{rho}.d{s}"));
+        }
+    }
+
+    for j in 0..w {
+        // ---- x chain (identical in shape to stencil1D, Fig 9 left).
+        // x taps read their reader's line at stage `ry` so they are
+        // wall-time aligned with the y taps. ----
+        for t in 0..x_taps {
+            let rho = x_tap_reader(j, t, rx, w);
+            d.op(&format!("w{j}.x.f{t}"), Op::Filter, Stage::Compute)
+                .worker(j)
+                .filter(x_tap_rowcol(t, rx, ry, nx, ny))
+                .input(0, &format!("r{rho}.d{ry}"))
+                .out(&format!("w{j}.x.t{t}"));
+        }
+        d.op(&format!("w{j}.x.mul"), Op::Mul, Stage::Compute)
+            .worker(j)
+            .coeff(spec.cx[0])
+            .input_cap(0, &format!("w{j}.x.t0"), chain_capacity(spec, w, 0))
+            .out(&format!("w{j}.x.p0"));
+        for t in 1..x_taps {
+            d.op(&format!("w{j}.x.mac{t}"), Op::Mac, Stage::Compute)
+                .worker(j)
+                .coeff(spec.cx[t])
+                .input(0, &format!("w{j}.x.p{}", t - 1))
+                .input_cap(1, &format!("w{j}.x.t{t}"), chain_capacity(spec, w, t))
+                .out(&format!("w{j}.x.p{t}"));
+        }
+
+        // ---- y chain: continues the same partial-sum chain (Fig 9
+        // right); all taps fed by ONE reader's delay line at the stage
+        // matching the tap's row offset (reader sharing + forwarding). ----
+        let rho_y = y_tap_reader(j, w);
+        let mut prev = format!("w{j}.x.p{}", x_taps - 1);
+        for u in 0..y_taps {
+            let off = y_tap_offset(u, ry);
+            let stage = (ry as i64 - off) as usize;
+            d.op(&format!("w{j}.y.f{u}"), Op::Filter, Stage::Compute)
+                .worker(j)
+                .filter(y_tap_rowcol(u, rx, ry, nx, ny))
+                .input(0, &format!("r{rho_y}.d{stage}"))
+                .out(&format!("w{j}.y.t{u}"));
+            let next = format!("w{j}.y.p{u}");
+            d.op(&format!("w{j}.y.mac{u}"), Op::Mac, Stage::Compute)
+                .worker(j)
+                .coeff(spec.cy[u])
+                .input(0, &prev)
+                .input_cap(
+                    1,
+                    &format!("w{j}.y.t{u}"),
+                    chain_capacity(spec, w, x_taps + u),
+                )
+                .out(&next);
+            prev = next;
+        }
+
+        // ---- writer + sync ----
+        let first = first_output_col(j, w, rx);
+        let count = (outputs_per_row(j, w, nx, rx) * (ny - 2 * ry)) as u64;
+        d.op(&format!("w{j}.st.cu"), Op::AddrGen, Stage::Control)
+            .agen(AddrIter {
+                row_lo: ry as u32,
+                row_hi: (ny - ry) as u32,
+                col_start: first as u32,
+                col_hi: (nx - rx) as u32,
+                col_stride: w as u32,
+                width: nx as u32,
+            })
+            .out(&format!("w{j}.staddr"));
+        d.op(&format!("w{j}.st"), Op::Store, Stage::Writer)
+            .worker(j)
+            .input(0, &format!("w{j}.staddr"))
+            .input(1, &prev)
+            .out(&format!("w{j}.ack"));
+        d.op(&format!("w{j}.sync"), Op::SyncCount, Stage::Sync)
+            .worker(j)
+            .expected(count)
+            .input(0, &format!("w{j}.ack"))
+            .out(&format!("w{j}.done"));
+    }
+
+    let mut done = d.op("done", Op::DoneTree, Stage::Sync).expected(w as u64);
+    for j in 0..w {
+        done = done.input(j as u8, &format!("w{j}.done"));
+    }
+    drop(done);
+
+    let g = d.build()?;
+    crate::dfg::validate::validate(&g)?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heat5pt_structure() {
+        let spec = StencilSpec::heat2d(16, 12, 0.2);
+        let g = build(&spec, 3).unwrap();
+        // Per worker: 1 MUL + 2 x-MAC + 2 y-MAC = 5 DP ops.
+        assert_eq!(g.dp_ops(), 15);
+        let h = g.op_histogram();
+        assert_eq!(h[&Op::Mul], 3);
+        assert_eq!(h[&Op::Mac], 12);
+        // Filters: (3 x-taps + 2 y-taps) per worker.
+        assert_eq!(h[&Op::Filter], 15);
+        assert_eq!(h[&Op::Load], 3);
+        // Delay lines: 2*ry copies per reader.
+        assert_eq!(h[&Op::Copy], 3 * 2);
+    }
+
+    #[test]
+    fn fig11_structure_49pt_5_workers() {
+        // Fig 11: 49-pt 2-D stencil, rx = ry = 12, 5 workers.
+        let spec = StencilSpec::paper_2d();
+        let g = build(&spec, 5).unwrap();
+        // §VI: each worker requires 49 DP ops (48 MAC + 1 MUL).
+        assert_eq!(g.dp_ops(), 5 * 49);
+        let h = g.op_histogram();
+        assert_eq!(h[&Op::Mul], 5);
+        assert_eq!(h[&Op::Mac], 5 * 48);
+        // Delay lines hold the paper's 2*ry rows per reader.
+        assert_eq!(h[&Op::Copy], 5 * 24);
+    }
+
+    #[test]
+    fn sync_counts_partition_interior() {
+        let spec = StencilSpec::dim2(
+            21,
+            17,
+            crate::stencil::spec::symmetric_taps(2),
+            crate::stencil::spec::y_taps(3),
+        )
+        .unwrap();
+        for w in 1..=4 {
+            let g = build(&spec, w).unwrap();
+            let total: u64 = g
+                .nodes
+                .iter()
+                .filter(|n| n.op == Op::SyncCount)
+                .map(|n| n.expected.unwrap())
+                .sum();
+            assert_eq!(total, spec.interior_outputs() as u64, "w={w}");
+        }
+    }
+
+    #[test]
+    fn delay_line_holds_2ry_rows() {
+        // Total delay-line capacity across readers ≈ 2*ry*nx — the
+        // paper's "keep 2ry*x_dim data inside the queues" goal.
+        let spec = StencilSpec::paper_2d();
+        let w = 5;
+        let line_total: usize = (0..w)
+            .map(|rho| 2 * spec.ry * stage_capacity(&spec, rho, w))
+            .sum();
+        let goal = 2 * spec.ry * spec.nx;
+        assert!(line_total >= goal, "{line_total} < {goal}");
+        // Within slack overhead of the goal.
+        assert!(line_total <= goal + 2 * spec.ry * w * (QUEUE_SLACK + 1));
+    }
+
+    #[test]
+    fn required_tokens_matches_built_graph() {
+        let spec = StencilSpec::heat2d(20, 14, 0.2);
+        let w = 2;
+        let g = build(&spec, w).unwrap();
+        // Sum the mandatory capacities in the graph: delay stages (Copy
+        // port 0), Mul port 0 and Mac port 1.
+        let mut got = 0usize;
+        for n in &g.nodes {
+            match n.op {
+                Op::Copy => got += g.channels[g.input(n.id, 0).unwrap()].capacity,
+                Op::Mul => got += g.channels[g.input(n.id, 0).unwrap()].capacity,
+                Op::Mac => got += g.channels[g.input(n.id, 1).unwrap()].capacity,
+                _ => {}
+            }
+        }
+        assert_eq!(got, required_buffer_tokens(&spec, w));
+    }
+
+    #[test]
+    fn rejects_1d_spec() {
+        let s = StencilSpec::dim1(64, vec![0.25, 0.5, 0.25]).unwrap();
+        assert!(build(&s, 2).is_err());
+    }
+
+    #[test]
+    fn valid_across_worker_counts() {
+        let spec = StencilSpec::heat2d(18, 10, 0.2);
+        for w in 1..=5 {
+            let g = build(&spec, w).unwrap();
+            assert!(crate::dfg::validate::check(&g).is_empty(), "w={w}");
+        }
+    }
+}

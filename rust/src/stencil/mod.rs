@@ -1,0 +1,88 @@
+//! §III — mapping star stencils onto the CGRA.
+//!
+//! The mapper decomposes a stencil into the paper's four pipeline stages —
+//! reading input, computing output, writing output, synchronization — each
+//! run by `w` parallel logical workers, and emits the dataflow graph the
+//! simulator executes:
+//!
+//! * [`spec`] — the stencil specification (dims, radius, coefficients) and
+//!   the §VI arithmetic-intensity math.
+//! * [`filter`] — data-filtering PE configuration (Fig 6): the
+//!   `0^m 1^n 0^p` bit patterns and the row/col-id scheme.
+//! * [`map1d`] — the §III-A 1-D mapping (Fig 3–7).
+//! * [`map2d`] — the §III-B 2-D mapping (Fig 9–11) with mandatory
+//!   buffering.
+//! * [`blocking`] — §III-B strip mining when the fabric cannot hold
+//!   `2*ry` rows.
+//! * [`temporal`] — the §IV multi-time-step pipeline.
+
+pub mod blocking;
+pub mod filter;
+pub mod map1d;
+pub mod map2d;
+pub mod spec;
+pub mod temporal;
+
+pub use spec::StencilSpec;
+
+/// First output column owned by worker `j`: the smallest `c >= rx` with
+/// `c ≡ j (mod w)` (§III-A interleaving).
+pub fn first_output_col(j: usize, w: usize, rx: usize) -> usize {
+    rx + (j + w - (rx % w)) % w
+}
+
+/// Number of outputs worker `j` owns along a row of `nx` points.
+pub fn outputs_per_row(j: usize, w: usize, nx: usize, rx: usize) -> usize {
+    let first = first_output_col(j, w, rx);
+    let hi = nx - rx;
+    if first >= hi {
+        0
+    } else {
+        (hi - first - 1) / w + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_output_col_examples() {
+        // rx=1, w=3: worker 0 owns 3,6,..; worker 1 owns 1,4,..; worker 2 owns 2,5,..
+        assert_eq!(first_output_col(0, 3, 1), 3);
+        assert_eq!(first_output_col(1, 3, 1), 1);
+        assert_eq!(first_output_col(2, 3, 1), 2);
+        // rx=8, w=6: first cols are the smallest >= 8 congruent to j mod 6.
+        for j in 0..6 {
+            let c = first_output_col(j, 6, 8);
+            assert!(c >= 8 && c < 8 + 6);
+            assert_eq!(c % 6, j % 6);
+        }
+    }
+
+    #[test]
+    fn outputs_partition_the_interior() {
+        // Across workers, outputs per row must sum to nx - 2*rx.
+        for &(nx, rx, w) in &[(20usize, 1usize, 3usize), (194400, 8, 6), (960, 12, 5), (17, 3, 4)] {
+            let total: usize = (0..w).map(|j| outputs_per_row(j, w, nx, rx)).sum();
+            assert_eq!(total, nx - 2 * rx, "nx={nx} rx={rx} w={w}");
+        }
+    }
+
+    #[test]
+    fn outputs_disjoint_between_workers() {
+        let (nx, rx, w) = (29usize, 2usize, 4usize);
+        let mut seen = vec![false; nx];
+        for j in 0..w {
+            let mut c = first_output_col(j, w, rx);
+            while c < nx - rx {
+                assert!(!seen[c], "col {c} claimed twice");
+                seen[c] = true;
+                c += w;
+            }
+        }
+        for (c, s) in seen.iter().enumerate() {
+            assert_eq!(*s, (rx..nx - rx).contains(&c), "col {c}");
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! Stencil specification and the §VI arithmetic-intensity arithmetic.
+//!
+//! A *star* stencil (§II-B) is described by its grid (`nx`, `ny`), radii
+//! (`rx`, `ry`) and coefficient vectors: `cx` holds the `2*rx + 1` taps
+//! along x (centre included), `cy` the `2*ry` taps along y (centre
+//! excluded — it is counted once, in the x chain), ordered
+//! `j-ry, .., j-1, j+1, .., j+ry`. A 1-D stencil has `ny = 1, ry = 0` and
+//! an empty `cy`.
+
+use anyhow::{ensure, Result};
+
+/// Bytes per double-precision grid point (the paper evaluates in FP64).
+pub const BYTES_PER_POINT: f64 = 8.0;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct StencilSpec {
+    /// Grid width (x dimension, contiguous in memory).
+    pub nx: usize,
+    /// Grid height (y dimension); 1 for a 1-D stencil.
+    pub ny: usize,
+    /// Radius along x.
+    pub rx: usize,
+    /// Radius along y; 0 for a 1-D stencil.
+    pub ry: usize,
+    /// `2*rx + 1` coefficients along x (centre included).
+    pub cx: Vec<f64>,
+    /// `2*ry` coefficients along y (centre excluded).
+    pub cy: Vec<f64>,
+}
+
+impl StencilSpec {
+    /// (2r+1)-point 1-D stencil (Fig 1).
+    pub fn dim1(nx: usize, coeffs: Vec<f64>) -> Result<Self> {
+        ensure!(coeffs.len() % 2 == 1 && coeffs.len() >= 3, "need odd #coeffs >= 3");
+        let rx = (coeffs.len() - 1) / 2;
+        ensure!(nx > 2 * rx, "grid {nx} too small for radius {rx}");
+        Ok(Self { nx, ny: 1, rx, ry: 0, cx: coeffs, cy: Vec::new() })
+    }
+
+    /// 2-D star stencil (Fig 8): `cx` with centre, `cy` without.
+    pub fn dim2(nx: usize, ny: usize, cx: Vec<f64>, cy: Vec<f64>) -> Result<Self> {
+        ensure!(cx.len() % 2 == 1 && cx.len() >= 3, "cx must have odd length >= 3");
+        ensure!(cy.len() % 2 == 0 && !cy.is_empty(), "cy must have even nonzero length");
+        let rx = (cx.len() - 1) / 2;
+        let ry = cy.len() / 2;
+        ensure!(nx > 2 * rx, "nx {nx} too small for rx {rx}");
+        ensure!(ny > 2 * ry, "ny {ny} too small for ry {ry}");
+        Ok(Self { nx, ny, rx, ry, cx, cy })
+    }
+
+    /// The Table-I 1-D workload: 17-pt, rx = 8, grid 194400, unit-ish taps.
+    pub fn paper_1d() -> Self {
+        let rx = 8;
+        let cx = symmetric_taps(rx);
+        Self::dim1(194400, cx).unwrap()
+    }
+
+    /// The Table-I 2-D workload: 49-pt oil/gas seismic stencil,
+    /// rx = ry = 12, grid 960 x 449.
+    pub fn paper_2d() -> Self {
+        let (rx, ry) = (12, 12);
+        Self::dim2(960, 449, symmetric_taps(rx), y_taps(ry)).unwrap()
+    }
+
+    /// 5-point 2-D Jacobi heat stencil (Fig 8) on an `nx` x `ny` grid.
+    pub fn heat2d(nx: usize, ny: usize, alpha: f64) -> Self {
+        Self::dim2(
+            nx,
+            ny,
+            vec![alpha, 1.0 - 4.0 * alpha, alpha],
+            vec![alpha, alpha],
+        )
+        .unwrap()
+    }
+
+    pub fn is_1d(&self) -> bool {
+        self.ry == 0
+    }
+
+    /// Stencil points = DP ops per worker: `(2rx+1) + 2ry`
+    /// (1 MUL + the MAC chain; §VI counts 49 for rx=ry=12).
+    pub fn points(&self) -> usize {
+        self.cx.len() + self.cy.len()
+    }
+
+    /// FLOPs per computed output: 1 for the MUL + 2 per MAC
+    /// (= `2*points - 1`; §VI's `16*2+1 = 33` for the 17-pt stencil).
+    pub fn flops_per_output(&self) -> f64 {
+        2.0 * self.points() as f64 - 1.0
+    }
+
+    /// Computed (interior) outputs: `(nx - 2rx) * (ny - 2ry)`.
+    pub fn interior_outputs(&self) -> usize {
+        (self.nx - 2 * self.rx) * (self.ny.saturating_sub(2 * self.ry))
+    }
+
+    /// Total grid points.
+    pub fn grid_points(&self) -> usize {
+        self.nx * self.ny
+    }
+
+    /// Total FLOPs for one stencil application.
+    pub fn total_flops(&self) -> f64 {
+        self.flops_per_output() * self.interior_outputs() as f64
+    }
+
+    /// Total DRAM traffic: read the input once, write the output once
+    /// (the whole point of the CGRA mapping — §II-B data reuse).
+    pub fn total_bytes(&self) -> f64 {
+        2.0 * self.grid_points() as f64 * BYTES_PER_POINT
+    }
+
+    /// §VI arithmetic intensity (FLOPs per byte).
+    ///
+    /// 1-D paper example: `(16*2+1)*(194400-16) / ((194400+194400)*8)
+    /// = 2.06`; 2-D: `(48*2+1)*((449-24)*(960-24)) / (2*(960*449)*8)
+    /// = 5.59`.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        self.total_flops() / self.total_bytes()
+    }
+
+    /// Restrict the spec to a vertical strip `[col_lo, col_hi)` of the
+    /// grid *including* halo columns — the §III-B blocking unit. Outputs
+    /// of the strip are its interior columns.
+    pub fn strip(&self, col_lo: usize, col_hi: usize) -> Self {
+        assert!(col_lo < col_hi && col_hi <= self.nx);
+        Self {
+            nx: col_hi - col_lo,
+            ..self.clone()
+        }
+    }
+}
+
+/// Symmetric normalized x-taps (centre-weighted), `2r + 1` values.
+/// Shape matches finite-difference coefficients: decaying with distance.
+pub fn symmetric_taps(r: usize) -> Vec<f64> {
+    let mut c = vec![0.0; 2 * r + 1];
+    for k in 0..=r {
+        let v = 1.0 / (1.0 + k as f64);
+        c[r - k] = v;
+        c[r + k] = v;
+    }
+    // Normalize to sum 1 so repeated application stays bounded.
+    let s: f64 = c.iter().sum();
+    c.iter_mut().for_each(|v| *v /= s);
+    c
+}
+
+/// Symmetric y-taps without the centre, `2r` values ordered
+/// `-r..-1, +1..+r`.
+pub fn y_taps(r: usize) -> Vec<f64> {
+    let mut c = vec![0.0; 2 * r];
+    for k in 1..=r {
+        let v = 0.5 / (1.0 + k as f64);
+        c[r - k] = v;
+        c[r + k - 1] = v;
+    }
+    let s: f64 = c.iter().sum();
+    // Keep the y contribution small relative to x (sum 0.5) for stability.
+    c.iter_mut().for_each(|v| *v *= 0.5 / s);
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_1d_arithmetic_intensity() {
+        let s = StencilSpec::paper_1d();
+        assert_eq!(s.points(), 17);
+        assert_eq!(s.flops_per_output(), 33.0);
+        // (16*2+1)*(194400-16)/((194400+194400)*8) = 2.06
+        let ai = s.arithmetic_intensity();
+        assert!((ai - 2.06).abs() < 0.01, "ai = {ai}");
+    }
+
+    #[test]
+    fn paper_2d_arithmetic_intensity() {
+        let s = StencilSpec::paper_2d();
+        assert_eq!(s.points(), 49);
+        assert_eq!(s.flops_per_output(), 97.0);
+        // (48*2+1)*((449-24)*(960-24))/((2*960*449)*8) = 5.59
+        let ai = s.arithmetic_intensity();
+        assert!((ai - 5.59).abs() < 0.01, "ai = {ai}");
+    }
+
+    #[test]
+    fn heat2d_is_5_point() {
+        let s = StencilSpec::heat2d(64, 64, 0.2);
+        assert_eq!(s.points(), 5);
+        assert_eq!(s.rx, 1);
+        assert_eq!(s.ry, 1);
+        let sum: f64 = s.cx.iter().chain(s.cy.iter()).sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dim1_rejects_even_coeffs() {
+        assert!(StencilSpec::dim1(100, vec![1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn dim1_rejects_tiny_grid() {
+        assert!(StencilSpec::dim1(16, symmetric_taps(8)).is_err());
+    }
+
+    #[test]
+    fn dim2_rejects_odd_cy() {
+        assert!(StencilSpec::dim2(32, 32, vec![1., 2., 3.], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn taps_are_normalized_and_symmetric() {
+        for r in 1..=12 {
+            let c = symmetric_taps(r);
+            assert_eq!(c.len(), 2 * r + 1);
+            assert!((c.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+            for k in 0..r {
+                assert_eq!(c[k], c[2 * r - k]);
+            }
+        }
+    }
+
+    #[test]
+    fn strip_preserves_radius_and_height() {
+        let s = StencilSpec::paper_2d();
+        let t = s.strip(100, 300);
+        assert_eq!(t.nx, 200);
+        assert_eq!(t.ny, s.ny);
+        assert_eq!(t.rx, 12);
+    }
+}

@@ -1,0 +1,230 @@
+//! §IV — temporal pipelining: computing `T` time-steps in one kernel call.
+//!
+//! Extra layers of compute workers are deployed along the time dimension;
+//! layer `ℓ+1` receives its inputs *directly from the output PEs of layer
+//! `ℓ`* (no extra readers, no memory round-trip), and only the final layer
+//! has writer workers. I/O happens at the pipeline boundary only.
+//!
+//! Semantics are the standard dependency trapezoid: layer `ℓ` computes
+//! the columns `[rx*(ℓ+1), nx - rx*(ℓ+1))`, the set fully determined by
+//! the original input without boundary values. The golden reference is
+//! the iterated single-step map restricted to the final interior
+//! (`verify::golden` checks exactly this).
+
+use anyhow::{ensure, Result};
+
+use crate::dfg::node::{AddrIter, FilterSpec, Op, Stage};
+use crate::dfg::{Dsl, Graph};
+
+use super::filter::x_tap_reader;
+use super::map1d::tap_capacity_1d;
+use super::spec::StencilSpec;
+
+/// Columns owned by worker `j` of layer `layer` (outputs of that layer):
+/// `c ≡ j (mod w)` within `[rx*(layer+1), nx - rx*(layer+1))`.
+fn layer_cols(spec: &StencilSpec, w: usize, layer: usize, j: usize) -> Vec<u32> {
+    let r = spec.rx * (layer + 1);
+    (r..spec.nx - r)
+        .filter(|c| c % w == j % w)
+        .map(|c| c as u32)
+        .collect()
+}
+
+/// Bit-pattern filter selecting, from the output stream of layer
+/// `layer-1` worker `rho`, the tokens layer `layer` worker `j`'s tap `t`
+/// needs. Streams are ordered by ascending column, so the pattern is a
+/// contiguous `0^m 1^n 0^p` window.
+fn temporal_bits(
+    spec: &StencilSpec,
+    w: usize,
+    layer: usize,
+    _j: usize,
+    t: usize,
+    rho: usize,
+) -> FilterSpec {
+    let stream = layer_cols(spec, w, layer - 1, rho);
+    // Needed columns: c = o + t - rx for o in layer `layer`'s range.
+    let r = (spec.rx * (layer + 1)) as i64;
+    let lo = r + t as i64 - spec.rx as i64;
+    let hi = (spec.nx as i64 - r) + t as i64 - spec.rx as i64;
+    let m = stream.iter().filter(|&&c| (c as i64) < lo).count() as u64;
+    let n = stream
+        .iter()
+        .filter(|&&c| (c as i64) >= lo && (c as i64) < hi)
+        .count() as u64;
+    let p = stream.len() as u64 - m - n;
+    FilterSpec::Bits { m, n, p }
+}
+
+/// Build a `steps`-deep temporal pipeline for a 1-D stencil with `w`
+/// workers per layer. `steps = 1` degenerates to [`super::map1d::build`]'s
+/// structure (modulo node names).
+pub fn build(spec: &StencilSpec, w: usize, steps: usize) -> Result<Graph> {
+    ensure!(spec.is_1d(), "temporal pipeline implemented for 1-D stencils");
+    ensure!(steps >= 1, "need at least one time-step");
+    let nx = spec.nx;
+    let rx = spec.rx;
+    ensure!(
+        nx > 2 * rx * steps,
+        "grid {nx} too small for {steps} time-steps of radius {rx}"
+    );
+    let taps = 2 * rx + 1;
+
+    let mut d = Dsl::new();
+
+    // Layer 0 readers.
+    for rho in 0..w {
+        d.op(&format!("r{rho}.cu"), Op::AddrGen, Stage::Control)
+            .agen(AddrIter::dim1(rho as u32, w as u32, nx as u32))
+            .out(&format!("l0.in{rho}"));
+        d.op(&format!("r{rho}.ld"), Op::Load, Stage::Reader)
+            .input(0, &format!("l0.in{rho}"))
+            .out(&format!("l0.src{rho}"));
+    }
+
+    for layer in 0..steps {
+        for j in 0..w {
+            for t in 0..taps {
+                let rho = x_tap_reader(j, t, rx, w);
+                let (src, filt) = if layer == 0 {
+                    (
+                        format!("l0.src{rho}"),
+                        super::filter::x_tap_bits(j, t, rx, w, nx),
+                    )
+                } else {
+                    (
+                        format!("l{}.out{rho}", layer - 1),
+                        temporal_bits(spec, w, layer, j, t, rho),
+                    )
+                };
+                d.op(&format!("l{layer}.w{j}.f{t}"), Op::Filter, Stage::Compute)
+                    .worker(j)
+                    .filter(filt)
+                    .input(0, &src)
+                    .out(&format!("l{layer}.w{j}.t{t}"));
+            }
+            d.op(&format!("l{layer}.w{j}.mul"), Op::Mul, Stage::Compute)
+                .worker(j)
+                .coeff(spec.cx[0])
+                .input_cap(0, &format!("l{layer}.w{j}.t0"), tap_capacity_1d(rx, w, 0))
+                .out(&format!("l{layer}.w{j}.p0"));
+            for t in 1..taps {
+                d.op(&format!("l{layer}.w{j}.mac{t}"), Op::Mac, Stage::Compute)
+                    .worker(j)
+                    .coeff(spec.cx[t])
+                    .input(0, &format!("l{layer}.w{j}.p{}", t - 1))
+                    .input_cap(1, &format!("l{layer}.w{j}.t{t}"), tap_capacity_1d(rx, w, t))
+                    .out(&format!("l{layer}.w{j}.p{t}"));
+            }
+            // Publish this worker's layer output under the stream name the
+            // next layer looks up; the final layer publishes to writers.
+            d.op(&format!("l{layer}.w{j}.fan"), Op::Copy, Stage::Compute)
+                .worker(j)
+                .input(0, &format!("l{layer}.w{j}.p{}", taps - 1))
+                .out(&format!("l{layer}.out{j}"));
+        }
+    }
+
+    // Writers + sync for the final layer only (§IV: I/O at the pipeline
+    // boundary).
+    let last = steps - 1;
+    for j in 0..w {
+        let cols = layer_cols(spec, w, last, j);
+        let count = cols.len() as u64;
+        let first = cols.first().copied().unwrap_or(0);
+        d.op(&format!("w{j}.st.cu"), Op::AddrGen, Stage::Control)
+            .agen(AddrIter::dim1(
+                first,
+                w as u32,
+                (nx - rx * steps) as u32,
+            ))
+            .out(&format!("w{j}.staddr"));
+        d.op(&format!("w{j}.st"), Op::Store, Stage::Writer)
+            .worker(j)
+            .input(0, &format!("w{j}.staddr"))
+            .input(1, &format!("l{last}.out{j}"))
+            .out(&format!("w{j}.ack"));
+        d.op(&format!("w{j}.sync"), Op::SyncCount, Stage::Sync)
+            .worker(j)
+            .expected(count)
+            .input(0, &format!("w{j}.ack"))
+            .out(&format!("w{j}.done"));
+    }
+    let mut done = d.op("done", Op::DoneTree, Stage::Sync).expected(w as u64);
+    for j in 0..w {
+        done = done.input(j as u8, &format!("w{j}.done"));
+    }
+    drop(done);
+
+    let g = d.build()?;
+    crate::dfg::validate::validate(&g)?;
+    Ok(g)
+}
+
+/// Final valid output range after `steps` time-steps.
+pub fn valid_range(spec: &StencilSpec, steps: usize) -> (usize, usize) {
+    (spec.rx * steps, spec.nx - spec.rx * steps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec3(nx: usize) -> StencilSpec {
+        StencilSpec::dim1(nx, vec![0.25, 0.5, 0.25]).unwrap()
+    }
+
+    #[test]
+    fn two_step_pipeline_has_two_compute_layers() {
+        let g = build(&spec3(32), 2, 2).unwrap();
+        // DP ops: 2 layers * 2 workers * 3 taps.
+        assert_eq!(g.dp_ops(), 12);
+        // Only the final layer writes.
+        let h = g.op_histogram();
+        assert_eq!(h[&Op::Store], 2);
+        assert_eq!(h[&Op::Load], 2);
+    }
+
+    #[test]
+    fn single_step_equals_map1d_dp_count() {
+        let spec = spec3(24);
+        let g1 = super::super::map1d::build(&spec, 3).unwrap();
+        let gt = build(&spec, 3, 1).unwrap();
+        assert_eq!(g1.dp_ops(), gt.dp_ops());
+    }
+
+    #[test]
+    fn temporal_bits_select_contiguous_window() {
+        let spec = spec3(20);
+        // Layer 1 (rx=1): stream of layer-0 worker rho has cols ≡ rho in
+        // [1, 19); needed for layer-1 worker j tap t: [2+t-1, 18+t-1).
+        let f = temporal_bits(&spec, 1, 1, 0, 0, 0);
+        if let FilterSpec::Bits { m, n, p } = f {
+            // Stream cols 1..19 (18 tokens); needed cols [1, 17): m=0 n=16 p=2.
+            assert_eq!((m, n, p), (0, 16, 2));
+        } else {
+            panic!("expected bits");
+        }
+    }
+
+    #[test]
+    fn rejects_too_many_steps() {
+        assert!(build(&spec3(8), 1, 5).is_err());
+    }
+
+    #[test]
+    fn valid_range_shrinks_linearly() {
+        let spec = spec3(100);
+        assert_eq!(valid_range(&spec, 1), (1, 99));
+        assert_eq!(valid_range(&spec, 10), (10, 90));
+    }
+
+    #[test]
+    fn graph_validates_for_depths() {
+        let spec = spec3(64);
+        for steps in 1..=4 {
+            let g = build(&spec, 2, steps).unwrap();
+            assert!(crate::dfg::validate::check(&g).is_empty(), "steps={steps}");
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Mini benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets are `harness = false` binaries that call
+//! [`run`] / [`Bencher`]: fixed warmup, N timed iterations, and a
+//! mean / median / stddev / min report on stdout. Deterministic
+//! iteration counts keep bench output diff-able run to run.
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchStats {
+    /// Throughput in "units per second" given units of work per iteration.
+    pub fn per_sec(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.mean_s
+    }
+}
+
+fn summarize(name: &str, mut samples: Vec<f64>) -> BenchStats {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean_s: mean,
+        median_s: samples[n / 2],
+        stddev_s: var.sqrt(),
+        min_s: samples[0],
+        max_s: samples[n - 1],
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn run<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let stats = summarize(name, samples);
+    print_stats(&stats);
+    stats
+}
+
+/// Print one row in the canonical bench format.
+pub fn print_stats(s: &BenchStats) {
+    println!(
+        "bench {:<40} iters={:<3} mean={:>10.4} ms  median={:>10.4} ms  sd={:>8.4} ms  min={:>10.4} ms",
+        s.name,
+        s.iters,
+        s.mean_s * 1e3,
+        s.median_s * 1e3,
+        s.stddev_s * 1e3,
+        s.min_s * 1e3,
+    );
+}
+
+/// Print a section header so bench output reads like the paper's tables.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// A guard against the optimizer eliminating a computed value.
+#[inline]
+pub fn black_box<T>(v: T) -> T {
+    std::hint::black_box(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_ordered() {
+        let s = run("noop", 1, 5, || {
+            black_box(1 + 1);
+        });
+        assert!(s.min_s <= s.median_s);
+        assert!(s.median_s <= s.max_s);
+        assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn per_sec_scales() {
+        let s = BenchStats {
+            name: "x".into(),
+            iters: 1,
+            mean_s: 0.5,
+            median_s: 0.5,
+            stddev_s: 0.0,
+            min_s: 0.5,
+            max_s: 0.5,
+        };
+        assert!((s.per_sec(100.0) - 200.0).abs() < 1e-12);
+    }
+}

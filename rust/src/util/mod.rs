@@ -1,0 +1,31 @@
+//! Small self-contained utilities: a deterministic PRNG for
+//! property-style tests, a mini benchmark harness (criterion is not
+//! available in the offline vendor set), and timing helpers.
+
+pub mod bench;
+pub mod rng;
+
+/// Ceiling division for unsigned sizes.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Format a float with engineering-style thousands grouping for tables.
+pub fn fmt_f64(v: f64, prec: usize) -> String {
+    format!("{v:.prec$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(1, 8), 1);
+        assert_eq!(ceil_div(0, 8), 0);
+    }
+}

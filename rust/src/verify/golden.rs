@@ -1,0 +1,133 @@
+//! Native oracles + one-call simulation helpers.
+//!
+//! The oracles accumulate in exactly the chain order of §III (x taps
+//! left-to-right, then y taps `-ry..-1, +1..+ry`), matching `ref.py` and
+//! the Pallas kernels, so all three layers agree to ~1e-12 in f64.
+
+use anyhow::Result;
+
+use crate::cgra::{Machine, SimResult, Simulator};
+use crate::stencil::{map1d, map2d, StencilSpec};
+
+/// 1-D star stencil, interior computed, boundary copied.
+pub fn stencil1d_ref(x: &[f64], coeffs: &[f64]) -> Vec<f64> {
+    let r = (coeffs.len() - 1) / 2;
+    let mut out = x.to_vec();
+    for o in r..x.len() - r {
+        let mut acc = coeffs[0] * x[o - r];
+        for (k, &ck) in coeffs.iter().enumerate().skip(1) {
+            acc += ck * x[o - r + k];
+        }
+        out[o] = acc;
+    }
+    out
+}
+
+/// 2-D star stencil over a row-major `nx * ny` grid.
+pub fn stencil2d_ref(x: &[f64], spec: &StencilSpec) -> Vec<f64> {
+    let (nx, ny, rx, ry) = (spec.nx, spec.ny, spec.rx, spec.ry);
+    let mut out = x.to_vec();
+    for r in ry..ny - ry {
+        for c in rx..nx - rx {
+            let mut acc = spec.cx[0] * x[r * nx + c - rx];
+            for t in 1..2 * rx + 1 {
+                acc += spec.cx[t] * x[r * nx + c - rx + t];
+            }
+            for (u, &cu) in spec.cy.iter().enumerate() {
+                let k = if u < ry { u } else { u + 1 };
+                acc += cu * x[(r + k - ry) * nx + c];
+            }
+            out[r * nx + c] = acc;
+        }
+    }
+    out
+}
+
+/// One 5-point Jacobi heat step (`alpha`-weighted), boundary fixed.
+pub fn heat2d_step_ref(x: &[f64], nx: usize, ny: usize, alpha: f64) -> Vec<f64> {
+    let spec = StencilSpec::heat2d(nx, ny, alpha);
+    stencil2d_ref(x, &spec)
+}
+
+/// Map `spec` with `w` workers, simulate on `m`, return the result.
+/// The output buffer starts as a copy of the input, so boundary points
+/// carry the input values (the Dirichlet contract all layers share).
+pub fn run_sim(spec: &StencilSpec, w: usize, m: &Machine, input: &[f64]) -> Result<SimResult> {
+    let g = if spec.is_1d() {
+        map1d::build(spec, w)?
+    } else {
+        map2d::build(spec, w)?
+    };
+    Simulator::build(g, m, input.to_vec(), input.to_vec())?.run()
+}
+
+/// Maximum absolute elementwise difference.
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShift;
+
+    #[test]
+    fn sim_matches_oracle_1d_property() {
+        let mut rng = XorShift::new(0xABCD);
+        let m = Machine::paper();
+        for _case in 0..6 {
+            let r = rng.range(1, 4);
+            let nx = rng.range(2 * r + 2, 120);
+            let w = rng.range(1, 5);
+            let coeffs: Vec<f64> = (0..2 * r + 1).map(|_| rng.normal()).collect();
+            let spec = StencilSpec::dim1(nx, coeffs).unwrap();
+            let x = rng.normal_vec(nx);
+            let res = run_sim(&spec, w, &m, &x).unwrap();
+            let want = stencil1d_ref(&x, &spec.cx);
+            assert!(
+                max_abs_diff(&res.output, &want) < 1e-11,
+                "nx={nx} r={r} w={w}"
+            );
+        }
+    }
+
+    #[test]
+    fn sim_matches_oracle_2d_property() {
+        let mut rng = XorShift::new(0x5EED);
+        let m = Machine::paper();
+        for _case in 0..4 {
+            let rx = rng.range(1, 3);
+            let ry = rng.range(1, 3);
+            let nx = rng.range(2 * rx + 2, 36);
+            let ny = rng.range(2 * ry + 2, 28);
+            let w = rng.range(1, 4);
+            let cx: Vec<f64> = (0..2 * rx + 1).map(|_| rng.normal()).collect();
+            let cy: Vec<f64> = (0..2 * ry).map(|_| rng.normal()).collect();
+            let spec = StencilSpec::dim2(nx, ny, cx, cy).unwrap();
+            let x = rng.normal_vec(nx * ny);
+            let res = run_sim(&spec, w, &m, &x).unwrap();
+            let want = stencil2d_ref(&x, &spec);
+            assert!(
+                max_abs_diff(&res.output, &want) < 1e-11,
+                "nx={nx} ny={ny} rx={rx} ry={ry} w={w}"
+            );
+        }
+    }
+
+    #[test]
+    fn heat_ref_conserves_uniform_field() {
+        let x = vec![2.5; 12 * 12];
+        let out = heat2d_step_ref(&x, 12, 12, 0.2);
+        assert!(max_abs_diff(&x, &out) < 1e-12);
+    }
+
+    #[test]
+    fn max_abs_diff_basics() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.0, 2.5]), 0.5);
+        assert_eq!(max_abs_diff(&[], &[]), 0.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Golden verification: the CGRA simulator's output is checked against a
+//! native Rust oracle (same MAC-chain association order as the paper's
+//! hardware) and — in the integration tests and the `e2e_validation`
+//! example — against the PJRT-executed JAX/Pallas artifact, closing the
+//! loop across all three layers.
+
+pub mod golden;
+
+pub use golden::{
+    heat2d_step_ref, max_abs_diff, run_sim, stencil1d_ref, stencil2d_ref,
+};

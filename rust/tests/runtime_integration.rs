@@ -1,0 +1,146 @@
+//! PJRT integration: every AOT artifact loads, compiles and executes,
+//! and the JAX/Pallas lowerings agree with the native oracles.
+//!
+//! Requires `make artifacts` (the Makefile dependency chain guarantees
+//! it before `cargo test`).
+
+use stencil_cgra::runtime::Runtime;
+use stencil_cgra::stencil::spec::{symmetric_taps, y_taps};
+use stencil_cgra::stencil::StencilSpec;
+use stencil_cgra::util::rng::XorShift;
+use stencil_cgra::verify::golden::{
+    heat2d_step_ref, max_abs_diff, stencil1d_ref, stencil2d_ref,
+};
+
+fn rt() -> Runtime {
+    Runtime::open(Runtime::default_dir()).expect("run `make artifacts` first")
+}
+
+#[test]
+fn manifest_lists_all_experiment_artifacts() {
+    let rt = rt();
+    let names = rt.names();
+    for required in [
+        "stencil1d_r1_n256",
+        "stencil1d_r8_n4096",
+        "stencil1d_r8_n194400",
+        "stencil2d_r2_64x64",
+        "stencil2d_r12_96x96",
+        "stencil2d_ref_r12_96x96",
+        "heat2d_step_96x96",
+        "heat2d_run200_96x96",
+    ] {
+        assert!(names.contains(&required), "missing artifact {required}");
+    }
+}
+
+#[test]
+fn every_artifact_compiles() {
+    let mut rt = rt();
+    let names: Vec<String> = rt.names().iter().map(|s| s.to_string()).collect();
+    for name in names {
+        let meta = rt.meta(&name).unwrap().clone();
+        // Execute with zero inputs of the right shapes — must not error.
+        let zeros: Vec<Vec<f64>> = meta
+            .in_shapes
+            .iter()
+            .map(|s| vec![0.0; s.iter().product()])
+            .collect();
+        let refs: Vec<&[f64]> = zeros.iter().map(|v| v.as_slice()).collect();
+        let out = rt.execute(&name, &refs).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(out.len(), meta.out_shape.iter().product::<usize>(), "{name}");
+    }
+}
+
+#[test]
+fn pallas_1d_matches_native_oracle_through_pjrt() {
+    let mut rt = rt();
+    let mut rng = XorShift::new(42);
+    let x = rng.normal_vec(4096);
+    let c = symmetric_taps(8);
+    let out = rt.execute("stencil1d_r8_n4096", &[&x, &c]).unwrap();
+    let want = stencil1d_ref(&x, &c);
+    assert!(max_abs_diff(&out, &want) < 1e-12);
+}
+
+#[test]
+fn pallas_2d_matches_native_oracle_through_pjrt() {
+    let mut rt = rt();
+    let mut rng = XorShift::new(43);
+    let x = rng.normal_vec(96 * 96);
+    let cx = symmetric_taps(12);
+    let cy = y_taps(12);
+    let out = rt.execute("stencil2d_r12_96x96", &[&x, &cx, &cy]).unwrap();
+    let spec = StencilSpec::dim2(96, 96, cx, cy).unwrap();
+    let want = stencil2d_ref(&x, &spec);
+    assert!(max_abs_diff(&out, &want) < 1e-12);
+}
+
+#[test]
+fn pallas_and_pure_jnp_reference_agree_through_pjrt() {
+    // The kernel-vs-ref check done in pytest, repeated through PJRT:
+    // both artifacts must produce identical results.
+    let mut rt = rt();
+    let mut rng = XorShift::new(44);
+    let x = rng.normal_vec(96 * 96);
+    let cx = symmetric_taps(12);
+    let cy = y_taps(12);
+    let a = rt.execute("stencil2d_r12_96x96", &[&x, &cx, &cy]).unwrap();
+    let b = rt.execute("stencil2d_ref_r12_96x96", &[&x, &cx, &cy]).unwrap();
+    assert!(max_abs_diff(&a, &b) < 1e-12);
+}
+
+#[test]
+fn heat_step_artifact_matches_oracle() {
+    let mut rt = rt();
+    let mut rng = XorShift::new(45);
+    let x = rng.normal_vec(96 * 96);
+    let out = rt.execute("heat2d_step_96x96", &[&x]).unwrap();
+    let want = heat2d_step_ref(&x, 96, 96, 0.2);
+    assert!(max_abs_diff(&out, &want) < 1e-12);
+}
+
+#[test]
+fn heat_run200_is_200_fused_steps() {
+    // IV temporal locality: the fused 200-step artifact equals 200
+    // applications of the single-step oracle.
+    let mut rt = rt();
+    let mut x = vec![0.0; 96 * 96];
+    x[48 * 96 + 48] = 100.0; // hot spot
+    let fused = rt.execute("heat2d_run200_96x96", &[&x]).unwrap();
+    let mut want = x.clone();
+    for _ in 0..200 {
+        want = heat2d_step_ref(&want, 96, 96, 0.2);
+    }
+    assert!(max_abs_diff(&fused, &want) < 1e-10);
+    // Physics: the peak decayed, heat spread, maximum principle held.
+    assert!(fused[48 * 96 + 48] < 100.0);
+    assert!(fused[40 * 96 + 48] > 0.0);
+}
+
+#[test]
+fn full_scale_1d_artifact_runs() {
+    // The Table-I grid (194400 points) end to end through PJRT.
+    let mut rt = rt();
+    let mut rng = XorShift::new(46);
+    let x = rng.normal_vec(194400);
+    let c = symmetric_taps(8);
+    let out = rt.execute("stencil1d_r8_n194400", &[&x, &c]).unwrap();
+    let want = stencil1d_ref(&x, &c);
+    assert!(max_abs_diff(&out, &want) < 1e-12);
+}
+
+#[test]
+fn wrong_input_count_is_a_clean_error() {
+    let mut rt = rt();
+    let x = vec![0.0; 256];
+    assert!(rt.execute("stencil1d_r1_n256", &[&x]).is_err());
+}
+
+#[test]
+fn wrong_input_shape_is_a_clean_error() {
+    let mut rt = rt();
+    let x = vec![0.0; 100]; // wrong length
+    let c = vec![0.0; 3];
+    assert!(rt.execute("stencil1d_r1_n256", &[&x, &c]).is_err());
+}
