@@ -1,0 +1,51 @@
+//! Worker-count scaling of the 3-D plane-buffered mapping (`map3d`) on
+//! star and box workloads: measured GFLOPS vs the §VI roofline
+//! prediction, plus the mandatory plane-buffering footprint per
+//! configuration.
+//!
+//! Run: `cargo bench --bench map3d_scaling`
+
+use stencil_cgra::cgra::Machine;
+use stencil_cgra::stencil::spec::{symmetric_taps, uniform_box_taps, y_taps, z_taps};
+use stencil_cgra::stencil::{map3d, StencilSpec};
+use stencil_cgra::util::bench;
+use stencil_cgra::verify::golden::run_sim;
+
+fn sweep(name: &str, spec: &StencilSpec, m: &Machine, max_w: usize) {
+    bench::section(name);
+    println!(
+        "{:>3} {:>10} {:>10} {:>10} {:>7} {:>12} {:>8}",
+        "w", "cycles", "GFLOPS", "predicted", "ratio", "buf tokens", "stages"
+    );
+    let x = vec![1.0; spec.grid_points()];
+    for w in 1..=max_w {
+        let res = run_sim(spec, w, m, &x).unwrap();
+        let g = res.gflops(spec.total_flops(), m.clock_ghz);
+        let pred = (w as f64 * spec.flops_per_output() * m.clock_ghz)
+            .min(m.roofline_gflops(spec.arithmetic_intensity()));
+        println!(
+            "{w:>3} {:>10} {:>10.1} {:>10.1} {:>6.0}% {:>12} {:>8}",
+            res.stats.cycles,
+            g,
+            pred,
+            100.0 * g / pred,
+            map3d::required_buffer_tokens(spec, w),
+            map3d::delay_stages(spec, w),
+        );
+    }
+}
+
+fn main() {
+    let m = Machine::paper();
+
+    let star = StencilSpec::dim3(40, 24, 12, symmetric_taps(2), y_taps(2), z_taps(2))
+        .unwrap();
+    sweep("3-D 13-pt star, 40x24x12", &star, &m, 4);
+
+    let heat = StencilSpec::heat3d(32, 24, 16, 0.1);
+    sweep("3-D 7-pt heat, 32x24x16", &heat, &m, 4);
+
+    let boxed =
+        StencilSpec::box3d(24, 16, 10, 1, 1, 1, uniform_box_taps(1, 1, 1)).unwrap();
+    sweep("3-D 27-pt box, 24x16x10", &boxed, &m, 3);
+}

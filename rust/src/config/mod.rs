@@ -85,8 +85,9 @@ impl Config {
     }
 
     /// Build a [`StencilSpec`] from `[stencil]`:
-    /// `preset = paper1d|paper2d|heat2d`, or explicit
-    /// `nx/ny/rx/ry` with generated symmetric taps.
+    /// `preset = paper1d|paper2d|heat2d|heat3d`, or explicit
+    /// `nx/ny/nz/rx/ry/rz` (+ `shape = star|box`) with generated
+    /// normalized taps.
     pub fn stencil(&self) -> Result<StencilSpec> {
         if let Some(p) = self.get("stencil", "preset") {
             return match p {
@@ -98,22 +99,63 @@ impl Config {
                     let alpha = self.num("stencil", "alpha", 0.2f64)?;
                     Ok(StencilSpec::heat2d(nx, ny, alpha))
                 }
+                "heat3d" => {
+                    let nx = self.num("stencil", "nx", 48usize)?;
+                    let ny = self.num("stencil", "ny", 48usize)?;
+                    let nz = self.num("stencil", "nz", 48usize)?;
+                    let alpha = self.num("stencil", "alpha", 0.1f64)?;
+                    Ok(StencilSpec::heat3d(nx, ny, nz, alpha))
+                }
                 other => bail!("unknown stencil preset `{other}`"),
             };
         }
         let nx = self.num("stencil", "nx", 4096usize)?;
         let ny = self.num("stencil", "ny", 1usize)?;
+        let nz = self.num("stencil", "nz", 1usize)?;
         let rx = self.num("stencil", "rx", 1usize)?;
-        let ry = self.num("stencil", "ry", 0usize)?;
-        if ny <= 1 || ry == 0 {
-            StencilSpec::dim1(nx, crate::stencil::spec::symmetric_taps(rx))
-        } else {
-            StencilSpec::dim2(
+        // Radii default to 1 along any extended dimension so that a
+        // config naming only nx/ny/nz is valid out of the box.
+        let ry = self.num("stencil", "ry", usize::from(ny > 1))?;
+        let rz = self.num("stencil", "rz", usize::from(nz > 1))?;
+        let shape = self.get("stencil", "shape").unwrap_or("star");
+        if nz > 1 && ny <= 1 {
+            bail!("[stencil] nz = {nz} needs ny > 1 (a 3-D grid has all three extents)");
+        }
+        match shape {
+            "box" if nz > 1 => StencilSpec::box3d(
+                nx,
+                ny,
+                nz,
+                rx,
+                ry,
+                rz,
+                crate::stencil::spec::uniform_box_taps(rx, ry, rz),
+            ),
+            "box" => StencilSpec::box2d(
+                nx,
+                ny,
+                rx,
+                ry,
+                crate::stencil::spec::uniform_box_taps(rx, ry, 0),
+            ),
+            "star" if nz > 1 => StencilSpec::dim3(
+                nx,
+                ny,
+                nz,
+                crate::stencil::spec::symmetric_taps(rx),
+                crate::stencil::spec::y_taps(ry),
+                crate::stencil::spec::z_taps(rz),
+            ),
+            "star" if ny <= 1 || ry == 0 => {
+                StencilSpec::dim1(nx, crate::stencil::spec::symmetric_taps(rx))
+            }
+            "star" => StencilSpec::dim2(
                 nx,
                 ny,
                 crate::stencil::spec::symmetric_taps(rx),
                 crate::stencil::spec::y_taps(ry),
-            )
+            ),
+            other => bail!("unknown stencil shape `{other}` (star|box)"),
         }
     }
 
@@ -185,6 +227,37 @@ tiles = 16
         let c = Config::parse("[stencil]\nnx = 128\nny = 64\nrx = 2\nry = 3\n").unwrap();
         let s = c.stencil().unwrap();
         assert_eq!((s.nx, s.ny, s.rx, s.ry), (128, 64, 2, 3));
+    }
+
+    #[test]
+    fn explicit_3d_and_box_params() {
+        let c = Config::parse(
+            "[stencil]\nnx = 32\nny = 24\nnz = 16\nrx = 1\nry = 1\nrz = 1\n",
+        )
+        .unwrap();
+        let s = c.stencil().unwrap();
+        assert!(s.is_3d() && !s.is_box());
+        assert_eq!((s.nx, s.ny, s.nz), (32, 24, 16));
+
+        let c = Config::parse(
+            "[stencil]\nshape = \"box\"\nnx = 32\nny = 24\nrx = 1\nry = 1\n",
+        )
+        .unwrap();
+        let s = c.stencil().unwrap();
+        assert!(s.is_box() && s.is_2d());
+        assert_eq!(s.points(), 9);
+
+        let c = Config::parse("[stencil]\npreset = \"heat3d\"\nnz = 16\n").unwrap();
+        assert_eq!(c.stencil().unwrap().points(), 7);
+    }
+
+    #[test]
+    fn radii_default_to_one_along_extended_dims() {
+        // Naming only the extents must be enough for a 3-D spec.
+        let c = Config::parse("[stencil]\nnx = 32\nny = 24\nnz = 16\n").unwrap();
+        let s = c.stencil().unwrap();
+        assert!(s.is_3d());
+        assert_eq!((s.rx, s.ry, s.rz), (1, 1, 1));
     }
 
     #[test]

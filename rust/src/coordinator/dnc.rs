@@ -23,7 +23,7 @@ use anyhow::{ensure, Result};
 use crate::cgra::Machine;
 use crate::stencil::blocking::Strip;
 use crate::stencil::StencilSpec;
-use crate::verify::golden::{run_sim, stencil2d_ref};
+use crate::verify::golden::{run_sim, stencil_ref};
 
 /// Recursively split the output interval `[rx, nx-rx)` until each leaf is
 /// at most `max_width` wide. Leaves carry `rx`-wide halos like
@@ -131,7 +131,7 @@ impl HybridRunner {
                     let Some((id, s)) = item else { break };
                     let sub = spec.strip(s.in_lo, s.in_hi);
                     let sub_in = extract(&spec, &input, &s);
-                    let out = stencil2d_ref(&sub_in, &sub);
+                    let out = stencil_ref(&sub_in, &sub);
                     tx.send((id, s, Executor::Cpu(c), out, 0)).ok();
                 }
                 Ok(())
@@ -229,7 +229,7 @@ mod tests {
         let strips = decompose(&spec, 8); // 8 leaves -> contention
         let runner = HybridRunner::new(2, 2, Machine::paper());
         let rep = runner.run(&spec, 2, &x, strips).unwrap();
-        let want = stencil2d_ref(&x, &spec);
+        let want = stencil_ref(&x, &spec);
         assert!(max_abs_diff(&rep.output, &want) < 1e-11);
         assert_eq!(rep.cgra_strips + rep.cpu_strips, rep.assignments.len());
         // With a slow simulator and fast CPU oracle both should get work;

@@ -107,6 +107,11 @@ impl Coordinator {
     /// Run one stencil application across the tile array.
     pub fn run(&self, spec: &StencilSpec, w: usize, input: &[f64]) -> Result<RunReport> {
         ensure!(
+            !spec.is_3d(),
+            "coordinator strip-mining covers 1-D/2-D grids; run 3-D specs \
+             through verify::golden::run_sim (see ROADMAP open items)"
+        );
+        ensure!(
             input.len() == spec.grid_points(),
             "input length {} != grid {}",
             input.len(),

@@ -5,10 +5,15 @@
 //! Format (stable; parsed back by [`parse`] for round-trip tests):
 //!
 //! ```text
-//! pe <name> <mnemonic> [worker=<w>] [coeff=<f>] [filter=bits:m,n,p|rowcol:rl,rh,cl,ch]
-//!    [agen=rl,rh,cs,ch,stride,width] [expected=<n>] in=[ch0,ch1,...] out=[ch2,...]
+//! pe <name> <mnemonic> [worker=<w>] [coeff=<f>]
+//!    [filter=bits:m,n,p|rowcol:rl,rh,cl,ch|vol:zl,zh,yl,yh,cl,ch,ny]
+//!    [agen=rl,rh,cs,ch,stride,width,ylo,yhi,ny] [expected=<n>]
 //! chan <id> <src>:<port> -> <dst>:<port> cap=<c> lat=<l>
 //! ```
+//!
+//! `agen` accepts the legacy 6-field (flat 1-D/2-D) form on input and
+//! always emits the 9-field form (the last three are the §III plane-mode
+//! extension for 3-D grids; 0,0,0 means flat).
 
 use anyhow::{bail, Context, Result};
 
@@ -68,12 +73,25 @@ pub fn to_asm(g: &Graph, title: &str) -> String {
             Some(FilterSpec::RowCol { row_lo, row_hi, col_lo, col_hi }) => s.push_str(
                 &format!(" filter=rowcol:{row_lo},{row_hi},{col_lo},{col_hi}"),
             ),
+            Some(FilterSpec::Vol { z_lo, z_hi, y_lo, y_hi, col_lo, col_hi, ny }) => {
+                s.push_str(&format!(
+                    " filter=vol:{z_lo},{z_hi},{y_lo},{y_hi},{col_lo},{col_hi},{ny}"
+                ))
+            }
             None => {}
         }
         if let Some(a) = n.agen {
             s.push_str(&format!(
-                " agen={},{},{},{},{},{}",
-                a.row_lo, a.row_hi, a.col_start, a.col_hi, a.col_stride, a.width
+                " agen={},{},{},{},{},{},{},{},{}",
+                a.row_lo,
+                a.row_hi,
+                a.col_start,
+                a.col_hi,
+                a.col_stride,
+                a.width,
+                a.y_lo,
+                a.y_hi,
+                a.ny
             ));
         }
         if let Some(e) = n.expected {
@@ -132,6 +150,22 @@ pub fn parse(text: &str) -> Result<Graph> {
                                 .split(',')
                                 .map(|x| x.parse::<u64>())
                                 .collect::<std::result::Result<_, _>>()?;
+                            let want = match kind {
+                                "bits" => 3,
+                                "rowcol" => 4,
+                                "vol" => 7,
+                                _ => bail!("bad filter kind `{kind}`"),
+                            };
+                            if nums.len() != want {
+                                bail!(
+                                    "line {}: filter={kind}: needs {want} fields, got {}",
+                                    lineno + 1,
+                                    nums.len()
+                                );
+                            }
+                            if kind == "vol" && nums[6] == 0 {
+                                bail!("line {}: filter=vol: ny must be > 0", lineno + 1);
+                            }
                             node.filter = Some(match kind {
                                 "bits" => FilterSpec::Bits {
                                     m: nums[0],
@@ -144,6 +178,15 @@ pub fn parse(text: &str) -> Result<Graph> {
                                     col_lo: nums[2] as u32,
                                     col_hi: nums[3] as u32,
                                 },
+                                "vol" => FilterSpec::Vol {
+                                    z_lo: nums[0] as u32,
+                                    z_hi: nums[1] as u32,
+                                    y_lo: nums[2] as u32,
+                                    y_hi: nums[3] as u32,
+                                    col_lo: nums[4] as u32,
+                                    col_hi: nums[5] as u32,
+                                    ny: nums[6] as u32,
+                                },
                                 _ => bail!("bad filter kind `{kind}`"),
                             });
                         }
@@ -152,6 +195,13 @@ pub fn parse(text: &str) -> Result<Graph> {
                                 .split(',')
                                 .map(|x| x.parse::<u32>())
                                 .collect::<std::result::Result<_, _>>()?;
+                            if nums.len() != 6 && nums.len() != 9 {
+                                bail!(
+                                    "line {}: agen needs 6 or 9 fields, got {}",
+                                    lineno + 1,
+                                    nums.len()
+                                );
+                            }
                             node.agen = Some(AddrIter {
                                 row_lo: nums[0],
                                 row_hi: nums[1],
@@ -159,6 +209,9 @@ pub fn parse(text: &str) -> Result<Graph> {
                                 col_hi: nums[3],
                                 col_stride: nums[4],
                                 width: nums[5],
+                                y_lo: nums.get(6).copied().unwrap_or(0),
+                                y_hi: nums.get(7).copied().unwrap_or(0),
+                                ny: nums.get(8).copied().unwrap_or(0),
                             });
                         }
                         _ => bail!("line {}: unknown attr `{k}`", lineno + 1),
@@ -251,6 +304,30 @@ mod tests {
         assert!(parse("bogus line here").is_err());
         assert!(parse("pe x unknown_op").is_err());
         assert!(parse("chan 0 a:0 -> b:0").is_err()); // unknown nodes
+    }
+
+    #[test]
+    fn parse_rejects_malformed_filters() {
+        // Wrong field counts must error, not panic.
+        assert!(parse("pe f filter stage=compute filter=vol:1,2,3").is_err());
+        assert!(parse("pe f filter stage=compute filter=rowcol:1,2,3").is_err());
+        assert!(parse("pe f filter stage=compute filter=bits:1,2").is_err());
+        // vol with ny = 0 would divide by zero in passes().
+        assert!(parse("pe f filter stage=compute filter=vol:0,1,0,1,0,8,0").is_err());
+        // Well-formed vol parses.
+        let g = parse("pe f filter stage=compute filter=vol:0,1,0,1,0,8,4\n").unwrap();
+        assert_eq!(
+            g.node(g.find("f").unwrap()).filter,
+            Some(FilterSpec::Vol {
+                z_lo: 0,
+                z_hi: 1,
+                y_lo: 0,
+                y_hi: 1,
+                col_lo: 0,
+                col_hi: 8,
+                ny: 4
+            })
+        );
     }
 
     #[test]

@@ -119,6 +119,19 @@ pub enum FilterSpec {
         col_lo: u32,
         col_hi: u32,
     },
+    /// Volume (z/y/col) scheme for 3-D grids: the token's `row` tag is
+    /// the flattened plane-row index `z * ny + y`; pass when
+    /// `z ∈ [z_lo, z_hi) && y ∈ [y_lo, y_hi) && col ∈ [col_lo, col_hi)`.
+    Vol {
+        z_lo: u32,
+        z_hi: u32,
+        y_lo: u32,
+        y_hi: u32,
+        col_lo: u32,
+        col_hi: u32,
+        /// Grid height used to unflatten the row tag; must be > 0.
+        ny: u32,
+    },
 }
 
 impl FilterSpec {
@@ -138,6 +151,25 @@ impl FilterSpec {
                 col_lo,
                 col_hi,
             } => row >= row_lo && row < row_hi && col >= col_lo && col < col_hi,
+            FilterSpec::Vol {
+                z_lo,
+                z_hi,
+                y_lo,
+                y_hi,
+                col_lo,
+                col_hi,
+                ny,
+            } => {
+                debug_assert!(ny > 0);
+                let z = row / ny;
+                let y = row % ny;
+                z >= z_lo
+                    && z < z_hi
+                    && y >= y_lo
+                    && y < y_hi
+                    && col >= col_lo
+                    && col < col_hi
+            }
         }
     }
 }
@@ -148,7 +180,11 @@ impl FilterSpec {
 /// `addr = row * width + col` plus the (row, col) tags.
 ///
 /// A 1-D grid is the single-row case (`row_lo = 0, row_hi = 1,
-/// width = n`).
+/// width = n`). A 3-D grid sets `ny > 0` (plane mode): `row_lo/row_hi`
+/// then range over z, `y_lo/y_hi` over the rows inside each plane, and
+/// the emitted row tag is the flattened `z * ny + y` (matching
+/// [`FilterSpec::Vol`]). `ny == 0` keeps the flat 1-D/2-D semantics and
+/// ignores `y_lo`/`y_hi`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct AddrIter {
     pub row_lo: u32,
@@ -157,6 +193,12 @@ pub struct AddrIter {
     pub col_hi: u32,
     pub col_stride: u32,
     pub width: u32,
+    /// Plane mode only: first in-plane row.
+    pub y_lo: u32,
+    /// Plane mode only: one past the last in-plane row.
+    pub y_hi: u32,
+    /// Grid height; 0 selects flat (1-D/2-D) mode.
+    pub ny: u32,
 }
 
 impl AddrIter {
@@ -169,28 +211,84 @@ impl AddrIter {
             col_hi: n,
             col_stride,
             width: n,
+            y_lo: 0,
+            y_hi: 0,
+            ny: 0,
+        }
+    }
+
+    /// Plane-mode (3-D) iteration: z over `[z_lo, z_hi)`, y over
+    /// `[y_lo, y_hi)` within each `ny`-row plane, columns as in 2-D.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dim3(
+        z_lo: u32,
+        z_hi: u32,
+        y_lo: u32,
+        y_hi: u32,
+        ny: u32,
+        col_start: u32,
+        col_hi: u32,
+        col_stride: u32,
+        width: u32,
+    ) -> Self {
+        debug_assert!(ny > 0);
+        Self {
+            row_lo: z_lo,
+            row_hi: z_hi,
+            col_start,
+            col_hi,
+            col_stride,
+            width,
+            y_lo,
+            y_hi,
+            ny,
+        }
+    }
+
+    /// Rows the stream visits: plain rows in flat mode, `z_range *
+    /// y_range` flattened rows in plane mode.
+    fn row_count(&self) -> u64 {
+        if self.row_hi <= self.row_lo {
+            return 0;
+        }
+        let outer = (self.row_hi - self.row_lo) as u64;
+        if self.ny == 0 {
+            outer
+        } else if self.y_hi <= self.y_lo {
+            0
+        } else {
+            outer * (self.y_hi - self.y_lo) as u64
         }
     }
 
     /// Number of tokens the stream will produce.
     pub fn len(&self) -> u64 {
-        if self.row_hi <= self.row_lo || self.col_hi <= self.col_start {
+        if self.col_hi <= self.col_start {
             return 0;
         }
         let per_row =
             ((self.col_hi - self.col_start - 1) / self.col_stride + 1) as u64;
-        per_row * (self.row_hi - self.row_lo) as u64
+        per_row * self.row_count()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// The `k`-th (row, col, addr) token, row-major.
+    /// The `k`-th (row, col, addr) token, row-major. In plane mode the
+    /// row tag is the flattened `z * ny + y`.
     #[inline]
     pub fn token(&self, k: u64) -> (u32, u32, u64) {
         let per_row = ((self.col_hi - self.col_start - 1) / self.col_stride + 1) as u64;
-        let row = self.row_lo + (k / per_row) as u32;
+        let row_idx = k / per_row;
+        let row = if self.ny == 0 {
+            self.row_lo + row_idx as u32
+        } else {
+            let ys = (self.y_hi - self.y_lo) as u64;
+            let z = self.row_lo as u64 + row_idx / ys;
+            let y = self.y_lo as u64 + row_idx % ys;
+            (z * self.ny as u64 + y) as u32
+        };
         let col = self.col_start + (k % per_row) as u32 * self.col_stride;
         (row, col, row as u64 * self.width as u64 + col as u64)
     }
@@ -282,6 +380,9 @@ mod tests {
             col_hi: 4,
             col_stride: 2,
             width: 4,
+            y_lo: 0,
+            y_hi: 0,
+            ny: 0,
         };
         // rows 1..3, cols {0, 2}: tokens (1,0) (1,2) (2,0) (2,2).
         assert_eq!(it.len(), 4);
@@ -295,6 +396,40 @@ mod tests {
     fn addr_iter_empty() {
         let it = AddrIter::dim1(5, 1, 5);
         assert!(it.is_empty());
+    }
+
+    #[test]
+    fn addr_iter_3d_plane_mode() {
+        // 4-wide, ny = 3, nz = 2 grid; z in [0,2), y in [1,3), cols {1, 3}.
+        let it = AddrIter::dim3(0, 2, 1, 3, 3, 1, 4, 2, 4);
+        assert_eq!(it.len(), 2 * 2 * 2);
+        // First tokens: z=0,y=1 -> flattened row 1.
+        assert_eq!(it.token(0), (1, 1, 5));
+        assert_eq!(it.token(1), (1, 3, 7));
+        // Next row: z=0,y=2 -> flattened row 2.
+        assert_eq!(it.token(2), (2, 1, 9));
+        // Plane wrap: z=1,y=1 -> flattened row 4.
+        assert_eq!(it.token(4), (4, 1, 17));
+        assert_eq!(it.token(7), (5, 3, 23));
+    }
+
+    #[test]
+    fn vol_filter_unflattens_row_tag() {
+        // ny = 4: row tag 6 = (z=1, y=2).
+        let f = FilterSpec::Vol {
+            z_lo: 1,
+            z_hi: 2,
+            y_lo: 2,
+            y_hi: 3,
+            col_lo: 0,
+            col_hi: 8,
+            ny: 4,
+        };
+        assert!(f.passes(0, 6, 0));
+        assert!(!f.passes(0, 5, 0)); // y = 1
+        assert!(!f.passes(0, 2, 0)); // z = 0
+        assert!(!f.passes(0, 10, 0)); // z = 2
+        assert!(!f.passes(0, 6, 8)); // col out of window
     }
 
     #[test]

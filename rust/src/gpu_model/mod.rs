@@ -42,8 +42,10 @@ impl Precision {
     }
 }
 
-/// Stencil descriptor for the GPU model — unlike [`StencilSpec`] it also
-/// covers the 3-D configurations §VII reports.
+/// Stencil descriptor for the GPU model — unlike [`StencilSpec`] it
+/// predates the shape generalization and always carried the 3-D
+/// configurations §VII reports; `dense` marks a box (full-window)
+/// neighborhood.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct GpuStencil {
     /// 1, 2 or 3 dimensions.
@@ -53,24 +55,37 @@ pub struct GpuStencil {
     /// Grid extent per dimension (unused dims = 1).
     pub grid: [usize; 3],
     pub precision: Precision,
+    /// Dense box window instead of a star.
+    pub dense: bool,
 }
 
 impl GpuStencil {
     pub fn d1(n: usize, r: usize, p: Precision) -> Self {
-        Self { dims: 1, r: [r, 0, 0], grid: [n, 1, 1], precision: p }
+        Self { dims: 1, r: [r, 0, 0], grid: [n, 1, 1], precision: p, dense: false }
     }
 
     pub fn d2(nx: usize, ny: usize, rx: usize, ry: usize, p: Precision) -> Self {
-        Self { dims: 2, r: [rx, ry, 0], grid: [nx, ny, 1], precision: p }
+        Self { dims: 2, r: [rx, ry, 0], grid: [nx, ny, 1], precision: p, dense: false }
     }
 
     pub fn d3(n: [usize; 3], r: usize, p: Precision) -> Self {
-        Self { dims: 3, r: [r, r, r], grid: n, precision: p }
+        Self { dims: 3, r: [r, r, r], grid: n, precision: p, dense: false }
     }
 
-    /// Star-stencil taps: `(2rx+1) + 2ry + 2rz`.
+    /// Mark the neighborhood as a dense box window.
+    pub fn dense(mut self) -> Self {
+        self.dense = true;
+        self
+    }
+
+    /// Taps per output. Star: `(2rx+1) + 2ry + 2rz`; box: the dense
+    /// `(2rx+1)(2ry+1)(2rz+1)` window.
     pub fn taps(&self) -> usize {
-        2 * self.r[0] + 1 + 2 * self.r[1] + 2 * self.r[2]
+        if self.dense {
+            self.r.iter().map(|&r| 2 * r + 1).product()
+        } else {
+            2 * self.r[0] + 1 + 2 * self.r[1] + 2 * self.r[2]
+        }
     }
 
     /// FLOPs per computed output (`2*taps - 1`).
@@ -95,13 +110,24 @@ impl GpuStencil {
             / (2.0 * self.grid_points() * self.precision.bytes())
     }
 
-    /// The CGRA-side spec for the same workload (2-D/1-D only).
+    /// The GPU-side descriptor for the same workload as a CGRA spec —
+    /// any dimensionality, star or box.
     pub fn from_spec(s: &StencilSpec, p: Precision) -> Self {
-        if s.is_1d() {
+        let mut g = if s.is_1d() {
             Self::d1(s.nx, s.rx, p)
+        } else if s.is_3d() {
+            Self {
+                dims: 3,
+                r: [s.rx, s.ry, s.rz],
+                grid: [s.nx, s.ny, s.nz],
+                precision: p,
+                dense: false,
+            }
         } else {
             Self::d2(s.nx, s.ny, s.rx, s.ry, p)
-        }
+        };
+        g.dense = s.is_box();
+        g
     }
 }
 
@@ -128,5 +154,39 @@ mod tests {
         let a = GpuStencil::d2(960, 449, 12, 12, Precision::F64);
         let b = GpuStencil::d2(960, 449, 12, 12, Precision::F32);
         assert!((b.arithmetic_intensity() / a.arithmetic_intensity() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dense_box_taps_and_intensity() {
+        let star = GpuStencil::d2(64, 64, 1, 1, Precision::F64);
+        let boxed = star.dense();
+        assert_eq!(star.taps(), 5);
+        assert_eq!(boxed.taps(), 9);
+        assert!(boxed.arithmetic_intensity() > star.arithmetic_intensity());
+    }
+
+    #[test]
+    fn from_spec_covers_3d_and_box() {
+        let s3 = StencilSpec::heat3d(32, 24, 16, 0.1);
+        let g3 = GpuStencil::from_spec(&s3, Precision::F64);
+        assert_eq!(g3.dims, 3);
+        assert_eq!(g3.taps(), 7);
+        assert!(
+            (g3.arithmetic_intensity() - s3.arithmetic_intensity()).abs() < 1e-12,
+            "GPU and CGRA AI must agree for the same workload"
+        );
+
+        let sb = StencilSpec::box2d(
+            48,
+            32,
+            1,
+            1,
+            crate::stencil::spec::uniform_box_taps(1, 1, 0),
+        )
+        .unwrap();
+        let gb = GpuStencil::from_spec(&sb, Precision::F64);
+        assert!(gb.dense);
+        assert_eq!(gb.taps(), 9);
+        assert!((gb.arithmetic_intensity() - sb.arithmetic_intensity()).abs() < 1e-12);
     }
 }

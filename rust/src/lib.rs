@@ -1,32 +1,71 @@
 //! # stencil-cgra
 //!
 //! Reproduction of *"Mapping Stencils on Coarse-grained Reconfigurable
-//! Spatial Architecture"* (Tithi et al., 2020) as a three-layer
-//! Rust + JAX + Pallas stack.
+//! Spatial Architecture"* (Tithi et al., 2020), grown from the paper's
+//! two Table-I workloads into a **general stencil-mapping system**: any
+//! 1-D/2-D/3-D grid, star or dense-box neighborhood, described by one
+//! shape-based specification and compiled to the same
+//! reader / compute / writer / sync dataflow the paper derives in §III.
 //!
-//! The crate implements, from scratch:
+//! ## The shape model
+//!
+//! [`StencilSpec`] carries a [`stencil::spec::StencilShape`] (`Star` or
+//! `Box`), per-dimension extents (`dims()`) and radii (`radii()`), and
+//! per-tap coefficients. [`StencilSpec::chain_taps`] linearizes the
+//! neighborhood into the fused MUL + MAC chain order used everywhere —
+//! by the DFG builders, the cycle simulator and the golden oracles — so
+//! all layers accumulate in the same f64 association order and agree
+//! bitwise. Mappings by dimensionality:
+//!
+//! * **1-D** ([`stencil::map1d`], §III-A): `w` interleaved readers
+//!   broadcast to per-tap data filters (`0^m 1^n 0^p` bit patterns) in
+//!   front of each worker's MAC chain.
+//! * **2-D** ([`stencil::map2d`], §III-B): shared readers feed `2*ry`
+//!   row-sized delay-line stages (mandatory buffering); row/col-id
+//!   filters select each tap's shifted interior window. Box windows run
+//!   the same front end with one fused chain over the dense window.
+//! * **3-D** ([`stencil::map3d`]): *plane buffering* — a z-neighbor
+//!   lives `ny` rows away in the row-major stream, so a plane buffer is
+//!   `ny` row buffers; a tap at offset `(dz, dy, dx)` reads its
+//!   reader's delay line at stage `(rz*ny + ry) - (dz*ny + dy)` through
+//!   a volume filter that unflattens the `z*ny + y` row tag.
+//!
+//! [`stencil::build_graph`] dispatches any spec to its mapping.
+//!
+//! ## Layers
 //!
 //! * [`dfg`] — the dataflow-graph IR and the §V DSL builder that emits
 //!   high-level assembly and Graphviz dot.
-//! * [`stencil`] — the §III mapping algorithm: 1-D and 2-D star stencils
-//!   decomposed into reader / compute / writer / sync workers with data
-//!   filtering, mandatory buffering and strip-mining, plus the §IV
-//!   temporal (multi-time-step) extension.
+//! * [`stencil`] — the mappings above plus §III-B blocking (strip
+//!   mining) and the §IV temporal (multi-time-step) pipeline.
 //! * [`cgra`] — a functional + timing cycle simulator of the target
 //!   triggered-instruction CGRA (PEs, bounded channels, mesh placement,
 //!   scratchpad, cache and a bandwidth-limited DRAM channel).
-//! * [`roofline`] — the §VI roofline model and worker-count optimizer.
-//! * [`gpu_model`] — the §VII analytical NVIDIA V100 baseline (SMEM and
-//!   register-caching CUDA kernels), calibrated to the paper's anchors.
+//! * [`roofline`] — the §VI roofline model and worker-count optimizer,
+//!   shape-aware through the spec's arithmetic-intensity math.
+//! * [`gpu_model`] — the §VII analytical NVIDIA V100 baseline, covering
+//!   the paper's 1-D/2-D/3-D anchors and the box-window extension.
 //! * [`coordinator`] — the L3 runtime: a 16-tile leader/worker manager
-//!   with §IV divide-and-conquer task decomposition.
-//! * [`runtime`] — the PJRT bridge: loads `artifacts/*.hlo.txt` (AOT
-//!   JAX/Pallas lowerings) and executes them as the golden numeric
-//!   reference.
-//! * [`verify`] — cross-checking of simulator vs native oracle vs PJRT.
+//!   with §IV divide-and-conquer task decomposition (1-D/2-D grids).
+//! * [`runtime`] — the artifact runtime: reads `artifacts/manifest.txt`
+//!   and executes each named kernel with a native interpreter backed by
+//!   the golden oracles (the PJRT/XLA path is an offline substitution;
+//!   see `runtime`'s module docs).
+//! * [`verify`] — golden oracles for every shape
+//!   ([`verify::golden::stencil_ref`]) and one-call simulate-and-check
+//!   helpers; `rust/tests/differential.rs` fuzzes random specs through
+//!   the full mapper → placer → simulator stack against them.
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for the
-//! measured reproduction of every table and figure.
+//! ## Quick start
+//!
+//! ```text
+//! scgra run --shape star --dims 48,32,24 --radii 2,2,2 --workers 4
+//! ```
+//!
+//! maps a 13-point 3-D star onto the fabric via plane buffering,
+//! simulates it cycle-by-cycle, reports achieved GFLOPS against the
+//! roofline and checks the output against the oracle. See
+//! `examples/acoustic_3d.rs` for the library-level version.
 
 pub mod cgra;
 pub mod cli;
@@ -40,4 +79,4 @@ pub mod stencil;
 pub mod util;
 pub mod verify;
 
-pub use stencil::spec::StencilSpec;
+pub use stencil::spec::{StencilShape, StencilSpec};

@@ -142,4 +142,40 @@ mod tests {
         let m = Machine::paper();
         assert!(optimal_workers(&spec, &m) >= 1);
     }
+
+    #[test]
+    fn heat3d_analysis() {
+        // 7-pt 3-D star: 13 FLOPs/output. AI = 13 * interior / (2*grid*8).
+        let spec = StencilSpec::heat3d(96, 96, 96, 0.1);
+        let m = Machine::paper();
+        assert_eq!(spec.points(), 7);
+        let a = analyze(&spec, &m, optimal_workers(&spec, &m));
+        let want_ai = 13.0 * (94.0 * 94.0 * 94.0) / (2.0 * 96.0 * 96.0 * 96.0 * 8.0);
+        assert!((a.arithmetic_intensity - want_ai).abs() < 1e-12);
+        // Low-AI workload: bandwidth-bound, so the bw roof is attainable.
+        assert_eq!(a.attainable_gflops, a.bw_gflops);
+        // 7-pt workers are cheap; the MAC budget allows 256/7 = 36.
+        assert_eq!(a.max_workers, 36);
+        assert!(a.demand_gflops >= a.attainable_gflops);
+    }
+
+    #[test]
+    fn box_worker_budget_counts_dense_window() {
+        // 5x5x5 dense box: 125 DP ops per worker -> only 2 workers fit.
+        let spec = StencilSpec::box3d(
+            32,
+            32,
+            32,
+            2,
+            2,
+            2,
+            crate::stencil::spec::uniform_box_taps(2, 2, 2),
+        )
+        .unwrap();
+        let m = Machine::paper();
+        assert_eq!(spec.points(), 125);
+        assert_eq!(max_workers(&spec, &m), 2);
+        let w = optimal_workers(&spec, &m);
+        assert!(w >= 1 && w <= 2);
+    }
 }

@@ -91,6 +91,52 @@ pub fn y_tap_offset(u: usize, ry: usize) -> i64 {
     k as i64 - ry as i64
 }
 
+/// Reader that feeds a tap with column offset `dx ∈ [-rx, rx]` of worker
+/// `j` — the general form of [`x_tap_reader`], used by the box and 3-D
+/// mappings where taps carry explicit `(dz, dy, dx)` offsets.
+pub fn tap_reader(j: usize, dx: i64, rx: usize, w: usize) -> usize {
+    x_tap_reader(j, (dx + rx as i64) as usize, rx, w)
+}
+
+/// Row/col-id filter for a general 2-D tap offset `(dy, dx)`: pass tokens
+/// whose row lies in the tap-shifted interior row window and whose column
+/// lies in the tap-shifted interior column window. Degenerates to
+/// [`x_tap_rowcol`] at `dy = 0` and to [`y_tap_rowcol`] at `dx = 0`.
+pub fn tap_rowcol(dy: i64, dx: i64, rx: usize, ry: usize, nx: usize, ny: usize) -> FilterSpec {
+    FilterSpec::RowCol {
+        row_lo: (ry as i64 + dy) as u32,
+        row_hi: (ny as i64 - ry as i64 + dy) as u32,
+        col_lo: (rx as i64 + dx) as u32,
+        col_hi: (nx as i64 - rx as i64 + dx) as u32,
+    }
+}
+
+/// Volume filter for a general 3-D tap offset `(dz, dy, dx)` on an
+/// `nx * ny * nz` grid whose tokens carry flattened `z * ny + y` row
+/// tags: pass the tap-shifted interior window along every axis.
+#[allow(clippy::too_many_arguments)]
+pub fn tap_vol(
+    dz: i64,
+    dy: i64,
+    dx: i64,
+    rx: usize,
+    ry: usize,
+    rz: usize,
+    nx: usize,
+    ny: usize,
+    nz: usize,
+) -> FilterSpec {
+    FilterSpec::Vol {
+        z_lo: (rz as i64 + dz) as u32,
+        z_hi: (nz as i64 - rz as i64 + dz) as u32,
+        y_lo: (ry as i64 + dy) as u32,
+        y_hi: (ny as i64 - ry as i64 + dy) as u32,
+        col_lo: (rx as i64 + dx) as u32,
+        col_hi: (nx as i64 - rx as i64 + dx) as u32,
+        ny: ny as u32,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -231,5 +277,80 @@ mod tests {
         // ry = 2: offsets -2, -1, +1, +2.
         let offs: Vec<i64> = (0..4).map(|u| y_tap_offset(u, 2)).collect();
         assert_eq!(offs, vec![-2, -1, 1, 2]);
+    }
+
+    #[test]
+    fn tap_rowcol_generalizes_x_and_y_schemes() {
+        let (rx, ry, nx, ny) = (2usize, 3usize, 20usize, 15usize);
+        for t in 0..=2 * rx {
+            let dx = t as i64 - rx as i64;
+            assert_eq!(tap_rowcol(0, dx, rx, ry, nx, ny), x_tap_rowcol(t, rx, ry, nx, ny));
+        }
+        for u in 0..2 * ry {
+            let dy = y_tap_offset(u, ry);
+            assert_eq!(tap_rowcol(dy, 0, rx, ry, nx, ny), y_tap_rowcol(u, rx, ry, nx, ny));
+        }
+    }
+
+    #[test]
+    fn tap_reader_matches_x_tap_reader() {
+        for w in 1..=5 {
+            for j in 0..w {
+                for dx in -3i64..=3 {
+                    assert_eq!(
+                        tap_reader(j, dx, 3, w),
+                        x_tap_reader(j, (dx + 3) as usize, 3, w)
+                    );
+                }
+            }
+        }
+    }
+
+    /// The pairing invariant for the 3-D volume scheme: per tap
+    /// `(dz, dy, dx)`, the k-th passed token of the reader stream is
+    /// exactly the tap-shifted k-th output of that worker.
+    #[test]
+    fn kth_passed_token_matches_kth_output_3d() {
+        let mut rng = XorShift::new(0x3D3D);
+        for _case in 0..40 {
+            let rx = rng.range(1, 3);
+            let ry = rng.range(1, 3);
+            let rz = rng.range(1, 3);
+            let w = rng.range(1, 4);
+            let nx = rng.range(2 * rx + 2, 14);
+            let ny = rng.range(2 * ry + 2, 12);
+            let nz = rng.range(2 * rz + 2, 10);
+            for j in 0..w {
+                let outputs: Vec<(usize, usize, usize)> = (rz..nz - rz)
+                    .flat_map(|z| {
+                        (ry..ny - ry).flat_map(move |y| {
+                            (rx..nx - rx)
+                                .filter(move |c| c % w == j % w)
+                                .map(move |c| (z, y, c))
+                        })
+                    })
+                    .collect();
+                for (dz, dy, dx) in [
+                    (0i64, 0i64, 1i64),
+                    (0, -(ry as i64), 0),
+                    (rz as i64, 0, 0),
+                    (-(rz as i64), ry as i64, -(rx as i64)),
+                ] {
+                    let rho = tap_reader(j, dx, rx, w);
+                    let spec = tap_vol(dz, dy, dx, rx, ry, rz, nx, ny, nz);
+                    let passed: Vec<(usize, usize)> = (0..nz * ny)
+                        .flat_map(|r| (rho..nx).step_by(w).map(move |c| (r, c)))
+                        .filter(|&(r, c)| spec.passes(0, r as u32, c as u32))
+                        .collect();
+                    assert_eq!(passed.len(), outputs.len(), "tap ({dz},{dy},{dx})");
+                    for (k, &(oz, oy, oc)) in outputs.iter().enumerate() {
+                        let want_row =
+                            (oz as i64 + dz) * ny as i64 + oy as i64 + dy;
+                        assert_eq!(passed[k].0 as i64, want_row);
+                        assert_eq!(passed[k].1 as i64, oc as i64 + dx);
+                    }
+                }
+            }
+        }
     }
 }

@@ -34,7 +34,8 @@ use crate::dfg::node::{AddrIter, Op, Stage};
 use crate::dfg::{Dsl, Graph};
 
 use super::filter::{
-    x_tap_reader, x_tap_rowcol, y_tap_offset, y_tap_reader, y_tap_rowcol,
+    tap_reader, tap_rowcol, x_tap_reader, x_tap_rowcol, y_tap_offset, y_tap_reader,
+    y_tap_rowcol,
 };
 use super::map1d::QUEUE_SLACK;
 use super::spec::StencilSpec;
@@ -68,13 +69,15 @@ pub fn chain_capacity(spec: &StencilSpec, w: usize, k: usize) -> usize {
 /// Total mandatory buffering (tokens) the mapping needs: delay-line
 /// stages + chain data queues — the quantity §III-B compares against
 /// on-fabric storage to decide strip mining (see [`super::blocking`]).
-/// The delay-line part is the paper's `2*ry*x_dim` goal.
+/// The delay-line part is the paper's `2*ry*x_dim` goal. Star and box
+/// shapes need the same delay depth (`2*ry` rows) and the same chain
+/// length (`points()` taps), so one formula covers both.
 pub fn required_buffer_tokens(spec: &StencilSpec, w: usize) -> usize {
     let mut total = 0;
     for rho in 0..w {
         total += 2 * spec.ry * stage_capacity(spec, rho, w);
     }
-    let chain_len = 2 * spec.rx + 1 + 2 * spec.ry;
+    let chain_len = spec.points();
     for _j in 0..w {
         for k in 0..chain_len {
             total += chain_capacity(spec, w, k);
@@ -83,10 +86,17 @@ pub fn required_buffer_tokens(spec: &StencilSpec, w: usize) -> usize {
     total
 }
 
-/// Build the §III-B dataflow graph for `spec` with `w` workers.
+/// Build the §III-B dataflow graph for `spec` with `w` workers. Star
+/// specs follow Fig 9–11; [`crate::stencil::spec::StencilShape::Box`]
+/// specs run the same reader/delay-line front end with one fused MAC
+/// chain over the dense window.
 pub fn build(spec: &StencilSpec, w: usize) -> Result<Graph> {
     ensure!(!spec.is_1d(), "map2d requires a 2-D spec (use map1d)");
+    ensure!(!spec.is_3d(), "map2d requires a 2-D spec (use map3d)");
     ensure!(w >= 1, "need at least one worker");
+    if spec.is_box() {
+        return build_box(spec, w);
+    }
     let (nx, ny, rx, ry) = (spec.nx, spec.ny, spec.rx, spec.ry);
     let x_taps = 2 * rx + 1;
     let y_taps = 2 * ry;
@@ -106,6 +116,9 @@ pub fn build(spec: &StencilSpec, w: usize) -> Result<Graph> {
                 col_hi: nx as u32,
                 col_stride: w as u32,
                 width: nx as u32,
+                y_lo: 0,
+                y_hi: 0,
+                ny: 0,
             })
             .out(&format!("r{rho}.addr"));
         d.op(&format!("r{rho}.ld"), Op::Load, Stage::Reader)
@@ -183,6 +196,112 @@ pub fn build(spec: &StencilSpec, w: usize) -> Result<Graph> {
                 col_hi: (nx - rx) as u32,
                 col_stride: w as u32,
                 width: nx as u32,
+                y_lo: 0,
+                y_hi: 0,
+                ny: 0,
+            })
+            .out(&format!("w{j}.staddr"));
+        d.op(&format!("w{j}.st"), Op::Store, Stage::Writer)
+            .worker(j)
+            .input(0, &format!("w{j}.staddr"))
+            .input(1, &prev)
+            .out(&format!("w{j}.ack"));
+        d.op(&format!("w{j}.sync"), Op::SyncCount, Stage::Sync)
+            .worker(j)
+            .expected(count)
+            .input(0, &format!("w{j}.ack"))
+            .out(&format!("w{j}.done"));
+    }
+
+    let mut done = d.op("done", Op::DoneTree, Stage::Sync).expected(w as u64);
+    for j in 0..w {
+        done = done.input(j as u8, &format!("w{j}.done"));
+    }
+    drop(done);
+
+    let g = d.build()?;
+    crate::dfg::validate::validate(&g)?;
+    Ok(g)
+}
+
+/// Box-shape variant: the same shared readers + `2*ry`-stage delay lines
+/// feed one fused MUL/MAC chain per worker over the dense
+/// `(2ry+1) x (2rx+1)` window. A tap with offset `(dy, dx)` reads reader
+/// `(j + dx) mod w`'s line at stage `ry - dy` (so all window taps of an
+/// output arrive wall-time aligned) through a row/col filter shifted by
+/// the tap offset.
+fn build_box(spec: &StencilSpec, w: usize) -> Result<Graph> {
+    let (nx, ny, rx, ry) = (spec.nx, spec.ny, spec.rx, spec.ry);
+    let taps = spec.chain_taps();
+
+    let mut d = Dsl::new();
+
+    for rho in 0..w {
+        d.op(&format!("r{rho}.cu"), Op::AddrGen, Stage::Control)
+            .agen(AddrIter {
+                row_lo: 0,
+                row_hi: ny as u32,
+                col_start: rho as u32,
+                col_hi: nx as u32,
+                col_stride: w as u32,
+                width: nx as u32,
+                y_lo: 0,
+                y_hi: 0,
+                ny: 0,
+            })
+            .out(&format!("r{rho}.addr"));
+        d.op(&format!("r{rho}.ld"), Op::Load, Stage::Reader)
+            .input(0, &format!("r{rho}.addr"))
+            .out(&format!("r{rho}.d0"));
+        let cap = stage_capacity(spec, rho, w);
+        for s in 1..=2 * ry {
+            d.op(&format!("r{rho}.copy{s}"), Op::Copy, Stage::Reader)
+                .input_cap(0, &format!("r{rho}.d{}", s - 1), cap)
+                .out(&format!("r{rho}.d{s}"));
+        }
+    }
+
+    for j in 0..w {
+        let mut prev = String::new();
+        for (k, &(_dz, dy, dx, coeff)) in taps.iter().enumerate() {
+            let rho = tap_reader(j, dx, rx, w);
+            let stage = (ry as i64 - dy) as usize;
+            d.op(&format!("w{j}.f{k}"), Op::Filter, Stage::Compute)
+                .worker(j)
+                .filter(tap_rowcol(dy, dx, rx, ry, nx, ny))
+                .input(0, &format!("r{rho}.d{stage}"))
+                .out(&format!("w{j}.t{k}"));
+            let next = format!("w{j}.p{k}");
+            if k == 0 {
+                d.op(&format!("w{j}.mul"), Op::Mul, Stage::Compute)
+                    .worker(j)
+                    .coeff(coeff)
+                    .input_cap(0, &format!("w{j}.t{k}"), chain_capacity(spec, w, k))
+                    .out(&next);
+            } else {
+                d.op(&format!("w{j}.mac{k}"), Op::Mac, Stage::Compute)
+                    .worker(j)
+                    .coeff(coeff)
+                    .input(0, &prev)
+                    .input_cap(1, &format!("w{j}.t{k}"), chain_capacity(spec, w, k))
+                    .out(&next);
+            }
+            prev = next;
+        }
+
+        let first = first_output_col(j, w, rx);
+        let count = (outputs_per_row(j, w, nx, rx) * (ny - 2 * ry)) as u64;
+        d.op(&format!("w{j}.st.cu"), Op::AddrGen, Stage::Control)
+            .agen(AddrIter {
+                row_lo: ry as u32,
+                row_hi: (ny - ry) as u32,
+                col_start: first as u32,
+                col_hi: (nx - rx) as u32,
+                col_stride: w as u32,
+                width: nx as u32,
+                y_lo: 0,
+                y_hi: 0,
+                ny: 0,
             })
             .out(&format!("w{j}.staddr"));
         d.op(&format!("w{j}.st"), Op::Store, Stage::Writer)
@@ -301,6 +420,80 @@ mod tests {
     fn rejects_1d_spec() {
         let s = StencilSpec::dim1(64, vec![0.25, 0.5, 0.25]).unwrap();
         assert!(build(&s, 2).is_err());
+    }
+
+    #[test]
+    fn rejects_3d_spec() {
+        let s = StencilSpec::heat3d(10, 8, 6, 0.1);
+        assert!(build(&s, 2).is_err());
+    }
+
+    #[test]
+    fn box_structure_3x3_window() {
+        // 9-pt dense window: 1 MUL + 8 MAC per worker, one filter per tap.
+        let spec = StencilSpec::box2d(
+            16,
+            12,
+            1,
+            1,
+            crate::stencil::spec::uniform_box_taps(1, 1, 0),
+        )
+        .unwrap();
+        let g = build(&spec, 2).unwrap();
+        assert_eq!(g.dp_ops(), 2 * 9);
+        let h = g.op_histogram();
+        assert_eq!(h[&Op::Mul], 2);
+        assert_eq!(h[&Op::Mac], 2 * 8);
+        assert_eq!(h[&Op::Filter], 2 * 9);
+        // Delay lines are the same 2*ry rows as the star mapping.
+        assert_eq!(h[&Op::Copy], 2 * 2);
+        assert!(crate::dfg::validate::check(&g).is_empty());
+    }
+
+    #[test]
+    fn box_sync_counts_partition_interior() {
+        let spec = StencilSpec::box2d(
+            18,
+            11,
+            2,
+            1,
+            crate::stencil::spec::uniform_box_taps(2, 1, 0),
+        )
+        .unwrap();
+        for w in 1..=3 {
+            let g = build(&spec, w).unwrap();
+            let total: u64 = g
+                .nodes
+                .iter()
+                .filter(|n| n.op == Op::SyncCount)
+                .map(|n| n.expected.unwrap())
+                .sum();
+            assert_eq!(total, spec.interior_outputs() as u64, "w={w}");
+        }
+    }
+
+    #[test]
+    fn box_required_tokens_matches_built_graph() {
+        let spec = StencilSpec::box2d(
+            20,
+            10,
+            1,
+            2,
+            crate::stencil::spec::uniform_box_taps(1, 2, 0),
+        )
+        .unwrap();
+        let w = 2;
+        let g = build(&spec, w).unwrap();
+        let mut got = 0usize;
+        for n in &g.nodes {
+            match n.op {
+                Op::Copy => got += g.channels[g.input(n.id, 0).unwrap()].capacity,
+                Op::Mul => got += g.channels[g.input(n.id, 0).unwrap()].capacity,
+                Op::Mac => got += g.channels[g.input(n.id, 1).unwrap()].capacity,
+                _ => {}
+            }
+        }
+        assert_eq!(got, required_buffer_tokens(&spec, w));
     }
 
     #[test]

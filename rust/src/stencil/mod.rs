@@ -11,7 +11,9 @@
 //!   `0^m 1^n 0^p` bit patterns and the row/col-id scheme.
 //! * [`map1d`] — the §III-A 1-D mapping (Fig 3–7).
 //! * [`map2d`] — the §III-B 2-D mapping (Fig 9–11) with mandatory
-//!   buffering.
+//!   buffering, extended to dense box windows.
+//! * [`map3d`] — the 3-D extension: plane buffering (rows of
+//!   row-buffers) for star and box stencils.
 //! * [`blocking`] — §III-B strip mining when the fabric cannot hold
 //!   `2*ry` rows.
 //! * [`temporal`] — the §IV multi-time-step pipeline.
@@ -20,10 +22,27 @@ pub mod blocking;
 pub mod filter;
 pub mod map1d;
 pub mod map2d;
+pub mod map3d;
 pub mod spec;
 pub mod temporal;
 
-pub use spec::StencilSpec;
+pub use spec::{StencilShape, StencilSpec};
+
+use anyhow::Result;
+
+use crate::dfg::Graph;
+
+/// Map any supported spec (1-D/2-D/3-D, star or box) to its dataflow
+/// graph — the single entry point the simulator helpers and the CLI use.
+pub fn build_graph(spec: &StencilSpec, w: usize) -> Result<Graph> {
+    if spec.is_3d() {
+        map3d::build(spec, w)
+    } else if spec.is_1d() {
+        map1d::build(spec, w)
+    } else {
+        map2d::build(spec, w)
+    }
+}
 
 /// First output column owned by worker `j`: the smallest `c >= rx` with
 /// `c ≡ j (mod w)` (§III-A interleaving).

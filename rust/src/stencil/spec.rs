@@ -1,40 +1,85 @@
-//! Stencil specification and the §VI arithmetic-intensity arithmetic.
+//! Stencil specification — the generalized shape model — and the §VI
+//! arithmetic-intensity arithmetic.
 //!
-//! A *star* stencil (§II-B) is described by its grid (`nx`, `ny`), radii
-//! (`rx`, `ry`) and coefficient vectors: `cx` holds the `2*rx + 1` taps
-//! along x (centre included), `cy` the `2*ry` taps along y (centre
-//! excluded — it is counted once, in the x chain), ordered
-//! `j-ry, .., j-1, j+1, .., j+ry`. A 1-D stencil has `ny = 1, ry = 0` and
-//! an empty `cy`.
+//! A spec describes an N-dimensional (N ≤ 3) stencil over a row-major
+//! grid (`x` contiguous, then `y`, then `z`) with one of two
+//! [`StencilShape`]s:
+//!
+//! * **Star** (§II-B): taps only along the axes. `cx` holds the
+//!   `2*rx + 1` taps along x (centre included), `cy` the `2*ry` taps
+//!   along y and `cz` the `2*rz` taps along z (centres excluded — the
+//!   centre is counted once, in the x chain), each ordered
+//!   `-r, .., -1, +1, .., +r`. A 1-D stencil has `ny = nz = 1`,
+//!   `ry = rz = 0` and empty `cy`/`cz`.
+//! * **Box**: the full dense neighborhood. `box_taps` holds one
+//!   coefficient per window point, z-major / row-major
+//!   (`dz` outermost, `dx` innermost), `(2rz+1)*(2ry+1)*(2rx+1)` values
+//!   with the centre included.
+//!
+//! The legacy `nx/ny/rx/ry/cx/cy` fields are the canonical storage for
+//! the first two dimensions, so all §III 1-D/2-D callers (and the
+//! Table-I reproductions) are unchanged; [`StencilSpec::dims`] /
+//! [`StencilSpec::radii`] expose the N-dim view.
 
 use anyhow::{ensure, Result};
 
 /// Bytes per double-precision grid point (the paper evaluates in FP64).
 pub const BYTES_PER_POINT: f64 = 8.0;
 
+/// Neighborhood shape of a stencil.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StencilShape {
+    /// Axis-aligned taps only (the paper's §II-B star).
+    Star,
+    /// Full dense `(2r+1)^d` neighborhood.
+    Box,
+}
+
 #[derive(Debug, Clone, PartialEq)]
 pub struct StencilSpec {
+    /// Neighborhood shape.
+    pub shape: StencilShape,
     /// Grid width (x dimension, contiguous in memory).
     pub nx: usize,
     /// Grid height (y dimension); 1 for a 1-D stencil.
     pub ny: usize,
+    /// Grid depth (z dimension); 1 for a 1-D/2-D stencil.
+    pub nz: usize,
     /// Radius along x.
     pub rx: usize,
     /// Radius along y; 0 for a 1-D stencil.
     pub ry: usize,
-    /// `2*rx + 1` coefficients along x (centre included).
+    /// Radius along z; 0 for a 1-D/2-D stencil.
+    pub rz: usize,
+    /// Star: `2*rx + 1` coefficients along x (centre included).
     pub cx: Vec<f64>,
-    /// `2*ry` coefficients along y (centre excluded).
+    /// Star: `2*ry` coefficients along y (centre excluded).
     pub cy: Vec<f64>,
+    /// Star: `2*rz` coefficients along z (centre excluded).
+    pub cz: Vec<f64>,
+    /// Box: dense window coefficients, z-major; empty for star shapes.
+    pub box_taps: Vec<f64>,
 }
 
 impl StencilSpec {
-    /// (2r+1)-point 1-D stencil (Fig 1).
+    /// (2r+1)-point 1-D star stencil (Fig 1).
     pub fn dim1(nx: usize, coeffs: Vec<f64>) -> Result<Self> {
         ensure!(coeffs.len() % 2 == 1 && coeffs.len() >= 3, "need odd #coeffs >= 3");
         let rx = (coeffs.len() - 1) / 2;
         ensure!(nx > 2 * rx, "grid {nx} too small for radius {rx}");
-        Ok(Self { nx, ny: 1, rx, ry: 0, cx: coeffs, cy: Vec::new() })
+        Ok(Self {
+            shape: StencilShape::Star,
+            nx,
+            ny: 1,
+            nz: 1,
+            rx,
+            ry: 0,
+            rz: 0,
+            cx: coeffs,
+            cy: Vec::new(),
+            cz: Vec::new(),
+            box_taps: Vec::new(),
+        })
     }
 
     /// 2-D star stencil (Fig 8): `cx` with centre, `cy` without.
@@ -45,7 +90,112 @@ impl StencilSpec {
         let ry = cy.len() / 2;
         ensure!(nx > 2 * rx, "nx {nx} too small for rx {rx}");
         ensure!(ny > 2 * ry, "ny {ny} too small for ry {ry}");
-        Ok(Self { nx, ny, rx, ry, cx, cy })
+        Ok(Self {
+            shape: StencilShape::Star,
+            nx,
+            ny,
+            nz: 1,
+            rx,
+            ry,
+            rz: 0,
+            cx,
+            cy,
+            cz: Vec::new(),
+            box_taps: Vec::new(),
+        })
+    }
+
+    /// 3-D star stencil: `cx` with centre, `cy` and `cz` without.
+    pub fn dim3(
+        nx: usize,
+        ny: usize,
+        nz: usize,
+        cx: Vec<f64>,
+        cy: Vec<f64>,
+        cz: Vec<f64>,
+    ) -> Result<Self> {
+        ensure!(cx.len() % 2 == 1 && cx.len() >= 3, "cx must have odd length >= 3");
+        ensure!(cy.len() % 2 == 0 && !cy.is_empty(), "cy must have even nonzero length");
+        ensure!(cz.len() % 2 == 0 && !cz.is_empty(), "cz must have even nonzero length");
+        let rx = (cx.len() - 1) / 2;
+        let ry = cy.len() / 2;
+        let rz = cz.len() / 2;
+        ensure!(nx > 2 * rx, "nx {nx} too small for rx {rx}");
+        ensure!(ny > 2 * ry, "ny {ny} too small for ry {ry}");
+        ensure!(nz > 2 * rz, "nz {nz} too small for rz {rz}");
+        Ok(Self {
+            shape: StencilShape::Star,
+            nx,
+            ny,
+            nz,
+            rx,
+            ry,
+            rz,
+            cx,
+            cy,
+            cz,
+            box_taps: Vec::new(),
+        })
+    }
+
+    /// 2-D box stencil: `taps` is the `(2ry+1) x (2rx+1)` dense window,
+    /// row-major (`dy` outer, `dx` inner), centre included.
+    pub fn box2d(nx: usize, ny: usize, rx: usize, ry: usize, taps: Vec<f64>) -> Result<Self> {
+        ensure!(rx >= 1 && ry >= 1, "box radii must be >= 1");
+        ensure!(
+            taps.len() == (2 * rx + 1) * (2 * ry + 1),
+            "box2d needs {} taps, got {}",
+            (2 * rx + 1) * (2 * ry + 1),
+            taps.len()
+        );
+        ensure!(nx > 2 * rx, "nx {nx} too small for rx {rx}");
+        ensure!(ny > 2 * ry, "ny {ny} too small for ry {ry}");
+        Ok(Self {
+            shape: StencilShape::Box,
+            nx,
+            ny,
+            nz: 1,
+            rx,
+            ry,
+            rz: 0,
+            cx: Vec::new(),
+            cy: Vec::new(),
+            cz: Vec::new(),
+            box_taps: taps,
+        })
+    }
+
+    /// 3-D box stencil: `taps` is the dense
+    /// `(2rz+1) x (2ry+1) x (2rx+1)` window, z-major, centre included.
+    #[allow(clippy::too_many_arguments)]
+    pub fn box3d(
+        nx: usize,
+        ny: usize,
+        nz: usize,
+        rx: usize,
+        ry: usize,
+        rz: usize,
+        taps: Vec<f64>,
+    ) -> Result<Self> {
+        ensure!(rx >= 1 && ry >= 1 && rz >= 1, "box radii must be >= 1");
+        let want = (2 * rx + 1) * (2 * ry + 1) * (2 * rz + 1);
+        ensure!(taps.len() == want, "box3d needs {} taps, got {}", want, taps.len());
+        ensure!(nx > 2 * rx, "nx {nx} too small for rx {rx}");
+        ensure!(ny > 2 * ry, "ny {ny} too small for ry {ry}");
+        ensure!(nz > 2 * rz, "nz {nz} too small for rz {rz}");
+        Ok(Self {
+            shape: StencilShape::Box,
+            nx,
+            ny,
+            nz,
+            rx,
+            ry,
+            rz,
+            cx: Vec::new(),
+            cy: Vec::new(),
+            cz: Vec::new(),
+            box_taps: taps,
+        })
     }
 
     /// The Table-I 1-D workload: 17-pt, rx = 8, grid 194400, unit-ish taps.
@@ -73,14 +223,64 @@ impl StencilSpec {
         .unwrap()
     }
 
-    pub fn is_1d(&self) -> bool {
-        self.ry == 0
+    /// 7-point 3-D Jacobi heat stencil on an `nx` x `ny` x `nz` grid.
+    pub fn heat3d(nx: usize, ny: usize, nz: usize, alpha: f64) -> Self {
+        Self::dim3(
+            nx,
+            ny,
+            nz,
+            vec![alpha, 1.0 - 6.0 * alpha, alpha],
+            vec![alpha, alpha],
+            vec![alpha, alpha],
+        )
+        .unwrap()
     }
 
-    /// Stencil points = DP ops per worker: `(2rx+1) + 2ry`
-    /// (1 MUL + the MAC chain; §VI counts 49 for rx=ry=12).
+    pub fn is_1d(&self) -> bool {
+        self.ny == 1 && self.nz == 1
+    }
+
+    pub fn is_2d(&self) -> bool {
+        self.ny > 1 && self.nz == 1
+    }
+
+    pub fn is_3d(&self) -> bool {
+        self.nz > 1
+    }
+
+    pub fn is_box(&self) -> bool {
+        self.shape == StencilShape::Box
+    }
+
+    /// Number of grid dimensions (1, 2 or 3).
+    pub fn ndim(&self) -> usize {
+        if self.is_3d() {
+            3
+        } else if self.is_2d() {
+            2
+        } else {
+            1
+        }
+    }
+
+    /// Grid extents, x first, truncated to [`Self::ndim`] entries.
+    pub fn dims(&self) -> Vec<usize> {
+        [self.nx, self.ny, self.nz][..self.ndim()].to_vec()
+    }
+
+    /// Radii, x first, truncated to [`Self::ndim`] entries.
+    pub fn radii(&self) -> Vec<usize> {
+        [self.rx, self.ry, self.rz][..self.ndim()].to_vec()
+    }
+
+    /// Stencil points = DP ops per worker. Star: `(2rx+1) + 2ry + 2rz`
+    /// (1 MUL + the MAC chain; §VI counts 49 for rx=ry=12). Box: the
+    /// full window size.
     pub fn points(&self) -> usize {
-        self.cx.len() + self.cy.len()
+        match self.shape {
+            StencilShape::Star => self.cx.len() + self.cy.len() + self.cz.len(),
+            StencilShape::Box => self.box_taps.len(),
+        }
     }
 
     /// FLOPs per computed output: 1 for the MUL + 2 per MAC
@@ -89,14 +289,17 @@ impl StencilSpec {
         2.0 * self.points() as f64 - 1.0
     }
 
-    /// Computed (interior) outputs: `(nx - 2rx) * (ny - 2ry)`.
+    /// Computed (interior) outputs:
+    /// `(nx - 2rx) * (ny - 2ry) * (nz - 2rz)`.
     pub fn interior_outputs(&self) -> usize {
-        (self.nx - 2 * self.rx) * (self.ny.saturating_sub(2 * self.ry))
+        (self.nx - 2 * self.rx)
+            * (self.ny.saturating_sub(2 * self.ry))
+            * (self.nz.saturating_sub(2 * self.rz))
     }
 
     /// Total grid points.
     pub fn grid_points(&self) -> usize {
-        self.nx * self.ny
+        self.nx * self.ny * self.nz
     }
 
     /// Total FLOPs for one stencil application.
@@ -117,6 +320,48 @@ impl StencilSpec {
     /// = 5.59`.
     pub fn arithmetic_intensity(&self) -> f64 {
         self.total_flops() / self.total_bytes()
+    }
+
+    /// The taps in the MAC-chain emission order of the mapper, as
+    /// `(dz, dy, dx, coeff)` offsets relative to the output point. The
+    /// first entry is the MUL; the rest continue the fused chain. This
+    /// single enumeration defines both the DFG chain layout and the
+    /// golden-oracle accumulation order, so all layers agree bitwise.
+    ///
+    /// Star order: x taps left-to-right, then y taps `-ry..-1, +1..+ry`,
+    /// then z taps likewise. Box order: z-major over the dense window.
+    pub fn chain_taps(&self) -> Vec<(i64, i64, i64, f64)> {
+        let (rx, ry, rz) = (self.rx as i64, self.ry as i64, self.rz as i64);
+        match self.shape {
+            StencilShape::Star => {
+                let mut v = Vec::with_capacity(self.points());
+                for (t, &c) in self.cx.iter().enumerate() {
+                    v.push((0, 0, t as i64 - rx, c));
+                }
+                for (u, &c) in self.cy.iter().enumerate() {
+                    let k = if u < self.ry { u } else { u + 1 };
+                    v.push((0, k as i64 - ry, 0, c));
+                }
+                for (u, &c) in self.cz.iter().enumerate() {
+                    let k = if u < self.rz { u } else { u + 1 };
+                    v.push((k as i64 - rz, 0, 0, c));
+                }
+                v
+            }
+            StencilShape::Box => {
+                let mut v = Vec::with_capacity(self.points());
+                let mut i = 0;
+                for dz in -rz..=rz {
+                    for dy in -ry..=ry {
+                        for dx in -rx..=rx {
+                            v.push((dz, dy, dx, self.box_taps[i]));
+                            i += 1;
+                        }
+                    }
+                }
+                v
+            }
+        }
     }
 
     /// Restrict the spec to a vertical strip `[col_lo, col_hi)` of the
@@ -161,6 +406,19 @@ pub fn y_taps(r: usize) -> Vec<f64> {
     c
 }
 
+/// Symmetric z-taps without the centre, `2r` values ordered
+/// `-r..-1, +1..+r` (same decaying weights as [`y_taps`]).
+pub fn z_taps(r: usize) -> Vec<f64> {
+    y_taps(r)
+}
+
+/// Uniform normalized dense-window taps for a box stencil:
+/// `(2rz+1)*(2ry+1)*(2rx+1)` equal coefficients summing to 1.
+pub fn uniform_box_taps(rx: usize, ry: usize, rz: usize) -> Vec<f64> {
+    let n = (2 * rx + 1) * (2 * ry + 1) * (2 * rz + 1);
+    vec![1.0 / n as f64; n]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -196,6 +454,19 @@ mod tests {
     }
 
     #[test]
+    fn heat3d_is_7_point() {
+        let s = StencilSpec::heat3d(16, 12, 10, 0.1);
+        assert_eq!(s.points(), 7);
+        assert_eq!((s.rx, s.ry, s.rz), (1, 1, 1));
+        assert!(s.is_3d() && !s.is_box());
+        assert_eq!(s.dims(), vec![16, 12, 10]);
+        assert_eq!(s.radii(), vec![1, 1, 1]);
+        let sum: f64 =
+            s.cx.iter().chain(s.cy.iter()).chain(s.cz.iter()).sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
     fn dim1_rejects_even_coeffs() {
         assert!(StencilSpec::dim1(100, vec![1.0, 2.0]).is_err());
     }
@@ -211,6 +482,56 @@ mod tests {
     }
 
     #[test]
+    fn dim3_rejects_bad_shapes() {
+        let cx = vec![0.25, 0.5, 0.25];
+        assert!(StencilSpec::dim3(8, 8, 8, cx.clone(), vec![0.1], vec![0.1, 0.1]).is_err());
+        assert!(StencilSpec::dim3(8, 8, 2, cx, vec![0.1, 0.1], vec![0.1, 0.1]).is_err());
+    }
+
+    #[test]
+    fn box2d_window_size_checked() {
+        assert!(StencilSpec::box2d(16, 16, 1, 1, vec![0.1; 9]).is_ok());
+        assert!(StencilSpec::box2d(16, 16, 1, 1, vec![0.1; 8]).is_err());
+        assert!(StencilSpec::box2d(16, 16, 0, 1, vec![0.1; 3]).is_err());
+    }
+
+    #[test]
+    fn box3d_points_and_flops() {
+        let s = StencilSpec::box3d(10, 9, 8, 1, 1, 1, uniform_box_taps(1, 1, 1)).unwrap();
+        assert_eq!(s.points(), 27);
+        assert_eq!(s.flops_per_output(), 53.0);
+        assert!(s.is_box() && s.is_3d());
+        assert_eq!(s.interior_outputs(), 8 * 7 * 6);
+    }
+
+    #[test]
+    fn chain_taps_star_order_matches_section_iii() {
+        // 2-D star: x left-to-right, then y -ry..-1,+1..+ry.
+        let s = StencilSpec::dim2(8, 8, vec![1.0, 2.0, 3.0], vec![4.0, 5.0]).unwrap();
+        assert_eq!(
+            s.chain_taps(),
+            vec![
+                (0, 0, -1, 1.0),
+                (0, 0, 0, 2.0),
+                (0, 0, 1, 3.0),
+                (0, -1, 0, 4.0),
+                (0, 1, 0, 5.0),
+            ]
+        );
+    }
+
+    #[test]
+    fn chain_taps_box_is_z_major_dense() {
+        let taps: Vec<f64> = (0..27).map(|i| i as f64).collect();
+        let s = StencilSpec::box3d(8, 8, 8, 1, 1, 1, taps).unwrap();
+        let ct = s.chain_taps();
+        assert_eq!(ct.len(), 27);
+        assert_eq!(ct[0], (-1, -1, -1, 0.0));
+        assert_eq!(ct[13], (0, 0, 0, 13.0)); // centre
+        assert_eq!(ct[26], (1, 1, 1, 26.0));
+    }
+
+    #[test]
     fn taps_are_normalized_and_symmetric() {
         for r in 1..=12 {
             let c = symmetric_taps(r);
@@ -223,11 +544,28 @@ mod tests {
     }
 
     #[test]
+    fn uniform_box_taps_sum_to_one() {
+        let t = uniform_box_taps(2, 1, 1);
+        assert_eq!(t.len(), 5 * 3 * 3);
+        assert!((t.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
     fn strip_preserves_radius_and_height() {
         let s = StencilSpec::paper_2d();
         let t = s.strip(100, 300);
         assert_eq!(t.nx, 200);
         assert_eq!(t.ny, s.ny);
         assert_eq!(t.rx, 12);
+    }
+
+    #[test]
+    fn dimensionality_predicates() {
+        assert!(StencilSpec::paper_1d().is_1d());
+        assert!(StencilSpec::paper_2d().is_2d());
+        assert!(StencilSpec::heat3d(8, 8, 8, 0.1).is_3d());
+        assert_eq!(StencilSpec::paper_1d().ndim(), 1);
+        assert_eq!(StencilSpec::paper_2d().ndim(), 2);
+        assert_eq!(StencilSpec::heat3d(8, 8, 8, 0.1).ndim(), 3);
     }
 }

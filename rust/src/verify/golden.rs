@@ -1,13 +1,17 @@
 //! Native oracles + one-call simulation helpers.
 //!
-//! The oracles accumulate in exactly the chain order of §III (x taps
-//! left-to-right, then y taps `-ry..-1, +1..+ry`), matching `ref.py` and
-//! the Pallas kernels, so all three layers agree to ~1e-12 in f64.
+//! The oracles accumulate in exactly the chain order of §III (for a star:
+//! x taps left-to-right, then y taps `-ry..-1, +1..+ry`, then z taps
+//! likewise; for a box: z-major over the dense window), matching
+//! `ref.py`, the Pallas kernels and [`StencilSpec::chain_taps`], so all
+//! layers agree to ~1e-12 in f64. [`stencil_ref`] is the shape-generic
+//! oracle; the dimension-specific functions are thin fronts kept for the
+//! original 1-D/2-D call sites.
 
 use anyhow::Result;
 
 use crate::cgra::{Machine, SimResult, Simulator};
-use crate::stencil::{map1d, map2d, StencilSpec};
+use crate::stencil::{build_graph, StencilSpec};
 
 /// 1-D star stencil, interior computed, boundary copied.
 pub fn stencil1d_ref(x: &[f64], coeffs: &[f64]) -> Vec<f64> {
@@ -49,15 +53,63 @@ pub fn heat2d_step_ref(x: &[f64], nx: usize, ny: usize, alpha: f64) -> Vec<f64> 
     stencil2d_ref(x, &spec)
 }
 
+/// Shape-generic reference: any star or box spec in 1, 2 or 3
+/// dimensions, accumulated in [`StencilSpec::chain_taps`] order (the
+/// exact f64 association order of the mapped MAC chain, so simulator and
+/// oracle agree bitwise). Interior computed, boundary copied.
+pub fn stencil_ref(x: &[f64], spec: &StencilSpec) -> Vec<f64> {
+    assert_eq!(x.len(), spec.grid_points());
+    let (nx, ny, nz) = (spec.nx, spec.ny, spec.nz);
+    let (rx, ry, rz) = (spec.rx, spec.ry, spec.rz);
+    let taps = spec.chain_taps();
+    let mut out = x.to_vec();
+    for z in rz..nz - rz {
+        for y in ry..ny - ry {
+            for c in rx..nx - rx {
+                let mut acc = 0.0;
+                for (k, &(dz, dy, dx, co)) in taps.iter().enumerate() {
+                    let zz = (z as i64 + dz) as usize;
+                    let yy = (y as i64 + dy) as usize;
+                    let cc = (c as i64 + dx) as usize;
+                    let v = co * x[(zz * ny + yy) * nx + cc];
+                    if k == 0 {
+                        acc = v;
+                    } else {
+                        acc += v;
+                    }
+                }
+                out[(z * ny + y) * nx + c] = acc;
+            }
+        }
+    }
+    out
+}
+
+/// 3-D star stencil over a row-major `nx * ny * nz` volume.
+pub fn stencil3d_ref(x: &[f64], spec: &StencilSpec) -> Vec<f64> {
+    assert!(spec.is_3d() && !spec.is_box());
+    stencil_ref(x, spec)
+}
+
+/// 2-D box (dense-window) stencil.
+pub fn box2d_ref(x: &[f64], spec: &StencilSpec) -> Vec<f64> {
+    assert!(spec.is_2d() && spec.is_box());
+    stencil_ref(x, spec)
+}
+
+/// 3-D box (dense-window) stencil.
+pub fn box3d_ref(x: &[f64], spec: &StencilSpec) -> Vec<f64> {
+    assert!(spec.is_3d() && spec.is_box());
+    stencil_ref(x, spec)
+}
+
 /// Map `spec` with `w` workers, simulate on `m`, return the result.
 /// The output buffer starts as a copy of the input, so boundary points
 /// carry the input values (the Dirichlet contract all layers share).
+/// Dispatches across all supported shapes via
+/// [`crate::stencil::build_graph`].
 pub fn run_sim(spec: &StencilSpec, w: usize, m: &Machine, input: &[f64]) -> Result<SimResult> {
-    let g = if spec.is_1d() {
-        map1d::build(spec, w)?
-    } else {
-        map2d::build(spec, w)?
-    };
+    let g = build_graph(spec, w)?;
     Simulator::build(g, m, input.to_vec(), input.to_vec())?.run()
 }
 
@@ -123,6 +175,76 @@ mod tests {
         let x = vec![2.5; 12 * 12];
         let out = heat2d_step_ref(&x, 12, 12, 0.2);
         assert!(max_abs_diff(&x, &out) < 1e-12);
+    }
+
+    #[test]
+    fn generic_ref_matches_legacy_1d_and_2d_bitwise() {
+        let mut rng = XorShift::new(0x6E6E);
+        let s1 = StencilSpec::dim1(40, crate::stencil::spec::symmetric_taps(3)).unwrap();
+        let x1 = rng.normal_vec(40);
+        assert_eq!(stencil_ref(&x1, &s1), stencil1d_ref(&x1, &s1.cx));
+
+        let s2 = StencilSpec::dim2(
+            18,
+            14,
+            crate::stencil::spec::symmetric_taps(2),
+            crate::stencil::spec::y_taps(2),
+        )
+        .unwrap();
+        let x2 = rng.normal_vec(18 * 14);
+        assert_eq!(stencil_ref(&x2, &s2), stencil2d_ref(&x2, &s2));
+    }
+
+    #[test]
+    fn heat3d_uniform_field_conserved() {
+        let spec = StencilSpec::heat3d(8, 7, 6, 0.1);
+        let x = vec![3.25; 8 * 7 * 6];
+        let out = stencil3d_ref(&x, &spec);
+        assert!(max_abs_diff(&x, &out) < 1e-12);
+    }
+
+    #[test]
+    fn box_ref_uniform_window_is_local_mean() {
+        // A normalized 3x3 box over a linear ramp reproduces the ramp.
+        let spec = StencilSpec::box2d(
+            10,
+            6,
+            1,
+            1,
+            crate::stencil::spec::uniform_box_taps(1, 1, 0),
+        )
+        .unwrap();
+        let x: Vec<f64> = (0..60).map(|i| (i % 10) as f64).collect();
+        let out = box2d_ref(&x, &spec);
+        for r in 1..5 {
+            for c in 1..9 {
+                assert!((out[r * 10 + c] - c as f64).abs() < 1e-12, "r={r} c={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn sim_matches_oracle_3d_star_and_box() {
+        let m = Machine::paper();
+        let mut rng = XorShift::new(0x3D5);
+        let star = StencilSpec::heat3d(9, 7, 5, 0.1);
+        let x = rng.normal_vec(9 * 7 * 5);
+        let res = run_sim(&star, 2, &m, &x).unwrap();
+        assert!(max_abs_diff(&res.output, &stencil3d_ref(&x, &star)) < 1e-11);
+
+        let bx = StencilSpec::box3d(
+            8,
+            6,
+            5,
+            1,
+            1,
+            1,
+            crate::stencil::spec::uniform_box_taps(1, 1, 1),
+        )
+        .unwrap();
+        let xb = rng.normal_vec(8 * 6 * 5);
+        let res = run_sim(&bx, 2, &m, &xb).unwrap();
+        assert!(max_abs_diff(&res.output, &box3d_ref(&xb, &bx)) < 1e-11);
     }
 
     #[test]

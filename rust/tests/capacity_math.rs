@@ -1,0 +1,150 @@
+//! Unit tests pinning the mapper's mandatory-buffering capacity math
+//! (§III-B / Fig 8 formulas) against hand-computed values, for both the
+//! 2-D machinery (`map2d`) and its 3-D plane-buffered equivalents
+//! (`map3d`).
+
+use stencil_cgra::stencil::map1d::{tap_capacity_1d, QUEUE_SLACK};
+use stencil_cgra::stencil::spec::{symmetric_taps, uniform_box_taps, y_taps, z_taps};
+use stencil_cgra::stencil::{map2d, map3d, StencilSpec};
+
+#[test]
+fn tap_capacity_1d_formula() {
+    // 2*t + 2*rx/w + slack(4), hand-checked.
+    assert_eq!(QUEUE_SLACK, 4);
+    assert_eq!(tap_capacity_1d(8, 1, 0), 20); // 0 + 16 + 4
+    assert_eq!(tap_capacity_1d(8, 6, 0), 6); // 0 + 2 + 4
+    assert_eq!(tap_capacity_1d(8, 6, 16), 38); // 32 + 2 + 4
+    assert_eq!(tap_capacity_1d(1, 3, 2), 8); // 4 + 0 + 4
+}
+
+#[test]
+fn raw_per_row_partitions_columns() {
+    // nx = 21, w = 4: readers own ceil((21 - rho)/4) columns each.
+    let spec = StencilSpec::dim2(21, 9, symmetric_taps(2), y_taps(1)).unwrap();
+    let per: Vec<usize> = (0..4).map(|rho| map2d::raw_per_row(&spec, rho, 4)).collect();
+    assert_eq!(per, vec![6, 5, 5, 5]);
+    assert_eq!(per.iter().sum::<usize>(), 21);
+    // A reader beyond the grid produces nothing.
+    let tiny = StencilSpec::dim2(3, 9, vec![0.1, 0.2, 0.1], vec![0.1, 0.1]).unwrap();
+    assert_eq!(map2d::raw_per_row(&tiny, 4, 5), 0);
+}
+
+#[test]
+fn stage_capacity_is_one_row_plus_slack() {
+    let spec = StencilSpec::paper_2d(); // 960 cols
+    for (rho, w) in [(0usize, 5usize), (3, 5), (0, 7)] {
+        assert_eq!(
+            map2d::stage_capacity(&spec, rho, w),
+            map2d::raw_per_row(&spec, rho, w) + QUEUE_SLACK
+        );
+    }
+    // 960 / 5 = 192 columns per reader.
+    assert_eq!(map2d::stage_capacity(&spec, 0, 5), 192 + 4);
+}
+
+#[test]
+fn chain_capacity_formula_paper_2d() {
+    // 2*k + 2*rx/w + slack; rx = 12, w = 5 -> jitter 4.
+    let spec = StencilSpec::paper_2d();
+    assert_eq!(map2d::chain_capacity(&spec, 5, 0), 8); // 0 + 4 + 4
+    assert_eq!(map2d::chain_capacity(&spec, 5, 1), 10); // 2 + 4 + 4
+    assert_eq!(map2d::chain_capacity(&spec, 5, 48), 104); // 96 + 4 + 4
+}
+
+#[test]
+fn required_buffer_tokens_paper_2d_hand_computed() {
+    // Delay lines: 2*ry * (raw + slack) per reader
+    //   = 24 * (192 + 4) * 5 readers                  = 23520.
+    // Chains: sum_{k=0}^{48} (2k + 8) per worker
+    //   = (2 * 48*49/2) + 49*8 = 2352 + 392 = 2744; x5 = 13720.
+    let spec = StencilSpec::paper_2d();
+    assert_eq!(map2d::required_buffer_tokens(&spec, 5), 23520 + 13720);
+}
+
+#[test]
+fn required_buffer_tokens_heat2d_hand_computed() {
+    // heat2d(20, 14), w = 2: rx = ry = 1.
+    // raw: reader 0 owns 10 cols, reader 1 owns 10 -> stage cap 14 each.
+    // Delay: 2*ry * 14 * 2 readers = 56.
+    // Chains: 5 taps, jitter 2*1/2 = 1 -> caps 5,7,9,11,13 = 45; x2 = 90.
+    let spec = StencilSpec::heat2d(20, 14, 0.2);
+    assert_eq!(map2d::required_buffer_tokens(&spec, 2), 56 + 90);
+}
+
+#[test]
+fn map3d_stage_capacity_matches_map2d_row_size() {
+    let spec = StencilSpec::heat3d(20, 10, 8, 0.1);
+    for rho in 0..3 {
+        assert_eq!(
+            map3d::stage_capacity(&spec, rho, 3),
+            map2d::raw_per_row(&spec, rho, 3) + QUEUE_SLACK
+        );
+        assert_eq!(map3d::raw_per_row(&spec, rho, 3), map2d::raw_per_row(&spec, rho, 3));
+    }
+}
+
+#[test]
+fn map3d_tap_stage_hand_computed() {
+    // ny = 6, ry = rz = 1: alignment point rz*ny + ry = 7.
+    let spec = StencilSpec::dim3(
+        12,
+        6,
+        5,
+        symmetric_taps(1),
+        y_taps(1),
+        z_taps(1),
+    )
+    .unwrap();
+    assert_eq!(map3d::tap_stage(&spec, 0, 0), 7); // x taps
+    assert_eq!(map3d::tap_stage(&spec, 0, -1), 8); // y = -1
+    assert_eq!(map3d::tap_stage(&spec, 0, 1), 6); // y = +1
+    assert_eq!(map3d::tap_stage(&spec, -1, 0), 13); // z = -1: a full plane deeper
+    assert_eq!(map3d::tap_stage(&spec, 1, 0), 1); // z = +1
+    // Star line depth = 2*rz*ny + ry.
+    assert_eq!(map3d::delay_stages(&spec, 2), 13);
+}
+
+#[test]
+fn map3d_box_delay_is_plane_plus_row_on_both_sides() {
+    // Box corner needs 2*(rz*ny + ry) stages: ny = 7 -> 2*(7+1) = 16.
+    let spec = StencilSpec::box3d(10, 7, 5, 1, 1, 1, uniform_box_taps(1, 1, 1)).unwrap();
+    assert_eq!(map3d::delay_stages(&spec, 1), 16);
+}
+
+#[test]
+fn map3d_required_buffer_tokens_hand_computed() {
+    // heat3d(10, 6, 5), w = 2: rx = ry = rz = 1.
+    // raw: 5 cols per reader -> stage cap 9. Stages = 2*1*6 + 1 = 13.
+    // Delay: 13 * 9 * 2 readers = 234.
+    // Chains: 7 taps, jitter 2*1/2 = 1 -> caps 5,7,9,11,13,15,17 = 77; x2 = 154.
+    let spec = StencilSpec::heat3d(10, 6, 5, 0.1);
+    assert_eq!(map3d::required_buffer_tokens(&spec, 2), 234 + 154);
+}
+
+#[test]
+fn buffering_grows_monotonically_with_each_radius() {
+    // More radius in any dimension must demand more on-fabric tokens.
+    let base = StencilSpec::heat3d(16, 10, 8, 0.1);
+    let more_y = StencilSpec::dim3(
+        16,
+        10,
+        8,
+        symmetric_taps(1),
+        y_taps(2),
+        z_taps(1),
+    )
+    .unwrap();
+    let more_z = StencilSpec::dim3(
+        16,
+        10,
+        8,
+        symmetric_taps(1),
+        y_taps(1),
+        z_taps(2),
+    )
+    .unwrap();
+    let w = 2;
+    let b = map3d::required_buffer_tokens(&base, w);
+    assert!(map3d::required_buffer_tokens(&more_y, w) > b);
+    assert!(map3d::required_buffer_tokens(&more_z, w) > b);
+}

@@ -1,0 +1,179 @@
+//! Differential test harness: seeded-random stencil specifications run
+//! through the full mapper → placement → cycle-simulator stack
+//! (`verify::golden::run_sim`) and compared element-wise against the
+//! native golden oracles, `max_abs_diff < 1e-9`.
+//!
+//! Coverage: star 1-D/2-D/3-D, box 2-D/3-D, and the §IV temporal
+//! multi-step pipeline (checked against `steps` applications of the
+//! single-step oracle over the shrinking `valid_range`).
+
+use stencil_cgra::cgra::{Machine, Simulator};
+use stencil_cgra::stencil::{temporal, StencilSpec};
+use stencil_cgra::util::rng::XorShift;
+use stencil_cgra::verify::golden::{
+    max_abs_diff, run_sim, stencil1d_ref, stencil2d_ref, stencil_ref,
+};
+
+const TOL: f64 = 1e-9;
+
+/// Random coefficient in roughly [-0.5, 0.5] — bounded so iterated and
+/// long-chain accumulations stay far from the 1e-9 tolerance.
+fn coeff(rng: &mut XorShift) -> f64 {
+    0.3 * rng.normal()
+}
+
+fn coeffs(rng: &mut XorShift, n: usize) -> Vec<f64> {
+    (0..n).map(|_| coeff(rng)).collect()
+}
+
+#[test]
+fn star_1d_random_specs_match_oracle() {
+    let mut rng = XorShift::new(0xD1FF_0001);
+    let m = Machine::paper();
+    for case in 0..8 {
+        let r = rng.range(1, 5);
+        let nx = rng.range(2 * r + 2, 100);
+        let w = rng.range(1, 6);
+        let spec = StencilSpec::dim1(nx, coeffs(&mut rng, 2 * r + 1)).unwrap();
+        let x = rng.normal_vec(nx);
+        let res = run_sim(&spec, w, &m, &x).unwrap();
+        let want = stencil1d_ref(&x, &spec.cx);
+        assert!(
+            max_abs_diff(&res.output, &want) < TOL,
+            "case {case}: nx={nx} r={r} w={w}"
+        );
+        // The legacy and generic oracles agree bitwise.
+        assert_eq!(want, stencil_ref(&x, &spec));
+    }
+}
+
+#[test]
+fn star_2d_random_specs_match_oracle() {
+    let mut rng = XorShift::new(0xD1FF_0002);
+    let m = Machine::paper();
+    for case in 0..6 {
+        let rx = rng.range(1, 4);
+        let ry = rng.range(1, 4);
+        let nx = rng.range(2 * rx + 2, 30);
+        let ny = rng.range(2 * ry + 2, 24);
+        let w = rng.range(1, 5);
+        let spec = StencilSpec::dim2(
+            nx,
+            ny,
+            coeffs(&mut rng, 2 * rx + 1),
+            coeffs(&mut rng, 2 * ry),
+        )
+        .unwrap();
+        let x = rng.normal_vec(nx * ny);
+        let res = run_sim(&spec, w, &m, &x).unwrap();
+        let want = stencil2d_ref(&x, &spec);
+        assert!(
+            max_abs_diff(&res.output, &want) < TOL,
+            "case {case}: {nx}x{ny} r=({rx},{ry}) w={w}"
+        );
+        assert_eq!(want, stencil_ref(&x, &spec));
+    }
+}
+
+#[test]
+fn star_3d_random_specs_match_oracle() {
+    let mut rng = XorShift::new(0xD1FF_0003);
+    let m = Machine::paper();
+    for case in 0..5 {
+        let rx = rng.range(1, 3);
+        let ry = rng.range(1, 3);
+        let rz = rng.range(1, 3);
+        let nx = rng.range(2 * rx + 2, 16);
+        let ny = rng.range(2 * ry + 2, 12);
+        let nz = rng.range(2 * rz + 2, 10);
+        let w = rng.range(1, 4);
+        let spec = StencilSpec::dim3(
+            nx,
+            ny,
+            nz,
+            coeffs(&mut rng, 2 * rx + 1),
+            coeffs(&mut rng, 2 * ry),
+            coeffs(&mut rng, 2 * rz),
+        )
+        .unwrap();
+        let x = rng.normal_vec(nx * ny * nz);
+        let res = run_sim(&spec, w, &m, &x).unwrap();
+        let want = stencil_ref(&x, &spec);
+        assert!(
+            max_abs_diff(&res.output, &want) < TOL,
+            "case {case}: {nx}x{ny}x{nz} r=({rx},{ry},{rz}) w={w}"
+        );
+    }
+}
+
+#[test]
+fn box_2d_random_specs_match_oracle() {
+    let mut rng = XorShift::new(0xD1FF_0004);
+    let m = Machine::paper();
+    for case in 0..5 {
+        let rx = rng.range(1, 3);
+        let ry = rng.range(1, 3);
+        let nx = rng.range(2 * rx + 2, 26);
+        let ny = rng.range(2 * ry + 2, 20);
+        let w = rng.range(1, 4);
+        let taps = coeffs(&mut rng, (2 * rx + 1) * (2 * ry + 1));
+        let spec = StencilSpec::box2d(nx, ny, rx, ry, taps).unwrap();
+        let x = rng.normal_vec(nx * ny);
+        let res = run_sim(&spec, w, &m, &x).unwrap();
+        let want = stencil_ref(&x, &spec);
+        assert!(
+            max_abs_diff(&res.output, &want) < TOL,
+            "case {case}: {nx}x{ny} r=({rx},{ry}) w={w}"
+        );
+    }
+}
+
+#[test]
+fn box_3d_random_specs_match_oracle() {
+    let mut rng = XorShift::new(0xD1FF_0005);
+    let m = Machine::paper();
+    for case in 0..3 {
+        let nx = rng.range(5, 12);
+        let ny = rng.range(5, 10);
+        let nz = rng.range(5, 8);
+        let w = rng.range(1, 3);
+        let taps = coeffs(&mut rng, 27);
+        let spec = StencilSpec::box3d(nx, ny, nz, 1, 1, 1, taps).unwrap();
+        let x = rng.normal_vec(nx * ny * nz);
+        let res = run_sim(&spec, w, &m, &x).unwrap();
+        let want = stencil_ref(&x, &spec);
+        assert!(
+            max_abs_diff(&res.output, &want) < TOL,
+            "case {case}: {nx}x{ny}x{nz} w={w}"
+        );
+    }
+}
+
+#[test]
+fn temporal_random_specs_match_iterated_oracle() {
+    let mut rng = XorShift::new(0xD1FF_0006);
+    let m = Machine::paper();
+    for case in 0..5 {
+        let r = rng.range(1, 3);
+        let steps = rng.range(2, 5);
+        let nx = rng.range(2 * r * steps + 4, 80);
+        let w = rng.range(1, 4);
+        let spec = StencilSpec::dim1(nx, coeffs(&mut rng, 2 * r + 1)).unwrap();
+        let x = rng.normal_vec(nx);
+        let g = temporal::build(&spec, w, steps).unwrap();
+        let res = Simulator::build(g, &m, x.clone(), x.clone())
+            .unwrap()
+            .run()
+            .unwrap();
+        let mut want = x.clone();
+        for _ in 0..steps {
+            want = stencil1d_ref(&want, &spec.cx);
+        }
+        let (lo, hi) = temporal::valid_range(&spec, steps);
+        let got = &res.output[lo..hi];
+        assert!(
+            max_abs_diff(got, &want[lo..hi]) < TOL,
+            "case {case}: nx={nx} r={r} steps={steps} w={w}"
+        );
+    }
+}

@@ -1,8 +1,8 @@
-//! PJRT integration: every AOT artifact loads, compiles and executes,
-//! and the JAX/Pallas lowerings agree with the native oracles.
-//!
-//! Requires `make artifacts` (the Makefile dependency chain guarantees
-//! it before `cargo test`).
+//! Artifact-runtime integration: every manifest artifact loads and
+//! executes, and the results agree with the native oracles. The default
+//! backend is the native interpreter (see `runtime`'s module docs);
+//! with a PJRT backend the same assertions exercise the JAX/Pallas
+//! lowerings.
 
 use stencil_cgra::runtime::Runtime;
 use stencil_cgra::stencil::spec::{symmetric_taps, y_taps};
@@ -13,7 +13,8 @@ use stencil_cgra::verify::golden::{
 };
 
 fn rt() -> Runtime {
-    Runtime::open(Runtime::default_dir()).expect("run `make artifacts` first")
+    Runtime::open(Runtime::default_dir())
+        .expect("rust/artifacts/manifest.txt missing or unreadable")
 }
 
 #[test]
@@ -53,7 +54,7 @@ fn every_artifact_compiles() {
 }
 
 #[test]
-fn pallas_1d_matches_native_oracle_through_pjrt() {
+fn artifact_1d_matches_native_oracle() {
     let mut rt = rt();
     let mut rng = XorShift::new(42);
     let x = rng.normal_vec(4096);
@@ -64,7 +65,7 @@ fn pallas_1d_matches_native_oracle_through_pjrt() {
 }
 
 #[test]
-fn pallas_2d_matches_native_oracle_through_pjrt() {
+fn artifact_2d_matches_native_oracle() {
     let mut rt = rt();
     let mut rng = XorShift::new(43);
     let x = rng.normal_vec(96 * 96);
@@ -77,8 +78,8 @@ fn pallas_2d_matches_native_oracle_through_pjrt() {
 }
 
 #[test]
-fn pallas_and_pure_jnp_reference_agree_through_pjrt() {
-    // The kernel-vs-ref check done in pytest, repeated through PJRT:
+fn kernel_and_reference_artifacts_agree() {
+    // The kernel-vs-ref check done in pytest, repeated through the runtime:
     // both artifacts must produce identical results.
     let mut rt = rt();
     let mut rng = XorShift::new(44);
@@ -102,7 +103,7 @@ fn heat_step_artifact_matches_oracle() {
 
 #[test]
 fn heat_run200_is_200_fused_steps() {
-    // IV temporal locality: the fused 200-step artifact equals 200
+    // §IV temporal locality: the fused 200-step artifact equals 200
     // applications of the single-step oracle.
     let mut rt = rt();
     let mut x = vec![0.0; 96 * 96];
@@ -120,7 +121,7 @@ fn heat_run200_is_200_fused_steps() {
 
 #[test]
 fn full_scale_1d_artifact_runs() {
-    // The Table-I grid (194400 points) end to end through PJRT.
+    // The Table-I grid (194400 points) end to end through the runtime.
     let mut rt = rt();
     let mut rng = XorShift::new(46);
     let x = rng.normal_vec(194400);

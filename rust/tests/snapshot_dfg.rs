@@ -1,0 +1,127 @@
+//! Textual snapshot tests for the §V emitters on a small 3-D spec: the
+//! `dfg::asm` and `dfg::dot` output is pinned line-by-line (structure,
+//! immediates, mandatory-buffering capacities and counts), so any
+//! regression in DFG emission — node naming, filter/agen encoding,
+//! capacity assignment, channel ordering — is caught textually.
+//!
+//! The spec is tiny and fully hand-analyzable: a 7-pt 3-D star on a
+//! 6x5x4 grid, one worker. Alignment stage = rz*ny + ry = 6, delay line
+//! depth = 2*rz*ny + ry = 11 stages.
+
+use stencil_cgra::cgra::{Machine, Simulator};
+use stencil_cgra::dfg::{asm, dot};
+use stencil_cgra::stencil::{map3d, StencilSpec};
+use stencil_cgra::util::rng::XorShift;
+
+fn snapshot_spec() -> StencilSpec {
+    StencilSpec::dim3(
+        6,
+        5,
+        4,
+        vec![0.25, 0.5, 0.25],
+        vec![0.125, 0.125],
+        vec![0.0625, 0.0625],
+    )
+    .unwrap()
+}
+
+#[test]
+fn asm_snapshot_3d_star() {
+    let g = map3d::build(&snapshot_spec(), 1).unwrap();
+    let text = asm::to_asm(&g, "snapshot3d");
+    let lines: Vec<&str> = text.lines().collect();
+
+    // Header + 31 pe lines + 36 chan lines.
+    assert_eq!(lines[0], "# tia-asm: snapshot3d");
+    assert_eq!(lines[1], "# 31 nodes, 36 channels, 7 DP ops");
+    assert_eq!(lines.len(), 2 + 31 + 36, "full emission:\n{text}");
+    assert_eq!(lines.iter().filter(|l| l.starts_with("pe ")).count(), 31);
+    assert_eq!(lines.iter().filter(|l| l.starts_with("chan ")).count(), 36);
+
+    // Reader control unit: flat row-major sweep of the whole volume
+    // (nz*ny = 20 flattened rows, width 6, flat-mode zeros).
+    assert!(
+        text.contains("pe r0.cu agen stage=control agen=0,20,0,6,1,6,0,0,0"),
+        "{text}"
+    );
+    // Delay line runs to exactly stage 11 (2*rz*ny + ry).
+    assert!(text.contains("pe r0.copy11 copy stage=reader"));
+    assert!(!text.contains("pe r0.copy12"));
+
+    // Tap filters carry the volume windows, shifted per tap offset.
+    for want in [
+        // x taps (dz=0, dy=0, dx=-1/0/+1).
+        "pe w0.f0 filter stage=compute worker=0 filter=vol:1,3,1,4,0,4,5",
+        "pe w0.f1 filter stage=compute worker=0 filter=vol:1,3,1,4,1,5,5",
+        "pe w0.f2 filter stage=compute worker=0 filter=vol:1,3,1,4,2,6,5",
+        // y taps (dy = -1, +1).
+        "pe w0.f3 filter stage=compute worker=0 filter=vol:1,3,0,3,1,5,5",
+        "pe w0.f4 filter stage=compute worker=0 filter=vol:1,3,2,5,1,5,5",
+        // z taps (dz = -1, +1) shift the z window.
+        "pe w0.f5 filter stage=compute worker=0 filter=vol:0,2,1,4,1,5,5",
+        "pe w0.f6 filter stage=compute worker=0 filter=vol:2,4,1,4,1,5,5",
+    ] {
+        assert!(text.contains(want), "missing `{want}` in:\n{text}");
+    }
+
+    // Chain immediates (1 MUL + 6 MACs, coefficients in chain order).
+    assert!(text.contains("pe w0.mul mul stage=compute worker=0 coeff=2.5e-1"));
+    assert!(text.contains("pe w0.mac1 mac stage=compute worker=0 coeff=5e-1"));
+    assert!(text.contains("pe w0.mac3 mac stage=compute worker=0 coeff=1.25e-1"));
+    assert!(text.contains("pe w0.mac6 mac stage=compute worker=0 coeff=6.25e-2"));
+
+    // Writer control unit uses the plane-mode (9-field) agen over the
+    // interior z [1,3), y [1,4), cols [1,5).
+    assert!(
+        text.contains("pe w0.st.cu agen stage=control agen=1,3,1,5,1,6,1,4,5"),
+        "{text}"
+    );
+    // Sync counts the 4 * 3 * 2 = 24 interior outputs.
+    assert!(text.contains("pe w0.sync sync stage=sync worker=0 expected=24"));
+    assert!(text.contains("pe done done stage=sync expected=1"));
+
+    // Channel wiring: taps read the delay line at their alignment stage
+    // (x taps at d6 = copy6), and mandatory chain capacities are
+    // 2k + 2rx/w + 4.
+    assert!(text.contains("chan 12 r0.copy6:0 -> w0.f0:0 cap=4 lat=1"));
+    assert!(text.contains("chan 13 w0.f0:0 -> w0.mul:0 cap=6 lat=1"));
+    assert!(text.contains("chan 16 w0.f1:0 -> w0.mac1:1 cap=8 lat=1"));
+    // The deepest tap (dz = -1) reads a full plane later: stage 11.
+    assert!(text.contains("r0.copy11:0 -> w0.f5:0 cap=4 lat=1"));
+    // The shallowest (dz = +1) reads stage 1.
+    assert!(text.contains("r0.copy1:0 -> w0.f6:0 cap=4 lat=1"));
+}
+
+#[test]
+fn dot_snapshot_3d_star() {
+    let g = map3d::build(&snapshot_spec(), 1).unwrap();
+    let text = dot::to_dot(&g, "snapshot3d");
+    assert!(text.starts_with("digraph dfg {"));
+    assert!(text.contains("label=\"snapshot3d\\n31 nodes, 36 channels, 7 DP ops\";"));
+    assert!(text.contains("cluster_w0"));
+    // Fig 7 legend colors: mul orange, mac red, filter plum, agen cyan.
+    assert!(text.contains("fillcolor=orange"));
+    assert!(text.contains("fillcolor=red"));
+    assert!(text.contains("fillcolor=plum"));
+    assert!(text.contains("fillcolor=cyan"));
+    // One edge per channel; non-default capacities are labelled.
+    assert_eq!(text.matches("->").count(), g.channel_count());
+    assert!(text.contains("[label=\"cap=6\"]"));
+    assert!(text.contains("[label=\"cap=8\"]"));
+    assert!(text.trim_end().ends_with('}'));
+}
+
+#[test]
+fn asm_round_trip_simulates_identically_3d() {
+    let spec = snapshot_spec();
+    let mut rng = XorShift::new(0x5A95);
+    let x = rng.normal_vec(spec.grid_points());
+    let g1 = map3d::build(&spec, 1).unwrap();
+    let text = asm::to_asm(&g1, "round-trip-3d");
+    let g2 = asm::parse(&text).unwrap();
+    let m = Machine::paper();
+    let r1 = Simulator::build(g1, &m, x.clone(), x.clone()).unwrap().run().unwrap();
+    let r2 = Simulator::build(g2, &m, x.clone(), x.clone()).unwrap().run().unwrap();
+    assert_eq!(r1.output, r2.output);
+    assert_eq!(r1.stats.cycles, r2.stats.cycles);
+}
