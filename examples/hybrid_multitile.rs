@@ -1,6 +1,6 @@
 //! §IV divide-and-conquer + hybrid CPU/CGRA execution.
 //!
-//! The grid is decomposed recursively into fabric-sized strips
+//! The grid is decomposed recursively into fabric-sized tiles
 //! (cache-friendly nesting for the CPU side); CGRA tiles and CPU workers
 //! pull from the same queue — the work-stealing structure the paper
 //! sketches for "multiple CPU cores sharing the same last level cache
@@ -31,36 +31,37 @@ fn main() -> Result<()> {
         spec.points()
     );
 
-    // §IV: recursive decomposition into fabric-sized subtasks.
-    let strips = decompose(&spec, 32);
-    println!("decomposed interior into {} strips of <=32 output cols", strips.len());
+    // §IV: recursive decomposition into fabric-sized subtasks (N-dim
+    // tiles; every output extent <= 32).
+    let tiles = decompose(&spec, 32);
+    println!("decomposed interior into {} tiles of <=32 output extent", tiles.len());
 
     let mut rng = XorShift::new(0x11AB);
     let input = rng.normal_vec(spec.grid_points());
 
-    let tiles = 4;
+    let cgra_tiles = 4;
     let cpus = 2;
-    let runner = HybridRunner::new(tiles, cpus, Machine::paper());
+    let runner = HybridRunner::new(cgra_tiles, cpus, Machine::paper());
     let t0 = std::time::Instant::now();
-    let rep = runner.run(&spec, 3, &input, strips)?;
+    let rep = runner.run(&spec, 3, &input, tiles)?;
 
     let want = stencil2d_ref(&input, &spec);
     let err = max_abs_diff(&rep.output, &want);
     assert!(err < 1e-11, "numerics drifted: {err:.2e}");
 
     println!(
-        "\n{} strips done: {} on CGRA tiles, {} stolen by CPU workers",
+        "\n{} tiles done: {} on CGRA tiles, {} stolen by CPU workers",
         rep.assignments.len(),
         rep.cgra_strips,
         rep.cpu_strips
     );
-    for t in 0..tiles {
+    for t in 0..cgra_tiles {
         let n = rep
             .assignments
             .iter()
             .filter(|(_, e)| *e == Executor::Cgra(t))
             .count();
-        println!("  tile {t}: {n} strips");
+        println!("  tile {t}: {n} tasks");
     }
     println!(
         "CGRA makespan {} cycles; wall {:.2}s; max|err| {err:.2e}",

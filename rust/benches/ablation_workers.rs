@@ -5,16 +5,20 @@
 //!   bandwidth-saturated that justifies "6 workers is enough").
 //! * **B. mandatory buffering slack** — queue capacity multiplier vs
 //!   cycles (undersizing throttles; §III-B).
-//! * **C. strip width** — halo re-read overhead vs parallelism when
-//!   blocking for multi-tile execution (§III-B Blocking).
+//! * **C. tile count** — halo re-read overhead vs parallelism when
+//!   decomposing for multi-tile execution (§III-B blocking generalized
+//!   to N-dim tiles).
 //! * **D. temporal depth** — §IV pipeline: steps computed per memory
 //!   round-trip vs achieved FLOPs per DRAM byte.
+//! * **E. decomposition kind** — slab vs pencil vs block cuts of a 3-D
+//!   volume on 16 tiles: tasks, makespan, halo overhead.
 //!
 //! Run: `cargo bench --bench ablation_workers`
 
 use stencil_cgra::cgra::{Machine, Simulator};
 use stencil_cgra::coordinator::Coordinator;
-use stencil_cgra::stencil::spec::{symmetric_taps, y_taps};
+use stencil_cgra::stencil::decomp::DecompKind;
+use stencil_cgra::stencil::spec::{symmetric_taps, y_taps, z_taps};
 use stencil_cgra::stencil::{map1d, temporal, StencilSpec};
 use stencil_cgra::util::bench;
 use stencil_cgra::verify::golden::run_sim;
@@ -76,12 +80,12 @@ fn main() {
         }
     }
 
-    bench::section("C. strip-width ablation — 2D 49-pt on 16 tiles (960x449)");
+    bench::section("C. tile-count ablation — 2D 49-pt on 16 tiles (960x449)");
     let spec = StencilSpec::paper_2d();
     let x = vec![1.0; spec.grid_points()];
     println!(
         "{:>7} {:>7} {:>12} {:>10} {:>12}",
-        "tiles", "strips", "makespan", "GFLOPS", "extra reads"
+        "tiles", "tasks", "makespan", "GFLOPS", "extra reads"
     );
     let base_reads = (spec.grid_points() * 8) as f64;
     for tiles in [1usize, 2, 4, 8, 16, 32] {
@@ -119,6 +123,27 @@ fn main() {
             res.stats.cycles,
             flops / bytes,
             res.stats.gflops(flops, m.clock_ghz)
+        );
+    }
+
+    bench::section("E. decomposition-kind ablation — 3D 13-pt on 16 tiles (40x24x16)");
+    let spec = StencilSpec::dim3(40, 24, 16, symmetric_taps(2), y_taps(2), z_taps(2))
+        .unwrap();
+    let x = vec![1.0; spec.grid_points()];
+    println!(
+        "{:>8} {:>7} {:>10} {:>12} {:>10} {:>12}",
+        "kind", "tasks", "cuts", "makespan", "GFLOPS", "halo reads"
+    );
+    for kind in [DecompKind::Slab, DecompKind::Pencil, DecompKind::Block] {
+        let coord = Coordinator::new(16, m.clone()).with_decomp(kind);
+        let rep = coord.run(&spec, 3, &x).unwrap();
+        let cuts = format!("{}x{}x{}", rep.cuts[0], rep.cuts[1], rep.cuts[2]);
+        println!(
+            "{kind:>8} {:>7} {cuts:>10} {:>12} {:>10.0} {:>11.1}%",
+            rep.strips,
+            rep.makespan_cycles,
+            rep.gflops,
+            100.0 * rep.redundant_read_fraction
         );
     }
 }

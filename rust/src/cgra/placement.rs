@@ -2,14 +2,18 @@
 //! the channel latency/capacity consequences of the routes.
 //!
 //! Layout strategy mirrors Fig 4: control + reader nodes occupy the top
-//! rows; each compute worker gets a vertical band of columns and its
-//! nodes snake down the band in declaration order, which places a MAC
-//! chain contiguously (PEs in the same row end up holding the same tap
-//! across workers — the "PEs in the same row share the same coefficient"
-//! property). If the graph exceeds the fabric, up to
-//! `max_instr_per_pe` instructions share a PE (TIA supports multiple
-//! triggered instructions per PE; sharing costs issue bandwidth, which
-//! the simulator models by firing one instruction per PE per cycle).
+//! rows in a row-major **snake** (even rows left-to-right, odd rows
+//! right-to-left), so a deep delay-line chain — `map3d`'s plane buffers
+//! are dozens of consecutive copy PEs — stays mesh-adjacent across row
+//! boundaries instead of jumping back to column 0. Each compute worker
+//! gets a vertical band of columns and its nodes snake down-then-up the
+//! band in declaration order, which places a MAC chain contiguously
+//! (PEs in the same row end up holding the same tap across workers —
+//! the "PEs in the same row share the same coefficient" property). If
+//! the graph exceeds the fabric, up to `max_instr_per_pe` instructions
+//! share a PE (TIA supports multiple triggered instructions per PE;
+//! sharing costs issue bandwidth, which the simulator models by firing
+//! one instruction per PE per cycle).
 
 use anyhow::{ensure, Result};
 
@@ -76,7 +80,15 @@ pub fn place(g: &mut Graph, m: &Machine) -> Result<Placement> {
     for (i, &id) in shared.iter().enumerate() {
         // Wrap into instruction slots if the top band overflows.
         let slot = i % (top_rows * cols).max(1);
-        place_at(id, slot / cols, slot % cols, &mut occupancy);
+        let r = slot / cols;
+        // Row-major snake: consecutive shared nodes (delay-line stages)
+        // stay one hop apart even across a row boundary.
+        let c = if r % 2 == 0 {
+            slot % cols
+        } else {
+            cols - 1 - slot % cols
+        };
+        place_at(id, r, c, &mut occupancy);
     }
 
     // Vertical bands for workers.
@@ -95,14 +107,17 @@ pub fn place(g: &mut Graph, m: &Machine) -> Result<Placement> {
             let band_slots = body_rows * band_cols;
             for (i, &id) in nodes.iter().enumerate() {
                 let slot = i % band_slots.max(1);
-                // Snake down the band: consecutive nodes adjacent.
-                let r = top_rows + slot % body_rows;
+                // Column-major snake down-then-up the band: consecutive
+                // nodes stay adjacent, including at column turns.
                 let snake_col = slot / body_rows;
-                let c = c0 + if (snake_col & 1) == 0 {
-                    snake_col
+                let down = slot % body_rows;
+                let rr = if snake_col % 2 == 0 {
+                    down
                 } else {
-                    snake_col // columns within band are already adjacent
-                } % band_cols;
+                    body_rows - 1 - down
+                };
+                let r = top_rows + rr;
+                let c = c0 + snake_col % band_cols;
                 place_at(id, r.min(rows - 1), c.min(cols - 1), &mut occupancy);
             }
         }
@@ -146,7 +161,41 @@ pub fn place(g: &mut Graph, m: &Machine) -> Result<Placement> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::stencil::{map1d, map2d, StencilSpec};
+    use crate::stencil::{map1d, map2d, map3d, StencilSpec};
+
+    #[test]
+    fn delay_line_chain_stays_adjacent_in_top_band() {
+        // map3d's plane buffers are deep chains of shared (worker-less)
+        // copy PEs; the row-major snake must keep consecutive stages one
+        // hop apart, including across a row boundary (ROADMAP: cuts
+        // route latency and queue floors for deep delay lines).
+        let spec = StencilSpec::heat3d(10, 8, 6, 0.1);
+        let mut g = map3d::build(&spec, 2).unwrap();
+        let m = Machine::paper();
+        let p = place(&mut g, &m).unwrap();
+        let stages = map3d::delay_stages(&spec, 2);
+        assert!(stages > m.grid_cols / 2, "chain must be deep enough to wrap");
+        for rho in 0..2 {
+            let mut prev = p.pe_of[g.find(&format!("r{rho}.ld")).unwrap()];
+            for s in 1..=stages {
+                let cur = p.pe_of[g.find(&format!("r{rho}.copy{s}")).unwrap()];
+                assert_eq!(
+                    manhattan(prev, cur),
+                    1,
+                    "reader {rho} stage {s} not adjacent"
+                );
+                prev = cur;
+            }
+        }
+        // Adjacency shows up as minimal route latency on every delay
+        // stage's input channel.
+        for n in &g.nodes {
+            if n.op == crate::dfg::Op::Copy {
+                let ch = g.input(n.id, 0).unwrap();
+                assert_eq!(g.channels[ch].latency, 2, "1 hop + 1 cycle");
+            }
+        }
+    }
 
     #[test]
     fn paper_1d_fits_one_instr_per_pe() {

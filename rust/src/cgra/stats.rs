@@ -21,6 +21,33 @@ pub struct MemStats {
 }
 
 impl MemStats {
+    /// Fold another counter set into this one, field by field. The
+    /// single merge point for multi-run accounting (the coordinator's
+    /// per-tile reports) — add new counters here, not at call sites,
+    /// so they can never be silently dropped in a merge.
+    pub fn accumulate(&mut self, other: &MemStats) {
+        let MemStats {
+            loads,
+            stores,
+            hits,
+            misses,
+            merged,
+            conflict_misses,
+            evictions,
+            dram_read_bytes,
+            dram_write_bytes,
+        } = other;
+        self.loads += loads;
+        self.stores += stores;
+        self.hits += hits;
+        self.misses += misses;
+        self.merged += merged;
+        self.conflict_misses += conflict_misses;
+        self.evictions += evictions;
+        self.dram_read_bytes += dram_read_bytes;
+        self.dram_write_bytes += dram_write_bytes;
+    }
+
     pub fn total_dram_bytes(&self) -> u64 {
         self.dram_read_bytes + self.dram_write_bytes
     }
@@ -131,6 +158,37 @@ mod tests {
         let u = s.dp_utilization();
         assert!(u > 0.0 && u <= 1.0);
         assert!((u - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accumulate_sums_every_field() {
+        let a = MemStats {
+            loads: 1,
+            stores: 2,
+            hits: 3,
+            misses: 4,
+            merged: 5,
+            conflict_misses: 6,
+            evictions: 7,
+            dram_read_bytes: 8,
+            dram_write_bytes: 9,
+        };
+        let mut b = a.clone();
+        b.accumulate(&a);
+        assert_eq!(
+            b,
+            MemStats {
+                loads: 2,
+                stores: 4,
+                hits: 6,
+                misses: 8,
+                merged: 10,
+                conflict_misses: 12,
+                evictions: 14,
+                dram_read_bytes: 16,
+                dram_write_bytes: 18,
+            }
+        );
     }
 
     #[test]

@@ -4,8 +4,8 @@
 //! ```text
 //! scgra info                         machine + artifact inventory
 //! scgra dfg      --stencil S [-w N] [--dot F] [--asm F]   §V emitters
-//! scgra roofline [--stencil S]                            §VI analysis
-//! scgra run      --stencil S [-w N] [--tiles N] [--steps N]  simulate
+//! scgra roofline [--stencil S] [--tiles N]                §VI analysis
+//! scgra run      --stencil S [-w N] [--tiles N] [--decomp K] [--steps N]
 //! scgra compare                                           Table I
 //! scgra validate                                          3-layer check
 //! ```
@@ -13,12 +13,18 @@
 //! Beyond the named presets, any workload can be described with the
 //! shape flags — `--shape star|box --dims X[,Y[,Z]] --radii RX[,RY[,RZ]]`
 //! — which generate normalized coefficients for the requested geometry.
-//! A worked 3-D example:
+//! Multi-tile runs pick their cut strategy with
+//! `--decomp slab|pencil|block|auto` (auto resolves per dimensionality
+//! and fabric budget). A worked 3-D multi-tile example:
 //!
 //! ```text
-//! scgra run --shape star --dims 48,32,24 --radii 2,2,2 --workers 4
-//! scgra dfg --shape box --dims 64,48 --radii 1,1 --dot box9.dot
+//! scgra run --shape star --dims 48,32,24 --radii 2,2,2 --tiles 16 --decomp pencil
 //! ```
+//!
+//! decomposes the 13-pt star's interior into 16 y/z pencils (x stays
+//! row-major contiguous), simulates one pencil per CGRA tile, reports
+//! the halo re-read overhead and checks the stitched grid against the
+//! golden oracle.
 
 use std::collections::HashMap;
 
@@ -29,6 +35,7 @@ use crate::config::Config;
 use crate::coordinator::Coordinator;
 use crate::gpu_model::{GpuStencil, Precision, V100};
 use crate::roofline;
+use crate::stencil::decomp::{self, DecompKind};
 use crate::stencil::spec::{symmetric_taps, uniform_box_taps, y_taps, z_taps};
 use crate::stencil::{build_graph, StencilSpec};
 use crate::util::rng::XorShift;
@@ -213,15 +220,22 @@ USAGE: scgra <info|dfg|roofline|run|compare|validate> [--flags]
   --dims X[,Y[,Z]]      custom grid extents, x first (overrides --stencil)
   --radii RX[,RY[,RZ]]  custom radii per dimension (default all 1)
   --workers N           compute workers (0 = roofline pick)
-  --tiles N             CGRA tiles (default 1; 3-D runs single-tile)
+  --tiles N             CGRA tiles (default 1)
+  --decomp K            multi-tile cut strategy: slab|pencil|block|auto
+                        (default auto: slab = x strips in 1-D/2-D /
+                        z planes in 3-D; pencil = y+z cuts, x contiguous;
+                        block = every axis)
   --steps N             host-driven time steps (default 1)
   --dot FILE / --asm FILE   emit Graphviz / assembly (dfg)
-  --config FILE         TOML machine/run config
+  --config FILE         TOML machine/run config ([run] decomp = \"pencil\")
 
-Worked 3-D example:
-  scgra run --shape star --dims 48,32,24 --radii 2,2,2 --workers 4
-maps a 13-pt 3-D star onto the fabric via plane buffering, simulates it
-cycle-by-cycle and checks the output against the golden oracle.";
+Worked 3-D multi-tile example:
+  scgra run --shape star --dims 48,32,24 --radii 2,2,2 --tiles 16 --decomp pencil
+decomposes the 13-pt star's 44x28x20 interior into 16 y/z pencil tiles
+(4 cuts along y, 4 along z; each tile a full-width 48x11x9 sub-volume
+with 2-deep halos), maps each pencil onto a CGRA tile via plane
+buffering, simulates all 16 cycle-by-cycle, reports the halo re-read
+overhead, and checks the stitched grid against the golden oracle.";
 
 fn cmd_info(m: &Machine) -> Result<()> {
     println!("machine: {:.1} GHz, {} MAC PEs, {} GB/s -> peak {:.0} GFLOPS",
@@ -283,14 +297,43 @@ fn cmd_roofline(args: &Args, m: &Machine) -> Result<()> {
     };
     println!("{:<28} {:>6} {:>10} {:>10} {:>10} {:>8} {:>6}",
         "stencil", "AI", "bw-roof", "peak", "attain", "demand", "w");
-    for (name, spec) in specs {
-        let w = roofline::optimal_workers(&spec, m);
-        let a = roofline::analyze(&spec, m, w);
+    for (name, spec) in &specs {
+        let w = roofline::optimal_workers(spec, m);
+        let a = roofline::analyze(spec, m, w);
         println!(
             "{:<28} {:>6.2} {:>10.0} {:>10.0} {:>10.0} {:>8.0} {:>6}",
             name, a.arithmetic_intensity, a.bw_gflops, a.peak_gflops,
             a.attainable_gflops, a.demand_gflops, a.workers
         );
+    }
+
+    // Multi-tile view: halo re-reads deflate the effective intensity.
+    let tiles = args.num("tiles", 1usize)?;
+    if tiles > 1 {
+        let kind = match args.get("decomp") {
+            Some(s) => DecompKind::parse(s)?,
+            None => DecompKind::Auto,
+        };
+        println!("\ndecomposed across {tiles} tiles ({kind}):");
+        println!(
+            "{:<28} {:>7} {:>12} {:>8} {:>10} {:>12}",
+            "stencil", "tasks", "cuts", "eff AI", "halo", "array roof"
+        );
+        for (name, spec) in &specs {
+            let w = roofline::optimal_workers(spec, m);
+            let plan =
+                decomp::plan(spec, w, decomp::DEFAULT_FABRIC_TOKENS, kind, tiles)?;
+            let t = roofline::analyze_tiled(spec, m, w, &plan, tiles);
+            println!(
+                "{:<28} {:>7} {:>12} {:>8.2} {:>9.1}% {:>12.0}",
+                name,
+                t.tasks,
+                format!("{}x{}x{}", plan.cuts[0], plan.cuts[1], plan.cuts[2]),
+                t.effective_ai,
+                100.0 * t.redundant_read_fraction,
+                t.attainable_gflops_array
+            );
+        }
     }
     Ok(())
 }
@@ -306,7 +349,13 @@ fn cmd_run(args: &Args, m: &Machine, cfg: Option<&Config>) -> Result<()> {
         }
     };
     let defaults = cfg.map(|c| c.run_params()).transpose()?.unwrap_or(
-        crate::config::RunParams { workers: 0, tiles: 1, steps: 1, seed: 42 },
+        crate::config::RunParams {
+            workers: 0,
+            tiles: 1,
+            steps: 1,
+            seed: 42,
+            decomp: DecompKind::Auto,
+        },
     );
     let w = match args.num("workers", defaults.workers)? {
         0 => roofline::optimal_workers(&spec, m),
@@ -314,53 +363,37 @@ fn cmd_run(args: &Args, m: &Machine, cfg: Option<&Config>) -> Result<()> {
     };
     let tiles = args.num("tiles", defaults.tiles)?;
     let steps = args.num("steps", defaults.steps)?;
+    let decomp = match args.get("decomp") {
+        Some(s) => DecompKind::parse(s)?,
+        None => defaults.decomp,
+    };
     anyhow::ensure!(steps >= 1, "--steps must be >= 1 (got {steps})");
     let mut rng = XorShift::new(defaults.seed);
     let input = rng.normal_vec(spec.grid_points());
 
-    if spec.is_3d() {
-        // 3-D runs go straight to the plane-buffered single-tile mapping
-        // (strip-mined multi-tile 3-D execution is a ROADMAP item).
-        if tiles > 1 {
-            println!("note: 3-D workloads run on a single tile; ignoring --tiles {tiles}");
-        }
-        println!("running {} stencil, w={w}, steps={steps}", describe(&spec));
-        let roof = m.roofline_gflops(spec.arithmetic_intensity());
-        // Map once; the graph depends only on (spec, w), not the grid.
-        let g = build_graph(&spec, w)?;
-        let mut grid = input.clone();
-        for i in 0..steps {
-            let res = crate::cgra::Simulator::build(g.clone(), m, grid.clone(), grid.clone())?
-                .run()?;
-            let gflops = res.gflops(spec.total_flops(), m.clock_ghz);
-            println!(
-                "step {i}: {} cyc, {:.1} GFLOPS ({:.0}% of roofline)",
-                res.stats.cycles,
-                gflops,
-                100.0 * gflops / roof,
-            );
-            if i == 0 {
-                let want = stencil_ref(&grid, &spec);
-                println!(
-                    "step-0 max|err| vs oracle: {:.2e}",
-                    max_abs_diff(&res.output, &want)
-                );
-            }
-            grid = res.output;
-        }
-        println!("final grid checksum {:.6}", grid.iter().sum::<f64>());
-        return Ok(());
-    }
-
-    let coord = Coordinator::new(tiles, m.clone());
+    // Every dimensionality runs through the coordinator: the decomp
+    // layer cuts 1-D/2-D/3-D grids alike into halo-padded tiles.
+    let coord = Coordinator::new(tiles, m.clone()).with_decomp(decomp);
     println!(
-        "running {} stencil, w={w}, tiles={tiles}, steps={steps}",
+        "running {} stencil, w={w}, tiles={tiles}, decomp={decomp}, steps={steps}",
         describe(&spec)
     );
     let (out, reports) = coord.run_steps(&spec, w, &input, steps)?;
+    let first = &reports[0];
+    println!(
+        "plan: {} cuts (x{}, y{}, z{}) -> {} tile tasks, {} halo points \
+         ({:.1}% redundant reads)",
+        first.kind,
+        first.cuts[0],
+        first.cuts[1],
+        first.cuts[2],
+        first.strips,
+        first.halo_points,
+        100.0 * first.redundant_read_fraction,
+    );
     for (i, r) in reports.iter().enumerate() {
         println!(
-            "step {i}: {} strips, makespan {} cyc, {:.1} GFLOPS ({:.0}% of roofline)",
+            "step {i}: {} tiles, makespan {} cyc, {:.1} GFLOPS ({:.0}% of roofline)",
             r.strips,
             r.makespan_cycles,
             r.gflops,
@@ -368,12 +401,15 @@ fn cmd_run(args: &Args, m: &Machine, cfg: Option<&Config>) -> Result<()> {
                 / (tiles as f64 * m.roofline_gflops(spec.arithmetic_intensity())),
         );
     }
-    // Quick correctness spot check on the first step.
-    let first = &reports[0];
-    let want = stencil_ref(&input, &spec);
+    // Correctness: the final grid against the steps-times iterated
+    // golden oracle.
+    let mut want = input;
+    for _ in 0..steps {
+        want = stencil_ref(&want, &spec);
+    }
     println!(
-        "step-0 max|err| vs oracle: {:.2e}; final grid checksum {:.6}",
-        max_abs_diff(&first.output, &want),
+        "max|err| vs {steps}-step oracle: {:.2e}; final grid checksum {:.6}",
+        max_abs_diff(&out, &want),
         out.iter().sum::<f64>()
     );
     Ok(())
@@ -399,6 +435,15 @@ fn cmd_compare(m: &Machine) -> Result<()> {
         println!("\n{name}");
         println!("  CGRA x16: {:>8.0} GFLOPS  ({:>4.1}% of {:.0} roof)",
             rep.gflops, 100.0 * rep.gflops / cgra_roof, cgra_roof);
+        println!(
+            "  decomp:   {} x{} tasks, {:.1}% halo re-reads \
+             (AI {:.2} -> {:.2} effective)",
+            rep.kind,
+            rep.strips,
+            100.0 * rep.redundant_read_fraction,
+            g.arithmetic_intensity(),
+            g.arithmetic_intensity_with_redundancy(rep.redundant_read_fraction)
+        );
         println!("  V100:     {:>8.0} GFLOPS  ({:>4.1}% of {:.0} roof)",
             gpu, 100.0 * gpu / gpu_roof, gpu_roof);
         println!("  normalized GFLOPS (CGRA/V100): {:.2}x", rep.gflops / gpu);
@@ -516,6 +561,28 @@ mod tests {
     #[test]
     fn unknown_command_errors() {
         assert!(run(&sv(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn run_command_3d_multi_tile_via_decomp_flag() {
+        run(&sv(&[
+            "run", "--shape", "star", "--dims", "14,10,8", "--workers", "2",
+            "--tiles", "4", "--decomp", "pencil",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn bad_decomp_value_is_an_error() {
+        assert!(run(&sv(&[
+            "run", "--stencil", "3pt", "--decomp", "diagonal"
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn roofline_command_reports_tiled_view() {
+        run(&sv(&["roofline", "--stencil", "heat3d", "--tiles", "8"])).unwrap();
     }
 
     #[test]

@@ -10,6 +10,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::cgra::Machine;
+use crate::stencil::decomp::DecompKind;
 use crate::stencil::StencilSpec;
 
 /// Parsed key-value configuration grouped by `[section]`.
@@ -159,13 +160,19 @@ impl Config {
         }
     }
 
-    /// `[run]` knobs: workers (0 = roofline-optimal), tiles, steps.
+    /// `[run]` knobs: workers (0 = roofline-optimal), tiles, steps,
+    /// decomposition kind (`decomp = "slab|pencil|block|auto"`).
     pub fn run_params(&self) -> Result<RunParams> {
+        let decomp = match self.get("run", "decomp") {
+            None => DecompKind::Auto,
+            Some(v) => DecompKind::parse(v)?,
+        };
         Ok(RunParams {
             workers: self.num("run", "workers", 0usize)?,
             tiles: self.num("run", "tiles", 1usize)?,
             steps: self.num("run", "steps", 1usize)?,
             seed: self.num("run", "seed", 42u64)?,
+            decomp,
         })
     }
 }
@@ -178,6 +185,8 @@ pub struct RunParams {
     pub tiles: usize,
     pub steps: usize,
     pub seed: u64,
+    /// Multi-tile cut strategy.
+    pub decomp: DecompKind,
 }
 
 #[cfg(test)]
@@ -265,6 +274,15 @@ tiles = 16
         let c = Config::parse("").unwrap();
         assert_eq!(c.machine().unwrap(), Machine::paper());
         assert_eq!(c.run_params().unwrap().tiles, 1);
+        assert_eq!(c.run_params().unwrap().decomp, DecompKind::Auto);
+    }
+
+    #[test]
+    fn decomp_kind_parses_and_rejects() {
+        let c = Config::parse("[run]\ndecomp = \"pencil\"\n").unwrap();
+        assert_eq!(c.run_params().unwrap().decomp, DecompKind::Pencil);
+        let c = Config::parse("[run]\ndecomp = \"diagonal\"\n").unwrap();
+        assert!(c.run_params().is_err());
     }
 
     #[test]

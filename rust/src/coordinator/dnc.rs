@@ -7,50 +7,70 @@
 //! be designed where multiple CPU cores sharing the same last level cache
 //! can offload independent stencil tasks to the CGRAs."
 //!
-//! [`decompose`] splits the interior recursively (halving) until every
-//! leaf fits `max_width`, producing cache-friendly, fabric-sized subtasks
-//! in recursion order. [`HybridRunner`] executes a decomposition with
-//! `tiles` simulated-CGRA executors plus optional CPU executors that
-//! compute leftover strips natively — demonstrating the work-stealing
-//! behaviour of the shared queue.
+//! [`decompose`] splits the interior box recursively (halving the
+//! longest axis) until every leaf's output extent fits `max_extent`,
+//! producing cache-friendly, fabric-sized subtasks in recursion order.
+//! [`HybridRunner`] executes a decomposition with `tiles` simulated-CGRA
+//! executors plus optional CPU executors that compute leftover tiles
+//! natively — demonstrating the work-stealing behaviour of the shared
+//! queue.
 
 use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
-use anyhow::{ensure, Result};
+use anyhow::Result;
 
 use crate::cgra::Machine;
-use crate::stencil::blocking::Strip;
+use crate::stencil::decomp::Tile;
 use crate::stencil::StencilSpec;
 use crate::verify::golden::{run_sim, stencil_ref};
 
-/// Recursively split the output interval `[rx, nx-rx)` until each leaf is
-/// at most `max_width` wide. Leaves carry `rx`-wide halos like
-/// [`crate::stencil::blocking::strips_for_width`], but boundaries follow
-/// the recursion (power-of-two-ish), which is what keeps the CPU-side
-/// working sets nested inside shared caches (§IV).
-pub fn decompose(spec: &StencilSpec, max_width: usize) -> Vec<Strip> {
-    fn rec(lo: usize, hi: usize, rx: usize, max_width: usize, out: &mut Vec<Strip>) {
-        if hi - lo <= max_width {
-            out.push(Strip {
-                out_lo: lo,
-                out_hi: hi,
-                in_lo: lo - rx,
-                in_hi: hi + rx,
-            });
-        } else {
-            let mid = lo + (hi - lo) / 2;
-            rec(lo, mid, rx, max_width, out);
-            rec(mid, hi, rx, max_width, out);
+/// Recursively bisect the interior box until every leaf's output extent
+/// along every axis is at most `max_extent`. Leaves carry radius-wide
+/// halos like [`crate::stencil::decomp::tiles_for_cuts`], but boundaries
+/// follow the recursion (power-of-two-ish), which is what keeps the
+/// CPU-side working sets nested inside shared caches (§IV).
+pub fn decompose(spec: &StencilSpec, max_extent: usize) -> Vec<Tile> {
+    fn rec(
+        lo: [usize; 3],
+        hi: [usize; 3],
+        r: [usize; 3],
+        max_extent: usize,
+        out: &mut Vec<Tile>,
+    ) {
+        // Split the longest axis still exceeding the leaf size.
+        let mut axis = None;
+        let mut best = max_extent;
+        for a in 0..3 {
+            if hi[a] - lo[a] > best {
+                best = hi[a] - lo[a];
+                axis = Some(a);
+            }
+        }
+        match axis {
+            None => out.push(Tile::with_halo(lo, hi, r)),
+            Some(a) => {
+                let mid = lo[a] + (hi[a] - lo[a]) / 2;
+                let mut first_hi = hi;
+                first_hi[a] = mid;
+                let mut second_lo = lo;
+                second_lo[a] = mid;
+                rec(lo, first_hi, r, max_extent, out);
+                rec(second_lo, hi, r, max_extent, out);
+            }
         }
     }
+    let r = [spec.rx, spec.ry, spec.rz];
+    let n = [spec.nx, spec.ny, spec.nz];
+    let lo = r;
+    let hi = [n[0] - r[0], n[1] - r[1], n[2] - r[2]];
     let mut out = Vec::new();
-    rec(spec.rx, spec.nx - spec.rx, spec.rx, max_width.max(1), &mut out);
+    rec(lo, hi, r, max_extent.max(1), &mut out);
     out
 }
 
-/// Which executor handled a strip.
+/// Which executor handled a tile task.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Executor {
     Cgra(usize),
@@ -85,19 +105,18 @@ impl HybridRunner {
         }
     }
 
-    /// Execute `strips` of a 2-D stencil; CGRA tiles simulate, CPU
-    /// workers compute natively. Both pull from the same queue (work
-    /// stealing); results merge identically.
+    /// Execute `tiles` of a stencil (any dimensionality); CGRA tiles
+    /// simulate, CPU workers compute natively. Both pull from the same
+    /// queue (work stealing); results merge identically.
     pub fn run(
         &self,
         spec: &StencilSpec,
         w: usize,
         input: &[f64],
-        strips: Vec<Strip>,
+        tiles: Vec<Tile>,
     ) -> Result<HybridReport> {
-        ensure!(!spec.is_1d(), "hybrid runner demonstrates the 2-D case");
-        let queue: Arc<Mutex<VecDeque<(usize, Strip)>>> =
-            Arc::new(Mutex::new(strips.iter().copied().enumerate().collect()));
+        let queue: Arc<Mutex<VecDeque<(usize, Tile)>>> =
+            Arc::new(Mutex::new(tiles.iter().copied().enumerate().collect()));
         let (tx, rx) = mpsc::channel();
         let mut handles = Vec::new();
 
@@ -110,11 +129,11 @@ impl HybridRunner {
             handles.push(std::thread::spawn(move || -> Result<()> {
                 loop {
                     let item = { queue.lock().unwrap().pop_front() };
-                    let Some((id, s)) = item else { break };
-                    let sub = spec.strip(s.in_lo, s.in_hi);
-                    let sub_in = extract(&spec, &input, &s);
+                    let Some((id, tile)) = item else { break };
+                    let sub = tile.sub_spec(&spec);
+                    let sub_in = tile.extract(&spec, &input);
                     let res = run_sim(&sub, w, &machine, &sub_in)?;
-                    tx.send((id, s, Executor::Cgra(t), res.output, res.stats.cycles))
+                    tx.send((id, tile, Executor::Cgra(t), res.output, res.stats.cycles))
                         .ok();
                 }
                 Ok(())
@@ -128,11 +147,11 @@ impl HybridRunner {
             handles.push(std::thread::spawn(move || -> Result<()> {
                 loop {
                     let item = { queue.lock().unwrap().pop_front() };
-                    let Some((id, s)) = item else { break };
-                    let sub = spec.strip(s.in_lo, s.in_hi);
-                    let sub_in = extract(&spec, &input, &s);
+                    let Some((id, tile)) = item else { break };
+                    let sub = tile.sub_spec(&spec);
+                    let sub_in = tile.extract(&spec, &input);
                     let out = stencil_ref(&sub_in, &sub);
-                    tx.send((id, s, Executor::Cpu(c), out, 0)).ok();
+                    tx.send((id, tile, Executor::Cpu(c), out, 0)).ok();
                 }
                 Ok(())
             }));
@@ -143,8 +162,8 @@ impl HybridRunner {
         let mut assignments = Vec::new();
         let mut tile_cycles = vec![0u64; self.tiles];
         let (mut cgra_strips, mut cpu_strips) = (0usize, 0usize);
-        for (id, s, exec, sub_out, cycles) in rx {
-            merge(spec, &mut output, &s, &sub_out);
+        for (id, tile, exec, sub_out, cycles) in rx {
+            tile.merge(spec, &mut output, &sub_out);
             match exec {
                 Executor::Cgra(t) => {
                     cgra_strips += 1;
@@ -168,22 +187,6 @@ impl HybridRunner {
     }
 }
 
-fn extract(spec: &StencilSpec, input: &[f64], s: &Strip) -> Vec<f64> {
-    let mut out = Vec::with_capacity(s.in_width() * spec.ny);
-    for row in 0..spec.ny {
-        out.extend_from_slice(&input[row * spec.nx + s.in_lo..row * spec.nx + s.in_hi]);
-    }
-    out
-}
-
-fn merge(spec: &StencilSpec, global: &mut [f64], s: &Strip, sub_out: &[f64]) {
-    let sub_nx = s.in_width();
-    for row in spec.ry..spec.ny - spec.ry {
-        let src = &sub_out[row * sub_nx + spec.rx..row * sub_nx + spec.rx + s.out_width()];
-        global[row * spec.nx + s.out_lo..row * spec.nx + s.out_hi].copy_from_slice(src);
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -193,15 +196,25 @@ mod tests {
     #[test]
     fn decompose_covers_interior_disjointly() {
         let spec = StencilSpec::paper_2d();
-        for mw in [50, 128, 936, 2000] {
-            let strips = decompose(&spec, mw);
-            assert_eq!(strips[0].out_lo, spec.rx);
-            assert_eq!(strips.last().unwrap().out_hi, spec.nx - spec.rx);
-            for p in strips.windows(2) {
-                assert_eq!(p[0].out_hi, p[1].out_lo);
+        for me in [50, 128, 936, 2000] {
+            let tiles = decompose(&spec, me);
+            assert_eq!(tiles[0].out_lo[0], spec.rx);
+            assert_eq!(tiles.last().unwrap().out_hi[0], spec.nx - spec.rx);
+            let total: usize = tiles.iter().map(|t| t.out_points()).sum();
+            assert_eq!(total, spec.interior_outputs(), "max_extent={me}");
+            for t in &tiles {
+                for a in 0..3 {
+                    assert!(t.out_extent(a) <= me);
+                }
             }
-            for s in &strips {
-                assert!(s.out_width() <= mw);
+            // Pairwise disjoint output boxes.
+            for (i, a) in tiles.iter().enumerate() {
+                for b in tiles.iter().skip(i + 1) {
+                    let overlap = (0..3).all(|ax| {
+                        a.out_lo[ax] < b.out_hi[ax] && b.out_lo[ax] < a.out_hi[ax]
+                    });
+                    assert!(!overlap, "leaves overlap");
+                }
             }
         }
     }
@@ -215,10 +228,20 @@ mod tests {
             crate::stencil::spec::y_taps(1),
         )
         .unwrap();
-        // Interior 96 with max 24 -> 4 leaves of 24.
-        let strips = decompose(&spec, 24);
-        assert_eq!(strips.len(), 4);
-        assert!(strips.iter().all(|s| s.out_width() == 24));
+        // Interior 96 x 10 with max 24 -> x splits into 4, y untouched.
+        let tiles = decompose(&spec, 24);
+        assert_eq!(tiles.len(), 4);
+        assert!(tiles.iter().all(|t| t.out_extent(0) == 24));
+        assert!(tiles.iter().all(|t| t.out_extent(1) == 10));
+    }
+
+    #[test]
+    fn decompose_splits_all_axes_of_a_volume() {
+        let spec = StencilSpec::heat3d(20, 20, 20, 0.1); // interior 18^3
+        let tiles = decompose(&spec, 9);
+        assert_eq!(tiles.len(), 8, "each axis halves once");
+        let total: usize = tiles.iter().map(|t| t.out_points()).sum();
+        assert_eq!(total, spec.interior_outputs());
     }
 
     #[test]
@@ -226,14 +249,28 @@ mod tests {
         let spec = StencilSpec::heat2d(60, 14, 0.2);
         let mut rng = XorShift::new(0xFACE);
         let x = rng.normal_vec(60 * 14);
-        let strips = decompose(&spec, 8); // 8 leaves -> contention
+        let tiles = decompose(&spec, 8); // many leaves -> contention
+        let n_tiles = tiles.len();
+        assert!(n_tiles >= 8);
         let runner = HybridRunner::new(2, 2, Machine::paper());
-        let rep = runner.run(&spec, 2, &x, strips).unwrap();
+        let rep = runner.run(&spec, 2, &x, tiles).unwrap();
         let want = stencil_ref(&x, &spec);
         assert!(max_abs_diff(&rep.output, &want) < 1e-11);
         assert_eq!(rep.cgra_strips + rep.cpu_strips, rep.assignments.len());
         // With a slow simulator and fast CPU oracle both should get work;
         // at minimum the counts must be consistent.
-        assert!(rep.cgra_strips + rep.cpu_strips >= 8);
+        assert_eq!(rep.cgra_strips + rep.cpu_strips, n_tiles);
+    }
+
+    #[test]
+    fn hybrid_run_covers_3d_volumes() {
+        let spec = StencilSpec::heat3d(12, 9, 7, 0.1);
+        let mut rng = XorShift::new(0xB10C);
+        let x = rng.normal_vec(12 * 9 * 7);
+        let tiles = decompose(&spec, 5);
+        let runner = HybridRunner::new(1, 1, Machine::paper());
+        let rep = runner.run(&spec, 2, &x, tiles).unwrap();
+        let want = stencil_ref(&x, &spec);
+        assert!(max_abs_diff(&rep.output, &want) < 1e-11);
     }
 }

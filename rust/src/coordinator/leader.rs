@@ -1,42 +1,48 @@
-//! Leader/worker execution of strip tasks over simulated CGRA tiles.
+//! Leader/worker execution of tile tasks over simulated CGRA tiles.
 //!
-//! The leader strip-mines the stencil, pushes [`StripTask`]s into a
-//! shared queue, and spawns one OS thread per tile. Tiles pull greedily
-//! (natural load balancing — the same work-stealing effect §IV's hybrid
-//! algorithm relies on), simulate, and send results back over a channel.
-//! The leader merges interior outputs into the global grid and accounts
-//! per-tile cycles; the reported makespan is the slowest tile's total,
-//! which is what 16 parallel tiles would take on silicon.
+//! The leader decomposes the grid into halo-padded N-dim tiles
+//! ([`crate::stencil::decomp`]), pushes [`TileTask`]s into a shared
+//! queue, and spawns one OS thread per hardware tile. Tiles pull
+//! greedily (natural load balancing — the same work-stealing effect
+//! §IV's hybrid algorithm relies on), simulate, and send results back
+//! over a channel. The leader merges owned outputs into the global grid
+//! and accounts per-tile cycles; the reported makespan is the slowest
+//! tile's total, which is what 16 parallel tiles would take on silicon.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
 use anyhow::{ensure, Context, Result};
 
 use crate::cgra::stats::MemStats;
-use crate::cgra::Machine;
-use crate::stencil::blocking::{self, Strip};
-use crate::stencil::StencilSpec;
-use crate::verify::golden::run_sim;
+use crate::cgra::{Machine, Simulator};
+use crate::dfg::Graph;
+use crate::stencil::decomp::{self, DecompKind, DecompPlan, Tile};
+use crate::stencil::{build_graph, StencilSpec};
 
-/// One unit of work: a vertical strip of the global grid.
+/// One unit of work: a halo-padded tile of the global grid.
 #[derive(Debug, Clone)]
-pub struct StripTask {
+pub struct TileTask {
     pub id: usize,
-    pub strip: Strip,
-    /// Spec restricted to the strip's input columns.
-    pub spec: StencilSpec,
-    /// Contiguous copy of the strip's input columns (all rows).
+    pub tile: Tile,
+    /// Contiguous copy of the tile's input box.
     pub input: Vec<f64>,
+    /// Pre-built DFG for the tile's shape — shared by every tile with
+    /// the same input extents (the graph depends only on dims and `w`,
+    /// not the data), so a 16-pencil plan builds at most a few graphs.
+    pub graph: Arc<Graph>,
 }
 
-/// Per-tile accounting.
+/// Per-hardware-tile accounting.
 #[derive(Debug, Clone, Default)]
 pub struct TileReport {
+    /// Tile tasks executed on this hardware tile.
     pub strips: usize,
-    /// Sum of simulated cycles over this tile's strips.
+    /// Sum of simulated cycles over this tile's tasks.
     pub cycles: u64,
+    /// Halo points this tile loaded beyond the outputs it owned.
+    pub halo_points: u64,
     pub mem: MemStats,
 }
 
@@ -44,7 +50,16 @@ pub struct TileReport {
 #[derive(Debug, Clone)]
 pub struct RunReport {
     pub output: Vec<f64>,
+    /// Number of tile tasks the decomposition produced.
     pub strips: usize,
+    /// Resolved decomposition strategy.
+    pub kind: DecompKind,
+    /// Cuts per axis, `[x, y, z]`.
+    pub cuts: [usize; 3],
+    /// Total halo points loaded across tasks (redundant-load overhead).
+    pub halo_points: u64,
+    /// Fraction of the grid read more than once because of halo overlap.
+    pub redundant_read_fraction: f64,
     /// Slowest tile's total cycles — the parallel makespan.
     pub makespan_cycles: u64,
     /// Sum of cycles across tiles (serial-equivalent work).
@@ -62,8 +77,10 @@ pub struct RunReport {
 pub struct Coordinator {
     pub machine: Machine,
     pub tiles: usize,
-    /// On-fabric token budget per tile (drives strip mining).
+    /// On-fabric token budget per tile (drives the decomposition).
     pub fabric_tokens: usize,
+    /// Cut strategy ([`DecompKind::Auto`] picks per dimensionality).
+    pub decomp: DecompKind,
 }
 
 impl Coordinator {
@@ -71,7 +88,8 @@ impl Coordinator {
         Self {
             machine,
             tiles,
-            fabric_tokens: blocking::DEFAULT_FABRIC_TOKENS,
+            fabric_tokens: decomp::DEFAULT_FABRIC_TOKENS,
+            decomp: DecompKind::Auto,
         }
     }
 
@@ -80,37 +98,54 @@ impl Coordinator {
         Self::new(16, Machine::paper())
     }
 
-    /// Plan strips: enough to feed every tile, narrow enough to fit the
-    /// fabric budget.
-    pub fn plan_strips(&self, spec: &StencilSpec, w: usize) -> Result<Vec<Strip>> {
-        let interior = spec.nx - 2 * spec.rx;
-        let per_tile = interior.div_ceil(self.tiles).max(1);
-        let width = if spec.is_1d() {
-            per_tile
-        } else {
-            let (fit, _) = blocking::plan(spec, w, self.fabric_tokens)?;
-            per_tile.min(fit)
-        };
-        Ok(blocking::strips_for_width(spec, width))
+    /// Override the cut strategy (builder style).
+    pub fn with_decomp(mut self, kind: DecompKind) -> Self {
+        self.decomp = kind;
+        self
     }
 
-    fn extract_strip(spec: &StencilSpec, input: &[f64], s: &Strip) -> Vec<f64> {
-        let nx = spec.nx;
-        let w = s.in_width();
-        let mut out = Vec::with_capacity(w * spec.ny);
-        for row in 0..spec.ny {
-            out.extend_from_slice(&input[row * nx + s.in_lo..row * nx + s.in_hi]);
+    /// Plan the decomposition: enough tiles to feed the array, each
+    /// small enough to fit the per-tile fabric budget.
+    pub fn plan(&self, spec: &StencilSpec, w: usize) -> Result<DecompPlan> {
+        decomp::plan(spec, w, self.fabric_tokens, self.decomp, self.tiles)
+    }
+
+    /// One DFG per distinct tile shape in the plan: same-extent tiles
+    /// share it (cloned only at simulator construction).
+    fn build_graphs(
+        &self,
+        spec: &StencilSpec,
+        w: usize,
+        plan: &DecompPlan,
+    ) -> Result<HashMap<[usize; 3], Arc<Graph>>> {
+        let mut graphs: HashMap<[usize; 3], Arc<Graph>> = HashMap::new();
+        for t in &plan.tiles {
+            let dims = [t.in_extent(0), t.in_extent(1), t.in_extent(2)];
+            if !graphs.contains_key(&dims) {
+                graphs.insert(dims, Arc::new(build_graph(&t.sub_spec(spec), w)?));
+            }
         }
-        out
+        Ok(graphs)
     }
 
-    /// Run one stencil application across the tile array.
+    /// Run one stencil application across the tile array. Supports any
+    /// spec `build_graph` supports: 1-D, 2-D and 3-D, star or box.
     pub fn run(&self, spec: &StencilSpec, w: usize, input: &[f64]) -> Result<RunReport> {
-        ensure!(
-            !spec.is_3d(),
-            "coordinator strip-mining covers 1-D/2-D grids; run 3-D specs \
-             through verify::golden::run_sim (see ROADMAP open items)"
-        );
+        let plan = self.plan(spec, w)?;
+        let graphs = self.build_graphs(spec, w, &plan)?;
+        self.run_planned(spec, input, &plan, &graphs)
+    }
+
+    /// Execute a pre-planned decomposition with pre-built graphs — the
+    /// shared core of [`Self::run`] and [`Self::run_steps`] (which plans
+    /// and maps once across all steps).
+    fn run_planned(
+        &self,
+        spec: &StencilSpec,
+        input: &[f64],
+        plan: &DecompPlan,
+        graphs: &HashMap<[usize; 3], Arc<Graph>>,
+    ) -> Result<RunReport> {
         ensure!(
             input.len() == spec.grid_points(),
             "input length {} != grid {}",
@@ -118,15 +153,17 @@ impl Coordinator {
             spec.grid_points()
         );
         let t0 = std::time::Instant::now();
-        let strips = self.plan_strips(spec, w)?;
-        let tasks: VecDeque<StripTask> = strips
+        let tasks: VecDeque<TileTask> = plan
+            .tiles
             .iter()
             .enumerate()
-            .map(|(id, s)| StripTask {
+            .map(|(id, t)| TileTask {
                 id,
-                strip: *s,
-                spec: spec.strip(s.in_lo, s.in_hi),
-                input: Self::extract_strip(spec, input, s),
+                tile: *t,
+                input: t.extract(spec, input),
+                graph: Arc::clone(
+                    &graphs[&[t.in_extent(0), t.in_extent(1), t.in_extent(2)]],
+                ),
             })
             .collect();
         let n_tasks = tasks.len();
@@ -138,50 +175,42 @@ impl Coordinator {
             let queue = Arc::clone(&queue);
             let tx = tx.clone();
             let machine = self.machine.clone();
-            let w = w;
             handles.push(std::thread::spawn(move || -> Result<()> {
                 loop {
                     let task = { queue.lock().unwrap().pop_front() };
                     let Some(task) = task else { break };
-                    let res = run_sim(&task.spec, w, &machine, &task.input)
-                        .with_context(|| format!("strip {}", task.id))?;
-                    tx.send((tile_id, task.id, task.strip, res)).ok();
+                    let res = Simulator::build(
+                        task.graph.as_ref().clone(),
+                        &machine,
+                        task.input.clone(),
+                        task.input,
+                    )
+                    .and_then(|sim| sim.run())
+                    .with_context(|| format!("tile task {}", task.id))?;
+                    tx.send((tile_id, task.tile, res)).ok();
                 }
                 Ok(())
             }));
         }
         drop(tx);
 
-        // Merge interiors into the global output (boundary = input copy).
+        // Merge owned outputs into the global grid (boundary = input copy).
         let mut output = input.to_vec();
         let mut per_tile = vec![TileReport::default(); self.tiles];
         let mut received = 0;
-        for (tile_id, _task_id, strip, res) in rx {
-            let sub_nx = strip.in_width();
-            let rx_ = spec.rx;
-            let ry = spec.ry;
-            for row in ry..spec.ny.saturating_sub(ry).max(ry) {
-                let src = &res.output[row * sub_nx + rx_..row * sub_nx + rx_ + strip.out_width()];
-                output[row * spec.nx + strip.out_lo..row * spec.nx + strip.out_hi]
-                    .copy_from_slice(src);
-            }
+        for (tile_id, tile, res) in rx {
+            tile.merge(spec, &mut output, &res.output);
             let rep = &mut per_tile[tile_id];
             rep.strips += 1;
             rep.cycles += res.stats.cycles;
-            rep.mem.loads += res.stats.mem.loads;
-            rep.mem.stores += res.stats.mem.stores;
-            rep.mem.hits += res.stats.mem.hits;
-            rep.mem.misses += res.stats.mem.misses;
-            rep.mem.merged += res.stats.mem.merged;
-            rep.mem.conflict_misses += res.stats.mem.conflict_misses;
-            rep.mem.dram_read_bytes += res.stats.mem.dram_read_bytes;
-            rep.mem.dram_write_bytes += res.stats.mem.dram_write_bytes;
+            rep.halo_points += tile.halo_points() as u64;
+            rep.mem.accumulate(&res.stats.mem);
             received += 1;
         }
         for h in handles {
             h.join().expect("tile thread panicked")?;
         }
-        ensure!(received == n_tasks, "lost strip results: {received}/{n_tasks}");
+        ensure!(received == n_tasks, "lost tile results: {received}/{n_tasks}");
 
         // Exact FLOP count from the spec (MUL = 1, MAC = 2 per output).
         let total_flops = spec.total_flops();
@@ -196,6 +225,10 @@ impl Coordinator {
         Ok(RunReport {
             output,
             strips: n_tasks,
+            kind: plan.kind,
+            cuts: plan.cuts,
+            halo_points: plan.halo_points() as u64,
+            redundant_read_fraction: plan.redundant_read_fraction(spec),
             makespan_cycles: makespan,
             total_cycles,
             total_flops,
@@ -206,7 +239,11 @@ impl Coordinator {
     }
 
     /// Host-driven multi-step run (the paper's single-time-step use-case
-    /// iterated by the host, with buffer swap between steps).
+    /// iterated by the host). The decomposition is planned and the tile
+    /// DFGs are built once for all steps (they depend only on the spec
+    /// and `w`, not the data), and each step reads the previous report's
+    /// output in place — no per-step copy of the grid; the returned
+    /// final grid is the only whole-grid copy made here.
     pub fn run_steps(
         &self,
         spec: &StencilSpec,
@@ -214,13 +251,20 @@ impl Coordinator {
         input: &[f64],
         steps: usize,
     ) -> Result<(Vec<f64>, Vec<RunReport>)> {
-        let mut grid = input.to_vec();
-        let mut reports = Vec::with_capacity(steps);
+        let plan = self.plan(spec, w)?;
+        let graphs = self.build_graphs(spec, w, &plan)?;
+        let mut reports: Vec<RunReport> = Vec::with_capacity(steps);
         for _ in 0..steps {
-            let rep = self.run(spec, w, &grid)?;
-            grid = rep.output.clone();
+            let rep = match reports.last() {
+                None => self.run_planned(spec, input, &plan, &graphs)?,
+                Some(prev) => self.run_planned(spec, &prev.output, &plan, &graphs)?,
+            };
             reports.push(rep);
         }
+        let grid = match reports.last() {
+            Some(last) => last.output.clone(),
+            None => input.to_vec(),
+        };
         Ok((grid, reports))
     }
 }
@@ -229,7 +273,7 @@ impl Coordinator {
 mod tests {
     use super::*;
     use crate::util::rng::XorShift;
-    use crate::verify::golden::{max_abs_diff, stencil1d_ref, stencil2d_ref};
+    use crate::verify::golden::{max_abs_diff, stencil1d_ref, stencil2d_ref, stencil_ref};
 
     #[test]
     fn multitile_2d_matches_oracle() {
@@ -245,9 +289,12 @@ mod tests {
         let coord = Coordinator::new(4, Machine::paper());
         let rep = coord.run(&spec, 2, &x).unwrap();
         assert!(rep.strips >= 4);
+        assert_eq!(rep.kind, DecompKind::Slab);
+        assert!(rep.halo_points > 0, "multi-tile runs re-read halos");
+        assert!(rep.redundant_read_fraction > 0.0);
         let want = stencil2d_ref(&x, &spec);
         assert!(max_abs_diff(&rep.output, &want) < 1e-11);
-        // All strips landed on some tile (pull-based balancing may let a
+        // All tasks landed on some tile (pull-based balancing may let a
         // fast tile take most of a small queue, so >=1 tile is the only
         // portable claim).
         let used = rep.per_tile.iter().filter(|t| t.strips > 0).count();
@@ -255,6 +302,10 @@ mod tests {
         assert_eq!(
             rep.per_tile.iter().map(|t| t.strips).sum::<usize>(),
             rep.strips
+        );
+        assert_eq!(
+            rep.per_tile.iter().map(|t| t.halo_points).sum::<u64>(),
+            rep.halo_points
         );
     }
 
@@ -266,6 +317,18 @@ mod tests {
         let coord = Coordinator::new(3, Machine::paper());
         let rep = coord.run(&spec, 2, &x).unwrap();
         let want = stencil1d_ref(&x, &spec.cx);
+        assert!(max_abs_diff(&rep.output, &want) < 1e-11);
+    }
+
+    #[test]
+    fn multitile_3d_matches_oracle() {
+        let spec = StencilSpec::heat3d(12, 10, 8, 0.1);
+        let mut rng = XorShift::new(0x3D0);
+        let x = rng.normal_vec(12 * 10 * 8);
+        let coord = Coordinator::new(4, Machine::paper());
+        let rep = coord.run(&spec, 2, &x).unwrap();
+        assert!(rep.strips > 1, "3-D grids decompose multi-tile now");
+        let want = stencil_ref(&x, &spec);
         assert!(max_abs_diff(&rep.output, &want) < 1e-11);
     }
 
@@ -288,6 +351,9 @@ mod tests {
         let coord = Coordinator::new(2, Machine::paper());
         let (out, reports) = coord.run_steps(&spec, 2, &x, 3).unwrap();
         assert_eq!(reports.len(), 3);
+        // Every step's report keeps its own output (the residual-curve
+        // contract the examples rely on).
+        assert_eq!(reports[2].output, out);
         let mut want = x.clone();
         for _ in 0..3 {
             want = stencil2d_ref(&want, &spec);
@@ -302,6 +368,7 @@ mod tests {
         let coord = Coordinator::new(1, Machine::paper());
         let rep = coord.run(&spec, 1, &x).unwrap();
         assert_eq!(rep.per_tile[0].strips, rep.strips);
+        assert_eq!(rep.halo_points, 0, "one tile loads no halo");
     }
 
     #[test]

@@ -3,14 +3,17 @@
 //! Table I compares 16 CGRA tiles against one V100 ("16 CGRA units should
 //! occupy the same chip area"). The paper extrapolates a single-tile
 //! simulation x16; this coordinator instead *actually runs* the 16 tiles:
-//! the grid is strip-mined (§III-B blocking), strips become tasks in a
-//! shared work queue, and one worker thread per tile pulls tasks, builds
-//! the strip's DFG, simulates it and returns the outputs to the leader,
-//! which stitches the global grid. Each tile has its own 100 GB/s channel
-//! (aggregate 1600 GB/s, the Table-I assumption).
+//! the grid is decomposed into halo-padded N-dim tiles
+//! ([`crate::stencil::decomp`] — slab/pencil/block cuts for 1-D, 2-D and
+//! 3-D grids), tiles become tasks in a shared work queue, and one worker
+//! thread per hardware tile pulls tasks, builds the sub-grid's DFG,
+//! simulates it and returns the outputs to the leader, which stitches
+//! the global grid. Each tile has its own 100 GB/s channel (aggregate
+//! 1600 GB/s, the Table-I assumption); halo re-reads between neighboring
+//! tiles are the decomposition's overhead and are accounted per run.
 //!
 //! * [`leader`] — the leader/worker engine: work queue, tile threads,
-//!   result merge, per-tile cycle accounting.
+//!   result merge, per-tile cycle and halo accounting.
 //! * [`dnc`] — §IV's recursive divide-and-conquer decomposition and the
 //!   hybrid CPU+CGRA execution mode.
 

@@ -110,6 +110,16 @@ impl GpuStencil {
             / (2.0 * self.grid_points() * self.precision.bytes())
     }
 
+    /// Arithmetic intensity when a fraction `redundant` of the grid is
+    /// re-read (the halo re-loads of a tile-decomposed run): read
+    /// `1 + redundant` grids, write one. Used to compare the GPU model
+    /// like-for-like against a decomposed CGRA array, whose
+    /// `RunReport::redundant_read_fraction` reports the same quantity.
+    pub fn arithmetic_intensity_with_redundancy(&self, redundant: f64) -> f64 {
+        self.flops_per_output() * self.interior_outputs()
+            / ((2.0 + redundant) * self.grid_points() * self.precision.bytes())
+    }
+
     /// The GPU-side descriptor for the same workload as a CGRA spec —
     /// any dimensionality, star or box.
     pub fn from_spec(s: &StencilSpec, p: Precision) -> Self {
@@ -147,6 +157,17 @@ mod tests {
     fn taps_3d() {
         let s = GpuStencil::d3([384, 384, 384], 8, Precision::F32);
         assert_eq!(s.taps(), 17 + 16 + 16);
+    }
+
+    #[test]
+    fn redundancy_deflates_intensity() {
+        let g = GpuStencil::d2(960, 449, 12, 12, Precision::F64);
+        assert!(
+            (g.arithmetic_intensity_with_redundancy(0.0) - g.arithmetic_intensity())
+                .abs()
+                < 1e-12
+        );
+        assert!(g.arithmetic_intensity_with_redundancy(0.5) < g.arithmetic_intensity());
     }
 
     #[test]

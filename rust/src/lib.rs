@@ -36,17 +36,22 @@
 //!
 //! * [`dfg`] — the dataflow-graph IR and the §V DSL builder that emits
 //!   high-level assembly and Graphviz dot.
-//! * [`stencil`] — the mappings above plus §III-B blocking (strip
-//!   mining) and the §IV temporal (multi-time-step) pipeline.
+//! * [`stencil`] — the mappings above plus [`stencil::decomp`], the
+//!   N-dim tile-decomposition subsystem (slab/pencil/block cuts with
+//!   per-axis halos, budget-checked against the §III-B capacity math),
+//!   and the §IV temporal (multi-time-step) pipeline.
 //! * [`cgra`] — a functional + timing cycle simulator of the target
 //!   triggered-instruction CGRA (PEs, bounded channels, mesh placement,
 //!   scratchpad, cache and a bandwidth-limited DRAM channel).
 //! * [`roofline`] — the §VI roofline model and worker-count optimizer,
-//!   shape-aware through the spec's arithmetic-intensity math.
+//!   shape-aware through the spec's arithmetic-intensity math, plus the
+//!   halo-adjusted multi-tile view ([`roofline::analyze_tiled`]).
 //! * [`gpu_model`] — the §VII analytical NVIDIA V100 baseline, covering
 //!   the paper's 1-D/2-D/3-D anchors and the box-window extension.
 //! * [`coordinator`] — the L3 runtime: a 16-tile leader/worker manager
-//!   with §IV divide-and-conquer task decomposition (1-D/2-D grids).
+//!   executing decomposed tiles of any dimensionality, with §IV
+//!   divide-and-conquer task generation and halo/redundant-load
+//!   accounting per run.
 //! * [`runtime`] — the artifact runtime: reads `artifacts/manifest.txt`
 //!   and executes each named kernel with a native interpreter backed by
 //!   the golden oracles (the PJRT/XLA path is an offline substitution;
@@ -59,12 +64,13 @@
 //! ## Quick start
 //!
 //! ```text
-//! scgra run --shape star --dims 48,32,24 --radii 2,2,2 --workers 4
+//! scgra run --shape star --dims 48,32,24 --radii 2,2,2 --tiles 16 --decomp pencil
 //! ```
 //!
-//! maps a 13-point 3-D star onto the fabric via plane buffering,
-//! simulates it cycle-by-cycle, reports achieved GFLOPS against the
-//! roofline and checks the output against the oracle. See
+//! pencil-decomposes a 13-point 3-D star across 16 simulated CGRA
+//! tiles (plane buffering per pencil), simulates them cycle-by-cycle,
+//! reports achieved GFLOPS and halo overhead against the roofline and
+//! checks the stitched output against the oracle. See
 //! `examples/acoustic_3d.rs` for the library-level version.
 
 pub mod cgra;

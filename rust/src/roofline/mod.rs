@@ -12,6 +12,8 @@
 //! the MAC budget (`#MACs / points` workers fit).
 
 use crate::cgra::Machine;
+use crate::stencil::decomp::DecompPlan;
+use crate::stencil::spec::BYTES_PER_POINT;
 use crate::stencil::StencilSpec;
 
 /// One point of the roofline analysis for a given stencil + machine.
@@ -64,6 +66,54 @@ pub fn analyze(spec: &StencilSpec, m: &Machine, w: usize) -> Analysis {
         demand_gflops: w as f64 * worker_demand_gflops(spec, m),
         workers: w,
         max_workers: max_workers(spec, m),
+    }
+}
+
+/// Roofline view of a decomposed multi-tile run: halo re-reads inflate
+/// DRAM traffic, deflating the effective arithmetic intensity — and with
+/// it the per-tile bandwidth roof — relative to the whole-grid
+/// [`Analysis`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct TiledAnalysis {
+    /// Whole-grid (halo-free) analysis.
+    pub base: Analysis,
+    /// Tile tasks in the plan.
+    pub tasks: usize,
+    /// Points loaded but not owned, summed over tiles.
+    pub halo_points: usize,
+    /// Fraction of the grid read more than once (`Σ inputs / grid - 1`).
+    pub redundant_read_fraction: f64,
+    /// Arithmetic intensity with halo re-reads accounted.
+    pub effective_ai: f64,
+    /// Attainable GFLOPS of one tile at the effective intensity.
+    pub attainable_gflops_tile: f64,
+    /// Attainable GFLOPS of the whole array (`array_tiles` x tile roof).
+    pub attainable_gflops_array: f64,
+}
+
+/// §VI analysis of a [`DecompPlan`] on an `array_tiles`-tile array:
+/// the redundant halo loads are charged against the bandwidth roof.
+pub fn analyze_tiled(
+    spec: &StencilSpec,
+    m: &Machine,
+    w: usize,
+    plan: &DecompPlan,
+    array_tiles: usize,
+) -> TiledAnalysis {
+    let base = analyze(spec, m, w);
+    let redundant = plan.redundant_read_fraction(spec);
+    // Read the grid (1 + redundant) times, write it once.
+    let bytes = (2.0 + redundant) * spec.grid_points() as f64 * BYTES_PER_POINT;
+    let effective_ai = spec.total_flops() / bytes;
+    let tile_roof = m.roofline_gflops(effective_ai);
+    TiledAnalysis {
+        base,
+        tasks: plan.tiles.len(),
+        halo_points: plan.halo_points(),
+        redundant_read_fraction: redundant,
+        effective_ai,
+        attainable_gflops_tile: tile_roof,
+        attainable_gflops_array: array_tiles as f64 * tile_roof,
     }
 }
 
@@ -141,6 +191,38 @@ mod tests {
         let spec = StencilSpec::dim1(64, vec![0.2, 0.2, 0.2]).unwrap();
         let m = Machine::paper();
         assert!(optimal_workers(&spec, &m) >= 1);
+    }
+
+    #[test]
+    fn tiled_analysis_charges_halo_rereads() {
+        use crate::stencil::decomp::{self, DecompKind};
+        let spec = StencilSpec::heat3d(24, 20, 16, 0.1);
+        let m = Machine::paper();
+        let w = 2;
+        let single =
+            decomp::plan(&spec, w, decomp::DEFAULT_FABRIC_TOKENS, DecompKind::Auto, 1)
+                .unwrap();
+        let one = analyze_tiled(&spec, &m, w, &single, 1);
+        assert_eq!(one.tasks, 1);
+        assert_eq!(one.halo_points, 0);
+        assert!((one.effective_ai - one.base.arithmetic_intensity).abs() < 1e-12);
+
+        let multi =
+            decomp::plan(&spec, w, decomp::DEFAULT_FABRIC_TOKENS, DecompKind::Pencil, 16)
+                .unwrap();
+        let sixteen = analyze_tiled(&spec, &m, w, &multi, 16);
+        assert!(sixteen.tasks >= 16);
+        assert!(sixteen.halo_points > 0);
+        assert!(sixteen.redundant_read_fraction > 0.0);
+        assert!(sixteen.effective_ai < sixteen.base.arithmetic_intensity);
+        // The array roof still dwarfs one tile's.
+        assert!(sixteen.attainable_gflops_array > sixteen.attainable_gflops_tile);
+        assert!(
+            (sixteen.attainable_gflops_array
+                - 16.0 * sixteen.attainable_gflops_tile)
+                .abs()
+                < 1e-9
+        );
     }
 
     #[test]

@@ -1,0 +1,636 @@
+//! N-dimensional tile decomposition — the multi-tile partitioning layer
+//! (§IV / §VIII-A).
+//!
+//! The §III-B strip miner only knew x-axis vertical strips; this module
+//! generalizes it to axis-aligned [`Tile`]s with per-axis halos so 1-D,
+//! 2-D and 3-D grids (star or box) all decompose onto the tile array.
+//! A [`DecompPlan`] picks the cut axes per [`DecompKind`]:
+//!
+//! * **Slab** — one cut axis: x strips in 1-D/2-D (the legacy §III-B
+//!   blocking unit), z planes in 3-D.
+//! * **Pencil** — two cut axes: x+y in 2-D; y+z in 3-D, keeping the
+//!   row-major x axis contiguous (the classic pencil decomposition).
+//! * **Block** — every axis.
+//! * **Auto** — the coarsest kind that both fits the per-tile token
+//!   budget and yields enough tiles to feed the array.
+//!
+//! Per-tile on-fabric buffering is checked against the §III-B /
+//! plane-buffering capacity math ([`required_tokens`] dispatches to the
+//! `map2d`/`map3d` formulas), binary-searching the cut count along the
+//! buffer-relevant axes: an x cut shrinks every row the delay lines
+//! hold; a y cut additionally shrinks the 3-D plane-buffer depth; z
+//! cuts never reduce buffering, only work. Tiles only share read-only
+//! halo input, so the coordinator executes them independently — halo
+//! re-reads are the price, accounted by
+//! [`DecompPlan::redundant_read_fraction`].
+
+use anyhow::{bail, ensure, Result};
+
+use super::map1d::tap_capacity_1d;
+use super::spec::StencilSpec;
+use super::{map2d, map3d};
+
+/// Default on-fabric token budget: 256 PEs with (paper §II-A) small
+/// input/output queues plus scratchpad-backed spill — sized so the
+/// Table-I 2-D workload (960 cols, rx=ry=12, w=5) runs without strip
+/// mining, matching the paper's single-CGRA simulation.
+pub const DEFAULT_FABRIC_TOKENS: usize = 64 * 1024;
+
+/// Cut strategy of a decomposition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecompKind {
+    /// One cut axis (x in 1-D/2-D, z in 3-D).
+    Slab,
+    /// Two cut axes (x+y in 2-D, y+z in 3-D).
+    Pencil,
+    /// Every grid axis.
+    Block,
+    /// Coarsest kind that fits the budget and feeds the array.
+    Auto,
+}
+
+impl DecompKind {
+    /// Parse a CLI/config value (`slab|pencil|block|auto`).
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "slab" => DecompKind::Slab,
+            "pencil" => DecompKind::Pencil,
+            "block" => DecompKind::Block,
+            "auto" => DecompKind::Auto,
+            other => bail!("unknown decomposition `{other}` (slab|pencil|block|auto)"),
+        })
+    }
+}
+
+impl std::fmt::Display for DecompKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // `pad` (not `write_str`) so callers' width/alignment apply.
+        f.pad(match self {
+            DecompKind::Slab => "slab",
+            DecompKind::Pencil => "pencil",
+            DecompKind::Block => "block",
+            DecompKind::Auto => "auto",
+        })
+    }
+}
+
+/// One axis-aligned block of the decomposition, in `[x, y, z]` order:
+/// the tile owns the output box `[out_lo, out_hi)` of the global grid
+/// and computes it from the input box `[in_lo, in_hi)` (halo included;
+/// `in = out` widened by the stencil radius along every axis). Unused
+/// axes carry extent 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tile {
+    pub out_lo: [usize; 3],
+    pub out_hi: [usize; 3],
+    pub in_lo: [usize; 3],
+    pub in_hi: [usize; 3],
+}
+
+impl Tile {
+    /// Build a tile from its output box, widening by the radius `r`
+    /// along every axis for the input halo — the single point defining
+    /// the halo semantics every decomposition path shares.
+    pub fn with_halo(out_lo: [usize; 3], out_hi: [usize; 3], r: [usize; 3]) -> Self {
+        Self {
+            out_lo,
+            out_hi,
+            in_lo: [out_lo[0] - r[0], out_lo[1] - r[1], out_lo[2] - r[2]],
+            in_hi: [out_hi[0] + r[0], out_hi[1] + r[1], out_hi[2] + r[2]],
+        }
+    }
+
+    /// Output extent along `axis`.
+    pub fn out_extent(&self, axis: usize) -> usize {
+        self.out_hi[axis] - self.out_lo[axis]
+    }
+
+    /// Input (halo-padded) extent along `axis`.
+    pub fn in_extent(&self, axis: usize) -> usize {
+        self.in_hi[axis] - self.in_lo[axis]
+    }
+
+    /// Output points this tile owns.
+    pub fn out_points(&self) -> usize {
+        (0..3).map(|a| self.out_extent(a)).product()
+    }
+
+    /// Input points this tile reads (halo included).
+    pub fn in_points(&self) -> usize {
+        (0..3).map(|a| self.in_extent(a)).product()
+    }
+
+    /// Halo points: read but not owned (the redundant-load overhead of
+    /// executing the tile independently).
+    pub fn halo_points(&self) -> usize {
+        self.in_points() - self.out_points()
+    }
+
+    /// The spec restricted to this tile's input box; its interior is
+    /// exactly the tile's output box.
+    pub fn sub_spec(&self, spec: &StencilSpec) -> StencilSpec {
+        spec.restrict(self.in_lo, self.in_hi)
+    }
+
+    /// Strided copy of the tile's input box out of the global grid
+    /// (row-major x, then y, then z — the same layout as the grid).
+    pub fn extract(&self, spec: &StencilSpec, input: &[f64]) -> Vec<f64> {
+        let (nx, ny) = (spec.nx, spec.ny);
+        let width = self.in_extent(0);
+        let mut out = Vec::with_capacity(self.in_points());
+        for z in self.in_lo[2]..self.in_hi[2] {
+            for y in self.in_lo[1]..self.in_hi[1] {
+                let row = (z * ny + y) * nx + self.in_lo[0];
+                out.extend_from_slice(&input[row..row + width]);
+            }
+        }
+        out
+    }
+
+    /// Merge the tile's owned outputs from `sub_out` (a buffer shaped
+    /// like the tile's input box) back into the global grid.
+    pub fn merge(&self, spec: &StencilSpec, global: &mut [f64], sub_out: &[f64]) {
+        let (nx, ny) = (spec.nx, spec.ny);
+        let (sub_nx, sub_ny) = (self.in_extent(0), self.in_extent(1));
+        let ox = self.out_lo[0] - self.in_lo[0];
+        for z in self.out_lo[2]..self.out_hi[2] {
+            for y in self.out_lo[1]..self.out_hi[1] {
+                let src =
+                    ((z - self.in_lo[2]) * sub_ny + (y - self.in_lo[1])) * sub_nx + ox;
+                let dst = (z * ny + y) * nx;
+                global[dst + self.out_lo[0]..dst + self.out_hi[0]]
+                    .copy_from_slice(&sub_out[src..src + self.out_extent(0)]);
+            }
+        }
+    }
+}
+
+/// A chosen decomposition: the resolved cut strategy, the number of
+/// cuts per axis (`[x, y, z]`), and the tiles themselves (z-major
+/// order: z outermost, x innermost).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecompPlan {
+    /// Resolved kind — never [`DecompKind::Auto`].
+    pub kind: DecompKind,
+    /// Cuts per axis, `[x, y, z]`; the product is the tile count.
+    pub cuts: [usize; 3],
+    pub tiles: Vec<Tile>,
+}
+
+impl DecompPlan {
+    /// Total halo points across tiles (points loaded but not owned).
+    pub fn halo_points(&self) -> usize {
+        self.tiles.iter().map(|t| t.halo_points()).sum()
+    }
+
+    /// Total input points loaded across tiles (grid + halo overlap).
+    pub fn total_input_points(&self) -> usize {
+        self.tiles.iter().map(|t| t.in_points()).sum()
+    }
+
+    /// Fraction of the grid read more than once because of halo
+    /// overlap: `(Σ tile inputs - grid points) / grid points`. Zero for
+    /// a single tile.
+    pub fn redundant_read_fraction(&self, spec: &StencilSpec) -> f64 {
+        let grid = spec.grid_points() as f64;
+        (self.total_input_points() as f64 - grid) / grid
+    }
+}
+
+/// Mandatory on-fabric buffering (tokens) for `spec` with `w` workers,
+/// dispatched by dimensionality — the capacity math the budget search
+/// drives. 1-D has no delay lines, only the per-tap chain queues.
+pub fn required_tokens(spec: &StencilSpec, w: usize) -> usize {
+    if spec.is_3d() {
+        map3d::required_buffer_tokens(spec, w)
+    } else if spec.is_2d() {
+        map2d::required_buffer_tokens(spec, w)
+    } else {
+        w * (0..spec.points())
+            .map(|t| tap_capacity_1d(spec.rx, w, t))
+            .sum::<usize>()
+    }
+}
+
+/// Grid extents per axis, `[x, y, z]` (unused axes are 1).
+fn extents(spec: &StencilSpec) -> [usize; 3] {
+    [spec.nx, spec.ny, spec.nz]
+}
+
+/// Radii per axis, `[x, y, z]` (unused axes are 0).
+fn radii(spec: &StencilSpec) -> [usize; 3] {
+    [spec.rx, spec.ry, spec.rz]
+}
+
+/// Interior (computed-output) extents per axis; unused axes are 1.
+fn interiors(spec: &StencilSpec) -> [usize; 3] {
+    let (n, r) = (extents(spec), radii(spec));
+    [n[0] - 2 * r[0], n[1] - 2 * r[1], n[2] - 2 * r[2]]
+}
+
+/// Axes a kind may cut, for a grid of `ndim` dimensions.
+fn cut_axes(kind: DecompKind, ndim: usize) -> Vec<usize> {
+    match (kind, ndim) {
+        (DecompKind::Slab, 3) => vec![2],
+        (DecompKind::Pencil, 2) => vec![0, 1],
+        (DecompKind::Pencil, 3) => vec![1, 2],
+        (DecompKind::Block, 2) => vec![0, 1],
+        (DecompKind::Block, 3) => vec![0, 1, 2],
+        // 1-D has only x; Slab in 1-D/2-D cuts x (legacy strips).
+        _ => vec![0],
+    }
+}
+
+/// Maximum cuts per axis: x is limited so every worker keeps at least
+/// one output column per tile; y/z are limited by the interior width.
+fn axis_caps(spec: &StencilSpec, w: usize) -> [usize; 3] {
+    let i = interiors(spec);
+    [(i[0] / w.max(1)).max(1), i[1].max(1), i[2].max(1)]
+}
+
+/// Smallest `k` with `k^n >= x`.
+fn nth_root_ceil(x: usize, n: usize) -> usize {
+    if x <= 1 || n == 0 {
+        return 1;
+    }
+    let mut k = (x as f64).powf(1.0 / n as f64).round().max(1.0) as usize;
+    while k.pow(n as u32) < x {
+        k += 1;
+    }
+    while k > 1 && (k - 1).pow(n as u32) >= x {
+        k -= 1;
+    }
+    k
+}
+
+/// Cut the interior `[r, n - r)` of every axis into `cuts[a]` near-equal
+/// chunks and return the tiles (z-major order). `cuts` is clamped to
+/// `[1, interior]` per axis. The output boxes tile the interior exactly;
+/// input boxes widen by the radius along every axis.
+pub fn tiles_for_cuts(spec: &StencilSpec, cuts: [usize; 3]) -> Vec<Tile> {
+    let (n, r) = (extents(spec), radii(spec));
+    let mut ranges: [Vec<(usize, usize)>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+    for a in 0..3 {
+        let interior = n[a] - 2 * r[a];
+        let k = cuts[a].clamp(1, interior.max(1));
+        let (base, rem) = (interior / k, interior % k);
+        let mut lo = r[a];
+        for i in 0..k {
+            let len = base + usize::from(i < rem);
+            ranges[a].push((lo, lo + len));
+            lo += len;
+        }
+    }
+    let mut tiles =
+        Vec::with_capacity(ranges[0].len() * ranges[1].len() * ranges[2].len());
+    for &(zlo, zhi) in &ranges[2] {
+        for &(ylo, yhi) in &ranges[1] {
+            for &(xlo, xhi) in &ranges[0] {
+                tiles.push(Tile::with_halo([xlo, ylo, zlo], [xhi, yhi, zhi], r));
+            }
+        }
+    }
+    tiles
+}
+
+/// The largest (worst-buffering) tile a cut vector produces, as a
+/// restricted sub-spec — the shape the budget check simulates.
+fn worst_sub_spec(spec: &StencilSpec, cuts: [usize; 3]) -> StencilSpec {
+    let (r, i) = (radii(spec), interiors(spec));
+    let mut hi = [0usize; 3];
+    for a in 0..3 {
+        let k = cuts[a].clamp(1, i[a].max(1));
+        hi[a] = i[a].div_ceil(k) + 2 * r[a];
+    }
+    spec.restrict([0, 0, 0], hi)
+}
+
+fn fits(spec: &StencilSpec, w: usize, budget: usize, cuts: [usize; 3]) -> bool {
+    required_tokens(&worst_sub_spec(spec, cuts), w) <= budget
+}
+
+/// Plan a decomposition with a resolved (non-Auto) kind.
+fn plan_kind(
+    spec: &StencilSpec,
+    w: usize,
+    budget_tokens: usize,
+    kind: DecompKind,
+    tiles: usize,
+) -> Result<DecompPlan> {
+    let axes = cut_axes(kind, spec.ndim());
+    let caps = axis_caps(spec, w);
+
+    // Distribute the requested tile count across the cut axes,
+    // outermost axis first (z cuts are free of buffering cost).
+    let mut cuts = [1usize; 3];
+    let mut want = tiles.max(1);
+    let mut left = axes.len();
+    for &a in axes.iter().rev() {
+        cuts[a] = nth_root_ceil(want, left).clamp(1, caps[a]);
+        want = want.div_ceil(cuts[a]);
+        left -= 1;
+    }
+
+    // Budget: binary-search the smallest cut count that fits along the
+    // buffer-relevant axes (x shrinks delay-line rows; y shrinks the
+    // 3-D plane-buffer depth). Buffering is monotone in tile extent, so
+    // the search is sound.
+    let buffer_axes: Vec<usize> = axes
+        .iter()
+        .copied()
+        .filter(|&a| a == 0 || (a == 1 && spec.is_3d()))
+        .collect();
+    if !fits(spec, w, budget_tokens, cuts) {
+        for &a in &buffer_axes {
+            let with = |cuts: [usize; 3], v: usize| {
+                let mut c = cuts;
+                c[a] = v;
+                c
+            };
+            if !fits(spec, w, budget_tokens, with(cuts, caps[a])) {
+                // Even the finest cut along this axis is not enough on
+                // its own — saturate it and try the next axis.
+                cuts[a] = caps[a];
+                continue;
+            }
+            let (mut lo, mut hi) = (cuts[a], caps[a]);
+            while lo < hi {
+                let mid = (lo + hi) / 2;
+                if fits(spec, w, budget_tokens, with(cuts, mid)) {
+                    hi = mid;
+                } else {
+                    lo = mid + 1;
+                }
+            }
+            cuts[a] = lo;
+            break;
+        }
+    }
+    let hint = match kind {
+        DecompKind::Block => "fewer workers or a bigger fabric",
+        _ => "a finer --decomp (pencil/block), fewer workers, or a bigger fabric",
+    };
+    ensure!(
+        fits(spec, w, budget_tokens, cuts),
+        "even the finest {} decomposition exceeds the fabric budget of {} tokens \
+         (try {})",
+        kind,
+        budget_tokens,
+        hint
+    );
+
+    Ok(DecompPlan {
+        kind,
+        cuts,
+        tiles: tiles_for_cuts(spec, cuts),
+    })
+}
+
+/// Plan the decomposition of `spec` for a `tiles`-tile array whose
+/// per-tile on-fabric budget is `budget_tokens`, with `w` workers per
+/// tile. `Auto` resolves to the coarsest kind that fits the budget and
+/// yields at least `tiles` tiles (falling back to the best feasible
+/// kind when the grid is too small).
+pub fn plan(
+    spec: &StencilSpec,
+    w: usize,
+    budget_tokens: usize,
+    kind: DecompKind,
+    tiles: usize,
+) -> Result<DecompPlan> {
+    ensure!(w >= 1, "need at least one worker");
+    let (n, r) = (extents(spec), radii(spec));
+    for a in 0..spec.ndim() {
+        ensure!(
+            n[a] > 2 * r[a],
+            "decomposition needs a nonempty interior: axis {} has extent {} \
+             with stencil radius {}",
+            a,
+            n[a],
+            r[a]
+        );
+    }
+    match kind {
+        DecompKind::Auto => {
+            let mut best: Option<DecompPlan> = None;
+            let mut last_err = None;
+            for k in [DecompKind::Slab, DecompKind::Pencil, DecompKind::Block] {
+                match plan_kind(spec, w, budget_tokens, k, tiles) {
+                    Ok(p) => {
+                        if p.tiles.len() >= tiles.max(1) {
+                            return Ok(p);
+                        }
+                        // Not enough parallelism — remember the best
+                        // count seen and try a finer kind.
+                        let better = match &best {
+                            None => true,
+                            Some(b) => p.tiles.len() > b.tiles.len(),
+                        };
+                        if better {
+                            best = Some(p);
+                        }
+                    }
+                    Err(e) => last_err = Some(e),
+                }
+            }
+            match (best, last_err) {
+                (Some(p), _) => Ok(p),
+                (None, Some(e)) => Err(e),
+                (None, None) => bail!("no feasible decomposition"),
+            }
+        }
+        k => plan_kind(spec, w, budget_tokens, k, tiles),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::spec::{symmetric_taps, y_taps, z_taps};
+
+    fn spec3d(nx: usize, ny: usize, nz: usize) -> StencilSpec {
+        StencilSpec::dim3(nx, ny, nz, symmetric_taps(1), y_taps(1), z_taps(1)).unwrap()
+    }
+
+    #[test]
+    fn slab_tiles_partition_the_2d_interior_exactly() {
+        let spec = StencilSpec::paper_2d();
+        for k in [1usize, 3, 16, 936, 1000] {
+            let tiles = tiles_for_cuts(&spec, [k, 1, 1]);
+            assert_eq!(tiles[0].out_lo[0], spec.rx);
+            assert_eq!(tiles.last().unwrap().out_hi[0], spec.nx - spec.rx);
+            for w in tiles.windows(2) {
+                assert_eq!(w[0].out_hi[0], w[1].out_lo[0], "gap/overlap");
+            }
+            let total: usize = tiles.iter().map(|t| t.out_points()).sum();
+            assert_eq!(total, spec.interior_outputs(), "cuts={k}");
+            // Full extent along the uncut y axis: the whole interior.
+            for t in &tiles {
+                assert_eq!(t.out_lo[1], spec.ry);
+                assert_eq!(t.out_hi[1], spec.ny - spec.ry);
+                assert_eq!(t.in_lo[1], 0);
+                assert_eq!(t.in_hi[1], spec.ny);
+            }
+        }
+    }
+
+    #[test]
+    fn halos_extend_by_the_radius_on_every_axis() {
+        let spec = spec3d(14, 10, 8);
+        for t in tiles_for_cuts(&spec, [2, 2, 2]) {
+            for a in 0..3 {
+                assert_eq!(t.in_lo[a] + spec.radii()[a], t.out_lo[a]);
+                assert_eq!(t.in_hi[a] - spec.radii()[a], t.out_hi[a]);
+                assert!(t.in_hi[a] <= [spec.nx, spec.ny, spec.nz][a]);
+            }
+            assert!(t.halo_points() > 0);
+        }
+    }
+
+    #[test]
+    fn pencil_3d_tiles_cover_interior_disjointly() {
+        let spec = spec3d(12, 11, 9);
+        let plan = plan(&spec, 2, DEFAULT_FABRIC_TOKENS, DecompKind::Pencil, 6).unwrap();
+        assert_eq!(plan.cuts[0], 1, "pencil keeps x contiguous");
+        assert!(plan.tiles.len() >= 6);
+        let total: usize = plan.tiles.iter().map(|t| t.out_points()).sum();
+        assert_eq!(total, spec.interior_outputs());
+        // Pairwise disjoint output boxes.
+        for (i, a) in plan.tiles.iter().enumerate() {
+            for b in plan.tiles.iter().skip(i + 1) {
+                let overlap = (0..3).all(|ax| {
+                    a.out_lo[ax] < b.out_hi[ax] && b.out_lo[ax] < a.out_hi[ax]
+                });
+                assert!(!overlap, "tiles overlap");
+            }
+        }
+    }
+
+    #[test]
+    fn slab_3d_cuts_z_only() {
+        let spec = spec3d(10, 8, 12);
+        let plan = plan(&spec, 2, DEFAULT_FABRIC_TOKENS, DecompKind::Slab, 4).unwrap();
+        assert_eq!(plan.kind, DecompKind::Slab);
+        assert_eq!(plan.cuts[0], 1);
+        assert_eq!(plan.cuts[1], 1);
+        assert_eq!(plan.cuts[2], 4);
+        assert_eq!(plan.tiles.len(), 4);
+    }
+
+    #[test]
+    fn paper_2d_fits_default_budget_in_one_tile() {
+        let spec = StencilSpec::paper_2d();
+        let plan = plan(&spec, 5, DEFAULT_FABRIC_TOKENS, DecompKind::Slab, 1).unwrap();
+        assert_eq!(plan.cuts, [1, 1, 1], "no strip mining needed");
+        assert_eq!(plan.tiles.len(), 1);
+        assert_eq!(plan.halo_points(), 0);
+        assert_eq!(plan.redundant_read_fraction(&spec), 0.0);
+    }
+
+    #[test]
+    fn small_budget_forces_x_cuts_monotonically() {
+        let spec = StencilSpec::paper_2d();
+        // Full width needs ~37k tokens; 22k forces strip mining.
+        let p1 = plan(&spec, 5, 22_000, DecompKind::Slab, 1).unwrap();
+        assert!(p1.cuts[0] > 1);
+        let p2 = plan(&spec, 5, 17_000, DecompKind::Slab, 1).unwrap();
+        assert!(p2.cuts[0] >= p1.cuts[0], "smaller budget, finer cuts");
+        assert!(p1.redundant_read_fraction(&spec) > 0.0);
+    }
+
+    #[test]
+    fn budget_search_returns_coarsest_feasible_x_cut() {
+        let spec = StencilSpec::paper_2d();
+        let budget = 25_000;
+        let plan = plan(&spec, 5, budget, DecompKind::Slab, 1).unwrap();
+        let k = plan.cuts[0];
+        let interior = spec.nx - 2 * spec.rx;
+        let ext = |k: usize| interior.div_ceil(k) + 2 * spec.rx;
+        let sub = spec.restrict([0, 0, 0], [ext(k), spec.ny, 1]);
+        assert!(required_tokens(&sub, 5) <= budget);
+        if k > 1 {
+            let coarser = spec.restrict([0, 0, 0], [ext(k - 1), spec.ny, 1]);
+            assert!(required_tokens(&coarser, 5) > budget, "search not maximal");
+        }
+    }
+
+    #[test]
+    fn impossible_budget_is_an_error() {
+        let spec = StencilSpec::paper_2d();
+        assert!(plan(&spec, 5, 10, DecompKind::Slab, 1).is_err());
+        assert!(plan(&spec, 5, 10, DecompKind::Block, 1).is_err());
+    }
+
+    #[test]
+    fn auto_prefers_slab_when_it_feeds_the_array() {
+        let spec = StencilSpec::paper_2d();
+        let plan = plan(&spec, 5, DEFAULT_FABRIC_TOKENS, DecompKind::Auto, 16).unwrap();
+        assert_eq!(plan.kind, DecompKind::Slab);
+        assert_eq!(plan.cuts[0], 16);
+        assert_eq!(plan.tiles.len(), 16);
+    }
+
+    #[test]
+    fn auto_escalates_past_slab_when_z_cuts_cannot_shrink_buffers() {
+        let spec = spec3d(40, 20, 12);
+        // One token below the whole-grid requirement: a z-only slab cut
+        // cannot reduce buffering, so Auto must escalate to pencil.
+        let budget = required_tokens(&spec, 2) - 1;
+        let plan = plan(&spec, 2, budget, DecompKind::Auto, 1).unwrap();
+        assert_eq!(plan.kind, DecompKind::Pencil);
+        assert!(plan.cuts[1] > 1, "expected a y cut, got {:?}", plan.cuts);
+        let worst: usize = plan
+            .tiles
+            .iter()
+            .map(|t| required_tokens(&t.sub_spec(&spec), 2))
+            .max()
+            .unwrap();
+        assert!(worst <= budget);
+    }
+
+    #[test]
+    fn tile_count_exceeding_interior_is_clamped() {
+        let spec = StencilSpec::dim1(20, symmetric_taps(2)).unwrap(); // interior 16
+        let plan = plan(&spec, 1, DEFAULT_FABRIC_TOKENS, DecompKind::Auto, 64).unwrap();
+        assert!(!plan.tiles.is_empty() && plan.tiles.len() <= 16);
+        let total: usize = plan.tiles.iter().map(|t| t.out_points()).sum();
+        assert_eq!(total, 16);
+    }
+
+    #[test]
+    fn extract_then_merge_is_identity() {
+        let spec = spec3d(9, 7, 6);
+        let input: Vec<f64> = (0..spec.grid_points()).map(|i| i as f64).collect();
+        for tile in tiles_for_cuts(&spec, [2, 2, 2]) {
+            let sub = tile.extract(&spec, &input);
+            assert_eq!(sub.len(), tile.in_points());
+            // Spot-check the sub-grid layout.
+            let sub_spec = tile.sub_spec(&spec);
+            assert_eq!(sub_spec.grid_points(), sub.len());
+            let mut global = input.clone();
+            tile.merge(&spec, &mut global, &sub);
+            assert_eq!(global, input, "merge of an extract must be a no-op");
+        }
+    }
+
+    #[test]
+    fn required_tokens_matches_layer_formulas() {
+        let s2 = StencilSpec::heat2d(20, 14, 0.2);
+        assert_eq!(required_tokens(&s2, 2), map2d::required_buffer_tokens(&s2, 2));
+        let s3 = StencilSpec::heat3d(10, 6, 5, 0.1);
+        assert_eq!(required_tokens(&s3, 2), map3d::required_buffer_tokens(&s3, 2));
+        let s1 = StencilSpec::dim1(64, symmetric_taps(2)).unwrap();
+        let want: usize = (0..5).map(|t| tap_capacity_1d(2, 2, t)).sum::<usize>() * 2;
+        assert_eq!(required_tokens(&s1, 2), want);
+    }
+
+    #[test]
+    fn nth_root_ceil_basics() {
+        assert_eq!(nth_root_ceil(16, 2), 4);
+        assert_eq!(nth_root_ceil(17, 2), 5);
+        assert_eq!(nth_root_ceil(8, 3), 2);
+        assert_eq!(nth_root_ceil(9, 3), 3);
+        assert_eq!(nth_root_ceil(1, 3), 1);
+        assert_eq!(nth_root_ceil(7, 1), 7);
+    }
+}

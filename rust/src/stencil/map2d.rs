@@ -68,7 +68,7 @@ pub fn chain_capacity(spec: &StencilSpec, w: usize, k: usize) -> usize {
 
 /// Total mandatory buffering (tokens) the mapping needs: delay-line
 /// stages + chain data queues — the quantity §III-B compares against
-/// on-fabric storage to decide strip mining (see [`super::blocking`]).
+/// on-fabric storage to decide tile decomposition (see [`super::decomp`]).
 /// The delay-line part is the paper's `2*ry*x_dim` goal. Star and box
 /// shapes need the same delay depth (`2*ry` rows) and the same chain
 /// length (`points()` taps), so one formula covers both.

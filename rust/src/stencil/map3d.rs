@@ -17,7 +17,8 @@
 //!   fires at the same wall-time and the fabric holds the 3-D analogue
 //!   of the paper's mandatory-buffering goal: `2*rz` planes plus `2*ry`
 //!   rows of the stream (`required_buffer_tokens`).
-//! * **Filters** use the volume scheme ([`FilterSpec::Vol`]): the
+//! * **Filters** use the volume scheme
+//!   ([`crate::dfg::node::FilterSpec::Vol`]): the
 //!   flattened row tag is unflattened to `(z, y)` and compared against
 //!   the tap-shifted interior window along every axis.
 //! * **Compute workers** run one fused MUL + MAC chain per worker in

@@ -14,11 +14,12 @@
 //!   buffering, extended to dense box windows.
 //! * [`map3d`] — the 3-D extension: plane buffering (rows of
 //!   row-buffers) for star and box stencils.
-//! * [`blocking`] — §III-B strip mining when the fabric cannot hold
-//!   `2*ry` rows.
+//! * [`decomp`] — N-dim tile decomposition (slab/pencil/block cuts with
+//!   per-axis halos) when the fabric cannot hold the whole grid's
+//!   mandatory buffering, and for multi-tile execution.
 //! * [`temporal`] — the §IV multi-time-step pipeline.
 
-pub mod blocking;
+pub mod decomp;
 pub mod filter;
 pub mod map1d;
 pub mod map2d;

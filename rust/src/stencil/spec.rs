@@ -364,13 +364,26 @@ impl StencilSpec {
         }
     }
 
-    /// Restrict the spec to a vertical strip `[col_lo, col_hi)` of the
-    /// grid *including* halo columns — the §III-B blocking unit. Outputs
-    /// of the strip are its interior columns.
-    pub fn strip(&self, col_lo: usize, col_hi: usize) -> Self {
-        assert!(col_lo < col_hi && col_hi <= self.nx);
+    /// Restrict the spec to the axis-aligned box `[lo, hi)` of the grid
+    /// (`[x, y, z]` order, halo included) — the N-dim decomposition unit
+    /// of [`super::decomp`]. Radii and taps are unchanged, so the
+    /// sub-grid's interior is the box shrunk by the radius along every
+    /// axis.
+    pub fn restrict(&self, lo: [usize; 3], hi: [usize; 3]) -> Self {
+        let n = [self.nx, self.ny, self.nz];
+        for a in 0..3 {
+            assert!(
+                lo[a] < hi[a] && hi[a] <= n[a],
+                "bad restriction on axis {a}: [{}, {}) of {}",
+                lo[a],
+                hi[a],
+                n[a]
+            );
+        }
         Self {
-            nx: col_hi - col_lo,
+            nx: hi[0] - lo[0],
+            ny: hi[1] - lo[1],
+            nz: hi[2] - lo[2],
             ..self.clone()
         }
     }
@@ -551,12 +564,26 @@ mod tests {
     }
 
     #[test]
-    fn strip_preserves_radius_and_height() {
+    fn restrict_preserves_radii_and_shape() {
         let s = StencilSpec::paper_2d();
-        let t = s.strip(100, 300);
+        let t = s.restrict([100, 0, 0], [300, s.ny, 1]);
         assert_eq!(t.nx, 200);
         assert_eq!(t.ny, s.ny);
         assert_eq!(t.rx, 12);
+        assert!(t.is_2d());
+
+        let v = StencilSpec::heat3d(16, 12, 10, 0.1);
+        let u = v.restrict([2, 1, 3], [14, 9, 8]);
+        assert_eq!((u.nx, u.ny, u.nz), (12, 8, 5));
+        assert_eq!(u.radii(), v.radii());
+        assert!(u.is_3d());
+    }
+
+    #[test]
+    #[should_panic(expected = "bad restriction")]
+    fn restrict_rejects_out_of_bounds() {
+        let s = StencilSpec::paper_2d();
+        let _ = s.restrict([0, 0, 0], [s.nx + 1, s.ny, 1]);
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Mini benchmark harness (criterion is unavailable offline).
 //!
 //! `cargo bench` targets are `harness = false` binaries that call
-//! [`run`] / [`Bencher`]: fixed warmup, N timed iterations, and a
+//! [`run`] / [`BenchStats`]: fixed warmup, N timed iterations, and a
 //! mean / median / stddev / min report on stdout. Deterministic
 //! iteration counts keep bench output diff-able run to run.
 

@@ -1,0 +1,156 @@
+//! Decomposition edge cases and multi-tile differential tests: the
+//! N-dim tile path (`stencil::decomp` + `coordinator`) against the
+//! golden oracles and against the single-tile whole-grid simulation
+//! (which must agree *bitwise* — same chain order, same f64 values).
+
+use stencil_cgra::cgra::Machine;
+use stencil_cgra::coordinator::Coordinator;
+use stencil_cgra::stencil::decomp::{self, DecompKind, DEFAULT_FABRIC_TOKENS};
+use stencil_cgra::stencil::spec::{symmetric_taps, uniform_box_taps, y_taps, z_taps};
+use stencil_cgra::stencil::{StencilShape, StencilSpec};
+use stencil_cgra::util::rng::XorShift;
+use stencil_cgra::verify::golden::{max_abs_diff, stencil_ref};
+
+/// Hand-built spec (the constructors reject these shapes) to pin the
+/// decomposition layer's own guards.
+fn raw_star_spec(
+    dims: (usize, usize, usize),
+    radii: (usize, usize, usize),
+) -> StencilSpec {
+    StencilSpec {
+        shape: StencilShape::Star,
+        nx: dims.0,
+        ny: dims.1,
+        nz: dims.2,
+        rx: radii.0,
+        ry: radii.1,
+        rz: radii.2,
+        cx: vec![0.1; 2 * radii.0 + 1],
+        cy: vec![0.1; 2 * radii.1],
+        cz: vec![0.1; 2 * radii.2],
+        box_taps: Vec::new(),
+    }
+}
+
+#[test]
+fn zero_width_interior_is_an_error() {
+    // nx == 2*rx: the interior along x is empty.
+    let spec = raw_star_spec((4, 9, 1), (2, 1, 0));
+    for kind in [
+        DecompKind::Slab,
+        DecompKind::Pencil,
+        DecompKind::Block,
+        DecompKind::Auto,
+    ] {
+        let err = decomp::plan(&spec, 2, DEFAULT_FABRIC_TOKENS, kind, 4);
+        assert!(err.is_err(), "kind {kind} accepted an empty interior");
+    }
+}
+
+#[test]
+fn radius_exceeding_extent_is_an_error() {
+    // ry > ny/2 on a 2-D grid; also the degenerate radius == extent.
+    let spec = raw_star_spec((12, 2, 1), (1, 2, 0));
+    assert!(decomp::plan(&spec, 1, DEFAULT_FABRIC_TOKENS, DecompKind::Slab, 2).is_err());
+    let spec3 = raw_star_spec((12, 9, 2), (1, 1, 1));
+    assert!(decomp::plan(&spec3, 1, DEFAULT_FABRIC_TOKENS, DecompKind::Block, 2).is_err());
+}
+
+#[test]
+fn tile_count_exceeding_interior_is_clamped_not_an_error() {
+    // 1-D: interior 16 but 64 tiles requested.
+    let spec = StencilSpec::dim1(20, symmetric_taps(2)).unwrap();
+    let plan = decomp::plan(&spec, 1, DEFAULT_FABRIC_TOKENS, DecompKind::Auto, 64).unwrap();
+    assert!(!plan.tiles.is_empty() && plan.tiles.len() <= 16);
+    let owned: usize = plan.tiles.iter().map(|t| t.out_points()).sum();
+    assert_eq!(owned, 16, "every interior output owned exactly once");
+
+    // And the coordinator still runs it end to end.
+    let mut rng = XorShift::new(0xC1A0);
+    let x = rng.normal_vec(20);
+    let coord = Coordinator::new(64, Machine::paper());
+    let rep = coord.run(&spec, 1, &x).unwrap();
+    let want = stencil_ref(&x, &spec);
+    assert!(max_abs_diff(&rep.output, &want) < 1e-11);
+}
+
+#[test]
+fn pencil_3d_matches_single_tile_bit_for_bit() {
+    // The acceptance differential: a pencil-decomposed 3-D run must be
+    // bitwise identical to the single-tile whole-grid path (identical
+    // MAC-chain order over identical values) and match the golden
+    // oracle within 1e-11.
+    let spec = StencilSpec::dim3(18, 14, 10, symmetric_taps(1), y_taps(1), z_taps(1))
+        .unwrap();
+    let mut rng = XorShift::new(0x3DD1);
+    let x = rng.normal_vec(spec.grid_points());
+
+    let multi = Coordinator::new(8, Machine::paper()).with_decomp(DecompKind::Pencil);
+    let rep = multi.run(&spec, 2, &x).unwrap();
+    assert!(rep.strips > 1, "pencil must produce multiple tiles");
+    assert_eq!(rep.kind, DecompKind::Pencil);
+    assert_eq!(rep.cuts[0], 1, "pencil keeps x contiguous");
+    assert!(rep.halo_points > 0);
+    assert!(rep.redundant_read_fraction > 0.0);
+
+    let single = Coordinator::new(1, Machine::paper()).run(&spec, 2, &x).unwrap();
+    assert_eq!(single.strips, 1);
+    assert_eq!(
+        rep.output, single.output,
+        "multi-tile output must be bitwise identical to single-tile"
+    );
+
+    let want = stencil_ref(&x, &spec);
+    assert!(max_abs_diff(&rep.output, &want) < 1e-11);
+}
+
+#[test]
+fn block_3d_box_stencil_matches_oracle() {
+    let spec = StencilSpec::box3d(12, 10, 8, 1, 1, 1, uniform_box_taps(1, 1, 1)).unwrap();
+    let mut rng = XorShift::new(0xB0C5);
+    let x = rng.normal_vec(spec.grid_points());
+    let coord = Coordinator::new(8, Machine::paper()).with_decomp(DecompKind::Block);
+    let rep = coord.run(&spec, 2, &x).unwrap();
+    assert!(rep.strips >= 8);
+    let want = stencil_ref(&x, &spec);
+    assert!(max_abs_diff(&rep.output, &want) < 1e-11);
+}
+
+#[test]
+fn slab_2d_multi_tile_still_matches_through_tile_path() {
+    // The legacy 1-axis strips are now slab tiles; the differential
+    // guarantee carries over.
+    let spec = StencilSpec::dim2(48, 18, symmetric_taps(2), y_taps(2)).unwrap();
+    let mut rng = XorShift::new(0x51AB);
+    let x = rng.normal_vec(spec.grid_points());
+    let coord = Coordinator::new(4, Machine::paper()).with_decomp(DecompKind::Slab);
+    let rep = coord.run(&spec, 2, &x).unwrap();
+    assert!(rep.strips >= 4);
+    assert_eq!(rep.cuts[1], 1);
+    let single = Coordinator::new(1, Machine::paper()).run(&spec, 2, &x).unwrap();
+    assert_eq!(rep.output, single.output);
+    let want = stencil_ref(&x, &spec);
+    assert!(max_abs_diff(&rep.output, &want) < 1e-11);
+}
+
+#[test]
+fn acoustic_shape_runs_on_16_tiles_via_pencil() {
+    // Scaled-down version of the acoustic_3d example's acceptance
+    // criterion: 16 tiles, pencil cuts, oracle agreement, and halo
+    // accounting in the report.
+    let spec = StencilSpec::dim3(16, 20, 12, symmetric_taps(2), y_taps(2), z_taps(2))
+        .unwrap();
+    let mut rng = XorShift::new(0xAC16);
+    let x = rng.normal_vec(spec.grid_points());
+    let coord = Coordinator::paper().with_decomp(DecompKind::Pencil);
+    let rep = coord.run(&spec, 2, &x).unwrap();
+    assert_eq!(rep.strips, 16, "4 y-cuts x 4 z-cuts feed all 16 tiles");
+    assert_eq!(rep.cuts, [1, 4, 4]);
+    let want = stencil_ref(&x, &spec);
+    assert!(max_abs_diff(&rep.output, &want) < 1e-11);
+    assert!(rep.halo_points > 0);
+    assert_eq!(
+        rep.per_tile.iter().map(|t| t.strips).sum::<usize>(),
+        rep.strips
+    );
+}

@@ -83,8 +83,8 @@ fn asm_round_trip_simulates_identically() {
 
 #[test]
 fn coordinator_equals_single_simulator() {
-    // Strip-mined multi-tile execution must be numerically identical to
-    // one whole-grid simulation.
+    // Tile-decomposed multi-tile execution must be numerically identical
+    // to one whole-grid simulation.
     let spec = StencilSpec::dim2(72, 20, symmetric_taps(3), y_taps(2)).unwrap();
     let mut rng = XorShift::new(0xE0);
     let x = rng.normal_vec(72 * 20);
