@@ -1,61 +1,173 @@
 //! §Perf — simulator hot-path throughput (the L3 optimization target).
 //!
-//! Tracks PE-instruction evaluations per second and simulated Mcycles/s
-//! on the Table-I 2-D workload (scaled + full), plus microbenches of the
-//! memory arbiter and channel operations. EXPERIMENTS.md §Perf records
-//! the before/after of each optimization against this bench.
+//! Runs every workload on **both scheduler cores** (`dense` reference
+//! loop vs the default `event` ready list) and reports simulated
+//! Mcycles/s plus the event core's skipped-cycle/wakeup accounting, so
+//! each row is simultaneously a perf measurement and a bit-identity
+//! check (outputs, cycles and memory stats are asserted equal).
+//! `EXPERIMENTS.md` §Perf records the before/after trajectory; the same
+//! numbers are written to `BENCH_sim.json` for machines (CI uploads it
+//! as an artifact on every push).
 //!
 //! Run: `cargo bench --bench sim_hotpath`
+//! Short mode (CI): `BENCH_QUICK=1 cargo bench --bench sim_hotpath`
+//! (1 iteration, no warmup — regression visibility, not statistics).
 
 use stencil_cgra::cgra::channel::Fifo;
-use stencil_cgra::cgra::{Machine, Simulator, Token};
+use stencil_cgra::cgra::{Machine, SimCore, Simulator, Token};
 use stencil_cgra::stencil::spec::{symmetric_taps, y_taps};
-use stencil_cgra::stencil::{map2d, StencilSpec};
+use stencil_cgra::stencil::{build_graph, StencilSpec};
 use stencil_cgra::util::bench;
 
-fn sim_throughput(name: &str, spec: &StencilSpec, w: usize, iters: usize) {
-    let m = Machine::paper();
-    let x = vec![1.0; spec.grid_points()];
+fn quick() -> bool {
+    std::env::var("BENCH_QUICK").map(|v| v != "0").unwrap_or(false)
+}
+
+struct CoreRun {
+    mean_s: f64,
+    cycles: u64,
+    output_sum: f64,
+}
+
+/// Time one (workload, core) pair; returns the stats it also records.
+#[allow(clippy::too_many_arguments)]
+fn time_core(
+    name: &str,
+    spec: &StencilSpec,
+    w: usize,
+    m: &Machine,
+    x: &[f64],
+    core: SimCore,
+    iters: usize,
+    sink: &mut bench::JsonSink,
+) -> CoreRun {
+    let warmup = if quick() { 0 } else { 1 };
     let mut cycles = 0u64;
     let mut fires = 0u64;
     let mut nodes = 0usize;
-    let stats = bench::run(name, 1, iters, || {
-        let g = map2d::build(spec, w).unwrap();
+    let mut skipped = 0u64;
+    let mut wakeups = 0u64;
+    let mut output_sum = 0.0f64;
+    let case = format!("{name}/{core}");
+    let stats = bench::run(&case, warmup, iters, || {
+        let g = build_graph(spec, w).unwrap();
         nodes = g.node_count();
-        let res = Simulator::build(g, &m, x.clone(), x.clone())
+        let res = Simulator::build(g, m, x.to_vec(), x.to_vec())
             .unwrap()
+            .with_core(core)
             .run()
             .unwrap();
         cycles = res.stats.cycles;
         fires = res.stats.total_fires();
+        skipped = res.stats.skipped_cycles;
+        wakeups = res.stats.wakeups;
+        output_sum = res.output.iter().sum();
     });
+    let mcycles_s = cycles as f64 / stats.mean_s / 1e6;
     let pe_steps = cycles as f64 * nodes as f64;
     println!(
-        "  -> {} nodes, {} cycles, {} fires: {:.1} Mcycles/s, {:.1} M PE-steps/s, {:.1} M fires/s",
+        "  -> {} nodes, {} cycles ({} skipped), {} fires, {} wakeups: \
+         {:.1} Mcycles/s, {:.1} M PE-steps/s equivalent",
         nodes,
         cycles,
+        skipped,
         fires,
-        cycles as f64 / stats.mean_s / 1e6,
+        wakeups,
+        mcycles_s,
         pe_steps / stats.mean_s / 1e6,
-        fires as f64 / stats.mean_s / 1e6,
+    );
+    sink.record(
+        &stats,
+        &[
+            ("cycles", cycles as f64),
+            ("nodes", nodes as f64),
+            ("fires", fires as f64),
+            ("skipped_cycles", skipped as f64),
+            ("wakeups", wakeups as f64),
+            ("mcycles_per_s", mcycles_s),
+        ],
+    );
+    CoreRun {
+        mean_s: stats.mean_s,
+        cycles,
+        output_sum,
+    }
+}
+
+fn sim_throughput(
+    name: &str,
+    spec: &StencilSpec,
+    w: usize,
+    m: &Machine,
+    iters: usize,
+    sink: &mut bench::JsonSink,
+) {
+    let x = vec![1.0; spec.grid_points()];
+    let iters = if quick() { 1 } else { iters };
+    let dense = time_core(name, spec, w, m, &x, SimCore::Dense, iters, sink);
+    let event = time_core(name, spec, w, m, &x, SimCore::Event, iters, sink);
+    assert_eq!(
+        dense.cycles, event.cycles,
+        "{name}: cores disagree on cycle count"
+    );
+    assert_eq!(
+        dense.output_sum.to_bits(),
+        event.output_sum.to_bits(),
+        "{name}: cores disagree on output"
+    );
+    println!(
+        "  == event/dense speedup: {:.2}x  (Mcycles/s {:.1} -> {:.1})",
+        dense.mean_s / event.mean_s,
+        dense.cycles as f64 / dense.mean_s / 1e6,
+        event.cycles as f64 / event.mean_s / 1e6,
     );
 }
 
 fn main() {
-    bench::section("simulator end-to-end throughput");
+    let mut sink = bench::JsonSink::new();
+    let m = Machine::paper();
+
+    bench::section("simulator end-to-end throughput (dense vs event)");
     sim_throughput(
         "2d_49pt_240x113_w5",
         &StencilSpec::dim2(240, 113, symmetric_taps(12), y_taps(12)).unwrap(),
         5,
+        &m,
         5,
+        &mut sink,
     );
     sim_throughput(
         "2d_49pt_table1_960x449_w5",
         &StencilSpec::paper_2d(),
         5,
+        &m,
         3,
+        &mut sink,
     );
-    sim_throughput("2d_heat_128x128_w5", &StencilSpec::heat2d(128, 128, 0.2), 5, 5);
+    sim_throughput(
+        "2d_heat_128x128_w5",
+        &StencilSpec::heat2d(128, 128, 0.2),
+        5,
+        &m,
+        5,
+        &mut sink,
+    );
+    // Latency-/bandwidth-starved machine: the fabric idles most cycles
+    // waiting on DRAM, which is where cycle skipping pays hardest (deep
+    // 3-D fabrics and multi-tile pencil tails behave the same way).
+    let starved = Machine {
+        bw_gbps: 5.0,
+        dram_latency: 400,
+        ..Machine::paper()
+    };
+    sim_throughput(
+        "2d_heat_96x96_w4_bw5_lat400",
+        &StencilSpec::heat2d(96, 96, 0.2),
+        4,
+        &starved,
+        3,
+        &mut sink,
+    );
 
     bench::section("channel microbench");
     let mut f = Fifo::new(64, 1);
@@ -68,13 +180,10 @@ fn main() {
             bench::black_box(f.pop(i + 2));
         }
     });
-    println!(
-        "  -> {:.1} M push+pop/s",
-        1.0 / stats.mean_s
-    );
+    println!("  -> {:.1} M push+pop/s", 1.0 / stats.mean_s);
+    sink.record(&stats, &[("ops", 2e6)]);
 
     bench::section("memory-arbiter microbench");
-    let m = Machine::paper();
     let stats = bench::run("mem_100k_loads", 2, 10, || {
         let mut mem = stencil_cgra::cgra::memory::MemSys::new(
             &m,
@@ -88,4 +197,10 @@ fn main() {
         bench::black_box(&mem);
     });
     println!("  -> {:.2} M loads/s", 0.1 / stats.mean_s);
+    sink.record(&stats, &[("loads", 1e5)]);
+
+    // Anchor to the workspace root (cargo runs bench binaries with CWD =
+    // the package dir, i.e. rust/), so CI finds the artifact in one place.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sim.json");
+    sink.write(path).expect("writing BENCH_sim.json");
 }

@@ -5,16 +5,31 @@
 //! `t + latency`. Capacity counts *all* in-flight tokens (queued +
 //! traversing the link), which is how credit-based flow control behaves:
 //! the producer needs a credit before injecting.
+//!
+//! Channels additionally know their **endpoint node ids** (bound by the
+//! simulator from the DFG edge): a `push` is a future wake event for the
+//! consumer at token-visibility time, and a `pop` frees a credit that
+//! wakes the producer. The event-driven simulator core derives its
+//! ready-list scheduling from exactly these two endpoints; the dense
+//! core ignores them.
 
 use std::collections::VecDeque;
 
 use super::Token;
+
+/// Endpoint placeholder for a Fifo constructed outside a DFG (tests,
+/// microbenches). [`Fifo::with_endpoints`] replaces it.
+pub const NO_NODE: u32 = u32::MAX;
 
 #[derive(Debug, Clone)]
 pub struct Fifo {
     buf: VecDeque<(Token, u64)>,
     capacity: usize,
     latency: u64,
+    /// Producer node id (`NO_NODE` when unbound).
+    src_node: u32,
+    /// Consumer node id (`NO_NODE` when unbound).
+    dst_node: u32,
     /// High-water mark, for the occupancy statistics.
     pub max_occupancy: usize,
 }
@@ -26,8 +41,35 @@ impl Fifo {
             buf: VecDeque::with_capacity(capacity.min(1024)),
             capacity,
             latency: latency as u64,
+            src_node: NO_NODE,
+            dst_node: NO_NODE,
             max_occupancy: 0,
         }
+    }
+
+    /// Bind the producer/consumer node ids (the DFG edge endpoints).
+    pub fn with_endpoints(mut self, src_node: u32, dst_node: u32) -> Self {
+        self.src_node = src_node;
+        self.dst_node = dst_node;
+        self
+    }
+
+    /// Producer node id — the node a freed credit wakes.
+    #[inline]
+    pub fn src_node(&self) -> u32 {
+        self.src_node
+    }
+
+    /// Consumer node id — the node a pushed token wakes at visibility.
+    #[inline]
+    pub fn dst_node(&self) -> u32 {
+        self.dst_node
+    }
+
+    /// Cycles between a push and the token becoming visible.
+    #[inline]
+    pub fn latency(&self) -> u64 {
+        self.latency
     }
 
     #[inline]
@@ -134,6 +176,17 @@ mod tests {
         f.pop(0);
         f.pop(0);
         assert_eq!(f.max_occupancy, 6);
+    }
+
+    #[test]
+    fn endpoints_default_unbound_and_bind() {
+        let f = Fifo::new(2, 1);
+        assert_eq!(f.src_node(), NO_NODE);
+        assert_eq!(f.dst_node(), NO_NODE);
+        let f = f.with_endpoints(3, 7);
+        assert_eq!(f.src_node(), 3);
+        assert_eq!(f.dst_node(), 7);
+        assert_eq!(f.latency(), 1);
     }
 
     #[test]

@@ -18,6 +18,9 @@
 //! * [`sim`] — the cycle loop executing triggered instructions: the run
 //!   produces the actual output grid *and* the cycle count, so one
 //!   simulation is both the correctness and the performance experiment.
+//!   Two interchangeable scheduler cores ([`sim::SimCore`]): the dense
+//!   reference loop and the default event-driven ready list with cycle
+//!   skipping, bit-identical by construction.
 //! * [`stats`] — utilization, traffic, cache and stall counters.
 
 pub mod channel;
@@ -28,7 +31,7 @@ pub mod sim;
 pub mod stats;
 
 pub use machine::Machine;
-pub use sim::{SimResult, Simulator};
+pub use sim::{SimCore, SimResult, Simulator};
 
 /// A value flowing through the fabric, tagged with the grid coordinates
 /// the control units generated for it (§III-A: control units produce

@@ -37,6 +37,32 @@ impl Placement {
         let (r, c) = self.pe_of[node];
         r as usize * m.grid_cols + c as usize
     }
+
+    /// The fixed evaluation order both simulator cores share: instruction
+    /// groups in the exact order the cycle loop visits them. One group
+    /// per occupied PE (instructions in placement order — the
+    /// one-instruction-per-PE-per-cycle arbitration set); when every PE
+    /// holds a single instruction the groups collapse to topological
+    /// singletons (producers before consumers — better cache locality
+    /// along the dataflow, and the per-PE arbitration is a no-op).
+    ///
+    /// This order is *the* determinism contract: the dense core sweeps
+    /// all groups every cycle, the event core sweeps the ready subset in
+    /// the same order, so both observe identical intra-cycle credit
+    /// hand-offs and fire identically.
+    pub fn eval_slots(&self, g: &Graph, m: &Machine) -> Vec<Vec<u32>> {
+        let mut pe_instrs: Vec<Vec<u32>> = vec![Vec::new(); m.total_pes()];
+        for id in 0..g.node_count() {
+            pe_instrs[self.pe_index(id, m)].push(id as u32);
+        }
+        pe_instrs.retain(|v| !v.is_empty());
+        if pe_instrs.iter().all(|v| v.len() == 1) {
+            if let Some(order) = g.topo_order() {
+                return order.into_iter().map(|i| vec![i as u32]).collect();
+            }
+        }
+        pe_instrs
+    }
 }
 
 fn manhattan(a: (u16, u16), b: (u16, u16)) -> u32 {
@@ -257,5 +283,36 @@ mod tests {
         let p = place(&mut g, &m).unwrap();
         // 4x4 grid with ~20 nodes: someone must share.
         assert!(p.occupancy.iter().any(|&o| o > 1));
+    }
+
+    #[test]
+    fn eval_slots_topological_singletons_on_big_fabric() {
+        let spec = StencilSpec::dim1(64, crate::stencil::spec::symmetric_taps(2)).unwrap();
+        let mut g = map1d::build(&spec, 3).unwrap();
+        let m = Machine::paper();
+        let p = place(&mut g, &m).unwrap();
+        let slots = p.eval_slots(&g, &m);
+        assert_eq!(slots.len(), g.node_count());
+        assert!(slots.iter().all(|s| s.len() == 1));
+        // Producers are evaluated before consumers.
+        let mut pos = vec![0usize; g.node_count()];
+        for (i, s) in slots.iter().enumerate() {
+            pos[s[0] as usize] = i;
+        }
+        for ch in &g.channels {
+            assert!(pos[ch.src] < pos[ch.dst], "channel {} not topo-ordered", ch.id);
+        }
+    }
+
+    #[test]
+    fn eval_slots_group_shared_pes_on_tiny_fabric() {
+        let spec = StencilSpec::dim1(32, vec![0.25, 0.5, 0.25]).unwrap();
+        let mut g = map1d::build(&spec, 2).unwrap();
+        let m = Machine::tiny();
+        let p = place(&mut g, &m).unwrap();
+        let slots = p.eval_slots(&g, &m);
+        assert!(slots.iter().any(|s| s.len() > 1), "packing must share slots");
+        let total: usize = slots.iter().map(|s| s.len()).sum();
+        assert_eq!(total, g.node_count());
     }
 }

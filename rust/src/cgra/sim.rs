@@ -1,4 +1,5 @@
-//! The cycle loop: triggered-instruction execution of a DFG (§II-A).
+//! The cycle loop: triggered-instruction execution of a DFG (§II-A),
+//! with two interchangeable scheduler cores.
 //!
 //! Each DFG node is one triggered instruction mapped to a PE by
 //! [`super::placement`]. An instruction *triggers* when its required
@@ -9,13 +10,61 @@
 //!
 //! The simulator is functional + timing in one pass: tokens carry real
 //! f64 payloads, so the run yields the output grid (checked against the
-//! PJRT-executed JAX artifact by `verify`) *and* the cycle count that
-//! feeds the §VIII performance tables.
+//! golden oracles by `verify`) *and* the cycle count that feeds the
+//! §VIII performance tables.
 //!
-//! Determinism: PEs are evaluated in a fixed order, pushes become visible
-//! only `latency >= 1` cycles later (so evaluation order cannot leak
-//! within a cycle), and the memory arbiter is FIFO. Every run is
-//! bit-reproducible.
+//! # The two cores ([`SimCore`])
+//!
+//! * [`SimCore::Dense`] — the reference loop: every cycle, every
+//!   instruction group is evaluated in the fixed order of
+//!   [`super::placement::Placement::eval_slots`].
+//! * [`SimCore::Event`] (default) — an event-driven ready list with
+//!   cycle skipping. Channels know their endpoint node ids
+//!   ([`Fifo::with_endpoints`]): a `push` schedules the consumer's
+//!   wakeup at token-visibility time (`now + latency`), a `pop` wakes
+//!   the producer whose credit freed, and [`MemSys`] reports the
+//!   completion cycle of each ticket so Load/Store instructions sleep
+//!   until their response lands. A calendar wheel of per-cycle ready
+//!   bitmaps drives execution; when a cycle's ready set drains and
+//!   nothing is scheduled at `now + 1`, the clock jumps straight to the
+//!   next event instead of ticking idle cycles.
+//!
+//! # Why cycle skipping is exact
+//!
+//! The event core is **bit-identical** to the dense loop — same output
+//! grid, same cycle count, same memory statistics — because:
+//!
+//! 1. **Evaluation is pure unless it fires.** `fire` mutates nothing
+//!    when it returns false, so waking a node that cannot fire is
+//!    harmless; correctness only needs the ready set to be a *superset*
+//!    of the nodes the dense loop would fire.
+//! 2. **Every enabling condition is a discrete event.** A node's
+//!    trigger state changes only when a token becomes visible (push +
+//!    latency), a credit frees (pop), a memory ticket completes
+//!    (arbiter grant + fixed latency), or the node itself fired (it
+//!    re-arms at `now + 1`; self-rescheduling ops — AddrGen, Const,
+//!    SyncCount — are covered by exactly this rule). Each such event
+//!    schedules a wakeup, so no fireable node is ever asleep.
+//! 3. **Intra-cycle order is preserved.** Ready slots are swept in the
+//!    dense evaluation order. A credit freed by a pop at slot `s` is
+//!    visible to a producer at slot `p` in the same cycle iff `p > s`
+//!    (the dense sweep would reach `p` afterwards) — later producers
+//!    are woken at `now`, earlier ones at `now + 1`, reproducing the
+//!    dense loop's same-cycle credit hand-off exactly. Within a shared
+//!    PE the one-instruction-per-cycle arbitration is replayed by
+//!    evaluating the group in placement order and stopping at the
+//!    first firing.
+//! 4. **The memory arbiter is replayed, not modeled.**
+//!    [`MemSys::advance_to`] executes the per-cycle bandwidth-bucket
+//!    arbiter over skipped cycles bit-identically (idle cycles only
+//!    replenish the budget, which saturates in O(1)); while
+//!    transactions are queued the core never skips, so grant cycles —
+//!    and therefore all completion times — are unchanged.
+//!
+//! Deadlock detection becomes trivial in the event core: an empty wheel
+//! with the done-tree not fired *is* a deadlock, reported at the same
+//! cycle (and with the same text) the dense loop's quiet-period counter
+//! would produce.
 
 use std::collections::VecDeque;
 
@@ -32,6 +81,39 @@ use super::stats::SimStats;
 use super::Token;
 
 const NO_CHAN: u32 = u32::MAX;
+
+/// Which scheduler drives the cycle loop. Both cores are bit-identical
+/// in every observable (output grid, cycle count, firing counters,
+/// memory statistics); `Event` skips guaranteed-idle work and is the
+/// default.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimCore {
+    /// Reference loop: every instruction evaluated every cycle.
+    Dense,
+    /// Event-driven ready list with cycle skipping.
+    #[default]
+    Event,
+}
+
+impl SimCore {
+    /// Parse a CLI/config spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "dense" => Ok(Self::Dense),
+            "event" => Ok(Self::Event),
+            other => bail!("unknown sim core `{other}` (dense|event)"),
+        }
+    }
+}
+
+impl std::fmt::Display for SimCore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SimCore::Dense => "dense",
+            SimCore::Event => "event",
+        })
+    }
+}
 
 /// Runtime state of one instruction.
 struct NodeRt {
@@ -75,21 +157,110 @@ impl SimResult {
     }
 }
 
+/// Calendar wheel of per-cycle ready bitmaps. Every schedulable delay
+/// (channel visibility, DRAM completion, self re-arm) is bounded by the
+/// horizon the wheel is sized for, so a bucket never holds wakeups from
+/// two different cycles at once.
+struct Wheel {
+    /// `buckets[cycle & mask]` = bitmap over slots.
+    buckets: Vec<Vec<u64>>,
+    /// Live-bit count per bucket (O(1) emptiness check for jumps).
+    live: Vec<u32>,
+    mask: u64,
+    words: usize,
+}
+
+/// In-order cursor over one cycle's bucket.
+struct Sweep {
+    bucket: usize,
+    word: usize,
+}
+
+impl Wheel {
+    fn new(nslots: usize, horizon: u64) -> Self {
+        let size = (horizon + 2).next_power_of_two().max(2) as usize;
+        let words = nslots.div_ceil(64).max(1);
+        Self {
+            buckets: vec![vec![0u64; words]; size],
+            live: vec![0; size],
+            mask: size as u64 - 1,
+            words,
+        }
+    }
+
+    /// Mark `slot` ready at cycle `when`. Idempotent — a slot is
+    /// evaluated at most once per cycle no matter how many events
+    /// target it.
+    #[inline]
+    fn insert(&mut self, when: u64, slot: u32) {
+        let b = (when & self.mask) as usize;
+        let w = (slot >> 6) as usize;
+        let bit = 1u64 << (slot & 63);
+        if self.buckets[b][w] & bit == 0 {
+            self.buckets[b][w] |= bit;
+            self.live[b] += 1;
+        }
+    }
+
+    /// Earliest cycle strictly after `now` with pending wakeups.
+    fn next_after(&self, now: u64) -> Option<u64> {
+        for d in 1..self.buckets.len() as u64 {
+            if self.live[((now + d) & self.mask) as usize] > 0 {
+                return Some(now + d);
+            }
+        }
+        None
+    }
+
+    /// Begin an in-order sweep of cycle `now`'s ready set.
+    #[inline]
+    fn begin(&self, now: u64) -> Sweep {
+        Sweep {
+            bucket: (now & self.mask) as usize,
+            word: 0,
+        }
+    }
+
+    /// Next ready slot in ascending slot order; clears its bit. Slots
+    /// inserted *ahead of the cursor* during the sweep (the same-cycle
+    /// credit rule only ever inserts ahead) are picked up too.
+    #[inline]
+    fn take_next(&mut self, s: &mut Sweep) -> Option<u32> {
+        while s.word < self.words {
+            let pending = self.buckets[s.bucket][s.word];
+            if pending != 0 {
+                let bit = pending.trailing_zeros();
+                self.buckets[s.bucket][s.word] &= pending - 1; // clear lowest set bit
+                self.live[s.bucket] -= 1;
+                return Some(((s.word as u32) << 6) | bit);
+            }
+            s.word += 1;
+        }
+        None
+    }
+}
+
 pub struct Simulator {
     nodes: Vec<NodeRt>,
     chans: Vec<Fifo>,
     mem: MemSys,
-    /// Instructions grouped by PE, in placement order.
-    pe_instrs: Vec<Vec<u32>>,
-    /// Fast path when every PE holds exactly one instruction: flat
-    /// topological evaluation order (None when instructions share PEs).
-    flat_order: Option<Vec<u32>>,
+    /// Shared dense evaluation order from [`Placement::eval_slots`]
+    /// (one group per occupied PE, or topological singletons when no PE
+    /// shares instructions), flattened CSR-style so the dense sweep
+    /// walks one contiguous array: slot `s` holds
+    /// `slot_nodes[slot_start[s] .. slot_start[s + 1]]`.
+    slot_nodes: Vec<u32>,
+    slot_start: Vec<u32>,
     /// Quiet-period threshold for deadlock detection.
     deadlock_quiet: u64,
+    /// Upper bound on any schedulable event distance (sizes the event
+    /// core's calendar wheel).
+    horizon: u64,
     max_cycles: u64,
     stats: SimStats,
     mshr: usize,
     done_node: usize,
+    core: SimCore,
     /// Node names (diagnostics only).
     names: Vec<String>,
 }
@@ -112,7 +283,14 @@ impl Simulator {
         let chans: Vec<Fifo> = graph
             .channels
             .iter()
-            .map(|c| Fifo::new(c.capacity, c.latency))
+            .map(|c| {
+                // Placement floors every route to >= 1 cycle; both cores
+                // depend on it (same-cycle visibility would let evaluation
+                // order leak in the dense loop and would let the event
+                // sweep insert behind its cursor).
+                debug_assert!(c.latency >= 1, "channel {} has zero latency", c.id);
+                Fifo::new(c.capacity, c.latency).with_endpoints(c.src as u32, c.dst as u32)
+            })
             .collect();
 
         let mut done_node = None;
@@ -169,23 +347,14 @@ impl Simulator {
             bail!("graph has no DoneTree — the simulator cannot detect completion");
         };
 
-        // Group instructions by PE (placement order = priority order).
-        let mut pe_instrs: Vec<Vec<u32>> = vec![Vec::new(); m.total_pes()];
-        for id in 0..nodes.len() {
-            pe_instrs[plc.pe_index(id, m)].push(id as u32);
+        let groups = plc.eval_slots(&graph, m);
+        let mut slot_nodes = Vec::with_capacity(nodes.len());
+        let mut slot_start = Vec::with_capacity(groups.len() + 1);
+        slot_start.push(0u32);
+        for g in &groups {
+            slot_nodes.extend_from_slice(g);
+            slot_start.push(slot_nodes.len() as u32);
         }
-        pe_instrs.retain(|v| !v.is_empty());
-        // Hot-loop fast path (§Perf): when no PE shares instructions the
-        // per-PE arbitration is a no-op, so evaluate a flat node list in
-        // topological order (producers before consumers — better cache
-        // locality along the dataflow).
-        let flat_order: Option<Vec<u32>> = if pe_instrs.iter().all(|v| v.len() == 1) {
-            graph
-                .topo_order()
-                .map(|o| o.into_iter().map(|i| i as u32).collect())
-        } else {
-            None
-        };
 
         let max_lat = graph.channels.iter().map(|c| c.latency).max().unwrap_or(1);
         let mut stats = SimStats::default();
@@ -196,13 +365,18 @@ impl Simulator {
             nodes,
             chans,
             mem: MemSys::new(m, input, output),
-            pe_instrs,
-            flat_order,
+            slot_nodes,
+            slot_start,
             deadlock_quiet: m.dram_latency as u64 + max_lat as u64 + 256,
+            horizon: m.dram_latency as u64
+                + max_lat as u64
+                + m.cache_hit_latency as u64
+                + 4,
             max_cycles: 200_000_000,
             stats,
             mshr: m.mshr_per_load,
             done_node,
+            core: SimCore::default(),
             names,
         })
     }
@@ -213,40 +387,43 @@ impl Simulator {
         self
     }
 
+    /// Select the scheduler core (default [`SimCore::Event`]).
+    pub fn with_core(mut self, core: SimCore) -> Self {
+        self.core = core;
+        self
+    }
+
     /// Run to completion (DoneTree fires) and return the output + stats.
-    pub fn run(mut self) -> Result<SimResult> {
+    pub fn run(self) -> Result<SimResult> {
+        match self.core {
+            SimCore::Dense => self.run_dense(),
+            SimCore::Event => self.run_event(),
+        }
+    }
+
+    /// Reference core: every instruction group, every cycle.
+    fn run_dense(mut self) -> Result<SimResult> {
         let mut now: u64 = 0;
         let mut last_progress: u64 = 0;
         while !self.nodes[self.done_node].emitted {
             now += 1;
             let mem_prog = self.mem.step(now);
             let mut fired = false;
-            if let Some(order) = &self.flat_order {
-                for &id in order {
-                    fired |= fire(
-                        &mut self.nodes[id as usize],
+            for s in 0..self.slot_start.len() - 1 {
+                let (lo, hi) =
+                    (self.slot_start[s] as usize, self.slot_start[s + 1] as usize);
+                for k in lo..hi {
+                    let id = self.slot_nodes[k] as usize;
+                    if fire(
+                        &mut self.nodes[id],
                         &mut self.chans,
                         &mut self.mem,
                         &mut self.stats,
                         self.mshr,
                         now,
-                    );
-                }
-            } else {
-                for pe in 0..self.pe_instrs.len() {
-                    for k in 0..self.pe_instrs[pe].len() {
-                        let id = self.pe_instrs[pe][k] as usize;
-                        if fire(
-                            &mut self.nodes[id],
-                            &mut self.chans,
-                            &mut self.mem,
-                            &mut self.stats,
-                            self.mshr,
-                            now,
-                        ) {
-                            fired = true;
-                            break; // one instruction per PE per cycle
-                        }
+                    ) {
+                        fired = true;
+                        break; // one instruction per PE per cycle
                     }
                 }
             }
@@ -259,6 +436,181 @@ impl Simulator {
                 bail!("simulation exceeded {} cycles", self.max_cycles);
             }
         }
+        self.finish(now)
+    }
+
+    /// Event-driven core: ready-list sweeps + cycle skipping. See the
+    /// module docs for the bit-identity argument.
+    fn run_event(mut self) -> Result<SimResult> {
+        let nslots = self.slot_start.len() - 1;
+        // Pseudo-slot that keeps the arbiter granting once per cycle
+        // while transactions are queued. Highest slot id, so it never
+        // perturbs the node sweep order.
+        let mem_slot = nslots as u32;
+
+        // node -> slot, channel -> endpoint slots + visibility latency.
+        let mut slot_of = vec![0u32; self.nodes.len()];
+        for s in 0..nslots {
+            for k in self.slot_start[s] as usize..self.slot_start[s + 1] as usize {
+                slot_of[self.slot_nodes[k] as usize] = s as u32;
+            }
+        }
+        // Every Fifo built by `Simulator::build` carries its DFG edge's
+        // endpoints; an unbound channel cannot reach this core.
+        debug_assert!(self
+            .chans
+            .iter()
+            .all(|f| f.src_node() != super::channel::NO_NODE
+                && f.dst_node() != super::channel::NO_NODE));
+        let chan_src_slot: Vec<u32> = self
+            .chans
+            .iter()
+            .map(|f| slot_of[f.src_node() as usize])
+            .collect();
+        let chan_dst_slot: Vec<u32> = self
+            .chans
+            .iter()
+            .map(|f| slot_of[f.dst_node() as usize])
+            .collect();
+        let chan_lat: Vec<u64> = self.chans.iter().map(|f| f.latency()).collect();
+
+        let mut wheel = Wheel::new(nslots + 1, self.horizon);
+        // ticket id -> issuing slot (ticket ids are sequential).
+        let mut ticket_owner: Vec<u32> = Vec::with_capacity(256);
+        let mut resolved: Vec<Ticket> = Vec::new();
+        self.mem.set_record_resolved(true);
+
+        // Cycle 1 starts exactly like the dense loop: every instruction
+        // is a candidate; the ones that cannot fire go dormant until an
+        // event wakes them.
+        for s in 0..nslots as u32 {
+            wheel.insert(1, s);
+        }
+
+        let mut now: u64 = 0; // last processed cycle
+        let mut last_progress: u64 = 0;
+
+        loop {
+            let Some(next) = wheel.next_after(now) else {
+                // Empty wheel + done not fired = deadlock. The dense
+                // loop would idle-tick the quiet period out and then
+                // report (or hit the cycle cap first); reproduce its
+                // bail cycle and text exactly.
+                let report_at = last_progress + self.deadlock_quiet + 1;
+                if report_at > self.max_cycles + 1 {
+                    bail!("simulation exceeded {} cycles", self.max_cycles);
+                }
+                bail!(self.deadlock_report(report_at));
+            };
+            if next > self.max_cycles {
+                // The dense loop gives up at max_cycles + 1, before this
+                // event would ever be reached.
+                bail!("simulation exceeded {} cycles", self.max_cycles);
+            }
+            self.stats.skipped_cycles += next - now - 1;
+            // Replay the per-cycle memory arbiter across the gap (grants
+            // can only happen at processed cycles — the mem pseudo-slot
+            // keeps the core processing every cycle while the queue is
+            // non-empty — but advance_to is exact regardless).
+            if let Some(grant) = self.mem.advance_to(now, next) {
+                last_progress = grant;
+            }
+            now = next;
+            // Tickets granted while advancing: wake the owner when the
+            // response lands (fills: grant + DRAM latency; stores:
+            // grant + drain).
+            self.mem.drain_resolved(&mut resolved);
+            for &tk in resolved.iter() {
+                let done_at = self.mem.completion(tk).unwrap_or(now);
+                wheel.insert(done_at.max(now), ticket_owner[tk as usize]);
+            }
+            resolved.clear();
+
+            // Sweep this cycle's ready set in dense evaluation order.
+            let mut fired_any = false;
+            let mut cursor = wheel.begin(now);
+            while let Some(s) = wheel.take_next(&mut cursor) {
+                if s == mem_slot {
+                    continue; // arbiter pump: advance_to above did the work
+                }
+                let s_us = s as usize;
+                self.stats.wakeups += 1;
+                let (lo, hi) = (
+                    self.slot_start[s_us] as usize,
+                    self.slot_start[s_us + 1] as usize,
+                );
+                for k in lo..hi {
+                    let id = self.slot_nodes[k] as usize;
+                    let tickets_before = self.mem.ticket_count();
+                    let fired = fire(
+                        &mut self.nodes[id],
+                        &mut self.chans,
+                        &mut self.mem,
+                        &mut self.stats,
+                        self.mshr,
+                        now,
+                    );
+                    for _ in tickets_before..self.mem.ticket_count() {
+                        ticket_owner.push(s);
+                    }
+                    if fired {
+                        fired_any = true;
+                        let n = &self.nodes[id];
+                        // Credit freed on our inputs: a producer later in
+                        // the dense order sees it this very cycle (the
+                        // dense sweep would reach it after us), earlier
+                        // ones next cycle.
+                        for &c in &n.ins {
+                            if c == NO_CHAN {
+                                continue;
+                            }
+                            let p = chan_src_slot[c as usize];
+                            wheel.insert(if p > s { now } else { now + 1 }, p);
+                        }
+                        // Pushed tokens become visible `latency` cycles
+                        // out (ports we did not push into get a spurious,
+                        // harmless wake).
+                        for port in &n.outs {
+                            for &c in port {
+                                wheel.insert(
+                                    now + chan_lat[c as usize],
+                                    chan_dst_slot[c as usize],
+                                );
+                            }
+                        }
+                        // We may fire again next cycle, and a suppressed
+                        // PE-mate gets its arbitration slot back.
+                        wheel.insert(now + 1, s);
+                        break; // one instruction per PE per cycle
+                    } else if matches!(self.nodes[id].op, Op::Load | Op::Store) {
+                        // Blocked on an outstanding memory response whose
+                        // completion time is already known: sleep until
+                        // it lands. (Ungranted tickets wake via
+                        // drain_resolved at grant time.)
+                        if let Some(&(tk, _)) = self.nodes[id].inflight.front() {
+                            if let Some(done_at) = self.mem.completion(tk) {
+                                if done_at > now {
+                                    wheel.insert(done_at, s);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            if fired_any {
+                last_progress = now;
+            }
+            if self.mem.busy() {
+                wheel.insert(now + 1, mem_slot);
+            }
+            if self.nodes[self.done_node].emitted {
+                return self.finish(now);
+            }
+        }
+    }
+
+    /// Common epilogue: freeze the counters and hand the grid back.
+    fn finish(mut self, now: u64) -> Result<SimResult> {
         self.stats.cycles = now;
         self.stats.max_queue_occupancy = self
             .chans
@@ -326,6 +678,8 @@ fn push_all(chans: &mut [Fifo], outs: &[u32], t: Token, now: u64) {
 }
 
 /// Attempt to fire one instruction; returns true if it made progress.
+/// A false return mutates **nothing** — the event core relies on this
+/// to make spurious wakeups harmless.
 fn fire(
     n: &mut NodeRt,
     chans: &mut [Fifo],
@@ -571,16 +925,15 @@ fn fire(
                     .ins
                     .iter()
                     .all(|&c| c != NO_CHAN && chans[c as usize].peek(now).is_some());
-                if all {
+                // Completion blocks until the done channel has credit,
+                // like every other op — the token is the host-visible
+                // completion signal and must never be dropped.
+                if all && can_push_all(chans, &n.out0) {
                     for &c in &n.ins {
                         chans[c as usize].pop(now);
                     }
                     n.emitted = true;
-                    if let Some(o) = n.outs.first() {
-                        if can_push_all(chans, o) {
-                            push_all(chans, o, Token::new(1.0, 0, 0), now);
-                        }
-                    }
+                    push_all(chans, &n.out0, Token::new(1.0, 0, 0), now);
                     true
                 } else {
                     false
@@ -588,8 +941,8 @@ fn fire(
             }
         }
         Op::Const => {
-            let limit = if n.expected == u64::MAX { u64::MAX } else { n.expected };
-            if n.count < limit && can_push_all(chans, &n.out0) {
+            // `expected` defaults to u64::MAX (unlimited stream).
+            if n.count < n.expected && can_push_all(chans, &n.out0) {
                 n.count += 1;
                 push_all(chans, &n.out0, Token::new(n.coeff, 0, 0), now);
                 true
@@ -770,9 +1123,10 @@ mod tests {
     }
 
     #[test]
-    fn undersized_buffering_deadlocks_with_report() {
+    fn undersized_buffering_deadlocks_with_identical_report_on_both_cores() {
         // §III-B: strip the mandatory buffering and the pipeline must
-        // deadlock (failure injection).
+        // deadlock (failure injection) — with the same report from the
+        // dense quiet-period counter and the event core's empty wheel.
         let spec = StencilSpec::dim2(
             24,
             18,
@@ -780,21 +1134,25 @@ mod tests {
             crate::stencil::spec::y_taps(3), // ry = 3 needs deep buffers
         )
         .unwrap();
-        let mut g = map2d::build(&spec, 2).unwrap();
-        for ch in &mut g.channels {
-            ch.capacity = ch.capacity.min(2); // sabotage
-        }
-        // Bypass placement's capacity floor by building directly on a
-        // machine with instant routing.
         let m = Machine::paper();
         let x = vec![1.0; 24 * 18];
-        // Placement re-raises capacity to lat+2 which is still < needed.
-        let err = Simulator::build(g, &m, x.clone(), x)
-            .unwrap()
-            .run()
-            .unwrap_err()
-            .to_string();
-        assert!(err.contains("deadlock"), "{err}");
+        let mut errs = Vec::new();
+        for core in [SimCore::Dense, SimCore::Event] {
+            let mut g = map2d::build(&spec, 2).unwrap();
+            for ch in &mut g.channels {
+                ch.capacity = ch.capacity.min(2); // sabotage
+            }
+            // Placement re-raises capacity to lat+2 which is still < needed.
+            let err = Simulator::build(g, &m, x.clone(), x.clone())
+                .unwrap()
+                .with_core(core)
+                .run()
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("deadlock"), "{core}: {err}");
+            errs.push(err);
+        }
+        assert_eq!(errs[0], errs[1], "cores must report the same deadlock");
     }
 
     #[test]
@@ -814,5 +1172,145 @@ mod tests {
         assert_eq!(a.stats.cycles, b.stats.cycles);
         assert_eq!(a.output, b.output);
         assert_eq!(a.stats.mem, b.stats.mem);
+    }
+
+    #[test]
+    fn event_core_bitwise_equals_dense_core_1d_and_2d() {
+        let m = Machine::paper();
+        let mut rng = XorShift::new(0xC0FE);
+
+        let s1 = StencilSpec::dim1(96, crate::stencil::spec::symmetric_taps(3)).unwrap();
+        let x1 = rng.normal_vec(96);
+        let s2 = StencilSpec::heat2d(18, 12, 0.2);
+        let x2 = rng.normal_vec(18 * 12);
+
+        let cases: [(&StencilSpec, &Vec<f64>, usize); 2] = [(&s1, &x1, 3), (&s2, &x2, 2)];
+        for (spec, x, w) in cases {
+            let build = || crate::stencil::build_graph(spec, w).unwrap();
+            let dense = Simulator::build(build(), &m, x.clone(), x.clone())
+                .unwrap()
+                .with_core(SimCore::Dense)
+                .run()
+                .unwrap();
+            let event = Simulator::build(build(), &m, x.clone(), x.clone())
+                .unwrap()
+                .with_core(SimCore::Event)
+                .run()
+                .unwrap();
+            assert_eq!(dense.output, event.output);
+            assert_eq!(dense.stats.cycles, event.stats.cycles);
+            assert_eq!(dense.stats.mem, event.stats.mem);
+            assert_eq!(dense.stats.total_fires(), event.stats.total_fires());
+            assert_eq!(dense.stats.dp_fires, event.stats.dp_fires);
+            assert_eq!(
+                dense.stats.max_queue_occupancy,
+                event.stats.max_queue_occupancy
+            );
+            assert_eq!(dense.stats.skipped_cycles, 0, "dense core never skips");
+            assert!(
+                event.stats.wakeups > 0
+                    && event.stats.wakeups
+                        < event.stats.cycles * event.stats.node_count as u64,
+                "event core must do strictly less evaluation work"
+            );
+        }
+    }
+
+    #[test]
+    fn done_tree_blocks_until_credit_instead_of_dropping() {
+        // Adversarial state crafted directly: a DoneTree whose single
+        // input token is ready but whose capacity-1 output channel is
+        // full. It must refuse to fire (and must not consume its input)
+        // until the credit frees — dropping the completion token here
+        // was the old behaviour this test pins the fix for.
+        let mut chans = vec![Fifo::new(4, 1), Fifo::new(1, 1)];
+        chans[0].push(Token::new(1.0, 0, 0), 0); // visible at cycle 1
+        chans[1].push(Token::new(9.0, 0, 0), 0); // occupies the only credit
+        let mut n = NodeRt {
+            op: Op::DoneTree,
+            stage: Stage::Sync,
+            coeff: 0.0,
+            filter: None,
+            filter_idx: 0,
+            agen: None,
+            agen_pos: 0,
+            agen_len: 0,
+            expected: 1,
+            count: 0,
+            emitted: false,
+            ins: vec![0],
+            outs: vec![vec![1]],
+            in0: 0,
+            in1: NO_CHAN,
+            out0: vec![1u32].into_boxed_slice(),
+            inflight: VecDeque::new(),
+            fires: 0,
+        };
+        let m = Machine::paper();
+        let mut mem = MemSys::new(&m, vec![0.0], vec![0.0]);
+        let mut stats = SimStats::default();
+        assert!(!fire(&mut n, &mut chans, &mut mem, &mut stats, 4, 1));
+        assert!(!n.emitted, "must block, not emit-and-drop");
+        assert!(chans[0].peek(1).is_some(), "input token must stay queued");
+        // Credit frees: now it completes and the token is delivered.
+        chans[1].pop(1);
+        assert!(fire(&mut n, &mut chans, &mut mem, &mut stats, 4, 2));
+        assert!(n.emitted);
+        assert_eq!(chans[1].len(), 1, "completion token delivered, not dropped");
+        assert!(chans[0].peek(2).is_none(), "input consumed on completion");
+    }
+
+    #[test]
+    fn done_token_flows_through_minimal_capacity_done_channel() {
+        // End-to-end regression: a chained done tree behind a
+        // capacity-1 channel (placement floors it to latency + 2, the
+        // minimum streamable credit) still completes, on both cores with
+        // the same cycle count — the completion token must reach the
+        // downstream tree or the run would deadlock.
+        use crate::dfg::builder::Dsl;
+        let build = || {
+            let mut d = Dsl::new();
+            d.op("c", Op::Const, Stage::Control)
+                .coeff(5.0)
+                .expected(1)
+                .out("tok");
+            d.op("sy", Op::SyncCount, Stage::Sync)
+                .expected(1)
+                .input(0, "tok")
+                .out("d0");
+            d.op("done1", Op::DoneTree, Stage::Sync)
+                .expected(1)
+                .input(0, "d0")
+                .out("hostd");
+            d.op("done2", Op::DoneTree, Stage::Sync)
+                .expected(1)
+                .input_cap(0, "hostd", 1);
+            d.build().unwrap()
+        };
+        let m = Machine::paper();
+        let dense = Simulator::build(build(), &m, vec![0.0], vec![0.0])
+            .unwrap()
+            .with_core(SimCore::Dense)
+            .run()
+            .unwrap();
+        let event = Simulator::build(build(), &m, vec![0.0], vec![0.0])
+            .unwrap()
+            .with_core(SimCore::Event)
+            .run()
+            .unwrap();
+        assert_eq!(dense.stats.cycles, event.stats.cycles);
+        assert_eq!(dense.stats.total_fires(), event.stats.total_fires());
+        // Const, sync pop + emit, done1, done2 all fired.
+        assert!(dense.stats.total_fires() >= 4);
+    }
+
+    #[test]
+    fn sim_core_parse_and_display() {
+        assert_eq!(SimCore::parse("dense").unwrap(), SimCore::Dense);
+        assert_eq!(SimCore::parse("event").unwrap(), SimCore::Event);
+        assert!(SimCore::parse("quantum").is_err());
+        assert_eq!(SimCore::Dense.to_string(), "dense");
+        assert_eq!(SimCore::Event.to_string(), "event");
+        assert_eq!(SimCore::default(), SimCore::Event);
     }
 }

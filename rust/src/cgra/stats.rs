@@ -77,6 +77,16 @@ pub struct SimStats {
     pub dp_ops: usize,
     pub node_count: usize,
     pub max_queue_occupancy: usize,
+    /// Cycles the event core jumped over because nothing could fire
+    /// (always 0 under the dense core — it ticks every cycle). Cycle
+    /// counts, outputs and `mem` are identical across cores; this and
+    /// `wakeups` are the only core-dependent counters.
+    pub skipped_cycles: u64,
+    /// Ready-list wakeups the event core processed: one per (slot,
+    /// cycle) evaluation. The dense-core equivalent would be
+    /// `node_count * cycles`; the ratio is the work the scheduler
+    /// avoided. Always 0 under the dense core.
+    pub wakeups: u64,
     pub mem: MemStats,
 }
 
@@ -117,11 +127,22 @@ impl SimStats {
         flops * clock_ghz / self.cycles as f64
     }
 
+    /// Fraction of the dense-core evaluation grid (`node_count * cycles`)
+    /// the event scheduler actually visited; 0 when the dense core ran
+    /// (it has no wakeup accounting).
+    pub fn wakeup_fraction(&self) -> f64 {
+        if self.cycles == 0 || self.node_count == 0 {
+            return 0.0;
+        }
+        self.wakeups as f64 / (self.cycles as f64 * self.node_count as f64)
+    }
+
     /// One-line summary for the CLI / benches.
     pub fn summary(&self) -> String {
         format!(
-            "cycles={} fires={} dp_util={:.1}% reuse={:.1}% dram={}B (r={} w={}) conflicts={}",
+            "cycles={} (skipped={}) fires={} dp_util={:.1}% reuse={:.1}% dram={}B (r={} w={}) conflicts={}",
             self.cycles,
+            self.skipped_cycles,
             self.total_fires(),
             100.0 * self.dp_utilization(),
             100.0 * self.mem.reuse_ratio(),

@@ -30,7 +30,7 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
-use crate::cgra::Machine;
+use crate::cgra::{Machine, SimCore};
 use crate::config::Config;
 use crate::coordinator::Coordinator;
 use crate::gpu_model::{GpuStencil, Precision, V100};
@@ -226,6 +226,8 @@ USAGE: scgra <info|dfg|roofline|run|compare|validate> [--flags]
                         z planes in 3-D; pencil = y+z cuts, x contiguous;
                         block = every axis)
   --steps N             host-driven time steps (default 1)
+  --sim-core C          scheduler core: dense|event (default event; both
+                        are bit-identical — event skips idle cycles)
   --dot FILE / --asm FILE   emit Graphviz / assembly (dfg)
   --config FILE         TOML machine/run config ([run] decomp = \"pencil\")
 
@@ -355,6 +357,7 @@ fn cmd_run(args: &Args, m: &Machine, cfg: Option<&Config>) -> Result<()> {
             steps: 1,
             seed: 42,
             decomp: DecompKind::Auto,
+            sim_core: SimCore::default(),
         },
     );
     let w = match args.num("workers", defaults.workers)? {
@@ -367,15 +370,21 @@ fn cmd_run(args: &Args, m: &Machine, cfg: Option<&Config>) -> Result<()> {
         Some(s) => DecompKind::parse(s)?,
         None => defaults.decomp,
     };
+    let sim_core = match args.get("sim-core") {
+        Some(s) => SimCore::parse(s)?,
+        None => defaults.sim_core,
+    };
     anyhow::ensure!(steps >= 1, "--steps must be >= 1 (got {steps})");
     let mut rng = XorShift::new(defaults.seed);
     let input = rng.normal_vec(spec.grid_points());
 
     // Every dimensionality runs through the coordinator: the decomp
     // layer cuts 1-D/2-D/3-D grids alike into halo-padded tiles.
-    let coord = Coordinator::new(tiles, m.clone()).with_decomp(decomp);
+    let coord = Coordinator::new(tiles, m.clone())
+        .with_decomp(decomp)
+        .with_sim_core(sim_core);
     println!(
-        "running {} stencil, w={w}, tiles={tiles}, decomp={decomp}, steps={steps}",
+        "running {} stencil, w={w}, tiles={tiles}, decomp={decomp}, steps={steps}, core={sim_core}",
         describe(&spec)
     );
     let (out, reports) = coord.run_steps(&spec, w, &input, steps)?;
@@ -576,6 +585,23 @@ mod tests {
     fn bad_decomp_value_is_an_error() {
         assert!(run(&sv(&[
             "run", "--stencil", "3pt", "--decomp", "diagonal"
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn run_command_accepts_dense_sim_core() {
+        run(&sv(&[
+            "run", "--shape", "star", "--dims", "40", "--workers", "2",
+            "--sim-core", "dense",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn bad_sim_core_value_is_an_error() {
+        assert!(run(&sv(&[
+            "run", "--stencil", "3pt", "--sim-core", "quantum"
         ]))
         .is_err());
     }

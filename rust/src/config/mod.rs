@@ -9,7 +9,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::cgra::Machine;
+use crate::cgra::{Machine, SimCore};
 use crate::stencil::decomp::DecompKind;
 use crate::stencil::StencilSpec;
 
@@ -161,11 +161,16 @@ impl Config {
     }
 
     /// `[run]` knobs: workers (0 = roofline-optimal), tiles, steps,
-    /// decomposition kind (`decomp = "slab|pencil|block|auto"`).
+    /// decomposition kind (`decomp = "slab|pencil|block|auto"`) and
+    /// simulator core (`sim_core = "dense|event"`).
     pub fn run_params(&self) -> Result<RunParams> {
         let decomp = match self.get("run", "decomp") {
             None => DecompKind::Auto,
             Some(v) => DecompKind::parse(v)?,
+        };
+        let sim_core = match self.get("run", "sim_core") {
+            None => SimCore::default(),
+            Some(v) => SimCore::parse(v)?,
         };
         Ok(RunParams {
             workers: self.num("run", "workers", 0usize)?,
@@ -173,6 +178,7 @@ impl Config {
             steps: self.num("run", "steps", 1usize)?,
             seed: self.num("run", "seed", 42u64)?,
             decomp,
+            sim_core,
         })
     }
 }
@@ -187,6 +193,8 @@ pub struct RunParams {
     pub seed: u64,
     /// Multi-tile cut strategy.
     pub decomp: DecompKind,
+    /// Simulator scheduler core (bit-identical; `event` is the default).
+    pub sim_core: SimCore,
 }
 
 #[cfg(test)]
@@ -282,6 +290,16 @@ tiles = 16
         let c = Config::parse("[run]\ndecomp = \"pencil\"\n").unwrap();
         assert_eq!(c.run_params().unwrap().decomp, DecompKind::Pencil);
         let c = Config::parse("[run]\ndecomp = \"diagonal\"\n").unwrap();
+        assert!(c.run_params().is_err());
+    }
+
+    #[test]
+    fn sim_core_parses_defaults_and_rejects() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.run_params().unwrap().sim_core, SimCore::Event);
+        let c = Config::parse("[run]\nsim_core = \"dense\"\n").unwrap();
+        assert_eq!(c.run_params().unwrap().sim_core, SimCore::Dense);
+        let c = Config::parse("[run]\nsim_core = \"quantum\"\n").unwrap();
         assert!(c.run_params().is_err());
     }
 

@@ -21,10 +21,10 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
-use crate::cgra::Machine;
+use crate::cgra::{Machine, SimCore};
 use crate::stencil::decomp::Tile;
 use crate::stencil::StencilSpec;
-use crate::verify::golden::{run_sim, stencil_ref};
+use crate::verify::golden::{run_sim_core, stencil_ref};
 
 /// Recursively bisect the interior box until every leaf's output extent
 /// along every axis is at most `max_extent`. Leaves carry radius-wide
@@ -94,6 +94,8 @@ pub struct HybridRunner {
     pub machine: Machine,
     pub tiles: usize,
     pub cpu_workers: usize,
+    /// Scheduler core the CGRA executors simulate with.
+    pub sim_core: SimCore,
 }
 
 impl HybridRunner {
@@ -102,7 +104,14 @@ impl HybridRunner {
             machine,
             tiles,
             cpu_workers,
+            sim_core: SimCore::default(),
         }
+    }
+
+    /// Override the simulator core (builder style).
+    pub fn with_sim_core(mut self, core: SimCore) -> Self {
+        self.sim_core = core;
+        self
     }
 
     /// Execute `tiles` of a stencil (any dimensionality); CGRA tiles
@@ -126,13 +135,14 @@ impl HybridRunner {
             let machine = self.machine.clone();
             let spec = spec.clone();
             let input = input.to_vec();
+            let core = self.sim_core;
             handles.push(std::thread::spawn(move || -> Result<()> {
                 loop {
                     let item = { queue.lock().unwrap().pop_front() };
                     let Some((id, tile)) = item else { break };
                     let sub = tile.sub_spec(&spec);
                     let sub_in = tile.extract(&spec, &input);
-                    let res = run_sim(&sub, w, &machine, &sub_in)?;
+                    let res = run_sim_core(&sub, w, &machine, &sub_in, core)?;
                     tx.send((id, tile, Executor::Cgra(t), res.output, res.stats.cycles))
                         .ok();
                 }

@@ -16,7 +16,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::{ensure, Context, Result};
 
 use crate::cgra::stats::MemStats;
-use crate::cgra::{Machine, Simulator};
+use crate::cgra::{Machine, SimCore, Simulator};
 use crate::dfg::Graph;
 use crate::stencil::decomp::{self, DecompKind, DecompPlan, Tile};
 use crate::stencil::{build_graph, StencilSpec};
@@ -81,6 +81,9 @@ pub struct Coordinator {
     pub fabric_tokens: usize,
     /// Cut strategy ([`DecompKind::Auto`] picks per dimensionality).
     pub decomp: DecompKind,
+    /// Scheduler core every tile simulation runs on (bit-identical
+    /// either way; `Event` is the default and the fast one).
+    pub sim_core: SimCore,
 }
 
 impl Coordinator {
@@ -90,6 +93,7 @@ impl Coordinator {
             tiles,
             fabric_tokens: decomp::DEFAULT_FABRIC_TOKENS,
             decomp: DecompKind::Auto,
+            sim_core: SimCore::default(),
         }
     }
 
@@ -101,6 +105,12 @@ impl Coordinator {
     /// Override the cut strategy (builder style).
     pub fn with_decomp(mut self, kind: DecompKind) -> Self {
         self.decomp = kind;
+        self
+    }
+
+    /// Override the simulator core (builder style).
+    pub fn with_sim_core(mut self, core: SimCore) -> Self {
+        self.sim_core = core;
         self
     }
 
@@ -175,6 +185,7 @@ impl Coordinator {
             let queue = Arc::clone(&queue);
             let tx = tx.clone();
             let machine = self.machine.clone();
+            let core = self.sim_core;
             handles.push(std::thread::spawn(move || -> Result<()> {
                 loop {
                     let task = { queue.lock().unwrap().pop_front() };
@@ -185,7 +196,7 @@ impl Coordinator {
                         task.input.clone(),
                         task.input,
                     )
-                    .and_then(|sim| sim.run())
+                    .and_then(|sim| sim.with_core(core).run())
                     .with_context(|| format!("tile task {}", task.id))?;
                     tx.send((tile_id, task.tile, res)).ok();
                 }

@@ -4,7 +4,13 @@
 //! [`run`] / [`BenchStats`]: fixed warmup, N timed iterations, and a
 //! mean / median / stddev / min report on stdout. Deterministic
 //! iteration counts keep bench output diff-able run to run.
+//!
+//! For trend tracking, [`JsonSink`] collects per-case records and
+//! writes a machine-readable JSON array (e.g. `BENCH_sim.json`, which
+//! CI uploads as an artifact so the perf trajectory in
+//! `EXPERIMENTS.md` §Perf can be extended from any run).
 
+use std::fmt::Write as _;
 use std::time::Instant;
 
 /// Result of one benchmark case.
@@ -82,6 +88,76 @@ pub fn black_box<T>(v: T) -> T {
     std::hint::black_box(v)
 }
 
+/// Collector for machine-readable bench records. No external JSON crate
+/// is available offline, so records are assembled by hand; names/keys
+/// are plain ASCII identifiers and values are finite numbers, which is
+/// all the format needs.
+#[derive(Debug, Default)]
+pub struct JsonSink {
+    records: Vec<String>,
+}
+
+impl JsonSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append one record: the timing stats plus bench-specific numeric
+    /// fields (cycles, throughput, ...).
+    pub fn record(&mut self, stats: &BenchStats, extra: &[(&str, f64)]) {
+        let mut s = String::new();
+        let _ = write!(
+            s,
+            "{{\"name\":\"{}\",\"iters\":{},\"mean_s\":{:.9},\"median_s\":{:.9},\"stddev_s\":{:.9},\"min_s\":{:.9}",
+            json_escape(&stats.name),
+            stats.iters,
+            stats.mean_s,
+            stats.median_s,
+            stats.stddev_s,
+            stats.min_s,
+        );
+        for (k, v) in extra {
+            if v.is_finite() {
+                let _ = write!(s, ",\"{}\":{v}", json_escape(k));
+            }
+        }
+        s.push('}');
+        self.records.push(s);
+    }
+
+    /// Number of records collected so far.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// The full JSON document (an array of records).
+    pub fn to_json(&self) -> String {
+        format!("[\n  {}\n]\n", self.records.join(",\n  "))
+    }
+
+    /// Write the document to `path` and report where it went.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())?;
+        println!("\nwrote {} bench records to {path}", self.records.len());
+        Ok(())
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => vec!['\\', '"'],
+            '\\' => vec!['\\', '\\'],
+            c if (c as u32) < 0x20 => vec![' '],
+            c => vec![c],
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -108,5 +184,29 @@ mod tests {
             max_s: 0.5,
         };
         assert!((s.per_sec(100.0) - 200.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_sink_emits_parseable_records() {
+        let s = BenchStats {
+            name: "case \"a\"".into(),
+            iters: 3,
+            mean_s: 0.25,
+            median_s: 0.25,
+            stddev_s: 0.0,
+            min_s: 0.2,
+            max_s: 0.3,
+        };
+        let mut sink = JsonSink::new();
+        sink.record(&s, &[("cycles", 1234.0), ("nan_dropped", f64::NAN)]);
+        assert_eq!(sink.len(), 1);
+        let doc = sink.to_json();
+        assert!(doc.starts_with("[\n"), "{doc}");
+        assert!(doc.contains("\"name\":\"case \\\"a\\\"\""), "{doc}");
+        assert!(doc.contains("\"cycles\":1234"), "{doc}");
+        assert!(!doc.contains("nan_dropped"), "non-finite values dropped: {doc}");
+        // Balanced braces/brackets (cheap well-formedness check).
+        assert_eq!(doc.matches('{').count(), doc.matches('}').count());
+        assert_eq!(doc.matches('[').count(), doc.matches(']').count());
     }
 }

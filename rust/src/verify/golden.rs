@@ -10,7 +10,7 @@
 
 use anyhow::Result;
 
-use crate::cgra::{Machine, SimResult, Simulator};
+use crate::cgra::{Machine, SimCore, SimResult, Simulator};
 use crate::stencil::{build_graph, StencilSpec};
 
 /// 1-D star stencil, interior computed, boundary copied.
@@ -103,14 +103,27 @@ pub fn box3d_ref(x: &[f64], spec: &StencilSpec) -> Vec<f64> {
     stencil_ref(x, spec)
 }
 
-/// Map `spec` with `w` workers, simulate on `m`, return the result.
-/// The output buffer starts as a copy of the input, so boundary points
-/// carry the input values (the Dirichlet contract all layers share).
-/// Dispatches across all supported shapes via
-/// [`crate::stencil::build_graph`].
-pub fn run_sim(spec: &StencilSpec, w: usize, m: &Machine, input: &[f64]) -> Result<SimResult> {
+/// Map `spec` with `w` workers, simulate on `m` with an explicit
+/// scheduler core, return the result. The output buffer starts as a
+/// copy of the input, so boundary points carry the input values (the
+/// Dirichlet contract all layers share). Dispatches across all
+/// supported shapes via [`crate::stencil::build_graph`].
+pub fn run_sim_core(
+    spec: &StencilSpec,
+    w: usize,
+    m: &Machine,
+    input: &[f64],
+    core: SimCore,
+) -> Result<SimResult> {
     let g = build_graph(spec, w)?;
-    Simulator::build(g, m, input.to_vec(), input.to_vec())?.run()
+    Simulator::build(g, m, input.to_vec(), input.to_vec())?
+        .with_core(core)
+        .run()
+}
+
+/// [`run_sim_core`] with the default (event-driven) core.
+pub fn run_sim(spec: &StencilSpec, w: usize, m: &Machine, input: &[f64]) -> Result<SimResult> {
+    run_sim_core(spec, w, m, input, SimCore::default())
 }
 
 /// Maximum absolute elementwise difference.

@@ -7,6 +7,6 @@
 pub mod golden;
 
 pub use golden::{
-    box2d_ref, box3d_ref, heat2d_step_ref, max_abs_diff, run_sim, stencil1d_ref,
-    stencil2d_ref, stencil3d_ref, stencil_ref,
+    box2d_ref, box3d_ref, heat2d_step_ref, max_abs_diff, run_sim, run_sim_core,
+    stencil1d_ref, stencil2d_ref, stencil3d_ref, stencil_ref,
 };

@@ -1,0 +1,210 @@
+//! Cross-core differential suite: the event-driven ready-list core must
+//! be **bit-identical** to the dense reference loop — same output grid,
+//! same cycle count, same firing counters, same memory statistics — on
+//! every workload family the mapper supports (star 1-D/2-D/3-D, box
+//! 2-D/3-D, temporal multi-step, instruction-packed tiny fabrics) and
+//! through the multi-tile coordinator (pencil-cut 3-D included).
+//!
+//! The dense loop is the executable specification; the event core is
+//! the optimization. Any divergence here is a scheduler bug, not a
+//! tolerance question — everything is compared with `==`.
+
+use stencil_cgra::cgra::{Machine, SimCore, Simulator};
+use stencil_cgra::coordinator::Coordinator;
+use stencil_cgra::stencil::decomp::DecompKind;
+use stencil_cgra::stencil::spec::{symmetric_taps, uniform_box_taps, y_taps, z_taps};
+use stencil_cgra::stencil::{build_graph, temporal, StencilSpec};
+use stencil_cgra::util::rng::XorShift;
+use stencil_cgra::verify::golden::run_sim_core;
+
+/// Run `spec` on both cores and assert every observable is identical.
+/// Returns (dense skipped, event skipped) for workload-specific checks.
+fn assert_cores_identical(spec: &StencilSpec, w: usize, m: &Machine, seed: u64) -> (u64, u64) {
+    let mut rng = XorShift::new(seed);
+    let x = rng.normal_vec(spec.grid_points());
+    let dense = run_sim_core(spec, w, m, &x, SimCore::Dense).unwrap();
+    let event = run_sim_core(spec, w, m, &x, SimCore::Event).unwrap();
+    let label = format!("spec dims {:?} w={w}", spec.dims());
+    assert_eq!(dense.output, event.output, "{label}: output grids differ");
+    assert_eq!(
+        dense.stats.cycles, event.stats.cycles,
+        "{label}: cycle counts differ"
+    );
+    assert_eq!(dense.stats.mem, event.stats.mem, "{label}: MemStats differ");
+    assert_eq!(
+        dense.stats.total_fires(),
+        event.stats.total_fires(),
+        "{label}: fire totals differ"
+    );
+    assert_eq!(dense.stats.dp_fires, event.stats.dp_fires, "{label}");
+    assert_eq!(
+        dense.stats.fires_control, event.stats.fires_control,
+        "{label}"
+    );
+    assert_eq!(dense.stats.fires_reader, event.stats.fires_reader, "{label}");
+    assert_eq!(
+        dense.stats.fires_compute, event.stats.fires_compute,
+        "{label}"
+    );
+    assert_eq!(dense.stats.fires_writer, event.stats.fires_writer, "{label}");
+    assert_eq!(dense.stats.fires_sync, event.stats.fires_sync, "{label}");
+    assert_eq!(
+        dense.stats.max_queue_occupancy, event.stats.max_queue_occupancy,
+        "{label}: queue occupancy differs"
+    );
+    assert_eq!(dense.stats.skipped_cycles, 0, "{label}: dense never skips");
+    assert!(
+        event.stats.wakeups <= event.stats.cycles * event.stats.node_count as u64,
+        "{label}: at most one wakeup per node per cycle"
+    );
+    (dense.stats.skipped_cycles, event.stats.skipped_cycles)
+}
+
+#[test]
+fn star_1d_cores_identical() {
+    let m = Machine::paper();
+    for (nx, r, w) in [(96usize, 1usize, 1usize), (200, 8, 6), (301, 3, 4)] {
+        let spec = StencilSpec::dim1(nx, symmetric_taps(r)).unwrap();
+        let (_, skipped) = assert_cores_identical(&spec, w, &m, 0xC0DE + nx as u64);
+        // The DRAM ramp alone guarantees idle cycles to skip.
+        assert!(skipped > 0, "1-D nx={nx} should skip idle cycles");
+    }
+}
+
+#[test]
+fn star_2d_cores_identical() {
+    let m = Machine::paper();
+    let spec = StencilSpec::dim2(40, 24, symmetric_taps(2), y_taps(2)).unwrap();
+    assert_cores_identical(&spec, 3, &m, 0x2D);
+    let heat = StencilSpec::heat2d(32, 20, 0.2);
+    assert_cores_identical(&heat, 2, &m, 0x2E);
+}
+
+#[test]
+fn star_3d_cores_identical() {
+    let m = Machine::paper();
+    let spec = StencilSpec::heat3d(12, 10, 8, 0.1);
+    assert_cores_identical(&spec, 2, &m, 0x3D);
+    let wide = StencilSpec::dim3(14, 10, 8, symmetric_taps(2), y_taps(1), z_taps(1)).unwrap();
+    assert_cores_identical(&wide, 2, &m, 0x3E);
+}
+
+#[test]
+fn box_2d_and_3d_cores_identical() {
+    let m = Machine::paper();
+    let b2 = StencilSpec::box2d(24, 18, 1, 1, uniform_box_taps(1, 1, 0)).unwrap();
+    assert_cores_identical(&b2, 2, &m, 0xB2);
+    let b3 = StencilSpec::box3d(10, 8, 6, 1, 1, 1, uniform_box_taps(1, 1, 1)).unwrap();
+    assert_cores_identical(&b3, 1, &m, 0xB3);
+}
+
+#[test]
+fn temporal_multistep_cores_identical() {
+    // §IV temporal pipelines have the deepest chains and the most
+    // instruction-level idling — the cycle-skipping sweet spot.
+    let m = Machine::paper();
+    let spec = StencilSpec::dim1(160, vec![0.25, 0.5, 0.25]).unwrap();
+    let mut rng = XorShift::new(0x7E4);
+    let x = rng.normal_vec(160);
+    for steps in [2usize, 3] {
+        let run = |core: SimCore| {
+            let g = temporal::build(&spec, 2, steps).unwrap();
+            Simulator::build(g, &m, x.clone(), x.clone())
+                .unwrap()
+                .with_core(core)
+                .run()
+                .unwrap()
+        };
+        let dense = run(SimCore::Dense);
+        let event = run(SimCore::Event);
+        assert_eq!(dense.output, event.output, "steps={steps}");
+        assert_eq!(dense.stats.cycles, event.stats.cycles, "steps={steps}");
+        assert_eq!(dense.stats.mem, event.stats.mem, "steps={steps}");
+        assert_eq!(
+            dense.stats.total_fires(),
+            event.stats.total_fires(),
+            "steps={steps}"
+        );
+    }
+}
+
+#[test]
+fn packed_tiny_fabric_cores_identical() {
+    // Machine::tiny forces several instructions per PE, exercising the
+    // one-instruction-per-PE-per-cycle arbitration replay (group sweep
+    // + suppressed-mate re-arm) rather than the flat topological path.
+    let m = Machine::tiny();
+    let spec = StencilSpec::dim1(48, vec![0.25, 0.5, 0.25]).unwrap();
+    let mut rng = XorShift::new(0x717);
+    let x = rng.normal_vec(48);
+    let run = |core: SimCore| {
+        let g = build_graph(&spec, 2).unwrap();
+        Simulator::build(g, &m, x.clone(), x.clone())
+            .unwrap()
+            .with_core(core)
+            .run()
+            .unwrap()
+    };
+    let dense = run(SimCore::Dense);
+    let event = run(SimCore::Event);
+    assert_eq!(dense.output, event.output);
+    assert_eq!(dense.stats.cycles, event.stats.cycles);
+    assert_eq!(dense.stats.mem, event.stats.mem);
+    assert_eq!(dense.stats.total_fires(), event.stats.total_fires());
+    assert_eq!(dense.stats.max_queue_occupancy, event.stats.max_queue_occupancy);
+}
+
+/// Deterministic multi-tile aggregates: which hardware tile ran which
+/// task depends on thread scheduling, but the *set* of tile tasks and
+/// each task's simulation are deterministic — so the stitched grid,
+/// the total cycle sum and the array-wide memory counters must be
+/// bit-identical across cores.
+fn assert_coordinator_cores_identical(
+    spec: &StencilSpec,
+    w: usize,
+    tiles: usize,
+    kind: DecompKind,
+    seed: u64,
+) {
+    let mut rng = XorShift::new(seed);
+    let x = rng.normal_vec(spec.grid_points());
+    let run = |core: SimCore| {
+        Coordinator::new(tiles, Machine::paper())
+            .with_decomp(kind)
+            .with_sim_core(core)
+            .run(spec, w, &x)
+            .unwrap()
+    };
+    let dense = run(SimCore::Dense);
+    let event = run(SimCore::Event);
+    assert_eq!(dense.output, event.output, "stitched grids differ");
+    assert_eq!(dense.strips, event.strips);
+    assert_eq!(dense.total_cycles, event.total_cycles, "cycle sums differ");
+    assert_eq!(dense.halo_points, event.halo_points);
+    let sum_mem = |rep: &stencil_cgra::coordinator::RunReport| {
+        let mut acc = stencil_cgra::cgra::stats::MemStats::default();
+        for t in &rep.per_tile {
+            acc.accumulate(&t.mem);
+        }
+        acc
+    };
+    assert_eq!(sum_mem(&dense), sum_mem(&event), "array MemStats differ");
+}
+
+#[test]
+fn multitile_1d_slab_cores_identical() {
+    let spec = StencilSpec::dim1(300, symmetric_taps(4)).unwrap();
+    assert_coordinator_cores_identical(&spec, 2, 3, DecompKind::Auto, 0xA1);
+}
+
+#[test]
+fn multitile_2d_slab_cores_identical() {
+    let spec = StencilSpec::dim2(64, 20, symmetric_taps(2), y_taps(2)).unwrap();
+    assert_coordinator_cores_identical(&spec, 2, 4, DecompKind::Slab, 0xA2);
+}
+
+#[test]
+fn multitile_3d_pencil_cores_identical() {
+    let spec = StencilSpec::dim3(14, 10, 8, symmetric_taps(1), y_taps(1), z_taps(1)).unwrap();
+    assert_coordinator_cores_identical(&spec, 2, 4, DecompKind::Pencil, 0xA3);
+}
