@@ -8,12 +8,17 @@
 //! * **C. tile count** — halo re-read overhead vs parallelism when
 //!   decomposing for multi-tile execution (§III-B blocking generalized
 //!   to N-dim tiles).
-//! * **D. temporal depth** — §IV pipeline: steps computed per memory
-//!   round-trip vs achieved FLOPs per DRAM byte.
+//! * **D. temporal depth** — §IV pipeline across 1-D/2-D/3-D
+//!   (`temporal::build_nd`): steps computed per memory round-trip vs
+//!   achieved FLOPs per DRAM byte; records `BENCH_temporal.json` for
+//!   trend tracking (CI uploads it as an artifact).
 //! * **E. decomposition kind** — slab vs pencil vs block cuts of a 3-D
 //!   volume on 16 tiles: tasks, makespan, halo overhead.
 //!
 //! Run: `cargo bench --bench ablation_workers`
+//! Short mode (CI): `BENCH_QUICK=1 cargo bench --bench ablation_workers`
+//! runs only the §D depth sweep on shrunken grids (1 iteration) and
+//! still writes `BENCH_temporal.json`.
 
 use stencil_cgra::cgra::{Machine, Simulator};
 use stencil_cgra::coordinator::Coordinator;
@@ -23,127 +28,196 @@ use stencil_cgra::stencil::{map1d, temporal, StencilSpec};
 use stencil_cgra::util::bench;
 use stencil_cgra::verify::golden::run_sim;
 
+fn quick() -> bool {
+    std::env::var("BENCH_QUICK").map(|v| v != "0").unwrap_or(false)
+}
+
+/// §D: fused-depth sweep across dimensionalities, with machine-readable
+/// records (`BENCH_temporal.json`).
+fn temporal_depth_sweep(m: &Machine) {
+    bench::section("D. temporal-depth ablation — §IV fused pipelines (1-D/2-D/3-D)");
+    let mut sink = bench::JsonSink::new();
+    let (warmup, iters) = if quick() { (0usize, 1usize) } else { (1, 3) };
+    let depths = [1usize, 2, 4, 8];
+    let cases: Vec<(&str, StencilSpec, usize)> = if quick() {
+        vec![
+            (
+                "1d_3pt_n4000",
+                StencilSpec::dim1(4_000, vec![0.25, 0.5, 0.25]).unwrap(),
+                3,
+            ),
+            ("2d_heat_40x28", StencilSpec::heat2d(40, 28, 0.2), 3),
+            ("3d_heat_16x14x12", StencilSpec::heat3d(16, 14, 12, 0.1), 2),
+        ]
+    } else {
+        vec![
+            (
+                "1d_3pt_n20000",
+                StencilSpec::dim1(20_000, vec![0.25, 0.5, 0.25]).unwrap(),
+                3,
+            ),
+            ("2d_heat_64x48", StencilSpec::heat2d(64, 48, 0.2), 4),
+            ("3d_heat_24x20x16", StencilSpec::heat3d(24, 20, 16, 0.1), 2),
+        ]
+    };
+    for (name, spec, w) in &cases {
+        let x = vec![1.0; spec.grid_points()];
+        // Deepest depth the grid's trapezoid admits.
+        let cap = spec
+            .dims()
+            .iter()
+            .zip(spec.radii())
+            .map(|(n, r)| (n - 1) / (2 * r))
+            .min()
+            .unwrap();
+        println!(
+            "\n{name}: {:>6} {:>10} {:>10} {:>12} {:>10}",
+            "steps", "cycles", "loads", "flops/byte", "GFLOPS"
+        );
+        for &steps in &depths {
+            if steps > cap {
+                println!("  T{steps}: exceeds the grid trapezoid (cap {cap}); skipped");
+                continue;
+            }
+            let flops = temporal::total_flops(spec, steps);
+            let mut cycles = 0u64;
+            let mut loads = 0u64;
+            let mut bytes = 0f64;
+            let case = format!("{name}/T{steps}");
+            let stats = bench::run(&case, warmup, iters, || {
+                let g = temporal::build_nd(spec, *w, steps).unwrap();
+                let res = Simulator::build(g, m, x.clone(), x.clone())
+                    .unwrap()
+                    .run()
+                    .unwrap();
+                cycles = res.stats.cycles;
+                loads = res.stats.mem.loads;
+                bytes = res.stats.mem.total_dram_bytes() as f64;
+            });
+            let gflops = flops * m.clock_ghz / cycles as f64;
+            println!(
+                "{steps:>6} {cycles:>10} {loads:>10} {:>12.2} {gflops:>10.1}",
+                flops / bytes
+            );
+            sink.record(
+                &stats,
+                &[
+                    ("steps", steps as f64),
+                    ("cycles", cycles as f64),
+                    ("loads", loads as f64),
+                    ("dram_bytes", bytes),
+                    ("flops_per_byte", flops / bytes),
+                    ("gflops", gflops),
+                ],
+            );
+        }
+    }
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_temporal.json");
+    sink.write(path).expect("writing BENCH_temporal.json");
+}
+
 fn main() {
     let m = Machine::paper();
 
-    bench::section("A. worker-count sweep — 1D 17-pt, n=40000");
-    let spec1 = StencilSpec::dim1(40_000, symmetric_taps(8)).unwrap();
-    let x1 = vec![1.0; 40_000];
-    println!(
-        "{:>3} {:>10} {:>10} {:>10} {:>7}",
-        "w", "cycles", "GFLOPS", "predicted", "ratio"
-    );
-    for w in 1..=8 {
-        let res = run_sim(&spec1, w, &m, &x1).unwrap();
-        let g = res.gflops(spec1.total_flops(), m.clock_ghz);
-        // Prediction: min(worker demand, bandwidth roof).
-        let pred = (w as f64 * spec1.flops_per_output() * m.clock_ghz)
-            .min(m.roofline_gflops(spec1.arithmetic_intensity()));
+    if !quick() {
+        bench::section("A. worker-count sweep — 1D 17-pt, n=40000");
+        let spec1 = StencilSpec::dim1(40_000, symmetric_taps(8)).unwrap();
+        let x1 = vec![1.0; 40_000];
         println!(
-            "{w:>3} {:>10} {:>10.1} {:>10.1} {:>6.0}%",
-            res.stats.cycles,
-            g,
-            pred,
-            100.0 * g / pred
+            "{:>3} {:>10} {:>10} {:>10} {:>7}",
+            "w", "cycles", "GFLOPS", "predicted", "ratio"
         );
-    }
-
-    bench::section("A'. worker-count sweep — 2D 49-pt, 240x113");
-    let spec2 = StencilSpec::dim2(240, 113, symmetric_taps(12), y_taps(12)).unwrap();
-    let x2 = vec![1.0; spec2.grid_points()];
-    println!("{:>3} {:>10} {:>10} {:>10}", "w", "cycles", "GFLOPS", "predicted");
-    for w in 1..=5 {
-        let res = run_sim(&spec2, w, &m, &x2).unwrap();
-        let g = res.gflops(spec2.total_flops(), m.clock_ghz);
-        let pred = (w as f64 * spec2.flops_per_output() * m.clock_ghz)
-            .min(m.roofline_gflops(spec2.arithmetic_intensity()));
-        println!("{w:>3} {:>10} {:>10.1} {:>10.1}", res.stats.cycles, g, pred);
-    }
-
-    bench::section("B. buffering-slack ablation — 1D 17-pt, n=20000, w=6");
-    let spec = StencilSpec::dim1(20_000, symmetric_taps(8)).unwrap();
-    let x = vec![1.0; 20_000];
-    println!("{:>12} {:>10} {:>9}", "cap scale", "cycles", "status");
-    for (label, scale_num, scale_den) in
-        [("2.0x", 2usize, 1usize), ("1.0x", 1, 1), ("0.5x", 1, 2), ("0.25x", 1, 4)]
-    {
-        let mut g = map1d::build(&spec, 6).unwrap();
-        for ch in &mut g.channels {
-            ch.capacity = (ch.capacity * scale_num / scale_den).max(1);
+        for w in 1..=8 {
+            let res = run_sim(&spec1, w, &m, &x1).unwrap();
+            let g = res.gflops(spec1.total_flops(), m.clock_ghz);
+            // Prediction: min(worker demand, bandwidth roof).
+            let pred = (w as f64 * spec1.flops_per_output() * m.clock_ghz)
+                .min(m.roofline_gflops(spec1.arithmetic_intensity()));
+            println!(
+                "{w:>3} {:>10} {:>10.1} {:>10.1} {:>6.0}%",
+                res.stats.cycles,
+                g,
+                pred,
+                100.0 * g / pred
+            );
         }
-        match Simulator::build(g, &m, x.clone(), x.clone())
-            .unwrap()
-            .run()
+
+        bench::section("A'. worker-count sweep — 2D 49-pt, 240x113");
+        let spec2 = StencilSpec::dim2(240, 113, symmetric_taps(12), y_taps(12)).unwrap();
+        let x2 = vec![1.0; spec2.grid_points()];
+        println!("{:>3} {:>10} {:>10} {:>10}", "w", "cycles", "GFLOPS", "predicted");
+        for w in 1..=5 {
+            let res = run_sim(&spec2, w, &m, &x2).unwrap();
+            let g = res.gflops(spec2.total_flops(), m.clock_ghz);
+            let pred = (w as f64 * spec2.flops_per_output() * m.clock_ghz)
+                .min(m.roofline_gflops(spec2.arithmetic_intensity()));
+            println!("{w:>3} {:>10} {:>10.1} {:>10.1}", res.stats.cycles, g, pred);
+        }
+
+        bench::section("B. buffering-slack ablation — 1D 17-pt, n=20000, w=6");
+        let spec = StencilSpec::dim1(20_000, symmetric_taps(8)).unwrap();
+        let x = vec![1.0; 20_000];
+        println!("{:>12} {:>10} {:>9}", "cap scale", "cycles", "status");
+        for (label, scale_num, scale_den) in
+            [("2.0x", 2usize, 1usize), ("1.0x", 1, 1), ("0.5x", 1, 2), ("0.25x", 1, 4)]
         {
-            Ok(res) => println!("{label:>12} {:>10} {:>9}", res.stats.cycles, "ok"),
-            Err(_) => println!("{label:>12} {:>10} {:>9}", "-", "deadlock/slow"),
+            let mut g = map1d::build(&spec, 6).unwrap();
+            for ch in &mut g.channels {
+                ch.capacity = (ch.capacity * scale_num / scale_den).max(1);
+            }
+            match Simulator::build(g, &m, x.clone(), x.clone())
+                .unwrap()
+                .run()
+            {
+                Ok(res) => println!("{label:>12} {:>10} {:>9}", res.stats.cycles, "ok"),
+                Err(_) => println!("{label:>12} {:>10} {:>9}", "-", "deadlock/slow"),
+            }
+        }
+
+        bench::section("C. tile-count ablation — 2D 49-pt on 16 tiles (960x449)");
+        let spec = StencilSpec::paper_2d();
+        let x = vec![1.0; spec.grid_points()];
+        println!(
+            "{:>7} {:>7} {:>12} {:>10} {:>12}",
+            "tiles", "tasks", "makespan", "GFLOPS", "extra reads"
+        );
+        let base_reads = (spec.grid_points() * 8) as f64;
+        for tiles in [1usize, 2, 4, 8, 16, 32] {
+            let coord = Coordinator::new(tiles, m.clone());
+            let rep = coord.run(&spec, 5, &x).unwrap();
+            let reads: u64 = rep.per_tile.iter().map(|t| t.mem.dram_read_bytes).sum();
+            println!(
+                "{tiles:>7} {:>7} {:>12} {:>10.0} {:>11.1}%",
+                rep.strips,
+                rep.makespan_cycles,
+                rep.gflops,
+                100.0 * (reads as f64 - base_reads) / base_reads
+            );
         }
     }
 
-    bench::section("C. tile-count ablation — 2D 49-pt on 16 tiles (960x449)");
-    let spec = StencilSpec::paper_2d();
-    let x = vec![1.0; spec.grid_points()];
-    println!(
-        "{:>7} {:>7} {:>12} {:>10} {:>12}",
-        "tiles", "tasks", "makespan", "GFLOPS", "extra reads"
-    );
-    let base_reads = (spec.grid_points() * 8) as f64;
-    for tiles in [1usize, 2, 4, 8, 16, 32] {
-        let coord = Coordinator::new(tiles, m.clone());
-        let rep = coord.run(&spec, 5, &x).unwrap();
-        let reads: u64 = rep.per_tile.iter().map(|t| t.mem.dram_read_bytes).sum();
-        println!(
-            "{tiles:>7} {:>7} {:>12} {:>10.0} {:>11.1}%",
-            rep.strips,
-            rep.makespan_cycles,
-            rep.gflops,
-            100.0 * (reads as f64 - base_reads) / base_reads
-        );
-    }
+    temporal_depth_sweep(&m);
 
-    bench::section("D. temporal-depth ablation — 1D 3-pt, n=20000, w=3 (§IV)");
-    let spec = StencilSpec::dim1(20_000, vec![0.25, 0.5, 0.25]).unwrap();
-    let x = vec![1.0; 20_000];
-    println!(
-        "{:>6} {:>10} {:>12} {:>14}",
-        "steps", "cycles", "flops/byte", "GFLOPS"
-    );
-    for steps in [1usize, 2, 4, 8] {
-        let g = temporal::build(&spec, 3, steps).unwrap();
-        let res = Simulator::build(g, &m, x.clone(), x.clone())
-            .unwrap()
-            .run()
+    if !quick() {
+        bench::section("E. decomposition-kind ablation — 3D 13-pt on 16 tiles (40x24x16)");
+        let spec = StencilSpec::dim3(40, 24, 16, symmetric_taps(2), y_taps(2), z_taps(2))
             .unwrap();
-        let flops: f64 = (0..steps)
-            .map(|l| 5.0 * (spec.nx as f64 - 2.0 * ((l + 1) as f64)))
-            .sum();
-        let bytes = res.stats.mem.total_dram_bytes() as f64;
+        let x = vec![1.0; spec.grid_points()];
         println!(
-            "{steps:>6} {:>10} {:>12.2} {:>14.1}",
-            res.stats.cycles,
-            flops / bytes,
-            res.stats.gflops(flops, m.clock_ghz)
+            "{:>8} {:>7} {:>10} {:>12} {:>10} {:>12}",
+            "kind", "tasks", "cuts", "makespan", "GFLOPS", "halo reads"
         );
-    }
-
-    bench::section("E. decomposition-kind ablation — 3D 13-pt on 16 tiles (40x24x16)");
-    let spec = StencilSpec::dim3(40, 24, 16, symmetric_taps(2), y_taps(2), z_taps(2))
-        .unwrap();
-    let x = vec![1.0; spec.grid_points()];
-    println!(
-        "{:>8} {:>7} {:>10} {:>12} {:>10} {:>12}",
-        "kind", "tasks", "cuts", "makespan", "GFLOPS", "halo reads"
-    );
-    for kind in [DecompKind::Slab, DecompKind::Pencil, DecompKind::Block] {
-        let coord = Coordinator::new(16, m.clone()).with_decomp(kind);
-        let rep = coord.run(&spec, 3, &x).unwrap();
-        let cuts = format!("{}x{}x{}", rep.cuts[0], rep.cuts[1], rep.cuts[2]);
-        println!(
-            "{kind:>8} {:>7} {cuts:>10} {:>12} {:>10.0} {:>11.1}%",
-            rep.strips,
-            rep.makespan_cycles,
-            rep.gflops,
-            100.0 * rep.redundant_read_fraction
-        );
+        for kind in [DecompKind::Slab, DecompKind::Pencil, DecompKind::Block] {
+            let coord = Coordinator::new(16, m.clone()).with_decomp(kind);
+            let rep = coord.run(&spec, 3, &x).unwrap();
+            let cuts = format!("{}x{}x{}", rep.cuts[0], rep.cuts[1], rep.cuts[2]);
+            println!(
+                "{kind:>8} {:>7} {cuts:>10} {:>12} {:>10.0} {:>11.1}%",
+                rep.strips,
+                rep.makespan_cycles,
+                rep.gflops,
+                100.0 * rep.redundant_read_fraction
+            );
+        }
     }
 }

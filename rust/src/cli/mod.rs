@@ -5,7 +5,7 @@
 //! scgra info                         machine + artifact inventory
 //! scgra dfg      --stencil S [-w N] [--dot F] [--asm F]   §V emitters
 //! scgra roofline [--stencil S] [--tiles N]                §VI analysis
-//! scgra run      --stencil S [-w N] [--tiles N] [--decomp K] [--steps N]
+//! scgra run      --stencil S [-w N] [--tiles N] [--decomp K] [--steps N] [--fuse M]
 //! scgra compare                                           Table I
 //! scgra validate                                          3-layer check
 //! ```
@@ -32,14 +32,14 @@ use anyhow::{bail, Context, Result};
 
 use crate::cgra::{Machine, SimCore};
 use crate::config::Config;
-use crate::coordinator::Coordinator;
+use crate::coordinator::{Coordinator, FuseMode};
 use crate::gpu_model::{GpuStencil, Precision, V100};
 use crate::roofline;
 use crate::stencil::decomp::{self, DecompKind};
 use crate::stencil::spec::{symmetric_taps, uniform_box_taps, y_taps, z_taps};
-use crate::stencil::{build_graph, StencilSpec};
+use crate::stencil::{build_graph, temporal, StencilSpec};
 use crate::util::rng::XorShift;
-use crate::verify::golden::{max_abs_diff, run_sim, stencil2d_ref, stencil_ref};
+use crate::verify::golden::{max_abs_diff, run_sim, stencil2d_ref, stencil_ref_steps};
 
 /// Parsed command line: subcommand + `--flag value` pairs.
 pub struct Args {
@@ -225,7 +225,13 @@ USAGE: scgra <info|dfg|roofline|run|compare|validate> [--flags]
                         (default auto: slab = x strips in 1-D/2-D /
                         z planes in 3-D; pencil = y+z cuts, x contiguous;
                         block = every axis)
-  --steps N             host-driven time steps (default 1)
+  --steps N             time steps (default 1)
+  --fuse M              §IV temporal traversal: host|spatial|auto
+                        (default auto: spatial fusion when the fabric
+                        budget admits depth >= 2 — tiles compute T steps
+                        per DRAM round-trip, only the first layer loads
+                        and only the last stores; host = one round-trip
+                        per step)
   --sim-core C          scheduler core: dense|event (default event; both
                         are bit-identical — event skips idle cycles)
   --dot FILE / --asm FILE   emit Graphviz / assembly (dfg)
@@ -358,6 +364,7 @@ fn cmd_run(args: &Args, m: &Machine, cfg: Option<&Config>) -> Result<()> {
             seed: 42,
             decomp: DecompKind::Auto,
             sim_core: SimCore::default(),
+            fuse: FuseMode::Auto,
         },
     );
     let w = match args.num("workers", defaults.workers)? {
@@ -374,6 +381,10 @@ fn cmd_run(args: &Args, m: &Machine, cfg: Option<&Config>) -> Result<()> {
         Some(s) => SimCore::parse(s)?,
         None => defaults.sim_core,
     };
+    let fuse = match args.get("fuse") {
+        Some(s) => FuseMode::parse(s)?,
+        None => defaults.fuse,
+    };
     anyhow::ensure!(steps >= 1, "--steps must be >= 1 (got {steps})");
     let mut rng = XorShift::new(defaults.seed);
     let input = rng.normal_vec(spec.grid_points());
@@ -382,45 +393,70 @@ fn cmd_run(args: &Args, m: &Machine, cfg: Option<&Config>) -> Result<()> {
     // layer cuts 1-D/2-D/3-D grids alike into halo-padded tiles.
     let coord = Coordinator::new(tiles, m.clone())
         .with_decomp(decomp)
-        .with_sim_core(sim_core);
+        .with_sim_core(sim_core)
+        .with_fuse(fuse);
     println!(
-        "running {} stencil, w={w}, tiles={tiles}, decomp={decomp}, steps={steps}, core={sim_core}",
+        "running {} stencil, w={w}, tiles={tiles}, decomp={decomp}, steps={steps}, \
+         core={sim_core}, fuse={fuse}",
         describe(&spec)
     );
     let (out, reports) = coord.run_steps(&spec, w, &input, steps)?;
     let first = &reports[0];
     println!(
-        "plan: {} cuts (x{}, y{}, z{}) -> {} tile tasks, {} halo points \
-         ({:.1}% redundant reads)",
+        "plan: {} cuts (x{}, y{}, z{}) -> {} tile tasks, fused depth {}, \
+         {} halo points ({:.1}% redundant reads)",
         first.kind,
         first.cuts[0],
         first.cuts[1],
         first.cuts[2],
         first.strips,
+        first.fused_steps,
         first.halo_points,
         100.0 * first.redundant_read_fraction,
     );
     for (i, r) in reports.iter().enumerate() {
         println!(
-            "step {i}: {} tiles, makespan {} cyc, {:.1} GFLOPS ({:.0}% of roofline)",
+            "chunk {i}: {} step(s), {} tiles, makespan {} cyc, {} loads, \
+             {:.1} GFLOPS ({:.0}% of single-step roofline)",
+            r.fused_steps,
             r.strips,
             r.makespan_cycles,
+            r.total_loads(),
             r.gflops,
             100.0 * r.gflops
                 / (tiles as f64 * m.roofline_gflops(spec.arithmetic_intensity())),
         );
     }
     // Correctness: the final grid against the steps-times iterated
-    // golden oracle.
-    let mut want = input;
-    for _ in 0..steps {
-        want = stencil_ref(&want, &spec);
+    // golden oracle. Fused runs are valid on the §IV trapezoid box
+    // (the ring outside it keeps chunk-input values), host-driven runs
+    // on the whole grid.
+    let want = stencil_ref_steps(&spec, &input, steps);
+    if reports.iter().any(|r| r.fused_steps > 1) {
+        let (lo, hi) = temporal::valid_box(&spec, steps);
+        let mut err = 0.0f64;
+        let mut points = 0u64;
+        for z in lo[2]..hi[2] {
+            for y in lo[1]..hi[1] {
+                for c in lo[0]..hi[0] {
+                    let i = (z * spec.ny + y) * spec.nx + c;
+                    err = err.max((out[i] - want[i]).abs());
+                    points += 1;
+                }
+            }
+        }
+        println!(
+            "max|err| vs {steps}-step oracle on the {points}-point fused-valid \
+             interior: {err:.2e}; final grid checksum {:.6}",
+            out.iter().sum::<f64>()
+        );
+    } else {
+        println!(
+            "max|err| vs {steps}-step oracle: {:.2e}; final grid checksum {:.6}",
+            max_abs_diff(&out, &want),
+            out.iter().sum::<f64>()
+        );
     }
-    println!(
-        "max|err| vs {steps}-step oracle: {:.2e}; final grid checksum {:.6}",
-        max_abs_diff(&out, &want),
-        out.iter().sum::<f64>()
-    );
     Ok(())
 }
 
@@ -585,6 +621,32 @@ mod tests {
     fn bad_decomp_value_is_an_error() {
         assert!(run(&sv(&[
             "run", "--stencil", "3pt", "--decomp", "diagonal"
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn run_command_fused_multistep_2d() {
+        run(&sv(&[
+            "run", "--shape", "star", "--dims", "24,16", "--workers", "2",
+            "--steps", "4", "--fuse", "spatial",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn run_command_host_multistep_still_works() {
+        run(&sv(&[
+            "run", "--shape", "star", "--dims", "20,12", "--workers", "2",
+            "--steps", "2", "--fuse", "host",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn bad_fuse_value_is_an_error() {
+        assert!(run(&sv(&[
+            "run", "--stencil", "3pt", "--fuse", "temporal"
         ]))
         .is_err());
     }

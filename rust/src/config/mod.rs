@@ -10,6 +10,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::cgra::{Machine, SimCore};
+use crate::coordinator::FuseMode;
 use crate::stencil::decomp::DecompKind;
 use crate::stencil::StencilSpec;
 
@@ -161,8 +162,9 @@ impl Config {
     }
 
     /// `[run]` knobs: workers (0 = roofline-optimal), tiles, steps,
-    /// decomposition kind (`decomp = "slab|pencil|block|auto"`) and
-    /// simulator core (`sim_core = "dense|event"`).
+    /// decomposition kind (`decomp = "slab|pencil|block|auto"`),
+    /// simulator core (`sim_core = "dense|event"`) and §IV fuse mode
+    /// (`fuse = "host|spatial|auto"`, default auto).
     pub fn run_params(&self) -> Result<RunParams> {
         let decomp = match self.get("run", "decomp") {
             None => DecompKind::Auto,
@@ -172,6 +174,10 @@ impl Config {
             None => SimCore::default(),
             Some(v) => SimCore::parse(v)?,
         };
+        let fuse = match self.get("run", "fuse") {
+            None => FuseMode::Auto,
+            Some(v) => FuseMode::parse(v)?,
+        };
         Ok(RunParams {
             workers: self.num("run", "workers", 0usize)?,
             tiles: self.num("run", "tiles", 1usize)?,
@@ -179,6 +185,7 @@ impl Config {
             seed: self.num("run", "seed", 42u64)?,
             decomp,
             sim_core,
+            fuse,
         })
     }
 }
@@ -195,6 +202,9 @@ pub struct RunParams {
     pub decomp: DecompKind,
     /// Simulator scheduler core (bit-identical; `event` is the default).
     pub sim_core: SimCore,
+    /// §IV temporal traversal for multi-step runs (default auto: fuse
+    /// spatially when the fabric budget admits depth >= 2).
+    pub fuse: FuseMode,
 }
 
 #[cfg(test)]
@@ -300,6 +310,18 @@ tiles = 16
         let c = Config::parse("[run]\nsim_core = \"dense\"\n").unwrap();
         assert_eq!(c.run_params().unwrap().sim_core, SimCore::Dense);
         let c = Config::parse("[run]\nsim_core = \"quantum\"\n").unwrap();
+        assert!(c.run_params().is_err());
+    }
+
+    #[test]
+    fn fuse_mode_parses_defaults_and_rejects() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.run_params().unwrap().fuse, FuseMode::Auto);
+        let c = Config::parse("[run]\nfuse = \"spatial\"\n").unwrap();
+        assert_eq!(c.run_params().unwrap().fuse, FuseMode::Spatial);
+        let c = Config::parse("[run]\nfuse = \"host\"\n").unwrap();
+        assert_eq!(c.run_params().unwrap().fuse, FuseMode::Host);
+        let c = Config::parse("[run]\nfuse = \"temporal\"\n").unwrap();
         assert!(c.run_params().is_err());
     }
 

@@ -13,13 +13,53 @@ use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::cgra::stats::MemStats;
 use crate::cgra::{Machine, SimCore, Simulator};
 use crate::dfg::Graph;
 use crate::stencil::decomp::{self, DecompKind, DecompPlan, Tile};
-use crate::stencil::{build_graph, StencilSpec};
+use crate::stencil::{build_graph, temporal, StencilSpec};
+
+/// How a multi-step run traverses time (§IV).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FuseMode {
+    /// One decomposition pass per step: every step reads the grid from
+    /// DRAM and writes it back (the paper's single-step use-case
+    /// iterated by the host).
+    #[default]
+    Host,
+    /// Fuse as many steps as the per-tile token budget admits into one
+    /// spatial pipeline per tile ([`temporal::build_nd`]); the host
+    /// loops over the fused chunks. Only the first layer loads and only
+    /// the last layer stores, so DRAM traffic drops by ~the fused depth.
+    Spatial,
+    /// [`FuseMode::Spatial`] when the budget admits depth >= 2, else
+    /// [`FuseMode::Host`].
+    Auto,
+}
+
+impl FuseMode {
+    /// Parse a CLI/config value (`host|spatial|auto`).
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "host" => FuseMode::Host,
+            "spatial" => FuseMode::Spatial,
+            "auto" => FuseMode::Auto,
+            other => bail!("unknown fuse mode `{other}` (host|spatial|auto)"),
+        })
+    }
+}
+
+impl std::fmt::Display for FuseMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.pad(match self {
+            FuseMode::Host => "host",
+            FuseMode::Spatial => "spatial",
+            FuseMode::Auto => "auto",
+        })
+    }
+}
 
 /// One unit of work: a halo-padded tile of the global grid.
 #[derive(Debug, Clone)]
@@ -56,6 +96,11 @@ pub struct RunReport {
     pub kind: DecompKind,
     /// Cuts per axis, `[x, y, z]`.
     pub cuts: [usize; 3],
+    /// §IV time-steps fused into each tile's pipeline this pass (1 =
+    /// single-step; deeper fusion grows the per-tile halos by
+    /// `radii * fused_steps` — visible in [`Self::halo_points`] — and
+    /// divides the per-step DRAM traffic by the depth).
+    pub fused_steps: usize,
     /// Total halo points loaded across tasks (redundant-load overhead).
     pub halo_points: u64,
     /// Fraction of the grid read more than once because of halo overlap.
@@ -72,6 +117,16 @@ pub struct RunReport {
     pub wall_seconds: f64,
 }
 
+impl RunReport {
+    /// Total grid-point loads across the tile array — the §IV currency:
+    /// a fused chunk loads its input once regardless of depth, so at
+    /// equal total steps a spatially-fused run loads strictly less than
+    /// the host-driven loop.
+    pub fn total_loads(&self) -> u64 {
+        self.per_tile.iter().map(|t| t.mem.loads).sum()
+    }
+}
+
 /// Multi-tile coordinator.
 #[derive(Debug, Clone)]
 pub struct Coordinator {
@@ -84,6 +139,8 @@ pub struct Coordinator {
     /// Scheduler core every tile simulation runs on (bit-identical
     /// either way; `Event` is the default and the fast one).
     pub sim_core: SimCore,
+    /// How [`Self::run_steps`] traverses time (default: host-driven).
+    pub fuse: FuseMode,
 }
 
 impl Coordinator {
@@ -94,6 +151,7 @@ impl Coordinator {
             fabric_tokens: decomp::DEFAULT_FABRIC_TOKENS,
             decomp: DecompKind::Auto,
             sim_core: SimCore::default(),
+            fuse: FuseMode::default(),
         }
     }
 
@@ -114,6 +172,12 @@ impl Coordinator {
         self
     }
 
+    /// Override the §IV fuse mode (builder style).
+    pub fn with_fuse(mut self, fuse: FuseMode) -> Self {
+        self.fuse = fuse;
+        self
+    }
+
     /// Plan the decomposition: enough tiles to feed the array, each
     /// small enough to fit the per-tile fabric budget.
     pub fn plan(&self, spec: &StencilSpec, w: usize) -> Result<DecompPlan> {
@@ -121,7 +185,9 @@ impl Coordinator {
     }
 
     /// One DFG per distinct tile shape in the plan: same-extent tiles
-    /// share it (cloned only at simulator construction).
+    /// share it (cloned only at simulator construction). Plans with a
+    /// fused depth > 1 map each tile through the §IV temporal pipeline
+    /// instead of the single-step mapper.
     fn build_graphs(
         &self,
         spec: &StencilSpec,
@@ -132,7 +198,13 @@ impl Coordinator {
         for t in &plan.tiles {
             let dims = [t.in_extent(0), t.in_extent(1), t.in_extent(2)];
             if !graphs.contains_key(&dims) {
-                graphs.insert(dims, Arc::new(build_graph(&t.sub_spec(spec), w)?));
+                let sub = t.sub_spec(spec);
+                let g = if plan.fused_steps > 1 {
+                    temporal::build_nd(&sub, w, plan.fused_steps)?
+                } else {
+                    build_graph(&sub, w)?
+                };
+                graphs.insert(dims, Arc::new(g));
             }
         }
         Ok(graphs)
@@ -223,8 +295,9 @@ impl Coordinator {
         }
         ensure!(received == n_tasks, "lost tile results: {received}/{n_tasks}");
 
-        // Exact FLOP count from the spec (MUL = 1, MAC = 2 per output).
-        let total_flops = spec.total_flops();
+        // Exact FLOP count from the spec (MUL = 1, MAC = 2 per output;
+        // fused plans sum the per-layer trapezoid interiors).
+        let total_flops = temporal::total_flops(spec, plan.fused_steps);
 
         let makespan = per_tile.iter().map(|t| t.cycles).max().unwrap_or(0);
         let total_cycles: u64 = per_tile.iter().map(|t| t.cycles).sum();
@@ -238,6 +311,7 @@ impl Coordinator {
             strips: n_tasks,
             kind: plan.kind,
             cuts: plan.cuts,
+            fused_steps: plan.fused_steps,
             halo_points: plan.halo_points() as u64,
             redundant_read_fraction: plan.redundant_read_fraction(spec),
             makespan_cycles: makespan,
@@ -249,13 +323,60 @@ impl Coordinator {
         })
     }
 
+    /// Multi-step run. The [`FuseMode`] decides how time is traversed:
+    ///
+    /// * [`FuseMode::Host`] — one decomposition pass per step (full
+    ///   DRAM round-trip between steps); one [`RunReport`] per step.
+    /// * [`FuseMode::Spatial`] — §IV fused chunks: the decomposition
+    ///   planner picks the deepest depth `T` the per-tile token budget
+    ///   admits, each tile computes `T` steps on-fabric, and the host
+    ///   loops over `ceil(steps / T)` chunks; one report per chunk
+    ///   (`RunReport::fused_steps` tells its depth). The grid is valid
+    ///   on [`temporal::valid_box`]`(spec, steps)` — the ring outside
+    ///   it keeps chunk-input values (the trapezoid's price).
+    /// * [`FuseMode::Auto`] — `Spatial` when the budget admits a depth
+    ///   of at least 2, else `Host`.
+    pub fn run_steps(
+        &self,
+        spec: &StencilSpec,
+        w: usize,
+        input: &[f64],
+        steps: usize,
+    ) -> Result<(Vec<f64>, Vec<RunReport>)> {
+        if steps == 0 {
+            return Ok((input.to_vec(), Vec::new()));
+        }
+        match self.fuse {
+            FuseMode::Host => self.run_steps_host(spec, w, input, steps),
+            FuseMode::Spatial => self.run_steps_fused(spec, w, input, steps, None),
+            FuseMode::Auto => {
+                let probe = decomp::plan_fused(
+                    spec,
+                    w,
+                    self.fabric_tokens,
+                    self.decomp,
+                    self.tiles,
+                    steps,
+                )?;
+                if probe.fused_steps > 1 {
+                    // Hand the probe plan over as the first chunk's
+                    // cache so it is not planned twice.
+                    let graphs = self.build_graphs(spec, w, &probe)?;
+                    self.run_steps_fused(spec, w, input, steps, Some((probe, graphs)))
+                } else {
+                    self.run_steps_host(spec, w, input, steps)
+                }
+            }
+        }
+    }
+
     /// Host-driven multi-step run (the paper's single-time-step use-case
     /// iterated by the host). The decomposition is planned and the tile
     /// DFGs are built once for all steps (they depend only on the spec
     /// and `w`, not the data), and each step reads the previous report's
     /// output in place — no per-step copy of the grid; the returned
     /// final grid is the only whole-grid copy made here.
-    pub fn run_steps(
+    fn run_steps_host(
         &self,
         spec: &StencilSpec,
         w: usize,
@@ -278,13 +399,63 @@ impl Coordinator {
         };
         Ok((grid, reports))
     }
+
+    /// §IV fused chunks with a host loop over chunks. The plan (and its
+    /// tile graphs) is reused while whole chunks of its depth remain
+    /// (`cached` may arrive pre-seeded from the Auto probe); a shallower
+    /// tail chunk replans once. Each chunk reads the previous report's
+    /// output in place — like the host path, no per-chunk grid copy.
+    fn run_steps_fused(
+        &self,
+        spec: &StencilSpec,
+        w: usize,
+        input: &[f64],
+        steps: usize,
+        mut cached: Option<(DecompPlan, HashMap<[usize; 3], Arc<Graph>>)>,
+    ) -> Result<(Vec<f64>, Vec<RunReport>)> {
+        let mut reports: Vec<RunReport> = Vec::new();
+        let mut remaining = steps;
+        while remaining > 0 {
+            let stale = match &cached {
+                None => true,
+                Some((p, _)) => p.fused_steps > remaining,
+            };
+            if stale {
+                let plan = decomp::plan_fused(
+                    spec,
+                    w,
+                    self.fabric_tokens,
+                    self.decomp,
+                    self.tiles,
+                    remaining,
+                )?;
+                let graphs = self.build_graphs(spec, w, &plan)?;
+                cached = Some((plan, graphs));
+            }
+            let (plan, graphs) = cached.as_ref().expect("plan cached above");
+            let src: &[f64] = match reports.last() {
+                None => input,
+                Some(prev) => prev.output.as_slice(),
+            };
+            let rep = self.run_planned(spec, src, plan, graphs)?;
+            remaining -= plan.fused_steps;
+            reports.push(rep);
+        }
+        let grid = match reports.last() {
+            Some(last) => last.output.clone(),
+            None => input.to_vec(),
+        };
+        Ok((grid, reports))
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::rng::XorShift;
-    use crate::verify::golden::{max_abs_diff, stencil1d_ref, stencil2d_ref, stencil_ref};
+    use crate::verify::golden::{
+        max_abs_diff, stencil1d_ref, stencil2d_ref, stencil_ref, stencil_ref_steps,
+    };
 
     #[test]
     fn multitile_2d_matches_oracle() {
@@ -365,11 +536,48 @@ mod tests {
         // Every step's report keeps its own output (the residual-curve
         // contract the examples rely on).
         assert_eq!(reports[2].output, out);
-        let mut want = x.clone();
-        for _ in 0..3 {
-            want = stencil2d_ref(&want, &spec);
-        }
+        let want = stencil_ref_steps(&spec, &x, 3);
         assert!(max_abs_diff(&out, &want) < 1e-11);
+    }
+
+    #[test]
+    fn fused_run_steps_matches_oracle_on_valid_interior() {
+        let spec = StencilSpec::heat2d(24, 16, 0.2);
+        let mut rng = XorShift::new(0xF0F0);
+        let x = rng.normal_vec(24 * 16);
+        let steps = 4;
+        let host = Coordinator::new(2, Machine::paper());
+        let (_, hreps) = host.run_steps(&spec, 2, &x, steps).unwrap();
+        let fused = Coordinator::new(2, Machine::paper()).with_fuse(FuseMode::Spatial);
+        let (fout, freps) = fused.run_steps(&spec, 2, &x, steps).unwrap();
+        assert_eq!(freps.iter().map(|r| r.fused_steps).sum::<usize>(), steps);
+        assert!(freps.len() < hreps.len(), "fusion must shrink the chunk count");
+        // Bitwise equality against the iterated oracle on the valid
+        // trapezoid interior (§IV acceptance contract).
+        let want = crate::verify::golden::stencil_ref_steps(&spec, &x, steps);
+        let (lo, hi) = temporal::valid_box(&spec, steps);
+        for y in lo[1]..hi[1] {
+            for c in lo[0]..hi[0] {
+                let i = y * spec.nx + c;
+                assert_eq!(fout[i], want[i], "y={y} c={c}");
+            }
+        }
+        // §IV data reuse: strictly fewer loads than the host loop.
+        let host_loads: u64 = hreps.iter().map(|r| r.total_loads()).sum();
+        let fused_loads: u64 = freps.iter().map(|r| r.total_loads()).sum();
+        assert!(fused_loads < host_loads, "{fused_loads} !< {host_loads}");
+    }
+
+    #[test]
+    fn auto_fuse_falls_back_to_host_when_grid_cannot_deepen() {
+        // 4-wide grid, r = 1: the trapezoid admits only depth 1, so Auto
+        // must take the host path (one report per step, depth 1 each).
+        let spec = StencilSpec::heat2d(4, 4, 0.2);
+        let x = vec![1.0; 16];
+        let coord = Coordinator::new(1, Machine::paper()).with_fuse(FuseMode::Auto);
+        let (_, reports) = coord.run_steps(&spec, 1, &x, 2).unwrap();
+        assert_eq!(reports.len(), 2);
+        assert!(reports.iter().all(|r| r.fused_steps == 1));
     }
 
     #[test]

@@ -17,7 +17,12 @@
 //! * [`dnc`] — §IV's recursive divide-and-conquer decomposition and the
 //!   hybrid CPU+CGRA execution mode.
 
+//! Multi-step runs traverse time per [`FuseMode`]: host-driven (one
+//! decomposition pass per step) or §IV spatially fused (each tile runs
+//! a `T`-deep temporal pipeline per memory round-trip; the host loops
+//! over chunks).
+
 pub mod dnc;
 pub mod leader;
 
-pub use leader::{Coordinator, RunReport, TileReport};
+pub use leader::{Coordinator, FuseMode, RunReport, TileReport};

@@ -39,7 +39,10 @@
 //! * [`stencil`] — the mappings above plus [`stencil::decomp`], the
 //!   N-dim tile-decomposition subsystem (slab/pencil/block cuts with
 //!   per-axis halos, budget-checked against the §III-B capacity math),
-//!   and the §IV temporal (multi-time-step) pipeline.
+//!   and the shape-generic §IV temporal pipeline
+//!   ([`stencil::temporal::build_nd`]: `T` fused time-steps of any
+//!   star/box spec, one grid load per chunk; `decomp::plan_fused`
+//!   searches the deepest depth a tile's token budget admits).
 //! * [`cgra`] — a functional + timing cycle simulator of the target
 //!   triggered-instruction CGRA (PEs, bounded channels, mesh placement,
 //!   scratchpad, cache and a bandwidth-limited DRAM channel).

@@ -14,7 +14,7 @@
 use crate::cgra::Machine;
 use crate::stencil::decomp::DecompPlan;
 use crate::stencil::spec::BYTES_PER_POINT;
-use crate::stencil::StencilSpec;
+use crate::stencil::{temporal, StencilSpec};
 
 /// One point of the roofline analysis for a given stencil + machine.
 #[derive(Debug, Clone, PartialEq)]
@@ -72,18 +72,23 @@ pub fn analyze(spec: &StencilSpec, m: &Machine, w: usize) -> Analysis {
 /// Roofline view of a decomposed multi-tile run: halo re-reads inflate
 /// DRAM traffic, deflating the effective arithmetic intensity — and with
 /// it the per-tile bandwidth roof — relative to the whole-grid
-/// [`Analysis`].
+/// [`Analysis`]. §IV temporal fusion pulls the other way: a `T`-deep
+/// plan does ~`T` steps of FLOPs per grid round-trip, multiplying the
+/// effective intensity (the fused-depth term below).
 #[derive(Debug, Clone, PartialEq)]
 pub struct TiledAnalysis {
-    /// Whole-grid (halo-free) analysis.
+    /// Whole-grid (halo-free, single-step) analysis.
     pub base: Analysis,
     /// Tile tasks in the plan.
     pub tasks: usize,
+    /// §IV fused depth of the plan (1 = single-step).
+    pub fused_steps: usize,
     /// Points loaded but not owned, summed over tiles.
     pub halo_points: usize,
     /// Fraction of the grid read more than once (`Σ inputs / grid - 1`).
     pub redundant_read_fraction: f64,
-    /// Arithmetic intensity with halo re-reads accounted.
+    /// Arithmetic intensity with halo re-reads *and* the fused depth
+    /// accounted: all fused layers' FLOPs against one grid round-trip.
     pub effective_ai: f64,
     /// Attainable GFLOPS of one tile at the effective intensity.
     pub attainable_gflops_tile: f64,
@@ -92,7 +97,9 @@ pub struct TiledAnalysis {
 }
 
 /// §VI analysis of a [`DecompPlan`] on an `array_tiles`-tile array:
-/// the redundant halo loads are charged against the bandwidth roof.
+/// the redundant halo loads are charged against the bandwidth roof and
+/// the §IV fused depth credits all fused layers' FLOPs to the single
+/// chunk round-trip (`fused_steps = 1` reduces to the plain halo math).
 pub fn analyze_tiled(
     spec: &StencilSpec,
     m: &Machine,
@@ -102,13 +109,16 @@ pub fn analyze_tiled(
 ) -> TiledAnalysis {
     let base = analyze(spec, m, w);
     let redundant = plan.redundant_read_fraction(spec);
-    // Read the grid (1 + redundant) times, write it once.
+    let fused_steps = plan.fused_steps.max(1);
+    // One fused chunk: read the grid (1 + redundant) times, write it
+    // once, compute fused_steps trapezoid layers.
     let bytes = (2.0 + redundant) * spec.grid_points() as f64 * BYTES_PER_POINT;
-    let effective_ai = spec.total_flops() / bytes;
+    let effective_ai = temporal::total_flops(spec, fused_steps) / bytes;
     let tile_roof = m.roofline_gflops(effective_ai);
     TiledAnalysis {
         base,
         tasks: plan.tiles.len(),
+        fused_steps,
         halo_points: plan.halo_points(),
         redundant_read_fraction: redundant,
         effective_ai,
@@ -223,6 +233,35 @@ mod tests {
                 .abs()
                 < 1e-9
         );
+    }
+
+    #[test]
+    fn fused_depth_raises_effective_intensity() {
+        use crate::stencil::decomp::{self, DecompKind};
+        let spec = StencilSpec::heat2d(48, 32, 0.2);
+        let m = Machine::paper();
+        let w = 2;
+        let single =
+            decomp::plan(&spec, w, decomp::DEFAULT_FABRIC_TOKENS, DecompKind::Slab, 1)
+                .unwrap();
+        let fused = decomp::plan_fused(
+            &spec,
+            w,
+            decomp::DEFAULT_FABRIC_TOKENS,
+            DecompKind::Slab,
+            1,
+            4,
+        )
+        .unwrap();
+        assert!(fused.fused_steps > 1);
+        let a1 = analyze_tiled(&spec, &m, w, &single, 1);
+        let af = analyze_tiled(&spec, &m, w, &fused, 1);
+        assert_eq!(a1.fused_steps, 1);
+        assert_eq!(af.fused_steps, fused.fused_steps);
+        // All fused layers' FLOPs against one round-trip: the effective
+        // intensity grows ~linearly with depth (minus trapezoid taper).
+        assert!(af.effective_ai > 1.5 * a1.effective_ai);
+        assert!(af.attainable_gflops_tile >= a1.attainable_gflops_tile);
     }
 
     #[test]

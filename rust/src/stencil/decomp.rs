@@ -23,12 +23,18 @@
 //! halo input, so the coordinator executes them independently — halo
 //! re-reads are the price, accounted by
 //! [`DecompPlan::redundant_read_fraction`].
+//!
+//! The §IV temporal dimension composes with the same machinery:
+//! [`plan_fused`] searches the deepest fused depth `T` whose per-tile
+//! `T`-layer pipeline ([`temporal::required_tokens`]) still fits the
+//! token budget, widening every tile halo to `radii * T` so a tile can
+//! compute `T` steps of its owned outputs with no inter-tile traffic.
 
 use anyhow::{bail, ensure, Result};
 
 use super::map1d::tap_capacity_1d;
 use super::spec::StencilSpec;
-use super::{map2d, map3d};
+use super::{map2d, map3d, temporal};
 
 /// Default on-fabric token budget: 256 PEs with (paper §II-A) small
 /// input/output queues plus scratchpad-backed spill — sized so the
@@ -166,14 +172,17 @@ impl Tile {
 }
 
 /// A chosen decomposition: the resolved cut strategy, the number of
-/// cuts per axis (`[x, y, z]`), and the tiles themselves (z-major
-/// order: z outermost, x innermost).
+/// cuts per axis (`[x, y, z]`), the §IV fused depth, and the tiles
+/// themselves (z-major order: z outermost, x innermost).
 #[derive(Debug, Clone, PartialEq)]
 pub struct DecompPlan {
     /// Resolved kind — never [`DecompKind::Auto`].
     pub kind: DecompKind,
     /// Cuts per axis, `[x, y, z]`; the product is the tile count.
     pub cuts: [usize; 3],
+    /// §IV time-steps each tile fuses per memory round-trip (1 = the
+    /// single-step mapper; tile halos are `radii * fused_steps` wide).
+    pub fused_steps: usize,
     pub tiles: Vec<Tile>,
 }
 
@@ -222,10 +231,16 @@ fn radii(spec: &StencilSpec) -> [usize; 3] {
     [spec.rx, spec.ry, spec.rz]
 }
 
-/// Interior (computed-output) extents per axis; unused axes are 1.
-fn interiors(spec: &StencilSpec) -> [usize; 3] {
+/// Interior (computed-output) extents per axis after `steps` fused
+/// time-steps (the §IV trapezoid shrinks by `radii * steps`); unused
+/// axes are 1.
+fn interiors_depth(spec: &StencilSpec, steps: usize) -> [usize; 3] {
     let (n, r) = (extents(spec), radii(spec));
-    [n[0] - 2 * r[0], n[1] - 2 * r[1], n[2] - 2 * r[2]]
+    [
+        n[0].saturating_sub(2 * r[0] * steps),
+        n[1].saturating_sub(2 * r[1] * steps),
+        n[2].saturating_sub(2 * r[2] * steps),
+    ]
 }
 
 /// Axes a kind may cut, for a grid of `ndim` dimensions.
@@ -243,8 +258,8 @@ fn cut_axes(kind: DecompKind, ndim: usize) -> Vec<usize> {
 
 /// Maximum cuts per axis: x is limited so every worker keeps at least
 /// one output column per tile; y/z are limited by the interior width.
-fn axis_caps(spec: &StencilSpec, w: usize) -> [usize; 3] {
-    let i = interiors(spec);
+fn axis_caps(spec: &StencilSpec, w: usize, steps: usize) -> [usize; 3] {
+    let i = interiors_depth(spec, steps);
     [(i[0] / w.max(1)).max(1), i[1].max(1), i[2].max(1)]
 }
 
@@ -268,13 +283,23 @@ fn nth_root_ceil(x: usize, n: usize) -> usize {
 /// `[1, interior]` per axis. The output boxes tile the interior exactly;
 /// input boxes widen by the radius along every axis.
 pub fn tiles_for_cuts(spec: &StencilSpec, cuts: [usize; 3]) -> Vec<Tile> {
+    tiles_for_cuts_depth(spec, cuts, 1)
+}
+
+/// [`tiles_for_cuts`] for a `steps`-deep fused plan: the owned output
+/// boxes tile the *trapezoid-shrunk* interior `[r*steps, n - r*steps)`
+/// and the input halos widen by `radii * steps` — each tile reads enough
+/// neighborhood to compute `steps` time-steps of its outputs without
+/// talking to any other tile.
+pub fn tiles_for_cuts_depth(spec: &StencilSpec, cuts: [usize; 3], steps: usize) -> Vec<Tile> {
     let (n, r) = (extents(spec), radii(spec));
+    let h = [r[0] * steps, r[1] * steps, r[2] * steps];
     let mut ranges: [Vec<(usize, usize)>; 3] = [Vec::new(), Vec::new(), Vec::new()];
     for a in 0..3 {
-        let interior = n[a] - 2 * r[a];
+        let interior = n[a] - 2 * h[a];
         let k = cuts[a].clamp(1, interior.max(1));
         let (base, rem) = (interior / k, interior % k);
-        let mut lo = r[a];
+        let mut lo = h[a];
         for i in 0..k {
             let len = base + usize::from(i < rem);
             ranges[a].push((lo, lo + len));
@@ -286,7 +311,7 @@ pub fn tiles_for_cuts(spec: &StencilSpec, cuts: [usize; 3]) -> Vec<Tile> {
     for &(zlo, zhi) in &ranges[2] {
         for &(ylo, yhi) in &ranges[1] {
             for &(xlo, xhi) in &ranges[0] {
-                tiles.push(Tile::with_halo([xlo, ylo, zlo], [xhi, yhi, zhi], r));
+                tiles.push(Tile::with_halo([xlo, ylo, zlo], [xhi, yhi, zhi], h));
             }
         }
     }
@@ -295,30 +320,36 @@ pub fn tiles_for_cuts(spec: &StencilSpec, cuts: [usize; 3]) -> Vec<Tile> {
 
 /// The largest (worst-buffering) tile a cut vector produces, as a
 /// restricted sub-spec — the shape the budget check simulates.
-fn worst_sub_spec(spec: &StencilSpec, cuts: [usize; 3]) -> StencilSpec {
-    let (r, i) = (radii(spec), interiors(spec));
+fn worst_sub_spec(spec: &StencilSpec, cuts: [usize; 3], steps: usize) -> StencilSpec {
+    let r = radii(spec);
+    let i = interiors_depth(spec, steps);
     let mut hi = [0usize; 3];
     for a in 0..3 {
         let k = cuts[a].clamp(1, i[a].max(1));
-        hi[a] = i[a].div_ceil(k) + 2 * r[a];
+        hi[a] = i[a].div_ceil(k) + 2 * r[a] * steps;
     }
     spec.restrict([0, 0, 0], hi)
 }
 
-fn fits(spec: &StencilSpec, w: usize, budget: usize, cuts: [usize; 3]) -> bool {
-    required_tokens(&worst_sub_spec(spec, cuts), w) <= budget
+/// Budget check: the worst tile's `steps`-deep temporal pipeline must
+/// fit the per-tile token budget ([`temporal::required_tokens`]; at
+/// `steps = 1` that is exactly the single-step [`required_tokens`]).
+fn fits(spec: &StencilSpec, w: usize, budget: usize, cuts: [usize; 3], steps: usize) -> bool {
+    temporal::required_tokens(&worst_sub_spec(spec, cuts, steps), w, steps) <= budget
 }
 
-/// Plan a decomposition with a resolved (non-Auto) kind.
+/// Plan a decomposition with a resolved (non-Auto) kind and a fixed
+/// fused depth.
 fn plan_kind(
     spec: &StencilSpec,
     w: usize,
     budget_tokens: usize,
     kind: DecompKind,
     tiles: usize,
+    steps: usize,
 ) -> Result<DecompPlan> {
     let axes = cut_axes(kind, spec.ndim());
-    let caps = axis_caps(spec, w);
+    let caps = axis_caps(spec, w, steps);
 
     // Distribute the requested tile count across the cut axes,
     // outermost axis first (z cuts are free of buffering cost).
@@ -340,14 +371,14 @@ fn plan_kind(
         .copied()
         .filter(|&a| a == 0 || (a == 1 && spec.is_3d()))
         .collect();
-    if !fits(spec, w, budget_tokens, cuts) {
+    if !fits(spec, w, budget_tokens, cuts, steps) {
         for &a in &buffer_axes {
             let with = |cuts: [usize; 3], v: usize| {
                 let mut c = cuts;
                 c[a] = v;
                 c
             };
-            if !fits(spec, w, budget_tokens, with(cuts, caps[a])) {
+            if !fits(spec, w, budget_tokens, with(cuts, caps[a]), steps) {
                 // Even the finest cut along this axis is not enough on
                 // its own — saturate it and try the next axis.
                 cuts[a] = caps[a];
@@ -356,7 +387,7 @@ fn plan_kind(
             let (mut lo, mut hi) = (cuts[a], caps[a]);
             while lo < hi {
                 let mid = (lo + hi) / 2;
-                if fits(spec, w, budget_tokens, with(cuts, mid)) {
+                if fits(spec, w, budget_tokens, with(cuts, mid), steps) {
                     hi = mid;
                 } else {
                     lo = mid + 1;
@@ -371,18 +402,20 @@ fn plan_kind(
         _ => "a finer --decomp (pencil/block), fewer workers, or a bigger fabric",
     };
     ensure!(
-        fits(spec, w, budget_tokens, cuts),
+        fits(spec, w, budget_tokens, cuts, steps),
         "even the finest {} decomposition exceeds the fabric budget of {} tokens \
-         (try {})",
+         at fused depth {} (try {})",
         kind,
         budget_tokens,
+        steps,
         hint
     );
 
     Ok(DecompPlan {
         kind,
         cuts,
-        tiles: tiles_for_cuts(spec, cuts),
+        fused_steps: steps,
+        tiles: tiles_for_cuts_depth(spec, cuts, steps),
     })
 }
 
@@ -398,16 +431,32 @@ pub fn plan(
     kind: DecompKind,
     tiles: usize,
 ) -> Result<DecompPlan> {
+    plan_depth(spec, w, budget_tokens, kind, tiles, 1)
+}
+
+/// [`plan`] at a fixed §IV fused depth: tiles carry `radii * steps`
+/// halos and the budget check runs the `steps`-deep
+/// [`temporal::required_tokens`] capacity math.
+pub fn plan_depth(
+    spec: &StencilSpec,
+    w: usize,
+    budget_tokens: usize,
+    kind: DecompKind,
+    tiles: usize,
+    steps: usize,
+) -> Result<DecompPlan> {
     ensure!(w >= 1, "need at least one worker");
+    ensure!(steps >= 1, "need at least one time-step");
     let (n, r) = (extents(spec), radii(spec));
     for a in 0..spec.ndim() {
         ensure!(
-            n[a] > 2 * r[a],
+            n[a] > 2 * r[a] * steps,
             "decomposition needs a nonempty interior: axis {} has extent {} \
-             with stencil radius {}",
+             with stencil radius {} and fused depth {}",
             a,
             n[a],
-            r[a]
+            r[a],
+            steps
         );
     }
     match kind {
@@ -415,7 +464,7 @@ pub fn plan(
             let mut best: Option<DecompPlan> = None;
             let mut last_err = None;
             for k in [DecompKind::Slab, DecompKind::Pencil, DecompKind::Block] {
-                match plan_kind(spec, w, budget_tokens, k, tiles) {
+                match plan_kind(spec, w, budget_tokens, k, tiles, steps) {
                     Ok(p) => {
                         if p.tiles.len() >= tiles.max(1) {
                             return Ok(p);
@@ -439,8 +488,41 @@ pub fn plan(
                 (None, None) => bail!("no feasible decomposition"),
             }
         }
-        k => plan_kind(spec, w, budget_tokens, k, tiles),
+        k => plan_kind(spec, w, budget_tokens, k, tiles, steps),
     }
+}
+
+/// Plan a §IV spatially-fused decomposition: search the deepest fused
+/// depth `T <= max_steps` with a feasible plan — nonempty trapezoid
+/// interiors and the worst tile's `T`-deep temporal buffering within
+/// the per-tile budget. [`temporal::required_tokens`] is monotone in
+/// depth, so the scan walks down from the deepest grid-admissible `T`
+/// and returns the first (deepest) feasible plan; every extra fused
+/// step removes one whole-grid DRAM round-trip, which is the §IV win.
+pub fn plan_fused(
+    spec: &StencilSpec,
+    w: usize,
+    budget_tokens: usize,
+    kind: DecompKind,
+    tiles: usize,
+    max_steps: usize,
+) -> Result<DecompPlan> {
+    ensure!(max_steps >= 1, "need at least one time-step");
+    let (n, r) = (extents(spec), radii(spec));
+    let mut cap = max_steps;
+    for a in 0..spec.ndim() {
+        if r[a] > 0 {
+            cap = cap.min((n[a] - 1) / (2 * r[a]));
+        }
+    }
+    let mut last_err = None;
+    for t in (1..=cap.max(1)).rev() {
+        match plan_depth(spec, w, budget_tokens, kind, tiles, t) {
+            Ok(p) => return Ok(p),
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Err(last_err.unwrap_or_else(|| anyhow::anyhow!("no feasible fused decomposition")))
 }
 
 #[cfg(test)]
@@ -622,6 +704,53 @@ mod tests {
         let s1 = StencilSpec::dim1(64, symmetric_taps(2)).unwrap();
         let want: usize = (0..5).map(|t| tap_capacity_1d(2, 2, t)).sum::<usize>() * 2;
         assert_eq!(required_tokens(&s1, 2), want);
+    }
+
+    #[test]
+    fn plan_fused_prefers_deepest_feasible_depth() {
+        let spec = StencilSpec::heat2d(40, 24, 0.2);
+        let p = plan_fused(&spec, 2, DEFAULT_FABRIC_TOKENS, DecompKind::Slab, 1, 3).unwrap();
+        assert_eq!(p.fused_steps, 3);
+        // Owned boxes tile the trapezoid-shrunk interior exactly, with
+        // radii * depth halos.
+        let total: usize = p.tiles.iter().map(|t| t.out_points()).sum();
+        assert_eq!(total, (40 - 6) * (24 - 6));
+        for t in &p.tiles {
+            assert_eq!(t.out_lo[0] - t.in_lo[0], 3);
+            assert_eq!(t.out_lo[1] - t.in_lo[1], 3);
+        }
+    }
+
+    #[test]
+    fn plan_fused_respects_budget_per_tile() {
+        let spec = StencilSpec::heat2d(64, 32, 0.2);
+        let w = 2;
+        let budget = temporal::required_tokens(&spec, w, 2);
+        let p = plan_fused(&spec, w, budget, DecompKind::Slab, 1, 4).unwrap();
+        assert!(p.fused_steps >= 2, "budget admits at least depth 2");
+        let worst: usize = p
+            .tiles
+            .iter()
+            .map(|t| temporal::required_tokens(&t.sub_spec(&spec), w, p.fused_steps))
+            .max()
+            .unwrap();
+        assert!(worst <= budget, "{worst} > {budget}");
+    }
+
+    #[test]
+    fn plan_fused_depth_capped_by_grid() {
+        // 10-wide interior, r = 1: at most 4 fused steps fit the grid.
+        let spec = StencilSpec::heat2d(10, 10, 0.2);
+        let p =
+            plan_fused(&spec, 1, DEFAULT_FABRIC_TOKENS, DecompKind::Slab, 1, 64).unwrap();
+        assert!(p.fused_steps >= 1 && p.fused_steps <= 4, "{}", p.fused_steps);
+    }
+
+    #[test]
+    fn single_step_plans_report_depth_one() {
+        let spec = StencilSpec::paper_2d();
+        let p = plan(&spec, 5, DEFAULT_FABRIC_TOKENS, DecompKind::Slab, 4).unwrap();
+        assert_eq!(p.fused_steps, 1);
     }
 
     #[test]

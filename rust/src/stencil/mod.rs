@@ -17,7 +17,9 @@
 //! * [`decomp`] — N-dim tile decomposition (slab/pencil/block cuts with
 //!   per-axis halos) when the fabric cannot hold the whole grid's
 //!   mandatory buffering, and for multi-tile execution.
-//! * [`temporal`] — the §IV multi-time-step pipeline.
+//! * [`temporal`] — the §IV multi-time-step pipeline, shape-generic
+//!   (`temporal::build_nd` fuses `T` steps of any 1-D/2-D/3-D star or
+//!   box spec into one spatial pipeline).
 
 pub mod decomp;
 pub mod filter;
@@ -48,7 +50,14 @@ pub fn build_graph(spec: &StencilSpec, w: usize) -> Result<Graph> {
 /// First output column owned by worker `j`: the smallest `c >= rx` with
 /// `c ≡ j (mod w)` (§III-A interleaving).
 pub fn first_output_col(j: usize, w: usize, rx: usize) -> usize {
-    rx + (j + w - (rx % w)) % w
+    first_output_col_at(j, w, rx)
+}
+
+/// Generalized interleave origin: the smallest `c >= lo` with
+/// `c ≡ j (mod w)` — the §IV temporal pipeline uses it with
+/// `lo = rx * steps` (the trapezoid-shrunk output window).
+pub fn first_output_col_at(j: usize, w: usize, lo: usize) -> usize {
+    lo + ((j % w) + w - (lo % w)) % w
 }
 
 /// Number of outputs worker `j` owns along a row of `nx` points.

@@ -1,23 +1,61 @@
-//! §IV — temporal pipelining: computing `T` time-steps in one kernel call.
+//! §IV — temporal pipelining: computing `T` time-steps in one kernel
+//! call, for any supported shape (1-D/2-D/3-D, star or box).
 //!
 //! Extra layers of compute workers are deployed along the time dimension;
-//! layer `ℓ+1` receives its inputs *directly from the output PEs of layer
-//! `ℓ`* (no extra readers, no memory round-trip), and only the final layer
-//! has writer workers. I/O happens at the pipeline boundary only.
+//! layer `ℓ+1` receives its inputs *directly from the output streams of
+//! layer `ℓ`* (no extra readers, no memory round-trip), and only the
+//! final layer has writer workers. I/O happens at the pipeline boundary
+//! only: the input grid is loaded exactly once regardless of depth.
 //!
-//! Semantics are the standard dependency trapezoid: layer `ℓ` computes
-//! the columns `[rx*(ℓ+1), nx - rx*(ℓ+1))`, the set fully determined by
-//! the original input without boundary values. The golden reference is
-//! the iterated single-step map restricted to the final interior
-//! (`verify::golden` checks exactly this).
+//! # The N-dim halo-growth trapezoid
+//!
+//! Semantics are the standard dependency trapezoid generalized to N
+//! dimensions: layer `ℓ` (0-indexed) computes the box interior shrunk by
+//! `radii * (ℓ+1)` along every axis — the set of step-`(ℓ+1)` values
+//! fully determined by the original input without boundary values. Each
+//! layer eats one radius of halo per axis, so the valid output box after
+//! `T` steps is `[r*T, n - r*T)` per axis ([`valid_box`]): a trapezoid
+//! in (space, time) whose slope is the stencil radius. The golden
+//! reference is the iterated single-step oracle restricted to that box
+//! ([`crate::verify::golden::stencil_ref_steps`]), and the fused result
+//! is *bitwise* equal to it because every layer runs the same
+//! [`StencilSpec::chain_taps`] MUL/MAC association order the oracle uses.
+//!
+//! # Structure per layer
+//!
+//! Layer 0 is fed by `w` readers streaming the whole grid row-major,
+//! interleaved by column — exactly the `map1d`/`map2d`/`map3d` front
+//! end. Every later layer is fed by the previous layer's per-worker
+//! output streams, which are row-major over a *smaller* box, so the same
+//! mandatory-buffering structure repeats with shrunken geometry:
+//!
+//! * each source stream flows through a **delay line** of copy PEs — one
+//!   stream-row per stage, `2*ry` rows in 2-D, `2*rz` planes plus `2*ry`
+//!   rows in 3-D (a plane of the layer-`ℓ` stream is `ny - 2*ry*ℓ` rows
+//!   of it, shrinking with depth — the halo growth is visible in the
+//!   buffer shapes);
+//! * a tap with offset `(dz, dy, dx)` reads worker `(j + dx) mod w`'s
+//!   line at stage `align - (dz*wy + dy)`, so every tap of an output
+//!   fires at the same wall-time;
+//! * tap filters use the row/col-id (2-D) or volume (3-D) scheme against
+//!   the token tags. Tags ride the MAC chain unmodified from the chain's
+//!   *last* tap, so a layer-`ℓ` output for point `P` is tagged
+//!   `P + ℓ * o` where `o` is the last [`StencilSpec::chain_taps`]
+//!   offset — a constant per-layer shift the filter windows absorb
+//!   (`layer_tap_filter`). Every such tag is itself a valid grid
+//!   point, so the flattened `z*ny + y` row encoding stays consistent.
+//!
+//! [`required_tokens`] is the capacity math for the whole pipeline
+//! (delay lines + chain skew queues, per layer); `stencil::decomp` uses
+//! it to search the deepest fused depth a tile's token budget admits.
 
 use anyhow::{ensure, Result};
 
 use crate::dfg::node::{AddrIter, FilterSpec, Op, Stage};
 use crate::dfg::{Dsl, Graph};
 
-use super::filter::x_tap_reader;
-use super::map1d::tap_capacity_1d;
+use super::filter::{tap_reader, x_tap_reader};
+use super::map1d::{tap_capacity_1d, QUEUE_SLACK};
 use super::spec::StencilSpec;
 
 /// Columns owned by worker `j` of layer `layer` (outputs of that layer):
@@ -58,9 +96,10 @@ fn temporal_bits(
 
 /// Build a `steps`-deep temporal pipeline for a 1-D stencil with `w`
 /// workers per layer. `steps = 1` degenerates to [`super::map1d::build`]'s
-/// structure (modulo node names).
+/// structure (modulo node names). Shape-generic callers should prefer
+/// [`build_nd`], which delegates here for 1-D specs.
 pub fn build(spec: &StencilSpec, w: usize, steps: usize) -> Result<Graph> {
-    ensure!(spec.is_1d(), "temporal pipeline implemented for 1-D stencils");
+    ensure!(spec.is_1d(), "temporal::build is 1-D only (use build_nd)");
     ensure!(steps >= 1, "need at least one time-step");
     let nx = spec.nx;
     let rx = spec.rx;
@@ -161,14 +200,336 @@ pub fn build(spec: &StencilSpec, w: usize, steps: usize) -> Result<Graph> {
     Ok(g)
 }
 
-/// Final valid output range after `steps` time-steps.
+/// Final valid output range after `steps` time-steps (1-D view).
 pub fn valid_range(spec: &StencilSpec, steps: usize) -> (usize, usize) {
     (spec.rx * steps, spec.nx - spec.rx * steps)
+}
+
+/// Valid output box after `steps` fused time-steps: `[lo, hi)` per axis
+/// in `[x, y, z]` order — the grid shrunk by `radii * steps` per axis
+/// (the N-dim dependency trapezoid; unused axes keep `[0, 1)`).
+pub fn valid_box(spec: &StencilSpec, steps: usize) -> ([usize; 3], [usize; 3]) {
+    let lo = [spec.rx * steps, spec.ry * steps, spec.rz * steps];
+    let hi = [
+        spec.nx.saturating_sub(spec.rx * steps),
+        spec.ny.saturating_sub(spec.ry * steps),
+        spec.nz.saturating_sub(spec.rz * steps),
+    ];
+    (lo, hi)
+}
+
+/// Total FLOPs of one `steps`-deep fused application: layer `ℓ` computes
+/// the interior shrunk by `radii * (ℓ+1)` per axis, so deeper layers do
+/// slightly less work (the trapezoid tapers). `steps = 1` equals
+/// [`StencilSpec::total_flops`].
+pub fn total_flops(spec: &StencilSpec, steps: usize) -> f64 {
+    let f = spec.flops_per_output();
+    (1..=steps)
+        .map(|l| {
+            let pts = spec.nx.saturating_sub(2 * spec.rx * l)
+                * spec.ny.saturating_sub(2 * spec.ry * l)
+                * spec.nz.saturating_sub(2 * spec.rz * l);
+            f * pts as f64
+        })
+        .sum()
+}
+
+/// Height (rows per plane) of the stream feeding `layer`: the whole grid
+/// for layer 0, the previous layer's output window after.
+fn stream_wy(spec: &StencilSpec, layer: usize) -> usize {
+    spec.ny - 2 * spec.ry * layer
+}
+
+/// Delay-line alignment point of the stream feeding `layer` — the stage
+/// every zero-offset tap reads, `rz*wy + ry` rows behind the stream head.
+fn stream_align(spec: &StencilSpec, layer: usize) -> usize {
+    spec.rz * stream_wy(spec, layer) + spec.ry
+}
+
+/// Delay-line stage a tap with offsets `(dz, dy)` reads at `layer`:
+/// row distance from the most-delayed alignment point. Generalizes
+/// [`super::map3d::tap_stage`] (its `layer = 0` case) to the shrunken
+/// inter-layer streams.
+pub fn delay_stage(spec: &StencilSpec, layer: usize, dz: i64, dy: i64) -> usize {
+    let wy = stream_wy(spec, layer) as i64;
+    (stream_align(spec, layer) as i64 - (dz * wy + dy)) as usize
+}
+
+/// Number of delay-line stages the stream feeding `layer` needs: the
+/// deepest tap's stage (`2*ry` in 2-D; `2*rz*wy + ry` for a 3-D star,
+/// `2*(rz*wy + ry)` for a 3-D box). Zero in 1-D.
+pub fn delay_depth(spec: &StencilSpec, layer: usize) -> usize {
+    spec.chain_taps()
+        .iter()
+        .map(|&(dz, dy, _, _)| delay_stage(spec, layer, dz, dy))
+        .max()
+        .unwrap_or(0)
+}
+
+/// `|{c ∈ [lo, hi) : c ≡ rho (mod w)}|`.
+fn count_cols_in(lo: usize, hi: usize, rho: usize, w: usize) -> usize {
+    let first = lo + ((rho % w) + w - (lo % w)) % w;
+    if first >= hi {
+        0
+    } else {
+        (hi - first - 1) / w + 1
+    }
+}
+
+/// Tokens per stream-row of the stream feeding `layer`, for source
+/// worker `rho` (layer 0: the raw reader interleave over the full row;
+/// later: the previous layer's output columns).
+pub fn stream_row_len(spec: &StencilSpec, w: usize, rho: usize, layer: usize) -> usize {
+    let (lo, hi) = if layer == 0 {
+        (0, spec.nx)
+    } else {
+        (spec.rx * layer, spec.nx - spec.rx * layer)
+    };
+    count_cols_in(lo, hi, rho, w)
+}
+
+/// Capacity of one delay-line stage of the stream feeding `layer`: one
+/// stream-row plus slack (the §III-B mandatory-buffering unit, shrinking
+/// with depth as the halo grows).
+pub fn stage_capacity(spec: &StencilSpec, w: usize, rho: usize, layer: usize) -> usize {
+    stream_row_len(spec, w, rho, layer) + QUEUE_SLACK
+}
+
+/// Capacity of the data queue feeding chain position `k` (0 = the MUL) —
+/// the same systolic-skew formula every mapper layer uses.
+pub fn chain_capacity(spec: &StencilSpec, w: usize, k: usize) -> usize {
+    tap_capacity_1d(spec.rx, w, k)
+}
+
+/// Total mandatory on-fabric buffering (tokens) of a `steps`-deep fused
+/// pipeline: per layer, the delay-line stages of its source streams plus
+/// the chain skew queues. `steps = 1` equals the single-step mapper's
+/// count ([`super::decomp::required_tokens`]); each extra layer adds a
+/// strictly positive amount, so the quantity is monotone in depth —
+/// which is what lets [`super::decomp::plan_fused`] search the deepest
+/// depth a tile's token budget admits.
+pub fn required_tokens(spec: &StencilSpec, w: usize, steps: usize) -> usize {
+    let chain: usize = (0..spec.points()).map(|k| chain_capacity(spec, w, k)).sum();
+    let mut total = 0;
+    for layer in 0..steps {
+        let depth = delay_depth(spec, layer);
+        for rho in 0..w {
+            total += depth * stage_capacity(spec, w, rho, layer);
+        }
+        total += w * chain;
+    }
+    total
+}
+
+/// Tag shift one layer applies: MAC-chain output tokens carry the tag of
+/// the chain's *last* tap, so a layer-`ℓ` output for point `P` is tagged
+/// `P + ℓ * o` with `o` the last [`StencilSpec::chain_taps`] offset.
+fn tag_shift(spec: &StencilSpec) -> (i64, i64, i64) {
+    let &(dz, dy, dx, _) = spec
+        .chain_taps()
+        .last()
+        .expect("a stencil has at least one tap");
+    (dz, dy, dx)
+}
+
+/// Row/col (2-D) or volume (3-D) filter for tap `(dz, dy, dx)` of layer
+/// `layer`: pass tokens whose tag lies in the layer's output window
+/// shifted by the tap offset *plus* the accumulated per-layer tag shift
+/// (see [`tag_shift`]). Degenerates to the `map2d`/`map3d` tap filters
+/// at `layer = 0`. All window bounds are provably in `[0, n]` per axis
+/// (the shift never exceeds the halo the window already gave up), so the
+/// `u32` casts cannot wrap.
+fn layer_tap_filter(spec: &StencilSpec, layer: usize, dz: i64, dy: i64, dx: i64) -> FilterSpec {
+    let (oz, oy, ox) = tag_shift(spec);
+    let l = layer as i64;
+    let (sz, sy, sx) = (dz + l * oz, dy + l * oy, dx + l * ox);
+    let depth = (layer + 1) as i64;
+    let (nx, ny, nz) = (spec.nx as i64, spec.ny as i64, spec.nz as i64);
+    let (rx, ry, rz) = (spec.rx as i64, spec.ry as i64, spec.rz as i64);
+    if spec.is_3d() {
+        FilterSpec::Vol {
+            z_lo: (rz * depth + sz) as u32,
+            z_hi: (nz - rz * depth + sz) as u32,
+            y_lo: (ry * depth + sy) as u32,
+            y_hi: (ny - ry * depth + sy) as u32,
+            col_lo: (rx * depth + sx) as u32,
+            col_hi: (nx - rx * depth + sx) as u32,
+            ny: spec.ny as u32,
+        }
+    } else {
+        FilterSpec::RowCol {
+            row_lo: (ry * depth + sy) as u32,
+            row_hi: (ny - ry * depth + sy) as u32,
+            col_lo: (rx * depth + sx) as u32,
+            col_hi: (nx - rx * depth + sx) as u32,
+        }
+    }
+}
+
+/// Build a `steps`-deep temporal pipeline for any supported spec —
+/// 1-D/2-D/3-D, star or box — with `w` workers per layer. 1-D specs
+/// delegate to the bit-pattern [`build`]; 2-D/3-D layers repeat the
+/// `map2d` row-buffer / `map3d` plane-buffer structure, fed from the
+/// previous layer's output streams instead of readers. The input grid is
+/// read exactly once; only the final layer stores, over [`valid_box`].
+pub fn build_nd(spec: &StencilSpec, w: usize, steps: usize) -> Result<Graph> {
+    ensure!(steps >= 1, "need at least one time-step");
+    if spec.is_1d() {
+        return build(spec, w, steps);
+    }
+    ensure!(w >= 1, "need at least one worker");
+    let (nx, ny, nz) = (spec.nx, spec.ny, spec.nz);
+    let (rx, ry, rz) = (spec.rx, spec.ry, spec.rz);
+    let dims = [nx, ny, nz];
+    let radii = [rx, ry, rz];
+    for a in 0..spec.ndim() {
+        ensure!(
+            dims[a] > 2 * radii[a] * steps,
+            "axis {a} extent {} too small for {steps} time-steps of radius {}",
+            dims[a],
+            radii[a]
+        );
+    }
+    let taps = spec.chain_taps();
+
+    let mut d = Dsl::new();
+
+    // Readers: stream the whole volume row-major, interleaved by column;
+    // they are layer 0's source streams `s0.{rho}.d0`.
+    for rho in 0..w {
+        d.op(&format!("r{rho}.cu"), Op::AddrGen, Stage::Control)
+            .agen(AddrIter {
+                row_lo: 0,
+                row_hi: (nz * ny) as u32,
+                col_start: rho as u32,
+                col_hi: nx as u32,
+                col_stride: w as u32,
+                width: nx as u32,
+                y_lo: 0,
+                y_hi: 0,
+                ny: 0,
+            })
+            .out(&format!("r{rho}.addr"));
+        d.op(&format!("r{rho}.ld"), Op::Load, Stage::Reader)
+            .input(0, &format!("r{rho}.addr"))
+            .out(&format!("s0.{rho}.d0"));
+    }
+
+    let last = steps - 1;
+    for layer in 0..steps {
+        // Delay line on each source stream — the same mandatory
+        // buffering map2d/map3d hang behind readers, here also fed by
+        // the previous layer's outputs.
+        let depth = delay_depth(spec, layer);
+        for rho in 0..w {
+            let cap = stage_capacity(spec, w, rho, layer);
+            for s in 1..=depth {
+                d.op(&format!("s{layer}.{rho}.copy{s}"), Op::Copy, Stage::Reader)
+                    .input_cap(0, &format!("s{layer}.{rho}.d{}", s - 1), cap)
+                    .out(&format!("s{layer}.{rho}.d{s}"));
+            }
+        }
+        for j in 0..w {
+            let mut prev = String::new();
+            for (k, &(dz, dy, dx, coeff)) in taps.iter().enumerate() {
+                let rho = tap_reader(j, dx, rx, w);
+                let stage = delay_stage(spec, layer, dz, dy);
+                d.op(&format!("l{layer}.w{j}.f{k}"), Op::Filter, Stage::Compute)
+                    .worker(j)
+                    .filter(layer_tap_filter(spec, layer, dz, dy, dx))
+                    .input(0, &format!("s{layer}.{rho}.d{stage}"))
+                    .out(&format!("l{layer}.w{j}.t{k}"));
+                // The chain's final output *is* the next layer's source
+                // stream (or the writer feed on the last layer).
+                let out = if k + 1 < taps.len() {
+                    format!("l{layer}.w{j}.p{k}")
+                } else if layer == last {
+                    format!("l{layer}.w{j}.out")
+                } else {
+                    format!("s{}.{j}.d0", layer + 1)
+                };
+                let cap = chain_capacity(spec, w, k);
+                if k == 0 {
+                    d.op(&format!("l{layer}.w{j}.mul"), Op::Mul, Stage::Compute)
+                        .worker(j)
+                        .coeff(coeff)
+                        .input_cap(0, &format!("l{layer}.w{j}.t{k}"), cap)
+                        .out(&out);
+                } else {
+                    d.op(&format!("l{layer}.w{j}.mac{k}"), Op::Mac, Stage::Compute)
+                        .worker(j)
+                        .coeff(coeff)
+                        .input(0, &prev)
+                        .input_cap(1, &format!("l{layer}.w{j}.t{k}"), cap)
+                        .out(&out);
+                }
+                prev = out;
+            }
+        }
+    }
+
+    // Writers + sync for the final layer only (§IV: I/O at the pipeline
+    // boundary), over the valid box.
+    let (col_lo, col_hi) = (rx * steps, nx - rx * steps);
+    for j in 0..w {
+        let first = super::first_output_col_at(j, w, col_lo);
+        let per_row = count_cols_in(col_lo, col_hi, j, w);
+        let count = (per_row * (ny - 2 * ry * steps) * (nz - 2 * rz * steps)) as u64;
+        let agen = if spec.is_3d() {
+            AddrIter::dim3(
+                (rz * steps) as u32,
+                (nz - rz * steps) as u32,
+                (ry * steps) as u32,
+                (ny - ry * steps) as u32,
+                ny as u32,
+                first as u32,
+                col_hi as u32,
+                w as u32,
+                nx as u32,
+            )
+        } else {
+            AddrIter {
+                row_lo: (ry * steps) as u32,
+                row_hi: (ny - ry * steps) as u32,
+                col_start: first as u32,
+                col_hi: col_hi as u32,
+                col_stride: w as u32,
+                width: nx as u32,
+                y_lo: 0,
+                y_hi: 0,
+                ny: 0,
+            }
+        };
+        d.op(&format!("w{j}.st.cu"), Op::AddrGen, Stage::Control)
+            .agen(agen)
+            .out(&format!("w{j}.staddr"));
+        d.op(&format!("w{j}.st"), Op::Store, Stage::Writer)
+            .worker(j)
+            .input(0, &format!("w{j}.staddr"))
+            .input(1, &format!("l{last}.w{j}.out"))
+            .out(&format!("w{j}.ack"));
+        d.op(&format!("w{j}.sync"), Op::SyncCount, Stage::Sync)
+            .worker(j)
+            .expected(count)
+            .input(0, &format!("w{j}.ack"))
+            .out(&format!("w{j}.done"));
+    }
+    let mut done = d.op("done", Op::DoneTree, Stage::Sync).expected(w as u64);
+    for j in 0..w {
+        done = done.input(j as u8, &format!("w{j}.done"));
+    }
+    drop(done);
+
+    let g = d.build()?;
+    crate::dfg::validate::validate(&g)?;
+    Ok(g)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::stencil::spec::{symmetric_taps, uniform_box_taps, y_taps, z_taps};
+    use crate::stencil::{decomp, map2d, map3d};
 
     fn spec3(nx: usize) -> StencilSpec {
         StencilSpec::dim1(nx, vec![0.25, 0.5, 0.25]).unwrap()
@@ -210,6 +571,7 @@ mod tests {
     #[test]
     fn rejects_too_many_steps() {
         assert!(build(&spec3(8), 1, 5).is_err());
+        assert!(build_nd(&StencilSpec::heat2d(8, 8, 0.2), 1, 4).is_err());
     }
 
     #[test]
@@ -217,6 +579,9 @@ mod tests {
         let spec = spec3(100);
         assert_eq!(valid_range(&spec, 1), (1, 99));
         assert_eq!(valid_range(&spec, 10), (10, 90));
+        let (lo, hi) = valid_box(&spec, 10);
+        assert_eq!((lo[0], hi[0]), (10, 90));
+        assert_eq!((lo[1], hi[1]), (0, 1));
     }
 
     #[test]
@@ -226,5 +591,164 @@ mod tests {
             let g = build(&spec, 2, steps).unwrap();
             assert!(crate::dfg::validate::check(&g).is_empty(), "steps={steps}");
         }
+    }
+
+    #[test]
+    fn build_nd_delegates_for_1d() {
+        let spec = spec3(48);
+        let a = build(&spec, 2, 3).unwrap();
+        let b = build_nd(&spec, 2, 3).unwrap();
+        assert_eq!(a.dp_ops(), b.dp_ops());
+        assert_eq!(a.node_count(), b.node_count());
+    }
+
+    #[test]
+    fn build_nd_2d_structure() {
+        // 5-pt star, 2 workers, 3 layers: 3 * 2 * 5 DP ops, one reader
+        // pair per worker, stores only on the last layer.
+        let spec = StencilSpec::heat2d(20, 14, 0.2);
+        let g = build_nd(&spec, 2, 3).unwrap();
+        assert_eq!(g.dp_ops(), 3 * 2 * 5);
+        let h = g.op_histogram();
+        assert_eq!(h[&Op::Load], 2);
+        assert_eq!(h[&Op::Store], 2);
+        assert_eq!(h[&Op::Filter], 3 * 2 * 5);
+        // Delay lines: 2*ry stages per stream per layer.
+        assert_eq!(h[&Op::Copy], 3 * 2 * 2);
+        assert!(crate::dfg::validate::check(&g).is_empty());
+    }
+
+    #[test]
+    fn build_nd_3d_structure() {
+        let spec = StencilSpec::heat3d(10, 8, 6, 0.1);
+        let g = build_nd(&spec, 2, 2).unwrap();
+        assert_eq!(g.dp_ops(), 2 * 2 * 7);
+        let h = g.op_histogram();
+        assert_eq!(h[&Op::Load], 2);
+        assert_eq!(h[&Op::Store], 2);
+        // Layer 0 line: 2*rz*ny + ry = 17; layer 1 stream has wy = 6:
+        // 2*6 + 1 = 13. Two streams each.
+        assert_eq!(delay_depth(&spec, 0), 17);
+        assert_eq!(delay_depth(&spec, 1), 13);
+        assert_eq!(h[&Op::Copy], 2 * (17 + 13));
+        assert!(crate::dfg::validate::check(&g).is_empty());
+    }
+
+    #[test]
+    fn sync_counts_cover_the_valid_box() {
+        let spec = StencilSpec::heat2d(17, 11, 0.2);
+        for (w, steps) in [(1usize, 2usize), (3, 2), (2, 3)] {
+            let g = build_nd(&spec, w, steps).unwrap();
+            let total: u64 = g
+                .nodes
+                .iter()
+                .filter(|n| n.op == Op::SyncCount)
+                .map(|n| n.expected.unwrap())
+                .sum();
+            let want = (spec.nx - 2 * steps) * (spec.ny - 2 * steps);
+            assert_eq!(total, want as u64, "w={w} steps={steps}");
+        }
+    }
+
+    #[test]
+    fn delay_geometry_matches_single_step_mappers() {
+        // Layer 0 of the generic pipeline is exactly the map2d/map3d
+        // front end.
+        let s2 = StencilSpec::dim2(21, 13, symmetric_taps(2), y_taps(3)).unwrap();
+        assert_eq!(delay_depth(&s2, 0), 2 * s2.ry);
+        for rho in 0..3 {
+            assert_eq!(
+                stage_capacity(&s2, 3, rho, 0),
+                map2d::stage_capacity(&s2, rho, 3)
+            );
+        }
+        let s3 = StencilSpec::heat3d(12, 7, 5, 0.1);
+        assert_eq!(delay_depth(&s3, 0), map3d::delay_stages(&s3, 2));
+        assert_eq!(delay_stage(&s3, 0, -1, 0), map3d::tap_stage(&s3, -1, 0));
+        assert_eq!(delay_stage(&s3, 0, 0, 1), map3d::tap_stage(&s3, 0, 1));
+    }
+
+    #[test]
+    fn required_tokens_single_step_equals_mapper_math() {
+        let s1 = StencilSpec::dim1(64, symmetric_taps(2)).unwrap();
+        let s2 = StencilSpec::heat2d(20, 14, 0.2);
+        let s3 = StencilSpec::heat3d(10, 6, 5, 0.1);
+        let b2 = StencilSpec::box2d(18, 12, 1, 2, uniform_box_taps(1, 2, 0)).unwrap();
+        let b3 = StencilSpec::box3d(9, 7, 5, 1, 1, 1, uniform_box_taps(1, 1, 1)).unwrap();
+        for (spec, w) in [(&s1, 2usize), (&s2, 2), (&s3, 2), (&b2, 3), (&b3, 1)] {
+            assert_eq!(
+                required_tokens(spec, w, 1),
+                decomp::required_tokens(spec, w),
+                "dims {:?}",
+                spec.dims()
+            );
+        }
+    }
+
+    #[test]
+    fn required_tokens_monotone_in_depth() {
+        let specs = [
+            StencilSpec::dim1(80, symmetric_taps(2)).unwrap(),
+            StencilSpec::heat2d(24, 18, 0.2),
+            StencilSpec::dim3(14, 10, 8, symmetric_taps(1), y_taps(1), z_taps(1)).unwrap(),
+        ];
+        for spec in &specs {
+            for steps in 1..4 {
+                assert!(
+                    required_tokens(spec, 2, steps + 1) > required_tokens(spec, 2, steps),
+                    "dims {:?} steps {steps}",
+                    spec.dims()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tag_shift_is_last_chain_tap() {
+        assert_eq!(tag_shift(&spec3(10)), (0, 0, 1));
+        assert_eq!(tag_shift(&StencilSpec::heat2d(10, 10, 0.2)), (0, 1, 0));
+        assert_eq!(tag_shift(&StencilSpec::heat3d(8, 8, 8, 0.1)), (1, 0, 0));
+        let b = StencilSpec::box2d(10, 10, 1, 2, uniform_box_taps(1, 2, 0)).unwrap();
+        assert_eq!(tag_shift(&b), (0, 2, 1));
+    }
+
+    #[test]
+    fn layer0_filters_match_map2d_scheme() {
+        // At layer 0 the generic filter degenerates to the §III-B
+        // row/col windows.
+        let spec = StencilSpec::dim2(20, 12, symmetric_taps(2), y_taps(1)).unwrap();
+        for (k, &(_, dy, dx, _)) in spec.chain_taps().iter().enumerate() {
+            let f = layer_tap_filter(&spec, 0, 0, dy, dx);
+            let want =
+                super::super::filter::tap_rowcol(dy, dx, spec.rx, spec.ry, spec.nx, spec.ny);
+            assert_eq!(f, want, "tap {k}");
+        }
+    }
+
+    #[test]
+    fn layer_filters_shift_by_accumulated_tag_offset() {
+        // heat2d: o = (0, 1, 0). Layer 1 x-tap (dy=0, dx=0) window:
+        // rows [2*1 + 0 + 1, 12 - 2 + 0 + 1) = [3, 11), cols [2, 18).
+        let spec = StencilSpec::heat2d(20, 12, 0.2);
+        let f = layer_tap_filter(&spec, 1, 0, 0, 0);
+        assert_eq!(
+            f,
+            FilterSpec::RowCol { row_lo: 3, row_hi: 11, col_lo: 2, col_hi: 18 }
+        );
+        // The y = -1 tap window sits one row above.
+        let f = layer_tap_filter(&spec, 1, 0, -1, 0);
+        assert_eq!(
+            f,
+            FilterSpec::RowCol { row_lo: 2, row_hi: 10, col_lo: 2, col_hi: 18 }
+        );
+    }
+
+    #[test]
+    fn total_flops_matches_single_step_and_tapers() {
+        let spec = StencilSpec::heat2d(20, 14, 0.2);
+        assert_eq!(total_flops(&spec, 1), spec.total_flops());
+        let t2 = total_flops(&spec, 2);
+        assert!(t2 > spec.total_flops());
+        assert!(t2 < 2.0 * spec.total_flops(), "deeper layers shrink");
     }
 }

@@ -85,6 +85,19 @@ pub fn stencil_ref(x: &[f64], spec: &StencilSpec) -> Vec<f64> {
     out
 }
 
+/// The iterated golden oracle: `steps` applications of [`stencil_ref`]
+/// (interior computed, boundary copied each step) — the §IV reference
+/// every temporal-fusion path is compared against. The fused pipeline
+/// must equal it *bitwise* on the valid trapezoid box
+/// [`crate::stencil::temporal::valid_box`]`(spec, steps)`.
+pub fn stencil_ref_steps(spec: &StencilSpec, input: &[f64], steps: usize) -> Vec<f64> {
+    let mut grid = input.to_vec();
+    for _ in 0..steps {
+        grid = stencil_ref(&grid, spec);
+    }
+    grid
+}
+
 /// 3-D star stencil over a row-major `nx * ny * nz` volume.
 pub fn stencil3d_ref(x: &[f64], spec: &StencilSpec) -> Vec<f64> {
     assert!(spec.is_3d() && !spec.is_box());
@@ -258,6 +271,18 @@ mod tests {
         let xb = rng.normal_vec(8 * 6 * 5);
         let res = run_sim(&bx, 2, &m, &xb).unwrap();
         assert!(max_abs_diff(&res.output, &box3d_ref(&xb, &bx)) < 1e-11);
+    }
+
+    #[test]
+    fn ref_steps_iterates_the_single_step_oracle() {
+        let spec = StencilSpec::heat2d(10, 8, 0.2);
+        let mut rng = XorShift::new(0x57E9);
+        let x = rng.normal_vec(80);
+        let once = stencil_ref_steps(&spec, &x, 1);
+        assert_eq!(once, stencil_ref(&x, &spec));
+        let thrice = stencil_ref_steps(&spec, &x, 3);
+        assert_eq!(thrice, stencil_ref(&stencil_ref(&once, &spec), &spec));
+        assert_eq!(stencil_ref_steps(&spec, &x, 0), x);
     }
 
     #[test]

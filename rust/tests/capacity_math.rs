@@ -1,11 +1,13 @@
 //! Unit tests pinning the mapper's mandatory-buffering capacity math
-//! (§III-B / Fig 8 formulas) against hand-computed values, for both the
-//! 2-D machinery (`map2d`) and its 3-D plane-buffered equivalents
-//! (`map3d`).
+//! (§III-B / Fig 8 formulas) against hand-computed values: the 2-D
+//! machinery (`map2d`), its 3-D plane-buffered equivalents (`map3d`),
+//! and the §IV fused-pipeline accounting (`temporal::required_tokens`)
+//! the fused-depth planner budgets with.
 
+use stencil_cgra::stencil::decomp::{self, DecompKind};
 use stencil_cgra::stencil::map1d::{tap_capacity_1d, QUEUE_SLACK};
 use stencil_cgra::stencil::spec::{symmetric_taps, uniform_box_taps, y_taps, z_taps};
-use stencil_cgra::stencil::{map2d, map3d, StencilSpec};
+use stencil_cgra::stencil::{map2d, map3d, temporal, StencilSpec};
 
 #[test]
 fn tap_capacity_1d_formula() {
@@ -119,6 +121,81 @@ fn map3d_required_buffer_tokens_hand_computed() {
     // Chains: 7 taps, jitter 2*1/2 = 1 -> caps 5,7,9,11,13,15,17 = 77; x2 = 154.
     let spec = StencilSpec::heat3d(10, 6, 5, 0.1);
     assert_eq!(map3d::required_buffer_tokens(&spec, 2), 234 + 154);
+}
+
+#[test]
+fn temporal_tokens_at_depth_one_equal_single_step_mapper() {
+    // `steps = 1` must reproduce exactly what the single-step mapper
+    // counts — the fused planner's budget math degenerates cleanly.
+    let cases = [
+        (StencilSpec::dim1(64, symmetric_taps(2)).unwrap(), 2usize),
+        (StencilSpec::heat2d(20, 14, 0.2), 2),
+        (StencilSpec::paper_2d(), 5),
+        (StencilSpec::heat3d(10, 6, 5, 0.1), 2),
+        (
+            StencilSpec::box3d(9, 7, 5, 1, 1, 1, uniform_box_taps(1, 1, 1)).unwrap(),
+            2,
+        ),
+    ];
+    for (spec, w) in cases {
+        assert_eq!(
+            temporal::required_tokens(&spec, w, 1),
+            decomp::required_tokens(&spec, w),
+            "dims {:?} w={w}",
+            spec.dims()
+        );
+    }
+}
+
+#[test]
+fn temporal_tokens_2d_hand_computed() {
+    // heat2d(20, 14), w = 2, depth 2.
+    // Layer 0 = the single-step count: 56 + 90 = 146 (above).
+    // Layer 1 streams cover cols [1, 19): 9 per worker -> stage cap 13;
+    //   delay 2*ry * 13 * 2 streams = 52; chains 90 again -> 142.
+    let spec = StencilSpec::heat2d(20, 14, 0.2);
+    assert_eq!(temporal::required_tokens(&spec, 2, 2), 146 + 142);
+}
+
+#[test]
+fn temporal_tokens_monotone_in_fused_depth() {
+    let specs = [
+        StencilSpec::dim1(80, symmetric_taps(2)).unwrap(),
+        StencilSpec::heat2d(24, 18, 0.2),
+        StencilSpec::heat3d(14, 10, 8, 0.1),
+        StencilSpec::box2d(20, 14, 1, 1, uniform_box_taps(1, 1, 0)).unwrap(),
+    ];
+    for spec in &specs {
+        for steps in 1..4 {
+            assert!(
+                temporal::required_tokens(spec, 2, steps + 1)
+                    > temporal::required_tokens(spec, 2, steps),
+                "dims {:?} steps={steps}",
+                spec.dims()
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_plan_depth_respects_tile_budget() {
+    // Whatever depth the planner picks, the worst tile's fused pipeline
+    // must fit the budget it was given.
+    let spec = StencilSpec::heat2d(48, 28, 0.2);
+    let w = 2;
+    for budget in [
+        temporal::required_tokens(&spec, w, 1),
+        temporal::required_tokens(&spec, w, 3),
+    ] {
+        let p = decomp::plan_fused(&spec, w, budget, DecompKind::Slab, 1, 4).unwrap();
+        let worst = p
+            .tiles
+            .iter()
+            .map(|t| temporal::required_tokens(&t.sub_spec(&spec), w, p.fused_steps))
+            .max()
+            .unwrap();
+        assert!(worst <= budget, "depth {}: {worst} > {budget}", p.fused_steps);
+    }
 }
 
 #[test]

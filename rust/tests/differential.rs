@@ -11,7 +11,7 @@ use stencil_cgra::cgra::{Machine, Simulator};
 use stencil_cgra::stencil::{temporal, StencilSpec};
 use stencil_cgra::util::rng::XorShift;
 use stencil_cgra::verify::golden::{
-    max_abs_diff, run_sim, stencil1d_ref, stencil2d_ref, stencil_ref,
+    max_abs_diff, run_sim, stencil1d_ref, stencil2d_ref, stencil_ref, stencil_ref_steps,
 };
 
 const TOL: f64 = 1e-9;
@@ -165,10 +165,7 @@ fn temporal_random_specs_match_iterated_oracle() {
             .unwrap()
             .run()
             .unwrap();
-        let mut want = x.clone();
-        for _ in 0..steps {
-            want = stencil1d_ref(&want, &spec.cx);
-        }
+        let want = stencil_ref_steps(&spec, &x, steps);
         let (lo, hi) = temporal::valid_range(&spec, steps);
         let got = &res.output[lo..hi];
         assert!(

@@ -10,7 +10,7 @@
 //! tolerance question — everything is compared with `==`.
 
 use stencil_cgra::cgra::{Machine, SimCore, Simulator};
-use stencil_cgra::coordinator::Coordinator;
+use stencil_cgra::coordinator::{Coordinator, FuseMode};
 use stencil_cgra::stencil::decomp::DecompKind;
 use stencil_cgra::stencil::spec::{symmetric_taps, uniform_box_taps, y_taps, z_taps};
 use stencil_cgra::stencil::{build_graph, temporal, StencilSpec};
@@ -126,6 +126,70 @@ fn temporal_multistep_cores_identical() {
             "steps={steps}"
         );
     }
+}
+
+#[test]
+fn temporal_nd_2d_cores_identical() {
+    // The generalized §IV pipeline: deep cross-layer graphs with
+    // row-buffer delay lines between layers — the event core must stay
+    // bit-identical through the inter-layer backpressure.
+    let m = Machine::paper();
+    let spec = StencilSpec::dim2(20, 14, symmetric_taps(1), y_taps(2)).unwrap();
+    let mut rng = XorShift::new(0x7E5A);
+    let x = rng.normal_vec(20 * 14);
+    for steps in [2usize, 3] {
+        let run = |core: SimCore| {
+            let g = temporal::build_nd(&spec, 2, steps).unwrap();
+            Simulator::build(g, &m, x.clone(), x.clone())
+                .unwrap()
+                .with_core(core)
+                .run()
+                .unwrap()
+        };
+        let dense = run(SimCore::Dense);
+        let event = run(SimCore::Event);
+        assert_eq!(dense.output, event.output, "steps={steps}");
+        assert_eq!(dense.stats.cycles, event.stats.cycles, "steps={steps}");
+        assert_eq!(dense.stats.mem, event.stats.mem, "steps={steps}");
+        assert_eq!(
+            dense.stats.total_fires(),
+            event.stats.total_fires(),
+            "steps={steps}"
+        );
+        assert_eq!(
+            dense.stats.max_queue_occupancy, event.stats.max_queue_occupancy,
+            "steps={steps}"
+        );
+    }
+}
+
+#[test]
+fn multitile_fused_run_steps_cores_identical() {
+    // Spatially-fused coordinator chunks across both cores: stitched
+    // grids and cycle sums must match bit-for-bit.
+    let spec = StencilSpec::dim2(28, 18, symmetric_taps(2), y_taps(1)).unwrap();
+    let mut rng = XorShift::new(0xA4F);
+    let x = rng.normal_vec(28 * 18);
+    let run = |core: SimCore| {
+        Coordinator::new(2, Machine::paper())
+            .with_fuse(FuseMode::Spatial)
+            .with_sim_core(core)
+            .run_steps(&spec, 2, &x, 3)
+            .unwrap()
+    };
+    let (dout, dreps) = run(SimCore::Dense);
+    let (eout, ereps) = run(SimCore::Event);
+    assert_eq!(dout, eout, "stitched grids differ");
+    assert_eq!(dreps.len(), ereps.len());
+    let cycles =
+        |rs: &[stencil_cgra::coordinator::RunReport]| -> u64 {
+            rs.iter().map(|r| r.total_cycles).sum()
+        };
+    assert_eq!(cycles(&dreps), cycles(&ereps), "cycle sums differ");
+    let loads = |rs: &[stencil_cgra::coordinator::RunReport]| -> u64 {
+        rs.iter().map(|r| r.total_loads()).sum()
+    };
+    assert_eq!(loads(&dreps), loads(&ereps), "load counts differ");
 }
 
 #[test]

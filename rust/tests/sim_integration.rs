@@ -10,7 +10,7 @@ use stencil_cgra::stencil::spec::{symmetric_taps, y_taps};
 use stencil_cgra::stencil::{map1d, map2d, temporal, StencilSpec};
 use stencil_cgra::util::rng::XorShift;
 use stencil_cgra::verify::golden::{
-    max_abs_diff, run_sim, stencil1d_ref, stencil2d_ref,
+    max_abs_diff, run_sim, stencil1d_ref, stencil2d_ref, stencil_ref_steps,
 };
 
 #[test]
@@ -28,10 +28,7 @@ fn temporal_pipeline_computes_multiple_steps_on_fabric() {
                 .run()
                 .unwrap();
             // Iterated full-grid oracle.
-            let mut want = x.clone();
-            for _ in 0..steps {
-                want = stencil1d_ref(&want, &spec.cx);
-            }
+            let want = stencil_ref_steps(&spec, &x, steps);
             let (lo, hi) = temporal::valid_range(&spec, steps);
             for i in lo..hi {
                 assert!(

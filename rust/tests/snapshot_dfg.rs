@@ -10,7 +10,7 @@
 
 use stencil_cgra::cgra::{Machine, Simulator};
 use stencil_cgra::dfg::{asm, dot};
-use stencil_cgra::stencil::{map3d, StencilSpec};
+use stencil_cgra::stencil::{map3d, temporal, StencilSpec};
 use stencil_cgra::util::rng::XorShift;
 
 fn snapshot_spec() -> StencilSpec {
@@ -109,6 +109,115 @@ fn dot_snapshot_3d_star() {
     assert!(text.contains("[label=\"cap=6\"]"));
     assert!(text.contains("[label=\"cap=8\"]"));
     assert!(text.trim_end().ends_with('}'));
+}
+
+/// A tiny fully hand-analyzable 2-D temporal pipeline: 5-pt star on an
+/// 8x6 grid, one worker, two fused layers. Chain-tap order is x
+/// (-1, 0, +1) then y (-1, +1); the last tap's offset (0, +1, 0) is the
+/// per-layer tag shift, so layer 1's filter windows sit one row below
+/// layer 0's. Delay lines are 2*ry = 2 stages per stream; layer 0's
+/// stage holds a full 8-column row (cap 12), layer 1's the 6-column
+/// interior row (cap 10).
+fn temporal_snapshot_spec() -> StencilSpec {
+    StencilSpec::dim2(8, 6, vec![0.25, 0.5, 0.25], vec![0.125, 0.125]).unwrap()
+}
+
+#[test]
+fn asm_snapshot_2d_temporal() {
+    let g = temporal::build_nd(&temporal_snapshot_spec(), 1, 2).unwrap();
+    let text = asm::to_asm(&g, "temporal2d");
+    let lines: Vec<&str> = text.lines().collect();
+
+    // Header + 30 pe lines + 37 chan lines: reader pair, 2 delay copies
+    // + 10 chain ops per layer x 2 layers, writer trio + done.
+    assert_eq!(lines[0], "# tia-asm: temporal2d");
+    assert_eq!(lines[1], "# 30 nodes, 37 channels, 10 DP ops");
+    assert_eq!(lines.len(), 2 + 30 + 37, "full emission:\n{text}");
+    assert_eq!(lines.iter().filter(|l| l.starts_with("pe ")).count(), 30);
+    assert_eq!(lines.iter().filter(|l| l.starts_with("chan ")).count(), 37);
+
+    // One reader sweeping the whole grid; no second load anywhere.
+    assert!(
+        text.contains("pe r0.cu agen stage=control agen=0,6,0,8,1,8,0,0,0"),
+        "{text}"
+    );
+    assert_eq!(lines.iter().filter(|l| l.contains(" ld ")).count(), 1);
+
+    // Both layers carry a 2-stage delay line; no stage 3 exists.
+    assert!(text.contains("pe s0.0.copy2 copy stage=reader"));
+    assert!(text.contains("pe s1.0.copy2 copy stage=reader"));
+    assert!(!text.contains("copy3"));
+
+    // Layer 0 filters are the plain §III-B windows...
+    for want in [
+        "pe l0.w0.f0 filter stage=compute worker=0 filter=rowcol:1,5,0,6",
+        "pe l0.w0.f1 filter stage=compute worker=0 filter=rowcol:1,5,1,7",
+        "pe l0.w0.f2 filter stage=compute worker=0 filter=rowcol:1,5,2,8",
+        "pe l0.w0.f3 filter stage=compute worker=0 filter=rowcol:0,4,1,7",
+        "pe l0.w0.f4 filter stage=compute worker=0 filter=rowcol:2,6,1,7",
+    ] {
+        assert!(text.contains(want), "missing `{want}` in:\n{text}");
+    }
+    // ...layer 1's shrink by one more radius and shift by the (0,+1,0)
+    // tag offset.
+    for want in [
+        "pe l1.w0.f0 filter stage=compute worker=0 filter=rowcol:3,5,1,5",
+        "pe l1.w0.f1 filter stage=compute worker=0 filter=rowcol:3,5,2,6",
+        "pe l1.w0.f2 filter stage=compute worker=0 filter=rowcol:3,5,3,7",
+        "pe l1.w0.f3 filter stage=compute worker=0 filter=rowcol:2,4,2,6",
+        "pe l1.w0.f4 filter stage=compute worker=0 filter=rowcol:4,6,2,6",
+    ] {
+        assert!(text.contains(want), "missing `{want}` in:\n{text}");
+    }
+
+    // Chain immediates repeat per layer.
+    assert!(text.contains("pe l0.w0.mul mul stage=compute worker=0 coeff=2.5e-1"));
+    assert!(text.contains("pe l1.w0.mac1 mac stage=compute worker=0 coeff=5e-1"));
+    assert!(text.contains("pe l1.w0.mac4 mac stage=compute worker=0 coeff=1.25e-1"));
+
+    // Writers store the 4x2 valid trapezoid box only.
+    assert!(
+        text.contains("pe w0.st.cu agen stage=control agen=2,4,2,6,1,8,0,0,0"),
+        "{text}"
+    );
+    assert!(text.contains("pe w0.sync sync stage=sync worker=0 expected=8"));
+
+    // Inter-layer wiring: layer 0's chain output feeds layer 1's delay
+    // line (one interior row + slack) and the dy=+1 tap at stage 0;
+    // the reader feeds layer 0 the same way with a full-row stage.
+    assert!(text.contains("r0.ld:0 -> s0.0.copy1:0 cap=12 lat=1"));
+    assert!(text.contains("r0.ld:0 -> l0.w0.f4:0 cap=4 lat=1"));
+    assert!(text.contains("l0.w0.mac4:0 -> s1.0.copy1:0 cap=10 lat=1"));
+    assert!(text.contains("l0.w0.mac4:0 -> l1.w0.f4:0 cap=4 lat=1"));
+    // Mandatory chain capacities: 2k + 2rx/w + 4.
+    assert!(text.contains("l0.w0.f0:0 -> l0.w0.mul:0 cap=6 lat=1"));
+    assert!(text.contains("l1.w0.f1:0 -> l1.w0.mac1:1 cap=8 lat=1"));
+}
+
+#[test]
+fn dot_snapshot_2d_temporal() {
+    let g = temporal::build_nd(&temporal_snapshot_spec(), 1, 2).unwrap();
+    let text = dot::to_dot(&g, "temporal2d");
+    assert!(text.starts_with("digraph dfg {"));
+    assert!(text.contains("label=\"temporal2d\\n30 nodes, 37 channels, 10 DP ops\";"));
+    assert!(text.contains("cluster_w0"));
+    assert_eq!(text.matches("->").count(), g.channel_count());
+    assert!(text.trim_end().ends_with('}'));
+}
+
+#[test]
+fn asm_round_trip_simulates_identically_2d_temporal() {
+    let spec = temporal_snapshot_spec();
+    let mut rng = XorShift::new(0x7E2D);
+    let x = rng.normal_vec(spec.grid_points());
+    let g1 = temporal::build_nd(&spec, 1, 2).unwrap();
+    let text = asm::to_asm(&g1, "round-trip-temporal");
+    let g2 = asm::parse(&text).unwrap();
+    let m = Machine::paper();
+    let r1 = Simulator::build(g1, &m, x.clone(), x.clone()).unwrap().run().unwrap();
+    let r2 = Simulator::build(g2, &m, x.clone(), x.clone()).unwrap().run().unwrap();
+    assert_eq!(r1.output, r2.output);
+    assert_eq!(r1.stats.cycles, r2.stats.cycles);
 }
 
 #[test]

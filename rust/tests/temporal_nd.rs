@@ -1,0 +1,235 @@
+//! Differential suite for the §IV N-dim temporal pipeline
+//! (`temporal::build_nd`): seeded-random 2-D/3-D star and box specs ×
+//! fused depths 1–4 × both scheduler cores, compared **bitwise** (`==`,
+//! not a tolerance) against the iterated golden oracle
+//! (`verify::golden::stencil_ref_steps`) on the valid trapezoid box —
+//! the fused pipeline runs the exact `chain_taps` f64 association order
+//! the oracle uses, so any difference is a mapping bug. Plus the §IV
+//! load-count pin (input read exactly once regardless of depth,
+//! extending `tests/sim_integration.rs`'s 1-D version), the capacity
+//! accounting pin (`temporal::required_tokens` equals the built graph's
+//! mandatory queue capacities), and the coordinator-level contract:
+//! spatially-fused multi-tile runs match the oracle and load strictly
+//! less than the host-driven loop at equal steps.
+
+use stencil_cgra::cgra::{Machine, SimCore, Simulator};
+use stencil_cgra::coordinator::{Coordinator, FuseMode};
+use stencil_cgra::dfg::Op;
+use stencil_cgra::stencil::spec::uniform_box_taps;
+use stencil_cgra::stencil::{temporal, StencilSpec};
+use stencil_cgra::util::rng::XorShift;
+use stencil_cgra::verify::golden::stencil_ref_steps;
+
+/// Random coefficient in roughly [-0.5, 0.5] — bounded so iterated
+/// accumulations stay well-conditioned.
+fn coeffs(rng: &mut XorShift, n: usize) -> Vec<f64> {
+    (0..n).map(|_| 0.3 * rng.normal()).collect()
+}
+
+/// Simulate the fused pipeline on one core and assert bitwise equality
+/// with the iterated oracle on the valid trapezoid box.
+fn assert_fused_matches_oracle(
+    spec: &StencilSpec,
+    w: usize,
+    steps: usize,
+    x: &[f64],
+    core: SimCore,
+) {
+    let m = Machine::paper();
+    let g = temporal::build_nd(spec, w, steps).unwrap();
+    let res = Simulator::build(g, &m, x.to_vec(), x.to_vec())
+        .unwrap()
+        .with_core(core)
+        .run()
+        .unwrap();
+    let want = stencil_ref_steps(spec, x, steps);
+    let (lo, hi) = temporal::valid_box(spec, steps);
+    let label = format!(
+        "dims {:?} radii {:?} w={w} steps={steps} core={core}",
+        spec.dims(),
+        spec.radii()
+    );
+    let mut checked = 0usize;
+    for z in lo[2]..hi[2] {
+        for y in lo[1]..hi[1] {
+            for c in lo[0]..hi[0] {
+                let i = (z * spec.ny + y) * spec.nx + c;
+                assert_eq!(
+                    res.output[i], want[i],
+                    "{label}: point (z={z}, y={y}, x={c})"
+                );
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked > 0, "{label}: empty valid box");
+}
+
+#[test]
+fn star_2d_random_fused_depths_match_iterated_oracle_bitwise() {
+    let mut rng = XorShift::new(0x7E40_0001);
+    for case in 0..4 {
+        let rx = rng.range(1, 3);
+        let ry = rng.range(1, 3);
+        let steps = rng.range(2, 5);
+        let nx = rng.range(2 * rx * steps + 2, 2 * rx * steps + 14);
+        let ny = rng.range(2 * ry * steps + 2, 2 * ry * steps + 10);
+        let w = rng.range(1, 4);
+        let spec = StencilSpec::dim2(
+            nx,
+            ny,
+            coeffs(&mut rng, 2 * rx + 1),
+            coeffs(&mut rng, 2 * ry),
+        )
+        .unwrap();
+        let x = rng.normal_vec(nx * ny);
+        let core = if case % 2 == 0 { SimCore::Event } else { SimCore::Dense };
+        assert_fused_matches_oracle(&spec, w, steps, &x, core);
+    }
+}
+
+#[test]
+fn fixed_2d_star_depth_sweep_both_cores() {
+    // Depths 1 through 4 on both cores for one fixed spec, so every
+    // depth is covered deterministically.
+    let spec = StencilSpec::heat2d(22, 14, 0.2);
+    let mut rng = XorShift::new(0x7E40_0002);
+    let x = rng.normal_vec(22 * 14);
+    for steps in 1..=4 {
+        for core in [SimCore::Dense, SimCore::Event] {
+            assert_fused_matches_oracle(&spec, 2, steps, &x, core);
+        }
+    }
+}
+
+#[test]
+fn star_3d_random_fused_depths_match_iterated_oracle_bitwise() {
+    let mut rng = XorShift::new(0x7E40_0003);
+    for case in 0..3 {
+        let steps = rng.range(2, 4);
+        let nx = rng.range(2 * steps + 2, 2 * steps + 8);
+        let ny = rng.range(2 * steps + 2, 2 * steps + 6);
+        let nz = rng.range(2 * steps + 2, 2 * steps + 5);
+        let w = rng.range(1, 3);
+        let spec = StencilSpec::dim3(
+            nx,
+            ny,
+            nz,
+            coeffs(&mut rng, 3),
+            coeffs(&mut rng, 2),
+            coeffs(&mut rng, 2),
+        )
+        .unwrap();
+        let x = rng.normal_vec(nx * ny * nz);
+        let core = if case % 2 == 0 { SimCore::Event } else { SimCore::Dense };
+        assert_fused_matches_oracle(&spec, w, steps, &x, core);
+    }
+}
+
+#[test]
+fn box_2d_and_3d_fused_match_iterated_oracle_bitwise() {
+    let mut rng = XorShift::new(0x7E40_0004);
+    let b2 = StencilSpec::box2d(16, 12, 1, 1, coeffs(&mut rng, 9)).unwrap();
+    let x2 = rng.normal_vec(16 * 12);
+    for (steps, core) in [(2usize, SimCore::Event), (3, SimCore::Dense)] {
+        assert_fused_matches_oracle(&b2, 2, steps, &x2, core);
+    }
+    let b3 = StencilSpec::box3d(9, 8, 7, 1, 1, 1, coeffs(&mut rng, 27)).unwrap();
+    let x3 = rng.normal_vec(9 * 8 * 7);
+    assert_fused_matches_oracle(&b3, 1, 2, &x3, SimCore::Event);
+}
+
+#[test]
+fn fused_pipeline_reads_input_exactly_once() {
+    // §IV's whole point, beyond 1-D: loads == grid points regardless of
+    // fused depth, while the DP work grows with every extra layer.
+    let m = Machine::paper();
+    let spec2 = StencilSpec::heat2d(20, 12, 0.2);
+    let x2 = vec![1.0; 20 * 12];
+    let mut prev_dp = 0u64;
+    for steps in [1usize, 2, 4] {
+        let g = temporal::build_nd(&spec2, 2, steps).unwrap();
+        let res = Simulator::build(g, &m, x2.clone(), x2.clone())
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(res.stats.mem.loads, (20 * 12) as u64, "2-D steps={steps}");
+        assert!(res.stats.dp_fires > prev_dp, "2-D steps={steps}: DP work must grow");
+        prev_dp = res.stats.dp_fires;
+    }
+    let spec3 = StencilSpec::heat3d(10, 8, 6, 0.1);
+    let x3 = vec![1.0; 10 * 8 * 6];
+    for steps in [1usize, 2] {
+        let g = temporal::build_nd(&spec3, 2, steps).unwrap();
+        let res = Simulator::build(g, &m, x3.clone(), x3.clone())
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(res.stats.mem.loads, (10 * 8 * 6) as u64, "3-D steps={steps}");
+    }
+}
+
+#[test]
+fn required_tokens_matches_built_graph_capacities() {
+    // The capacity math the fused-depth planner budgets with must be
+    // exactly what the built graph carries: delay stages (Copy port 0),
+    // Mul port 0 and Mac port 1 — the same pin map2d/map3d maintain for
+    // their single-step graphs.
+    let cases = [
+        (StencilSpec::heat2d(18, 12, 0.2), 2usize, 3usize),
+        (StencilSpec::heat3d(10, 8, 6, 0.1), 2, 2),
+        (
+            StencilSpec::box2d(14, 10, 1, 1, uniform_box_taps(1, 1, 0)).unwrap(),
+            2,
+            2,
+        ),
+    ];
+    for (spec, w, steps) in cases {
+        let g = temporal::build_nd(&spec, w, steps).unwrap();
+        let mut got = 0usize;
+        for n in &g.nodes {
+            match n.op {
+                Op::Copy => got += g.channels[g.input(n.id, 0).unwrap()].capacity,
+                Op::Mul => got += g.channels[g.input(n.id, 0).unwrap()].capacity,
+                Op::Mac => got += g.channels[g.input(n.id, 1).unwrap()].capacity,
+                _ => {}
+            }
+        }
+        assert_eq!(
+            got,
+            temporal::required_tokens(&spec, w, steps),
+            "dims {:?} steps={steps}",
+            spec.dims()
+        );
+    }
+}
+
+#[test]
+fn fused_coordinator_multitile_3d_matches_oracle_and_saves_loads() {
+    // Acceptance contract: a `--fuse spatial --steps 4` 3-D multi-tile
+    // run is bitwise-equal to the iterated oracle on the valid interior
+    // and loads strictly less than the host-driven loop.
+    let spec = StencilSpec::heat3d(14, 12, 10, 0.1);
+    let mut rng = XorShift::new(0x7E40_0005);
+    let x = rng.normal_vec(14 * 12 * 10);
+    let steps = 4;
+    let host = Coordinator::new(4, Machine::paper());
+    let (_, hreps) = host.run_steps(&spec, 2, &x, steps).unwrap();
+    let fused = Coordinator::new(4, Machine::paper()).with_fuse(FuseMode::Spatial);
+    let (fout, freps) = fused.run_steps(&spec, 2, &x, steps).unwrap();
+    assert_eq!(freps.iter().map(|r| r.fused_steps).sum::<usize>(), steps);
+    assert!(freps[0].fused_steps > 1, "default budget must admit fusion");
+    let want = stencil_ref_steps(&spec, &x, steps);
+    let (lo, hi) = temporal::valid_box(&spec, steps);
+    for z in lo[2]..hi[2] {
+        for y in lo[1]..hi[1] {
+            for c in lo[0]..hi[0] {
+                let i = (z * spec.ny + y) * spec.nx + c;
+                assert_eq!(fout[i], want[i], "(z={z}, y={y}, x={c})");
+            }
+        }
+    }
+    let host_loads: u64 = hreps.iter().map(|r| r.total_loads()).sum();
+    let fused_loads: u64 = freps.iter().map(|r| r.total_loads()).sum();
+    assert!(fused_loads < host_loads, "{fused_loads} !< {host_loads}");
+}
