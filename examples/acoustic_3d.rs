@@ -10,10 +10,13 @@
 //! cargo run --release --example acoustic_3d
 //! ```
 
+use std::sync::Arc;
+
 use anyhow::Result;
-use stencil_cgra::coordinator::Coordinator;
+use stencil_cgra::cgra::Machine;
+use stencil_cgra::compile::{compile, CompileOptions};
 use stencil_cgra::gpu_model::{GpuStencil, Precision, V100};
-use stencil_cgra::roofline;
+use stencil_cgra::session::Session;
 use stencil_cgra::stencil::decomp::DecompKind;
 use stencil_cgra::stencil::spec::{symmetric_taps, y_taps, z_taps};
 use stencil_cgra::stencil::{map3d, StencilSpec};
@@ -30,13 +33,15 @@ fn main() -> Result<()> {
         spec.points()
     );
 
-    // 16 tiles, y/z pencil cuts (x stays row-major contiguous).
-    let coord = Coordinator::paper().with_decomp(DecompKind::Pencil);
-    let machine = &coord.machine;
-
-    // §VI worker sizing for the 3-D shape.
-    let w = roofline::optimal_workers(&spec, machine);
-    let plan = coord.plan(&spec, w)?;
+    // Compile once: 16 tiles, y/z pencil cuts (x stays row-major
+    // contiguous). The artifact owns the plan, the placed per-pencil
+    // graphs and the halo-adjusted roofline.
+    let machine = Machine::paper();
+    let opts = CompileOptions::paper()
+        .with_machine(machine.clone())
+        .with_decomp(DecompKind::Pencil);
+    let compiled = Arc::new(compile(&spec, 1, &opts)?);
+    let (w, plan) = (compiled.workers, compiled.plan());
     println!(
         "decomposition: {} cuts (x{}, y{}, z{}) -> {} pencils, \
          {} halo points ({:.1}% redundant reads)",
@@ -48,7 +53,7 @@ fn main() -> Result<()> {
         plan.halo_points(),
         100.0 * plan.redundant_read_fraction(&spec)
     );
-    let a = roofline::analyze_tiled(&spec, machine, w, &plan, coord.tiles);
+    let a = &compiled.analysis;
     println!(
         "roofline: AI = {:.2} flops/byte ({:.2} effective after halos) -> \
          {:.0} GFLOPS/tile, {:.0} array; w = {w}",
@@ -59,16 +64,21 @@ fn main() -> Result<()> {
     );
     let worst = plan.tiles[0].sub_spec(&spec);
     println!(
-        "plane buffering per pencil: {} delay stages/reader, {} mandatory tokens",
+        "plane buffering per pencil: {} delay stages/reader, {} mandatory tokens \
+         ({} placed graph(s) shared by {} pencils)",
         map3d::delay_stages(&worst, w),
-        map3d::required_buffer_tokens(&worst, w)
+        map3d::required_buffer_tokens(&worst, w),
+        compiled.graph_count(),
+        plan.tiles.len()
     );
 
     // Synthetic pressure field.
     let mut rng = XorShift::new(0xAC03);
     let input = rng.normal_vec(spec.grid_points());
 
-    let rep = coord.run(&spec, w, &input)?;
+    let session = Session::new(Arc::clone(&compiled), machine.clone());
+    let outcome = session.run(&input)?;
+    let rep = outcome.final_report();
     let want = stencil3d_ref(&input, &spec);
     let err = max_abs_diff(&rep.output, &want);
     assert!(err < 1e-11, "numerics drifted: {err:.2e}");

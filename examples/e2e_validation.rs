@@ -9,17 +9,20 @@
 //!    artifact, (b) the native Rust oracle and (c) the CGRA cycle
 //!    simulator must agree to ~1e-12.
 //! 2. **Workload run** — 200 steps of 5-point heat diffusion on a 96x96
-//!    plate driven through the 4-tile coordinator, with the residual
-//!    curve logged and the final state checked against the *fused*
-//!    200-step JAX artifact (`heat2d_run200_96x96` — §IV temporal
-//!    locality on the XLA side).
+//!    plate compiled once and executed through a 4-tile `Session`, with
+//!    the residual curve logged and the final state checked against the
+//!    *fused* 200-step JAX artifact (`heat2d_run200_96x96` — §IV
+//!    temporal locality on the XLA side).
 //!
 //! The run is recorded in EXPERIMENTS.md.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 use stencil_cgra::cgra::Machine;
-use stencil_cgra::coordinator::Coordinator;
+use stencil_cgra::compile::{compile, CompileOptions, FuseMode};
 use stencil_cgra::runtime::Runtime;
+use stencil_cgra::session::Session;
 use stencil_cgra::stencil::spec::{symmetric_taps, y_taps};
 use stencil_cgra::stencil::StencilSpec;
 use stencil_cgra::util::rng::XorShift;
@@ -27,7 +30,7 @@ use stencil_cgra::verify::golden::{max_abs_diff, run_sim, stencil2d_ref};
 
 fn main() -> Result<()> {
     let machine = Machine::paper();
-    let mut rt = Runtime::open(Runtime::default_dir())?;
+    let rt = Runtime::open(Runtime::default_dir())?;
     println!("== e2e validation (PJRT platform: {}) ==\n", rt.platform());
 
     // ---- Part 1: three-way agreement on the 49-pt stencil ----
@@ -58,9 +61,17 @@ fn main() -> Result<()> {
     let mut x0 = vec![0.0f64; nx * ny];
     x0[48 * 96 + 48] = 100.0;
 
-    let coord = Coordinator::new(4, machine.clone());
+    // Compile the 200-step workload once (host schedule: one report per
+    // step for the residual curve), then execute through a session.
+    let opts = CompileOptions::default()
+        .with_machine(machine.clone())
+        .with_workers(4)
+        .with_tiles(4)
+        .with_fuse(FuseMode::Host);
+    let session = Session::new(Arc::new(compile(&heat, steps, &opts)?), machine.clone());
     let t1 = std::time::Instant::now();
-    let (final_grid, reports) = coord.run_steps(&heat, 4, &x0, steps)?;
+    let outcome = session.run(&x0)?;
+    let (final_grid, reports) = (outcome.output, outcome.reports);
     let wall = t1.elapsed().as_secs_f64();
 
     // Residual curve (log every 25 steps).
@@ -78,7 +89,7 @@ fn main() -> Result<()> {
     // while-loop — §IV temporal locality at the L2 layer).
     let fused = rt.execute("heat2d_run200_96x96", &[&x0])?;
     let d = max_abs_diff(&final_grid, &fused);
-    println!("\ncoordinator(200 x 1-step) vs fused JAX run200: max|err| = {d:.2e}");
+    println!("\nsession(200 x 1-step) vs fused JAX run200: max|err| = {d:.2e}");
     assert!(d < 1e-10, "temporal drift: {d:.3e}");
 
     let total_cycles: u64 = reports.iter().map(|r| r.makespan_cycles).sum();

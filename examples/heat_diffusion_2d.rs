@@ -1,7 +1,7 @@
 //! Heat diffusion: the paper's single-time-step use case ("other kernels
 //! need to be applied over the stencil grid before calling the stencil
-//! kernel again", §IV) — the host drives many 5-point Jacobi steps
-//! through the multi-tile coordinator, swapping buffers between calls.
+//! kernel again", §IV) — a 60-step host-driven Jacobi workload compiled
+//! **once** into a multi-tile artifact and executed through a `Session`.
 //!
 //! ```sh
 //! cargo run --release --example heat_diffusion_2d
@@ -10,9 +10,12 @@
 //! Reports the residual curve (convergence toward steady state) and the
 //! sustained throughput across steps.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 use stencil_cgra::cgra::Machine;
-use stencil_cgra::coordinator::Coordinator;
+use stencil_cgra::compile::{compile, CompileOptions, FuseMode};
+use stencil_cgra::session::Session;
 use stencil_cgra::stencil::StencilSpec;
 use stencil_cgra::verify::golden::{heat2d_step_ref, max_abs_diff};
 
@@ -33,13 +36,20 @@ fn main() -> Result<()> {
     }
     let initial_heat: f64 = grid.iter().sum();
 
-    let coord = Coordinator::new(4, machine.clone());
-    let w = 4;
+    // Compile once: a Host-fused schedule keeps one report per step so
+    // the residual curve below sees every intermediate grid.
+    let opts = CompileOptions::default()
+        .with_machine(machine.clone())
+        .with_workers(4)
+        .with_tiles(4)
+        .with_fuse(FuseMode::Host);
+    let session = Session::new(Arc::new(compile(&spec, steps, &opts)?), machine.clone());
     let mut residuals = Vec::new();
     let mut total_cycles = 0u64;
     let mut prev = grid.clone();
     let t0 = std::time::Instant::now();
-    let (final_grid, reports) = coord.run_steps(&spec, w, &grid, steps)?;
+    let outcome = session.run(&grid)?;
+    let (final_grid, reports) = (outcome.output, outcome.reports);
     for (i, rep) in reports.iter().enumerate() {
         let res = max_abs_diff(&rep.output, &prev);
         residuals.push(res);

@@ -4,7 +4,9 @@
 //! (cache-friendly nesting for the CPU side); CGRA tiles and CPU workers
 //! pull from the same queue — the work-stealing structure the paper
 //! sketches for "multiple CPU cores sharing the same last level cache
-//! offloading independent stencil tasks to the CGRAs".
+//! offloading independent stencil tasks to the CGRAs". The CGRA side
+//! shares the compile phase's placed graphs (one placement per distinct
+//! tile shape), so a pull costs only per-run simulator state.
 //!
 //! ```sh
 //! cargo run --release --example hybrid_multitile

@@ -1,19 +1,27 @@
-//! Quickstart: the paper's running example (§III-A) — a 3-point 1-D
-//! stencil mapped onto the CGRA with 3 workers.
+//! Quickstart: compile once, execute many (§III map once, stream many
+//! grids) — the paper's 3-point 1-D running example through the
+//! two-phase API.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Builds the dataflow graph (readers, filters, MAC chains, writers,
-//! sync), simulates it cycle by cycle, verifies the numerics against the
-//! native oracle and prints the §VIII-style report.
+//! **Phase 1** (`compile`) does everything data-independent exactly
+//! once: resolves the worker count against the §VI roofline, plans the
+//! tile decomposition, builds *and places* the dataflow graph
+//! (readers, filters, MAC chains, writers, sync) per tile shape.
+//! **Phase 2** (`Session`) executes the immutable artifact against any
+//! number of input grids — here three different wavefields plus a
+//! repeat, verifying each against the native oracle and showing that
+//! no planning or graph work happens after compile.
+
+use std::sync::Arc;
 
 use anyhow::Result;
-use stencil_cgra::cgra::{Machine, Simulator};
-use stencil_cgra::dfg::dot::to_dot;
-use stencil_cgra::roofline;
-use stencil_cgra::stencil::{map1d, StencilSpec};
+use stencil_cgra::cgra::Machine;
+use stencil_cgra::compile::{compile, CompileOptions};
+use stencil_cgra::session::Session;
+use stencil_cgra::stencil::{metrics, StencilSpec};
 use stencil_cgra::util::rng::XorShift;
 use stencil_cgra::verify::golden::{max_abs_diff, stencil1d_ref};
 
@@ -22,52 +30,55 @@ fn main() -> Result<()> {
     let n = 4096;
     let spec = StencilSpec::dim1(n, vec![0.25, 0.5, 0.25])?;
     let machine = Machine::paper();
-    let workers = 3; // the paper's w = 3 walkthrough
 
-    println!("== stencil-cgra quickstart: 3-pt 1-D stencil, w = {workers} ==\n");
+    println!("== stencil-cgra quickstart: 3-pt 1-D stencil, compile once / execute many ==\n");
 
-    // 1. Map: stencil -> dataflow graph (§III-A).
-    let graph = map1d::build(&spec, workers)?;
-    println!("DFG: {}", graph.summary());
-    let hist = graph.op_histogram();
+    // Phase 1: compile. One plan, one placed graph, one roofline pass.
+    let opts = CompileOptions::default()
+        .with_machine(machine.clone())
+        .with_workers(3); // the paper's w = 3 walkthrough
+    let compiled = Arc::new(compile(&spec, 1, &opts)?);
     println!(
-        "     {} MUL, {} MAC, {} filters, {} loads, {} stores",
-        hist[&stencil_cgra::dfg::Op::Mul],
-        hist[&stencil_cgra::dfg::Op::Mac],
-        hist[&stencil_cgra::dfg::Op::Filter],
-        hist[&stencil_cgra::dfg::Op::Load],
-        hist[&stencil_cgra::dfg::Op::Store],
+        "compiled: w = {}, {} tile task(s), {} placed graph(s)",
+        compiled.workers,
+        compiled.plan().tiles.len(),
+        compiled.graph_count()
+    );
+    println!(
+        "roofline: AI = {:.2} flops/byte -> attainable {:.0} GFLOPS (peak {:.0})\n",
+        compiled.analysis.base.arithmetic_intensity,
+        compiled.analysis.base.attainable_gflops,
+        compiled.analysis.base.peak_gflops
     );
 
-    // Optional: write the Graphviz rendering (Fig 5-style).
-    std::fs::write("/tmp/quickstart_dfg.dot", to_dot(&graph, "3-pt 1D, 3 workers"))?;
-    println!("     dot written to /tmp/quickstart_dfg.dot\n");
+    // Phase 2: a session executes the artifact — &self, so it can serve
+    // many threads; here a loop of distinct grids stands in for them.
+    let session = Session::new(Arc::clone(&compiled), machine.clone());
+    let (plans_before, graphs_before) = (metrics::plans(), metrics::graph_builds());
+    let mut first_cycles = 0;
+    for seed in [2024u64, 2025, 2026] {
+        let mut rng = XorShift::new(seed);
+        let input = rng.normal_vec(n);
+        let outcome = session.run(&input)?;
+        let rep = outcome.final_report();
+        let want = stencil1d_ref(&input, &spec.cx);
+        let err = max_abs_diff(&outcome.output, &want);
+        assert!(err < 1e-12);
+        println!(
+            "grid {seed}: {} cycles, {:.1} GFLOPS, max|err| vs oracle = {err:.2e}",
+            rep.makespan_cycles, rep.gflops
+        );
+        first_cycles = rep.makespan_cycles;
+    }
 
-    // 2. Roofline (§VI): is this workload bandwidth- or compute-bound?
-    let a = roofline::analyze(&spec, &machine, workers);
-    println!(
-        "roofline: AI = {:.2} flops/byte -> attainable {:.0} GFLOPS (peak {:.0})",
-        a.arithmetic_intensity, a.attainable_gflops, a.peak_gflops
-    );
-
-    // 3. Simulate (§VIII): functional + timing in one run.
-    let mut rng = XorShift::new(2024);
-    let input = rng.normal_vec(n);
-    let res = Simulator::build(graph, &machine, input.clone(), input.clone())?.run()?;
-
-    // 4. Verify against the native oracle.
-    let want = stencil1d_ref(&input, &spec.cx);
-    let err = max_abs_diff(&res.output, &want);
-    println!("\nsimulated {} cycles, max|err| vs oracle = {err:.2e}", res.stats.cycles);
-    assert!(err < 1e-12);
-
-    let gflops = res.gflops(spec.total_flops(), machine.clock_ghz);
-    println!(
-        "achieved {gflops:.1} GFLOPS = {:.0}% of the {:.0} GFLOPS roofline",
-        100.0 * gflops / a.attainable_gflops,
-        a.attainable_gflops
-    );
-    println!("stats: {}", res.stats.summary());
-    println!("\nquickstart OK");
+    // Re-running the same grid is bitwise-deterministic...
+    let mut rng = XorShift::new(2026);
+    let again = session.run(&rng.normal_vec(n))?;
+    assert_eq!(again.final_report().makespan_cycles, first_cycles);
+    // ...and the execute phase did zero planning / graph construction.
+    assert_eq!(metrics::plans(), plans_before);
+    assert_eq!(metrics::graph_builds(), graphs_before);
+    println!("\n4 executions after compile: 0 plans, 0 graph builds (counters pinned)");
+    println!("quickstart OK");
     Ok(())
 }

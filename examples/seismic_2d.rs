@@ -7,11 +7,14 @@
 //! cargo run --release --example seismic_2d
 //! ```
 
+use std::sync::Arc;
+
 use anyhow::Result;
 use stencil_cgra::cgra::Machine;
-use stencil_cgra::coordinator::Coordinator;
+use stencil_cgra::compile::{compile, CompileOptions};
 use stencil_cgra::gpu_model::{GpuStencil, Precision, V100};
 use stencil_cgra::roofline;
+use stencil_cgra::session::Session;
 use stencil_cgra::stencil::StencilSpec;
 use stencil_cgra::util::rng::XorShift;
 use stencil_cgra::verify::golden::{max_abs_diff, stencil2d_ref};
@@ -38,18 +41,22 @@ fn main() -> Result<()> {
     let mut rng = XorShift::new(0x5E15);
     let input = rng.normal_vec(spec.grid_points());
 
-    let coord = Coordinator::paper(); // 16 tiles
-    let rep = coord.run(&spec, w, &input)?;
+    // Compile once for the 16-tile paper configuration, execute once.
+    let opts = CompileOptions::paper().with_machine(machine.clone()).with_workers(w);
+    let tiles = opts.tiles;
+    let session = Session::new(Arc::new(compile(&spec, 1, &opts)?), machine.clone());
+    let outcome = session.run(&input)?;
+    let rep = outcome.final_report();
 
     let want = stencil2d_ref(&input, &spec);
     let err = max_abs_diff(&rep.output, &want);
     assert!(err < 1e-11, "numerics drifted: {err:.2e}");
 
     let tile_roof = machine.roofline_gflops(spec.arithmetic_intensity());
-    let array_roof = coord.tiles as f64 * tile_roof;
+    let array_roof = tiles as f64 * tile_roof;
     println!(
         "\nCGRA x{}: {} strips, makespan {} cycles -> {:.0} GFLOPS ({:.0}% of {:.0} roof)",
-        coord.tiles,
+        tiles,
         rep.strips,
         rep.makespan_cycles,
         rep.gflops,

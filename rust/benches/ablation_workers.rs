@@ -20,13 +20,25 @@
 //! runs only the §D depth sweep on shrunken grids (1 iteration) and
 //! still writes `BENCH_temporal.json`.
 
+use std::sync::Arc;
+
 use stencil_cgra::cgra::{Machine, Simulator};
-use stencil_cgra::coordinator::Coordinator;
+use stencil_cgra::compile::{compile, CompileOptions};
+use stencil_cgra::session::{RunReport, Session};
 use stencil_cgra::stencil::decomp::DecompKind;
 use stencil_cgra::stencil::spec::{symmetric_taps, y_taps, z_taps};
 use stencil_cgra::stencil::{map1d, temporal, StencilSpec};
 use stencil_cgra::util::bench;
 use stencil_cgra::verify::golden::run_sim;
+
+/// Compile once + execute once — the bench-side stand-in for the old
+/// one-call coordinator.
+fn run_once(spec: &StencilSpec, opts: &CompileOptions, x: &[f64]) -> RunReport {
+    let compiled = Arc::new(compile(spec, 1, opts).unwrap());
+    let machine = opts.machine.clone();
+    let mut outcome = Session::new(compiled, machine).run(x).unwrap();
+    outcome.reports.remove(0)
+}
 
 fn quick() -> bool {
     std::env::var("BENCH_QUICK").map(|v| v != "0").unwrap_or(false)
@@ -183,8 +195,11 @@ fn main() {
         );
         let base_reads = (spec.grid_points() * 8) as f64;
         for tiles in [1usize, 2, 4, 8, 16, 32] {
-            let coord = Coordinator::new(tiles, m.clone());
-            let rep = coord.run(&spec, 5, &x).unwrap();
+            let opts = CompileOptions::default()
+                .with_machine(m.clone())
+                .with_workers(5)
+                .with_tiles(tiles);
+            let rep = run_once(&spec, &opts, &x);
             let reads: u64 = rep.per_tile.iter().map(|t| t.mem.dram_read_bytes).sum();
             println!(
                 "{tiles:>7} {:>7} {:>12} {:>10.0} {:>11.1}%",
@@ -208,8 +223,11 @@ fn main() {
             "kind", "tasks", "cuts", "makespan", "GFLOPS", "halo reads"
         );
         for kind in [DecompKind::Slab, DecompKind::Pencil, DecompKind::Block] {
-            let coord = Coordinator::new(16, m.clone()).with_decomp(kind);
-            let rep = coord.run(&spec, 3, &x).unwrap();
+            let opts = CompileOptions::paper()
+                .with_machine(m.clone())
+                .with_workers(3)
+                .with_decomp(kind);
+            let rep = run_once(&spec, &opts, &x);
             let cuts = format!("{}x{}x{}", rep.cuts[0], rep.cuts[1], rep.cuts[2]);
             println!(
                 "{kind:>8} {:>7} {cuts:>10} {:>12} {:>10.0} {:>11.1}%",

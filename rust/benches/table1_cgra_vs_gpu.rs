@@ -11,9 +11,12 @@
 //!
 //! Run: `cargo bench --bench table1_cgra_vs_gpu`
 
+use std::sync::Arc;
+
 use stencil_cgra::cgra::Machine;
-use stencil_cgra::coordinator::Coordinator;
+use stencil_cgra::compile::{compile, CompileOptions};
 use stencil_cgra::gpu_model::{GpuStencil, Precision, V100};
+use stencil_cgra::session::Session;
 use stencil_cgra::stencil::StencilSpec;
 use stencil_cgra::util::bench;
 use stencil_cgra::util::rng::XorShift;
@@ -22,7 +25,6 @@ use stencil_cgra::verify::golden::run_sim;
 fn main() {
     let m = Machine::paper();
     let v100 = V100::paper();
-    let coord = Coordinator::paper();
 
     bench::section("Table I — comparative analysis of stencils on CGRA and GPU");
     println!(
@@ -60,8 +62,11 @@ fn main() {
         let tile_roof = m.roofline_gflops(spec.arithmetic_intensity());
         conflicts.push((name, single.stats.mem.clone()));
 
-        // 16 tiles measured.
-        let rep = coord.run(&spec, w, &input).unwrap();
+        // 16 tiles measured — compiled once, executed via a session.
+        let opts = CompileOptions::paper().with_machine(m.clone()).with_workers(w);
+        let compiled = Arc::new(compile(&spec, 1, &opts).unwrap());
+        let outcome = Session::new(compiled, m.clone()).run(&input).unwrap();
+        let rep = &outcome.reports[0];
         let array_roof = 16.0 * tile_roof;
 
         // GPU baseline.

@@ -20,7 +20,10 @@
 //!   simulation is both the correctness and the performance experiment.
 //!   Two interchangeable scheduler cores ([`sim::SimCore`]): the dense
 //!   reference loop and the default event-driven ready list with cycle
-//!   skipping, bit-identical by construction.
+//!   skipping, bit-identical by construction. A simulation splits into
+//!   a shared read-only [`sim::PlacedGraph`] (validation + placement,
+//!   built once per graph shape by the compile phase) and the per-run
+//!   mutable [`sim::Simulator`] instantiated from it.
 //! * [`stats`] — utilization, traffic, cache and stall counters.
 
 pub mod channel;
@@ -31,7 +34,7 @@ pub mod sim;
 pub mod stats;
 
 pub use machine::Machine;
-pub use sim::{SimCore, SimResult, Simulator};
+pub use sim::{PlacedGraph, SimCore, SimResult, Simulator};
 
 /// A value flowing through the fabric, tagged with the grid coordinates
 /// the control units generated for it (§III-A: control units produce

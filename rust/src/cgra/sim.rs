@@ -116,6 +116,7 @@ impl std::fmt::Display for SimCore {
 }
 
 /// Runtime state of one instruction.
+#[derive(Clone)]
 struct NodeRt {
     op: Op,
     stage: Stage,
@@ -240,15 +241,39 @@ impl Wheel {
     }
 }
 
+/// A validated, placed, simulator-ready DFG — the shared **read-only**
+/// half of a simulation, produced once at compile time and reusable by
+/// any number of concurrent runs. Placement (PE assignment, channel
+/// latencies/capacities, the dense evaluation order) happens here;
+/// everything a run mutates — node counters, channel contents, the
+/// memory system — lives in [`Simulator`], which clones the pristine
+/// templates below. `PlacedGraph` is `Send + Sync` plain data, so an
+/// `Arc<PlacedGraph>` is the unit the compile-once/execute-many API
+/// shares across tiles and threads.
+pub struct PlacedGraph {
+    /// Pristine per-instruction runtime state (all counters zero).
+    nodes: Vec<NodeRt>,
+    /// Pristine (empty) channels with placed latencies/capacities.
+    chans: Vec<Fifo>,
+    /// Dense evaluation order from [`Placement::eval_slots`] (one group
+    /// per occupied PE, or topological singletons when no PE shares
+    /// instructions), flattened CSR-style: slot `s` holds
+    /// `slot_nodes[slot_start[s] .. slot_start[s + 1]]`.
+    slot_nodes: Vec<u32>,
+    slot_start: Vec<u32>,
+    deadlock_quiet: u64,
+    horizon: u64,
+    done_node: usize,
+    dp_ops: usize,
+    node_count: usize,
+    names: Vec<String>,
+}
+
 pub struct Simulator {
     nodes: Vec<NodeRt>,
     chans: Vec<Fifo>,
     mem: MemSys,
-    /// Shared dense evaluation order from [`Placement::eval_slots`]
-    /// (one group per occupied PE, or topological singletons when no PE
-    /// shares instructions), flattened CSR-style so the dense sweep
-    /// walks one contiguous array: slot `s` holds
-    /// `slot_nodes[slot_start[s] .. slot_start[s + 1]]`.
+    /// See `PlacedGraph::slot_nodes`.
     slot_nodes: Vec<u32>,
     slot_start: Vec<u32>,
     /// Quiet-period threshold for deadlock detection.
@@ -265,18 +290,11 @@ pub struct Simulator {
     names: Vec<String>,
 }
 
-impl Simulator {
-    /// Build a simulator for `graph` on machine `m`.
-    ///
-    /// `input` is the source grid; `output` the initial contents of the
-    /// destination (pre-filled with boundary values by the caller).
-    /// Placement runs here and fixes channel latencies/capacities.
-    pub fn build(
-        mut graph: Graph,
-        m: &Machine,
-        input: Vec<f64>,
-        output: Vec<f64>,
-    ) -> Result<Self> {
+impl PlacedGraph {
+    /// Validate and place `graph` on machine `m`, building the shared
+    /// simulator templates. This is the expensive, once-per-shape half
+    /// of [`Simulator::build`].
+    pub fn new(mut graph: Graph, m: &Machine) -> Result<Self> {
         crate::dfg::validate::validate(&graph)?;
         let plc: Placement = placement::place(&mut graph, m)?;
 
@@ -357,14 +375,10 @@ impl Simulator {
         }
 
         let max_lat = graph.channels.iter().map(|c| c.latency).max().unwrap_or(1);
-        let mut stats = SimStats::default();
-        stats.dp_ops = graph.dp_ops();
-        stats.node_count = graph.node_count();
 
         Ok(Self {
             nodes,
             chans,
-            mem: MemSys::new(m, input, output),
             slot_nodes,
             slot_start,
             deadlock_quiet: m.dram_latency as u64 + max_lat as u64 + 256,
@@ -372,13 +386,64 @@ impl Simulator {
                 + max_lat as u64
                 + m.cache_hit_latency as u64
                 + 4,
-            max_cycles: 200_000_000,
-            stats,
-            mshr: m.mshr_per_load,
             done_node,
-            core: SimCore::default(),
+            dp_ops: graph.dp_ops(),
+            node_count: graph.node_count(),
             names,
         })
+    }
+
+    /// Instructions in the graph (sizing diagnostics).
+    pub fn node_count(&self) -> usize {
+        self.node_count
+    }
+}
+
+impl Simulator {
+    /// Build a simulator for `graph` on machine `m` — the one-shot path:
+    /// placement runs here and is thrown away with the run. Callers that
+    /// execute the same graph many times (the compile-once API) place
+    /// once via [`PlacedGraph::new`] and use [`Simulator::from_placed`].
+    ///
+    /// `input` is the source grid; `output` the initial contents of the
+    /// destination (pre-filled with boundary values by the caller).
+    pub fn build(
+        graph: Graph,
+        m: &Machine,
+        input: Vec<f64>,
+        output: Vec<f64>,
+    ) -> Result<Self> {
+        Ok(Self::from_placed(&PlacedGraph::new(graph, m)?, m, input, output))
+    }
+
+    /// Instantiate a run over a shared placed graph: clones the pristine
+    /// node/channel templates and binds a fresh memory system — no
+    /// validation, no placement, no graph traversal.
+    pub fn from_placed(
+        pg: &PlacedGraph,
+        m: &Machine,
+        input: Vec<f64>,
+        output: Vec<f64>,
+    ) -> Self {
+        Self {
+            nodes: pg.nodes.clone(),
+            chans: pg.chans.clone(),
+            mem: MemSys::new(m, input, output),
+            slot_nodes: pg.slot_nodes.clone(),
+            slot_start: pg.slot_start.clone(),
+            deadlock_quiet: pg.deadlock_quiet,
+            horizon: pg.horizon,
+            max_cycles: 200_000_000,
+            stats: SimStats {
+                dp_ops: pg.dp_ops,
+                node_count: pg.node_count,
+                ..SimStats::default()
+            },
+            mshr: m.mshr_per_load,
+            done_node: pg.done_node,
+            core: SimCore::default(),
+            names: pg.names.clone(),
+        }
     }
 
     /// Override the safety cap on simulated cycles.

@@ -5,10 +5,18 @@
 //! scgra info                         machine + artifact inventory
 //! scgra dfg      --stencil S [-w N] [--dot F] [--asm F]   §V emitters
 //! scgra roofline [--stencil S] [--tiles N]                §VI analysis
+//! scgra compile  --stencil S [--steps N] [--out F]        phase 1: plan + place
 //! scgra run      --stencil S [-w N] [--tiles N] [--decomp K] [--steps N] [--fuse M]
+//! scgra run      --artifact F                             phase 2: execute a saved artifact
 //! scgra compare                                           Table I
 //! scgra validate                                          3-layer check
 //! ```
+//!
+//! Every planning path funnels through one flag-assembly point,
+//! `CompileOptions::from_args` (workers/tiles/decomp/fuse/fabric
+//! budget, with `[run]` config defaults), so `dfg`, `roofline`,
+//! `compile` and `run` cannot drift apart. `compile` + `run --artifact`
+//! are the compile-once/execute-many split on the command line.
 //!
 //! Beyond the named presets, any workload can be described with the
 //! shape flags — `--shape star|box --dims X[,Y[,Z]] --radii RX[,RY[,RZ]]`
@@ -27,14 +35,16 @@
 //! golden oracle.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::cgra::{Machine, SimCore};
-use crate::config::Config;
-use crate::coordinator::{Coordinator, FuseMode};
+use crate::compile::{compile, CompileOptions, CompiledStencil, FuseMode};
+use crate::config::{Config, RunParams};
 use crate::gpu_model::{GpuStencil, Precision, V100};
 use crate::roofline;
+use crate::session::Session;
 use crate::stencil::decomp::{self, DecompKind};
 use crate::stencil::spec::{symmetric_taps, uniform_box_taps, y_taps, z_taps};
 use crate::stencil::{build_graph, temporal, StencilSpec};
@@ -82,6 +92,28 @@ impl Args {
             None => Ok(default),
             Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key} {v}: {e}")),
         }
+    }
+}
+
+impl CompileOptions {
+    /// One shared flag/config assembly for every planning path (`dfg`,
+    /// `roofline`, `compile`, `run`): `--workers/--tiles/--decomp/
+    /// --fuse/--fabric-tokens` over the `[run]` config defaults.
+    pub fn from_args(args: &Args, machine: &Machine, defaults: &RunParams) -> Result<Self> {
+        Ok(Self {
+            machine: machine.clone(),
+            workers: args.num("workers", defaults.workers)?,
+            tiles: args.num("tiles", defaults.tiles)?,
+            fabric_tokens: args.num("fabric-tokens", decomp::DEFAULT_FABRIC_TOKENS)?,
+            decomp: match args.get("decomp") {
+                Some(s) => DecompKind::parse(s)?,
+                None => defaults.decomp,
+            },
+            fuse: match args.get("fuse") {
+                Some(s) => FuseMode::parse(s)?,
+                None => defaults.fuse,
+            },
+        })
     }
 }
 
@@ -177,13 +209,18 @@ fn ensure_dims(dims: &[usize]) -> Result<()> {
     Ok(())
 }
 
-/// Resolve the workload: shape flags win, then `--stencil`, then the
-/// given default preset.
-fn resolve_spec(args: &Args, default: &str) -> Result<StencilSpec> {
+/// Resolve the workload — the one precedence rule every subcommand
+/// shares: shape flags win, then `--stencil`, then the config file's
+/// `[stencil]` section, then the given default preset.
+fn resolve_spec(args: &Args, cfg: Option<&Config>, default: &str) -> Result<StencilSpec> {
     if let Some(spec) = spec_from_shape_flags(args)? {
         return Ok(spec);
     }
-    stencil_by_name(args.get("stencil").unwrap_or(default))
+    match (args.get("stencil"), cfg) {
+        (Some(name), _) => stencil_by_name(name),
+        (None, Some(c)) => c.stencil(),
+        (None, None) => stencil_by_name(default),
+    }
 }
 
 /// Entry point shared by `main.rs` (returns instead of exiting for
@@ -203,8 +240,9 @@ pub fn run(argv: &[String]) -> Result<()> {
             Ok(())
         }
         "info" => cmd_info(&machine),
-        "dfg" => cmd_dfg(&args, &machine),
-        "roofline" => cmd_roofline(&args, &machine),
+        "dfg" => cmd_dfg(&args, &machine, run_defaults.as_ref()),
+        "roofline" => cmd_roofline(&args, &machine, run_defaults.as_ref()),
+        "compile" => cmd_compile(&args, &machine, run_defaults.as_ref()),
         "run" => cmd_run(&args, &machine, run_defaults.as_ref()),
         "compare" => cmd_compare(&machine),
         "validate" => cmd_validate(&machine),
@@ -213,7 +251,7 @@ pub fn run(argv: &[String]) -> Result<()> {
 }
 
 const HELP: &str = "scgra — stencils on a coarse-grained reconfigurable spatial architecture
-USAGE: scgra <info|dfg|roofline|run|compare|validate> [--flags]
+USAGE: scgra <info|dfg|roofline|compile|run|compare|validate> [--flags]
   --stencil NAME        workload preset (default paper2d):
                         paper1d|paper2d|heat2d|heat3d|acoustic3d|box9|box27|3pt
   --shape star|box      custom workload shape (with --dims; default star)
@@ -234,6 +272,12 @@ USAGE: scgra <info|dfg|roofline|run|compare|validate> [--flags]
                         per step)
   --sim-core C          scheduler core: dense|event (default event; both
                         are bit-identical — event skips idle cycles)
+  --fabric-tokens N     per-tile on-fabric token budget (default 65536)
+  --out FILE            where `compile` writes the artifact
+                        (default compiled_stencil.txt)
+  --artifact FILE       `run` a saved compiled artifact instead of
+                        planning: spec, steps and plan come from the
+                        file (compile once, execute many)
   --dot FILE / --asm FILE   emit Graphviz / assembly (dfg)
   --config FILE         TOML machine/run config ([run] decomp = \"pencil\")
 
@@ -257,12 +301,15 @@ fn cmd_info(m: &Machine) -> Result<()> {
     Ok(())
 }
 
-fn cmd_dfg(args: &Args, m: &Machine) -> Result<()> {
-    let spec = resolve_spec(args, "paper2d")?;
-    let w = match args.num("workers", 0usize)? {
-        0 => roofline::optimal_workers(&spec, m),
-        w => w,
-    };
+/// `[run]` defaults from the config file, or the built-in defaults.
+fn run_defaults(cfg: Option<&Config>) -> Result<RunParams> {
+    cfg.map(|c| c.run_params()).transpose().map(Option::unwrap_or_default)
+}
+
+fn cmd_dfg(args: &Args, m: &Machine, cfg: Option<&Config>) -> Result<()> {
+    let spec = resolve_spec(args, cfg, "paper2d")?;
+    let opts = CompileOptions::from_args(args, m, &run_defaults(cfg)?)?;
+    let w = opts.resolve_workers(&spec);
     let g = build_graph(&spec, w)?;
     let title = format!("{} stencil, {} workers", describe(&spec), w);
     println!("{title}: {}", g.summary());
@@ -291,7 +338,7 @@ fn describe(spec: &StencilSpec) -> String {
     )
 }
 
-fn cmd_roofline(args: &Args, m: &Machine) -> Result<()> {
+fn cmd_roofline(args: &Args, m: &Machine, cfg: Option<&Config>) -> Result<()> {
     let specs: Vec<(String, StencilSpec)> = if let Some(spec) = spec_from_shape_flags(args)? {
         vec![(describe(&spec), spec)]
     } else {
@@ -303,11 +350,11 @@ fn cmd_roofline(args: &Args, m: &Machine) -> Result<()> {
             ],
         }
     };
+    let opts = CompileOptions::from_args(args, m, &run_defaults(cfg)?)?;
     println!("{:<28} {:>6} {:>10} {:>10} {:>10} {:>8} {:>6}",
         "stencil", "AI", "bw-roof", "peak", "attain", "demand", "w");
     for (name, spec) in &specs {
-        let w = roofline::optimal_workers(spec, m);
-        let a = roofline::analyze(spec, m, w);
+        let a = roofline::analyze(spec, m, opts.resolve_workers(spec));
         println!(
             "{:<28} {:>6.2} {:>10.0} {:>10.0} {:>10.0} {:>8.0} {:>6}",
             name, a.arithmetic_intensity, a.bw_gflops, a.peak_gflops,
@@ -316,22 +363,16 @@ fn cmd_roofline(args: &Args, m: &Machine) -> Result<()> {
     }
 
     // Multi-tile view: halo re-reads deflate the effective intensity.
-    let tiles = args.num("tiles", 1usize)?;
-    if tiles > 1 {
-        let kind = match args.get("decomp") {
-            Some(s) => DecompKind::parse(s)?,
-            None => DecompKind::Auto,
-        };
-        println!("\ndecomposed across {tiles} tiles ({kind}):");
+    if opts.tiles > 1 {
+        println!("\ndecomposed across {} tiles ({}):", opts.tiles, opts.decomp);
         println!(
             "{:<28} {:>7} {:>12} {:>8} {:>10} {:>12}",
             "stencil", "tasks", "cuts", "eff AI", "halo", "array roof"
         );
         for (name, spec) in &specs {
-            let w = roofline::optimal_workers(spec, m);
-            let plan =
-                decomp::plan(spec, w, decomp::DEFAULT_FABRIC_TOKENS, kind, tiles)?;
-            let t = roofline::analyze_tiled(spec, m, w, &plan, tiles);
+            let w = opts.resolve_workers(spec);
+            let plan = decomp::plan(spec, w, opts.fabric_tokens, opts.decomp, opts.tiles)?;
+            let t = roofline::analyze_tiled(spec, m, w, &plan, opts.tiles);
             println!(
                 "{:<28} {:>7} {:>12} {:>8.2} {:>9.1}% {:>12.0}",
                 name,
@@ -346,61 +387,90 @@ fn cmd_roofline(args: &Args, m: &Machine) -> Result<()> {
     Ok(())
 }
 
-fn cmd_run(args: &Args, m: &Machine, cfg: Option<&Config>) -> Result<()> {
-    let spec = if let Some(s) = spec_from_shape_flags(args)? {
-        s
-    } else {
-        match (args.get("stencil"), cfg) {
-            (Some(s), _) => stencil_by_name(s)?,
-            (None, Some(c)) => c.stencil()?,
-            (None, None) => StencilSpec::paper_2d(),
-        }
-    };
-    let defaults = cfg.map(|c| c.run_params()).transpose()?.unwrap_or(
-        crate::config::RunParams {
-            workers: 0,
-            tiles: 1,
-            steps: 1,
-            seed: 42,
-            decomp: DecompKind::Auto,
-            sim_core: SimCore::default(),
-            fuse: FuseMode::Auto,
-        },
-    );
-    let w = match args.num("workers", defaults.workers)? {
-        0 => roofline::optimal_workers(&spec, m),
-        w => w,
-    };
-    let tiles = args.num("tiles", defaults.tiles)?;
+/// Phase 1 on the command line: plan + place a workload and save the
+/// artifact for later `run --artifact` executions.
+fn cmd_compile(args: &Args, m: &Machine, cfg: Option<&Config>) -> Result<()> {
+    let defaults = run_defaults(cfg)?;
+    let spec = resolve_spec(args, cfg, "paper2d")?;
+    let opts = CompileOptions::from_args(args, m, &defaults)?;
     let steps = args.num("steps", defaults.steps)?;
-    let decomp = match args.get("decomp") {
-        Some(s) => DecompKind::parse(s)?,
-        None => defaults.decomp,
-    };
+    anyhow::ensure!(steps >= 1, "--steps must be >= 1 (got {steps})");
+    let compiled = compile(&spec, steps, &opts)?;
+    println!(
+        "compiled {} x {steps} step(s): w={}, {} stage(s), {} placed graph(s)",
+        describe(&spec),
+        compiled.workers,
+        compiled.stages.len(),
+        compiled.graph_count(),
+    );
+    for (i, st) in compiled.stages.iter().enumerate() {
+        println!(
+            "  stage {i}: {} cuts (x{}, y{}, z{}) -> {} tiles, depth {} x {} chunk(s)",
+            st.plan.kind,
+            st.plan.cuts[0],
+            st.plan.cuts[1],
+            st.plan.cuts[2],
+            st.plan.tiles.len(),
+            st.plan.fused_steps,
+            st.repeats,
+        );
+    }
+    println!(
+        "roofline: effective AI {:.2} -> {:.0} GFLOPS array roof",
+        compiled.analysis.effective_ai, compiled.analysis.attainable_gflops_array
+    );
+    let out = args.get("out").unwrap_or("compiled_stencil.txt");
+    compiled.save(out)?;
+    println!("wrote {out} (manifest header: {})", compiled.manifest_meta().name);
+    Ok(())
+}
+
+fn cmd_run(args: &Args, m: &Machine, cfg: Option<&Config>) -> Result<()> {
+    let defaults = run_defaults(cfg)?;
     let sim_core = match args.get("sim-core") {
         Some(s) => SimCore::parse(s)?,
         None => defaults.sim_core,
     };
-    let fuse = match args.get("fuse") {
-        Some(s) => FuseMode::parse(s)?,
-        None => defaults.fuse,
+
+    // Phase 1: a saved artifact (spec, steps and plan come from the
+    // file), or compile here from the flags.
+    let compiled = match args.get("artifact") {
+        Some(path) => {
+            let c = CompiledStencil::load(path)?;
+            println!("loaded artifact {path}: {}", c.manifest_meta().name);
+            c
+        }
+        None => {
+            let spec = resolve_spec(args, cfg, "paper2d")?;
+            let opts = CompileOptions::from_args(args, m, &defaults)?;
+            let steps = args.num("steps", defaults.steps)?;
+            anyhow::ensure!(steps >= 1, "--steps must be >= 1 (got {steps})");
+            compile(&spec, steps, &opts)?
+        }
     };
-    anyhow::ensure!(steps >= 1, "--steps must be >= 1 (got {steps})");
-    let mut rng = XorShift::new(defaults.seed);
+    let (spec, steps) = (compiled.spec.clone(), compiled.steps);
+    let tiles = compiled.options.tiles;
+    // Execute on the machine the artifact was compiled (and placed)
+    // for — for a loaded artifact that is the machine recorded in the
+    // file, not whatever this invocation's config says.
+    let machine = compiled.options.machine.clone();
+    let mut rng = XorShift::new(args.num("seed", defaults.seed)?);
     let input = rng.normal_vec(spec.grid_points());
 
-    // Every dimensionality runs through the coordinator: the decomp
-    // layer cuts 1-D/2-D/3-D grids alike into halo-padded tiles.
-    let coord = Coordinator::new(tiles, m.clone())
-        .with_decomp(decomp)
-        .with_sim_core(sim_core)
-        .with_fuse(fuse);
+    // Phase 2: execute the artifact through a session. Every
+    // dimensionality runs the same path — the compiled plan cuts
+    // 1-D/2-D/3-D grids alike into halo-padded tiles.
     println!(
-        "running {} stencil, w={w}, tiles={tiles}, decomp={decomp}, steps={steps}, \
-         core={sim_core}, fuse={fuse}",
-        describe(&spec)
+        "running {} stencil, w={}, tiles={tiles}, decomp={}, steps={steps}, \
+         core={sim_core}, fuse={}",
+        describe(&spec),
+        compiled.workers,
+        compiled.options.decomp,
+        compiled.options.fuse,
     );
-    let (out, reports) = coord.run_steps(&spec, w, &input, steps)?;
+    let session = Session::new(Arc::new(compiled), machine.clone()).with_sim_core(sim_core);
+    let outcome = session.run(&input)?;
+    let (out, reports) = (outcome.output, outcome.reports);
     let first = &reports[0];
     println!(
         "plan: {} cuts (x{}, y{}, z{}) -> {} tile tasks, fused depth {}, \
@@ -424,7 +494,7 @@ fn cmd_run(args: &Args, m: &Machine, cfg: Option<&Config>) -> Result<()> {
             r.total_loads(),
             r.gflops,
             100.0 * r.gflops
-                / (tiles as f64 * m.roofline_gflops(spec.arithmetic_intensity())),
+                / (tiles as f64 * machine.roofline_gflops(spec.arithmetic_intensity())),
         );
     }
     // Correctness: the final grid against the steps-times iterated
@@ -461,8 +531,7 @@ fn cmd_run(args: &Args, m: &Machine, cfg: Option<&Config>) -> Result<()> {
 }
 
 fn cmd_compare(m: &Machine) -> Result<()> {
-    // Table I: 16 CGRA tiles vs one V100.
-    let coord = Coordinator::new(16, m.clone());
+    // Table I: 16 CGRA tiles vs one V100, via the two-phase API.
     let v100 = V100::paper();
     println!("Table I — comparative analysis of stencils on CGRA and GPU");
     for (name, spec, w) in [
@@ -471,9 +540,11 @@ fn cmd_compare(m: &Machine) -> Result<()> {
     ] {
         let mut rng = XorShift::new(7);
         let input = rng.normal_vec(spec.grid_points());
-        let rep = coord.run(&spec, w, &input)?;
-        let cgra_roof =
-            coord.tiles as f64 * m.roofline_gflops(spec.arithmetic_intensity());
+        let opts = CompileOptions::paper().with_machine(m.clone()).with_workers(w);
+        let compiled = Arc::new(compile(&spec, 1, &opts)?);
+        let outcome = Session::new(compiled, m.clone()).run(&input)?;
+        let rep = &outcome.reports[0];
+        let cgra_roof = 16.0 * m.roofline_gflops(spec.arithmetic_intensity());
         let g = GpuStencil::from_spec(&spec, Precision::F64);
         let gpu = v100.best_gflops(&g);
         let gpu_roof = v100.roofline_gflops(&g);
@@ -518,7 +589,7 @@ fn cmd_validate(m: &Machine) -> Result<()> {
     let d_sim = max_abs_diff(&sim.output, &oracle);
     println!("simulator vs oracle:  max|err| = {d_sim:.2e}  (independent impls)");
 
-    let mut rt = crate::runtime::Runtime::open(crate::runtime::Runtime::default_dir())?;
+    let rt = crate::runtime::Runtime::open(crate::runtime::Runtime::default_dir())?;
     let backend = rt.platform();
     let art = rt.execute("stencil2d_r12_96x96", &[&x, &spec.cx, &spec.cy])?;
     let d_art = max_abs_diff(&art, &oracle);
@@ -671,6 +742,50 @@ mod tests {
     #[test]
     fn roofline_command_reports_tiled_view() {
         run(&sv(&["roofline", "--stencil", "heat3d", "--tiles", "8"])).unwrap();
+    }
+
+    #[test]
+    fn from_args_assembles_options_once_for_all_paths() {
+        let a = Args::parse(&sv(&[
+            "run", "--workers", "3", "--tiles", "8", "--decomp", "pencil", "--fuse",
+            "host", "--fabric-tokens", "9999",
+        ]))
+        .unwrap();
+        let o = CompileOptions::from_args(&a, &Machine::paper(), &RunParams::default())
+            .unwrap();
+        assert_eq!(o.workers, 3);
+        assert_eq!(o.tiles, 8);
+        assert_eq!(o.decomp, DecompKind::Pencil);
+        assert_eq!(o.fuse, FuseMode::Host);
+        assert_eq!(o.fabric_tokens, 9999);
+        // Defaults flow from RunParams when flags are absent.
+        let b = Args::parse(&sv(&["run"])).unwrap();
+        let d = CompileOptions::from_args(&b, &Machine::paper(), &RunParams::default())
+            .unwrap();
+        assert_eq!(d.workers, 0);
+        assert_eq!(d.tiles, 1);
+        assert_eq!(d.fuse, FuseMode::Auto);
+    }
+
+    #[test]
+    fn compile_then_run_artifact() {
+        let path = std::env::temp_dir().join(format!(
+            "scgra_cli_artifact_{}.txt",
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        run(&sv(&[
+            "compile", "--shape", "star", "--dims", "20,12", "--workers", "2",
+            "--tiles", "2", "--steps", "2", "--out", path.as_str(),
+        ]))
+        .unwrap();
+        run(&sv(&["run", "--artifact", path.as_str()])).unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn run_missing_artifact_is_an_error() {
+        assert!(run(&sv(&["run", "--artifact", "/nonexistent/artifact.txt"])).is_err());
     }
 
     #[test]

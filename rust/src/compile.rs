@@ -1,0 +1,772 @@
+//! Phase 1 of the compile-once / execute-many API: planning.
+//!
+//! The paper's flow (§III) maps a stencil onto the fabric **once** and
+//! then streams grids through the resulting configuration; StencilFlow
+//! draws the same line between a compiled mapping artifact and the
+//! execution runtime. This module is that split for the whole system:
+//! [`compile`] resolves everything data-independent — worker count,
+//! the N-dim [`DecompPlan`] (including the §IV fused depth and a
+//! shallower tail chunk when `steps % depth != 0`), one **placed** DFG
+//! per distinct tile shape ([`PlacedGraph`]: validation, placement,
+//! channel latencies, evaluation order), and the halo-adjusted roofline
+//! — into an immutable, `Arc`-shareable [`CompiledStencil`].
+//!
+//! Execution never plans: [`crate::session::Session`] walks the
+//! artifact's stages and only touches per-run state. The
+//! [`crate::stencil::metrics`] counters pin that contract in tests.
+//!
+//! For the serve path, [`CompileCache`] is an LRU over compiled
+//! artifacts keyed by `(spec, steps, options)`, and
+//! [`CompiledStencil::save`]/[`CompiledStencil::load`] serialize the
+//! planning outcome: the header line is the `runtime::artifact`
+//! manifest schema (so the native artifact runtime reads the same
+//! format), the body the `config` TOML subset. Graphs are rebuilt
+//! deterministically from the recorded plan on load, so a loaded
+//! artifact executes bitwise-identically to the in-memory one.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::cgra::{Machine, PlacedGraph};
+use crate::config::Config;
+use crate::roofline::{self, TiledAnalysis};
+use crate::runtime::artifact::{ArtifactMeta, Manifest};
+use crate::stencil::decomp::{self, DecompKind, DecompPlan, Tile};
+use crate::stencil::spec::StencilShape;
+use crate::stencil::{build_graph, temporal, StencilSpec};
+
+/// How a multi-step run traverses time (§IV).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FuseMode {
+    /// One decomposition pass per step: every step reads the grid from
+    /// DRAM and writes it back (the paper's single-step use-case
+    /// iterated by the host).
+    #[default]
+    Host,
+    /// Fuse as many steps as the per-tile token budget admits into one
+    /// spatial pipeline per tile ([`temporal::build_nd`]); the host
+    /// loops over the fused chunks. Only the first layer loads and only
+    /// the last layer stores, so DRAM traffic drops by ~the fused depth.
+    Spatial,
+    /// [`FuseMode::Spatial`] when the budget admits depth >= 2, else
+    /// [`FuseMode::Host`].
+    Auto,
+}
+
+impl FuseMode {
+    /// Parse a CLI/config value (`host|spatial|auto`).
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "host" => FuseMode::Host,
+            "spatial" => FuseMode::Spatial,
+            "auto" => FuseMode::Auto,
+            other => bail!("unknown fuse mode `{other}` (host|spatial|auto)"),
+        })
+    }
+}
+
+impl std::fmt::Display for FuseMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.pad(match self {
+            FuseMode::Host => "host",
+            FuseMode::Spatial => "spatial",
+            FuseMode::Auto => "auto",
+        })
+    }
+}
+
+/// Everything the compile phase needs besides the workload itself.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompileOptions {
+    /// Machine the artifact is placed and budgeted for.
+    pub machine: Machine,
+    /// Compute workers per tile; 0 = pick via the §VI roofline.
+    pub workers: usize,
+    /// Hardware tiles the decomposition should feed.
+    pub tiles: usize,
+    /// Per-tile on-fabric token budget.
+    pub fabric_tokens: usize,
+    /// Cut strategy ([`DecompKind::Auto`] resolves per dimensionality).
+    pub decomp: DecompKind,
+    /// §IV temporal traversal for multi-step workloads.
+    pub fuse: FuseMode,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        Self {
+            machine: Machine::paper(),
+            workers: 0,
+            tiles: 1,
+            fabric_tokens: decomp::DEFAULT_FABRIC_TOKENS,
+            decomp: DecompKind::Auto,
+            fuse: FuseMode::Auto,
+        }
+    }
+}
+
+impl CompileOptions {
+    /// The Table-I configuration: 16 tiles of the §VI machine.
+    pub fn paper() -> Self {
+        Self {
+            tiles: 16,
+            ..Self::default()
+        }
+    }
+
+    pub fn with_machine(mut self, machine: Machine) -> Self {
+        self.machine = machine;
+        self
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    pub fn with_tiles(mut self, tiles: usize) -> Self {
+        self.tiles = tiles;
+        self
+    }
+
+    pub fn with_fabric_tokens(mut self, tokens: usize) -> Self {
+        self.fabric_tokens = tokens;
+        self
+    }
+
+    pub fn with_decomp(mut self, kind: DecompKind) -> Self {
+        self.decomp = kind;
+        self
+    }
+
+    pub fn with_fuse(mut self, fuse: FuseMode) -> Self {
+        self.fuse = fuse;
+        self
+    }
+
+    /// Resolve the worker count: the explicit setting, or the §VI
+    /// roofline-optimal pick when 0.
+    pub fn resolve_workers(&self, spec: &StencilSpec) -> usize {
+        if self.workers == 0 {
+            roofline::optimal_workers(spec, &self.machine)
+        } else {
+            self.workers
+        }
+    }
+}
+
+/// One homogeneous run of chunks: a plan executed `repeats` times with
+/// the placed graphs for its tile shapes. A compiled workload is one
+/// stage, or two when spatial fusion leaves a shallower tail
+/// (`steps % fused_depth != 0`).
+#[derive(Clone)]
+pub struct CompiledStage {
+    pub plan: DecompPlan,
+    /// Consecutive executions of this plan (host: one per step; fused:
+    /// one per chunk of `plan.fused_steps` steps).
+    pub repeats: usize,
+    /// One placed graph per distinct tile input shape, keyed by the
+    /// tile's `[x, y, z]` input extents and shared by every same-extent
+    /// tile.
+    pub graphs: HashMap<[usize; 3], Arc<PlacedGraph>>,
+}
+
+impl CompiledStage {
+    /// Time-steps this stage advances in total.
+    pub fn steps(&self) -> usize {
+        self.plan.fused_steps * self.repeats
+    }
+}
+
+/// The immutable product of [`compile`]: plan + placed graphs +
+/// analysis for `steps` applications of `spec`. `Arc`-share it across
+/// threads and execute it any number of times through a
+/// [`crate::session::Session`]; no execution path re-plans or rebuilds
+/// graphs.
+#[derive(Clone)]
+pub struct CompiledStencil {
+    pub spec: StencilSpec,
+    /// Total time-steps one execution advances.
+    pub steps: usize,
+    /// Resolved compute workers per tile.
+    pub workers: usize,
+    /// The options the artifact was compiled with (workers as
+    /// requested; see [`Self::workers`] for the resolved count).
+    pub options: CompileOptions,
+    /// Execution schedule, in order.
+    pub stages: Vec<CompiledStage>,
+    /// Halo- and fusion-adjusted §VI roofline of the primary stage.
+    pub analysis: TiledAnalysis,
+}
+
+impl CompiledStencil {
+    /// The primary (deepest) plan — stage 0.
+    pub fn plan(&self) -> &DecompPlan {
+        &self.stages[0].plan
+    }
+
+    /// §IV fused depth of the primary stage.
+    pub fn fused_steps(&self) -> usize {
+        self.stages[0].plan.fused_steps
+    }
+
+    /// Chunks one execution runs (= reports a session returns).
+    pub fn total_chunks(&self) -> usize {
+        self.stages.iter().map(|s| s.repeats).sum()
+    }
+
+    /// Distinct placed graphs across all stages.
+    pub fn graph_count(&self) -> usize {
+        self.stages.iter().map(|s| s.graphs.len()).sum()
+    }
+
+    /// Manifest entry describing this artifact in the
+    /// `runtime::artifact` schema (z-major grid shape, x last — the
+    /// same convention the artifact runtime's `grid_dims` reads).
+    pub fn manifest_meta(&self) -> ArtifactMeta {
+        let s = &self.spec;
+        let shape: Vec<usize> = match s.ndim() {
+            1 => vec![s.nx],
+            2 => vec![s.ny, s.nx],
+            _ => vec![s.nz, s.ny, s.nx],
+        };
+        let kind = if s.is_box() { "box" } else { "star" };
+        ArtifactMeta {
+            name: format!(
+                "compiled_{}{}d_{}_t{}",
+                kind,
+                s.ndim(),
+                s.dims().iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x"),
+                self.steps
+            ),
+            file: "inline".to_string(),
+            dtype: "f64".to_string(),
+            in_shapes: vec![shape.clone()],
+            out_shape: shape,
+        }
+    }
+
+    /// Serialize the planning outcome. The first payload line is the
+    /// `runtime::artifact` manifest schema; the rest is the `config`
+    /// TOML subset. Graphs are not stored — they are deterministic
+    /// functions of `(spec, workers, depth)` and are rebuilt on
+    /// [`Self::load`].
+    pub fn to_text(&self) -> String {
+        let mut s = String::from("# stencil-cgra compiled artifact v1\n");
+        s.push_str(&self.manifest_meta().to_line());
+        s.push('\n');
+        s.push_str(&spec_text(&self.spec));
+        s.push_str(&options_text(&self.options, self.steps));
+        s.push_str(&format!("resolved_workers = {}\n", self.workers));
+        for (i, st) in self.stages.iter().enumerate() {
+            s.push_str(&format!(
+                "[stage{i}]\nkind = \"{}\"\ncuts = \"{},{},{}\"\n\
+                 fused_steps = {}\nrepeats = {}\n",
+                st.plan.kind,
+                st.plan.cuts[0],
+                st.plan.cuts[1],
+                st.plan.cuts[2],
+                st.plan.fused_steps,
+                st.repeats,
+            ));
+        }
+        s
+    }
+
+    /// Write [`Self::to_text`] to `path`.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_text())
+            .with_context(|| format!("writing {}", path.as_ref().display()))
+    }
+
+    /// Parse an artifact serialized by [`Self::to_text`] and rebuild
+    /// its placed graphs. The result executes bitwise-identically to
+    /// the artifact that was saved.
+    pub fn parse(text: &str) -> Result<Self> {
+        // Split the manifest header line from the config body.
+        let mut manifest_line = None;
+        let mut body = String::new();
+        for line in text.lines() {
+            let t = line.trim();
+            if manifest_line.is_none() && !t.is_empty() && !t.starts_with('#') {
+                manifest_line = Some(t.to_string());
+            } else {
+                body.push_str(line);
+                body.push('\n');
+            }
+        }
+        let line = manifest_line.context("compiled artifact has no manifest line")?;
+        let manifest = Manifest::parse(&line).context("compiled artifact manifest line")?;
+        ensure!(manifest.entries.len() == 1, "expected one manifest entry");
+        let meta = &manifest.entries[0];
+
+        let c = Config::parse(&body).context("compiled artifact body")?;
+        let spec = spec_from_config(&c)?;
+        ensure!(
+            meta.out_shape.iter().product::<usize>() == spec.grid_points(),
+            "manifest shape {:?} disagrees with the [spec] grid",
+            meta.out_shape
+        );
+        let machine = c.machine()?;
+        let options = CompileOptions {
+            machine,
+            workers: cfg_num(&c, "options", "workers")?,
+            tiles: cfg_num(&c, "options", "tiles")?,
+            fabric_tokens: cfg_num(&c, "options", "fabric_tokens")?,
+            decomp: DecompKind::parse(cfg_str(&c, "options", "decomp")?)?,
+            fuse: FuseMode::parse(cfg_str(&c, "options", "fuse")?)?,
+        };
+        let steps: usize = cfg_num(&c, "options", "steps")?;
+        let workers: usize = cfg_num(&c, "options", "resolved_workers")?;
+
+        let mut stages = Vec::new();
+        for i in 0.. {
+            let sect = format!("stage{i}");
+            let Some(kind) = c.get(&sect, "kind") else { break };
+            let kind = DecompKind::parse(kind)?;
+            let cuts_v: Vec<usize> = cfg_str(&c, &sect, "cuts")?
+                .split(',')
+                .map(|d| d.trim().parse::<usize>().context("bad cut count"))
+                .collect::<Result<_>>()?;
+            ensure!(cuts_v.len() == 3, "[{sect}] cuts needs 3 entries");
+            let cuts = [cuts_v[0], cuts_v[1], cuts_v[2]];
+            let fused_steps: usize = cfg_num(&c, &sect, "fused_steps")?;
+            let repeats: usize = cfg_num(&c, &sect, "repeats")?;
+            let plan = DecompPlan {
+                kind,
+                cuts,
+                fused_steps,
+                workers,
+                tiles: decomp::tiles_for_cuts_depth(&spec, cuts, fused_steps),
+            };
+            let graphs =
+                placed_graphs(&spec, workers, fused_steps, &plan.tiles, &options.machine)?;
+            stages.push(CompiledStage { plan, repeats, graphs });
+        }
+        ensure!(!stages.is_empty(), "compiled artifact has no stages");
+        let covered: usize = stages.iter().map(|s| s.steps()).sum();
+        ensure!(
+            covered == steps,
+            "compiled artifact stages advance {covered} step(s) but declare {steps}"
+        );
+        let analysis = roofline::analyze_tiled(
+            &spec,
+            &options.machine,
+            workers,
+            &stages[0].plan,
+            options.tiles,
+        );
+        Ok(Self { spec, steps, workers, options, stages, analysis })
+    }
+
+    /// Read and [`Self::parse`] an artifact file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+}
+
+/// Compile `steps` applications of `spec` under `opts` into an
+/// immutable, shareable execution artifact. All planning and DFG
+/// construction for the workload happens here, exactly once:
+///
+/// * [`FuseMode::Host`] — one depth-1 plan, repeated `steps` times.
+/// * [`FuseMode::Spatial`] — the deepest §IV depth `T` the budget
+///   admits; `steps / T` chunks plus a tail stage of depth `steps % T`.
+/// * [`FuseMode::Auto`] — `Spatial` when the probe finds depth >= 2,
+///   else the host schedule.
+pub fn compile(spec: &StencilSpec, steps: usize, opts: &CompileOptions) -> Result<CompiledStencil> {
+    ensure!(steps >= 1, "need at least one time-step");
+    let w = opts.resolve_workers(spec);
+    let stages = match opts.fuse {
+        FuseMode::Host => {
+            let plan = decomp::plan(spec, w, opts.fabric_tokens, opts.decomp, opts.tiles)?;
+            vec![stage(spec, w, opts, plan, steps)?]
+        }
+        FuseMode::Spatial | FuseMode::Auto => {
+            let probe =
+                decomp::plan_fused(spec, w, opts.fabric_tokens, opts.decomp, opts.tiles, steps)?;
+            let depth = probe.fused_steps;
+            if depth == 1 {
+                vec![stage(spec, w, opts, probe, steps)?]
+            } else {
+                let (full, rem) = (steps / depth, steps % depth);
+                let mut v = vec![stage(spec, w, opts, probe, full)?];
+                if rem > 0 {
+                    // rem < depth, so a depth-rem plan is always
+                    // feasible (buffering is monotone in depth) and the
+                    // tail covers the leftover steps exactly.
+                    let tail = decomp::plan_fused(
+                        spec,
+                        w,
+                        opts.fabric_tokens,
+                        opts.decomp,
+                        opts.tiles,
+                        rem,
+                    )?;
+                    v.push(stage(spec, w, opts, tail, 1)?);
+                }
+                v
+            }
+        }
+    };
+    let analysis = roofline::analyze_tiled(spec, &opts.machine, w, &stages[0].plan, opts.tiles);
+    Ok(CompiledStencil {
+        spec: spec.clone(),
+        steps,
+        workers: w,
+        options: opts.clone(),
+        stages,
+        analysis,
+    })
+}
+
+fn stage(
+    spec: &StencilSpec,
+    w: usize,
+    opts: &CompileOptions,
+    plan: DecompPlan,
+    repeats: usize,
+) -> Result<CompiledStage> {
+    let graphs = placed_graphs(spec, w, plan.fused_steps, &plan.tiles, &opts.machine)?;
+    Ok(CompiledStage { plan, repeats, graphs })
+}
+
+/// Build one placed graph per distinct tile input shape — the dedup the
+/// whole execution layer relies on: a 16-pencil plan places at most a
+/// few graphs, and same-extent tiles share an `Arc`. Plans with a fused
+/// depth > 1 map tiles through the §IV temporal pipeline.
+pub fn placed_graphs(
+    spec: &StencilSpec,
+    w: usize,
+    fused_steps: usize,
+    tiles: &[Tile],
+    machine: &Machine,
+) -> Result<HashMap<[usize; 3], Arc<PlacedGraph>>> {
+    let mut graphs: HashMap<[usize; 3], Arc<PlacedGraph>> = HashMap::new();
+    for t in tiles {
+        let dims = [t.in_extent(0), t.in_extent(1), t.in_extent(2)];
+        if !graphs.contains_key(&dims) {
+            let sub = t.sub_spec(spec);
+            let g = if fused_steps > 1 {
+                temporal::build_nd(&sub, w, fused_steps)?
+            } else {
+                build_graph(&sub, w)?
+            };
+            graphs.insert(dims, Arc::new(PlacedGraph::new(g, machine)?));
+        }
+    }
+    Ok(graphs)
+}
+
+/// LRU cache of compiled artifacts keyed by `(spec, steps, options)` —
+/// the serve path's front door: repeated requests for the same workload
+/// hit the cache and do zero planning or graph construction.
+pub struct CompileCache {
+    cap: usize,
+    /// Most-recently-used first.
+    entries: Mutex<Vec<(String, Arc<CompiledStencil>)>>,
+}
+
+impl CompileCache {
+    /// A cache holding at most `cap` artifacts (min 1).
+    pub fn new(cap: usize) -> Self {
+        Self {
+            cap: cap.max(1),
+            entries: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Return the cached artifact for `(spec, steps, opts)`, compiling
+    /// and inserting it (evicting the least-recently-used entry past
+    /// capacity) on a miss.
+    pub fn get_or_compile(
+        &self,
+        spec: &StencilSpec,
+        steps: usize,
+        opts: &CompileOptions,
+    ) -> Result<Arc<CompiledStencil>> {
+        let key = cache_key(spec, steps, opts);
+        if let Some(hit) = self.touch(&key) {
+            return Ok(hit);
+        }
+        // Compile outside the lock; a concurrent miss on the same key
+        // may duplicate work, but the first insert wins.
+        let built = Arc::new(compile(spec, steps, opts)?);
+        let mut e = self.entries.lock().unwrap();
+        if let Some(pos) = e.iter().position(|(k, _)| *k == key) {
+            let ent = e.remove(pos);
+            e.insert(0, ent);
+            return Ok(Arc::clone(&e[0].1));
+        }
+        e.insert(0, (key, Arc::clone(&built)));
+        e.truncate(self.cap);
+        Ok(built)
+    }
+
+    fn touch(&self, key: &str) -> Option<Arc<CompiledStencil>> {
+        let mut e = self.entries.lock().unwrap();
+        let pos = e.iter().position(|(k, _)| k == key)?;
+        let ent = e.remove(pos);
+        e.insert(0, ent);
+        Some(Arc::clone(&e[0].1))
+    }
+
+    /// Artifacts currently cached.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every cached artifact.
+    pub fn clear(&self) {
+        self.entries.lock().unwrap().clear();
+    }
+}
+
+/// Canonical text key for the LRU — the same serialization `save` uses
+/// for the spec and options, so two requests share an entry iff their
+/// compiled artifacts would be identical.
+fn cache_key(spec: &StencilSpec, steps: usize, opts: &CompileOptions) -> String {
+    format!("{}{}", spec_text(spec), options_text(opts, steps))
+}
+
+fn bits_csv(v: &[f64]) -> String {
+    v.iter()
+        .map(|x| format!("{:016x}", x.to_bits()))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+fn csv_bits(s: &str) -> Result<Vec<f64>> {
+    if s.is_empty() {
+        return Ok(Vec::new());
+    }
+    s.split(',')
+        .map(|t| {
+            u64::from_str_radix(t.trim(), 16)
+                .map(f64::from_bits)
+                .with_context(|| format!("bad coefficient bits `{t}`"))
+        })
+        .collect()
+}
+
+/// `[spec]` section: geometry plus bit-exact coefficients.
+fn spec_text(s: &StencilSpec) -> String {
+    format!(
+        "[spec]\nshape = \"{}\"\nnx = {}\nny = {}\nnz = {}\n\
+         rx = {}\nry = {}\nrz = {}\n\
+         cx = \"{}\"\ncy = \"{}\"\ncz = \"{}\"\nbox_taps = \"{}\"\n",
+        if s.is_box() { "box" } else { "star" },
+        s.nx,
+        s.ny,
+        s.nz,
+        s.rx,
+        s.ry,
+        s.rz,
+        bits_csv(&s.cx),
+        bits_csv(&s.cy),
+        bits_csv(&s.cz),
+        bits_csv(&s.box_taps),
+    )
+}
+
+/// `[machine]` + `[options]` sections. Machine floats print in Rust's
+/// shortest-roundtrip form, so `Config::machine` reparses them exactly.
+fn options_text(o: &CompileOptions, steps: usize) -> String {
+    let m = &o.machine;
+    format!(
+        "[machine]\nclock_ghz = {}\ngrid_rows = {}\ngrid_cols = {}\nmac_pes = {}\n\
+         bw_gbps = {}\ndram_latency = {}\ncache_kib = {}\ncache_line = {}\n\
+         cache_hit_latency = {}\nmshr_per_load = {}\nmax_instr_per_pe = {}\n\
+         hops_per_cycle = {}\n\
+         [options]\nworkers = {}\ntiles = {}\nfabric_tokens = {}\n\
+         decomp = \"{}\"\nfuse = \"{}\"\nsteps = {}\n",
+        m.clock_ghz,
+        m.grid_rows,
+        m.grid_cols,
+        m.mac_pes,
+        m.bw_gbps,
+        m.dram_latency,
+        m.cache_kib,
+        m.cache_line,
+        m.cache_hit_latency,
+        m.mshr_per_load,
+        m.max_instr_per_pe,
+        m.hops_per_cycle,
+        o.workers,
+        o.tiles,
+        o.fabric_tokens,
+        o.decomp,
+        o.fuse,
+        steps,
+    )
+}
+
+fn cfg_str<'a>(c: &'a Config, sect: &str, key: &str) -> Result<&'a str> {
+    c.get(sect, key)
+        .with_context(|| format!("compiled artifact missing [{sect}] {key}"))
+}
+
+fn cfg_num<T: std::str::FromStr>(c: &Config, sect: &str, key: &str) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    let v = cfg_str(c, sect, key)?;
+    v.parse()
+        .map_err(|e| anyhow::anyhow!("compiled artifact [{sect}] {key} = {v}: {e}"))
+}
+
+fn spec_from_config(c: &Config) -> Result<StencilSpec> {
+    let shape = match cfg_str(c, "spec", "shape")? {
+        "star" => StencilShape::Star,
+        "box" => StencilShape::Box,
+        other => bail!("unknown spec shape `{other}`"),
+    };
+    Ok(StencilSpec {
+        shape,
+        nx: cfg_num(c, "spec", "nx")?,
+        ny: cfg_num(c, "spec", "ny")?,
+        nz: cfg_num(c, "spec", "nz")?,
+        rx: cfg_num(c, "spec", "rx")?,
+        ry: cfg_num(c, "spec", "ry")?,
+        rz: cfg_num(c, "spec", "rz")?,
+        cx: csv_bits(cfg_str(c, "spec", "cx")?)?,
+        cy: csv_bits(cfg_str(c, "spec", "cy")?)?,
+        cz: csv_bits(cfg_str(c, "spec", "cz")?)?,
+        box_taps: csv_bits(cfg_str(c, "spec", "box_taps")?)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_schedule_is_one_stage_per_workload() {
+        let spec = StencilSpec::heat2d(24, 16, 0.2);
+        let opts = CompileOptions::default().with_workers(2).with_fuse(FuseMode::Host);
+        let c = compile(&spec, 3, &opts).unwrap();
+        assert_eq!(c.stages.len(), 1);
+        assert_eq!(c.stages[0].plan.fused_steps, 1);
+        assert_eq!(c.stages[0].repeats, 3);
+        assert_eq!(c.total_chunks(), 3);
+        assert_eq!(c.workers, 2);
+        assert_eq!(c.plan().workers, 2, "plans are self-describing");
+    }
+
+    #[test]
+    fn spatial_schedule_covers_steps_exactly_with_a_tail() {
+        let spec = StencilSpec::heat2d(40, 24, 0.2);
+        let opts = CompileOptions::default().with_workers(2).with_fuse(FuseMode::Spatial);
+        let steps = 7;
+        let c = compile(&spec, steps, &opts).unwrap();
+        let covered: usize = c.stages.iter().map(|s| s.steps()).sum();
+        assert_eq!(covered, steps);
+        assert!(c.fused_steps() > 1, "budget admits fusion here");
+        if c.steps % c.fused_steps() != 0 {
+            assert_eq!(c.stages.len(), 2);
+            assert_eq!(c.stages[1].plan.fused_steps, steps % c.fused_steps());
+            assert_eq!(c.stages[1].repeats, 1);
+        }
+    }
+
+    #[test]
+    fn auto_falls_back_to_host_when_grid_cannot_deepen() {
+        // 4-wide grid, r = 1: the trapezoid admits only depth 1.
+        let spec = StencilSpec::heat2d(4, 4, 0.2);
+        let opts = CompileOptions::default().with_workers(1);
+        let c = compile(&spec, 2, &opts).unwrap();
+        assert_eq!(c.stages.len(), 1);
+        assert_eq!(c.fused_steps(), 1);
+        assert_eq!(c.stages[0].repeats, 2);
+    }
+
+    #[test]
+    fn graphs_are_deduped_per_tile_shape() {
+        let spec = StencilSpec::heat2d(64, 20, 0.2);
+        let opts = CompileOptions::default().with_workers(2).with_tiles(4);
+        let c = compile(&spec, 1, &opts).unwrap();
+        assert!(c.plan().tiles.len() >= 4);
+        assert!(
+            c.graph_count() < c.plan().tiles.len(),
+            "{} graphs for {} tiles",
+            c.graph_count(),
+            c.plan().tiles.len()
+        );
+    }
+
+    #[test]
+    fn zero_workers_resolves_via_roofline() {
+        let spec = StencilSpec::paper_2d();
+        let opts = CompileOptions::default();
+        let c = compile(&spec, 1, &opts).unwrap();
+        assert_eq!(c.workers, roofline::optimal_workers(&spec, &opts.machine));
+        assert!(c.workers >= 1);
+    }
+
+    #[test]
+    fn artifact_text_round_trips() {
+        let spec = StencilSpec::heat2d(24, 16, 0.2);
+        let opts = CompileOptions::default().with_workers(2).with_tiles(2);
+        let c = compile(&spec, 2, &opts).unwrap();
+        let text = c.to_text();
+        let back = CompiledStencil::parse(&text).unwrap();
+        assert_eq!(back.spec, c.spec);
+        assert_eq!(back.steps, c.steps);
+        assert_eq!(back.workers, c.workers);
+        assert_eq!(back.options, c.options);
+        assert_eq!(back.stages.len(), c.stages.len());
+        for (a, b) in back.stages.iter().zip(&c.stages) {
+            assert_eq!(a.plan, b.plan);
+            assert_eq!(a.repeats, b.repeats);
+        }
+        assert_eq!(back.analysis, c.analysis);
+    }
+
+    #[test]
+    fn artifact_header_is_the_runtime_manifest_schema() {
+        let spec = StencilSpec::heat3d(10, 8, 6, 0.1);
+        let c = compile(&spec, 1, &CompileOptions::default().with_workers(2)).unwrap();
+        let meta = c.manifest_meta();
+        let parsed = Manifest::parse(&meta.to_line()).unwrap();
+        assert_eq!(parsed.entries[0], meta);
+        assert_eq!(parsed.entries[0].out_shape, vec![6, 8, 10]);
+    }
+
+    #[test]
+    fn coefficient_bits_round_trip() {
+        let v = vec![0.1, -3.25, 1.0 / 3.0, f64::MIN_POSITIVE];
+        assert_eq!(csv_bits(&bits_csv(&v)).unwrap(), v);
+        assert_eq!(csv_bits("").unwrap(), Vec::<f64>::new());
+        assert!(csv_bits("zz").is_err());
+    }
+
+    #[test]
+    fn cache_hits_share_the_artifact_and_lru_evicts() {
+        let cache = CompileCache::new(2);
+        let opts = CompileOptions::default().with_workers(1);
+        let a = StencilSpec::heat2d(10, 8, 0.2);
+        let b = StencilSpec::heat2d(12, 8, 0.2);
+        let c_spec = StencilSpec::heat2d(14, 8, 0.2);
+        let a1 = cache.get_or_compile(&a, 1, &opts).unwrap();
+        let b1 = cache.get_or_compile(&b, 1, &opts).unwrap();
+        // Touch `a`, insert a third: `b` is the LRU victim.
+        let a2 = cache.get_or_compile(&a, 1, &opts).unwrap();
+        assert!(Arc::ptr_eq(&a1, &a2));
+        let _c1 = cache.get_or_compile(&c_spec, 1, &opts).unwrap();
+        assert_eq!(cache.len(), 2);
+        let b2 = cache.get_or_compile(&b, 1, &opts).unwrap();
+        assert!(!Arc::ptr_eq(&b1, &b2), "evicted entries recompile");
+        // Different steps / options are different keys.
+        let a3 = cache.get_or_compile(&a, 2, &opts).unwrap();
+        assert!(!Arc::ptr_eq(&a2, &a3));
+    }
+}

@@ -10,8 +10,8 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::cgra::{Machine, SimCore};
-use crate::coordinator::FuseMode;
-use crate::stencil::decomp::DecompKind;
+use crate::compile::{CompileOptions, FuseMode};
+use crate::stencil::decomp::{self, DecompKind};
 use crate::stencil::StencilSpec;
 
 /// Parsed key-value configuration grouped by `[section]`.
@@ -188,6 +188,21 @@ impl Config {
             fuse,
         })
     }
+
+    /// [`CompileOptions`] for this config: the `[machine]` section plus
+    /// the compile-relevant `[run]` knobs — the config-file twin of the
+    /// CLI's `CompileOptions::from_args`.
+    pub fn compile_options(&self) -> Result<CompileOptions> {
+        let p = self.run_params()?;
+        Ok(CompileOptions {
+            machine: self.machine()?,
+            workers: p.workers,
+            tiles: p.tiles,
+            fabric_tokens: decomp::DEFAULT_FABRIC_TOKENS,
+            decomp: p.decomp,
+            fuse: p.fuse,
+        })
+    }
 }
 
 /// `[run]` section contents.
@@ -205,6 +220,23 @@ pub struct RunParams {
     /// §IV temporal traversal for multi-step runs (default auto: fuse
     /// spatially when the fabric budget admits depth >= 2).
     pub fuse: FuseMode,
+}
+
+impl Default for RunParams {
+    /// The flag-free defaults every entry point shares: roofline-picked
+    /// workers, one tile, one step, seed 42, auto decomposition/fusion,
+    /// event core.
+    fn default() -> Self {
+        Self {
+            workers: 0,
+            tiles: 1,
+            steps: 1,
+            seed: 42,
+            decomp: DecompKind::Auto,
+            sim_core: SimCore::default(),
+            fuse: FuseMode::Auto,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -323,6 +355,17 @@ tiles = 16
         assert_eq!(c.run_params().unwrap().fuse, FuseMode::Host);
         let c = Config::parse("[run]\nfuse = \"temporal\"\n").unwrap();
         assert!(c.run_params().is_err());
+    }
+
+    #[test]
+    fn compile_options_mirror_machine_and_run_sections() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let o = c.compile_options().unwrap();
+        assert_eq!(o.workers, 5);
+        assert_eq!(o.tiles, 16);
+        assert_eq!(o.machine.mac_pes, 256);
+        assert_eq!(o.decomp, DecompKind::Auto);
+        assert_eq!(o.fuse, FuseMode::Auto);
     }
 
     #[test]

@@ -21,10 +21,11 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
-use crate::cgra::{Machine, SimCore};
+use crate::cgra::{Machine, SimCore, Simulator};
+use crate::compile;
 use crate::stencil::decomp::Tile;
 use crate::stencil::StencilSpec;
-use crate::verify::golden::{run_sim_core, stencil_ref};
+use crate::verify::golden::stencil_ref;
 
 /// Recursively bisect the interior box until every leaf's output extent
 /// along every axis is at most `max_extent`. Leaves carry radius-wide
@@ -116,7 +117,9 @@ impl HybridRunner {
 
     /// Execute `tiles` of a stencil (any dimensionality); CGRA tiles
     /// simulate, CPU workers compute natively. Both pull from the same
-    /// queue (work stealing); results merge identically.
+    /// queue (work stealing); results merge identically. The CGRA side
+    /// shares the compile phase's placed graphs: one placement per
+    /// distinct tile shape up front, zero mapping work per pull.
     pub fn run(
         &self,
         spec: &StencilSpec,
@@ -124,6 +127,7 @@ impl HybridRunner {
         input: &[f64],
         tiles: Vec<Tile>,
     ) -> Result<HybridReport> {
+        let graphs = Arc::new(compile::placed_graphs(spec, w, 1, &tiles, &self.machine)?);
         let queue: Arc<Mutex<VecDeque<(usize, Tile)>>> =
             Arc::new(Mutex::new(tiles.iter().copied().enumerate().collect()));
         let (tx, rx) = mpsc::channel();
@@ -136,13 +140,17 @@ impl HybridRunner {
             let spec = spec.clone();
             let input = input.to_vec();
             let core = self.sim_core;
+            let graphs = Arc::clone(&graphs);
             handles.push(std::thread::spawn(move || -> Result<()> {
                 loop {
                     let item = { queue.lock().unwrap().pop_front() };
                     let Some((id, tile)) = item else { break };
-                    let sub = tile.sub_spec(&spec);
                     let sub_in = tile.extract(&spec, &input);
-                    let res = run_sim_core(&sub, w, &machine, &sub_in, core)?;
+                    let pg = &graphs
+                        [&[tile.in_extent(0), tile.in_extent(1), tile.in_extent(2)]];
+                    let res = Simulator::from_placed(pg, &machine, sub_in.clone(), sub_in)
+                        .with_core(core)
+                        .run()?;
                     tx.send((id, tile, Executor::Cgra(t), res.output, res.stats.cycles))
                         .ok();
                 }

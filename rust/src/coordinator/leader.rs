@@ -1,133 +1,32 @@
-//! Leader/worker execution of tile tasks over simulated CGRA tiles.
+//! Legacy one-call coordinator — now a thin shim over the
+//! compile-once/execute-many API.
 //!
-//! The leader decomposes the grid into halo-padded N-dim tiles
-//! ([`crate::stencil::decomp`]), pushes [`TileTask`]s into a shared
-//! queue, and spawns one OS thread per hardware tile. Tiles pull
-//! greedily (natural load balancing — the same work-stealing effect
-//! §IV's hybrid algorithm relies on), simulate, and send results back
-//! over a channel. The leader merges owned outputs into the global grid
-//! and accounts per-tile cycles; the reported makespan is the slowest
-//! tile's total, which is what 16 parallel tiles would take on silicon.
+//! [`Coordinator`] predates the [`mod@crate::compile`]/[`crate::session`]
+//! split: every call re-planned the decomposition and rebuilt the tile
+//! DFGs. It survives as a deprecated convenience wrapper that compiles
+//! an artifact and executes it through a [`Session`] in one breath —
+//! byte-for-byte the same plans, graphs and results as the two-phase
+//! API, because it *is* the two-phase API. New code (and anything on a
+//! serve path) should call [`crate::compile::compile`] once and reuse
+//! the [`crate::compile::CompiledStencil`] across runs instead.
 
-use std::collections::{HashMap, VecDeque};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::Result;
 
-use crate::cgra::stats::MemStats;
-use crate::cgra::{Machine, SimCore, Simulator};
-use crate::dfg::Graph;
-use crate::stencil::decomp::{self, DecompKind, DecompPlan, Tile};
-use crate::stencil::{build_graph, temporal, StencilSpec};
+use crate::cgra::{Machine, SimCore};
+use crate::compile::{self, CompileOptions};
+use crate::session::{RunReport, Session};
+use crate::stencil::decomp::{self, DecompKind, DecompPlan};
+use crate::stencil::StencilSpec;
 
-/// How a multi-step run traverses time (§IV).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
-pub enum FuseMode {
-    /// One decomposition pass per step: every step reads the grid from
-    /// DRAM and writes it back (the paper's single-step use-case
-    /// iterated by the host).
-    #[default]
-    Host,
-    /// Fuse as many steps as the per-tile token budget admits into one
-    /// spatial pipeline per tile ([`temporal::build_nd`]); the host
-    /// loops over the fused chunks. Only the first layer loads and only
-    /// the last layer stores, so DRAM traffic drops by ~the fused depth.
-    Spatial,
-    /// [`FuseMode::Spatial`] when the budget admits depth >= 2, else
-    /// [`FuseMode::Host`].
-    Auto,
-}
+pub use crate::compile::FuseMode;
+pub use crate::session::{TileReport, TileTask};
 
-impl FuseMode {
-    /// Parse a CLI/config value (`host|spatial|auto`).
-    pub fn parse(s: &str) -> Result<Self> {
-        Ok(match s {
-            "host" => FuseMode::Host,
-            "spatial" => FuseMode::Spatial,
-            "auto" => FuseMode::Auto,
-            other => bail!("unknown fuse mode `{other}` (host|spatial|auto)"),
-        })
-    }
-}
-
-impl std::fmt::Display for FuseMode {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.pad(match self {
-            FuseMode::Host => "host",
-            FuseMode::Spatial => "spatial",
-            FuseMode::Auto => "auto",
-        })
-    }
-}
-
-/// One unit of work: a halo-padded tile of the global grid.
-#[derive(Debug, Clone)]
-pub struct TileTask {
-    pub id: usize,
-    pub tile: Tile,
-    /// Contiguous copy of the tile's input box.
-    pub input: Vec<f64>,
-    /// Pre-built DFG for the tile's shape — shared by every tile with
-    /// the same input extents (the graph depends only on dims and `w`,
-    /// not the data), so a 16-pencil plan builds at most a few graphs.
-    pub graph: Arc<Graph>,
-}
-
-/// Per-hardware-tile accounting.
-#[derive(Debug, Clone, Default)]
-pub struct TileReport {
-    /// Tile tasks executed on this hardware tile.
-    pub strips: usize,
-    /// Sum of simulated cycles over this tile's tasks.
-    pub cycles: u64,
-    /// Halo points this tile loaded beyond the outputs it owned.
-    pub halo_points: u64,
-    pub mem: MemStats,
-}
-
-/// Result of a coordinated run.
-#[derive(Debug, Clone)]
-pub struct RunReport {
-    pub output: Vec<f64>,
-    /// Number of tile tasks the decomposition produced.
-    pub strips: usize,
-    /// Resolved decomposition strategy.
-    pub kind: DecompKind,
-    /// Cuts per axis, `[x, y, z]`.
-    pub cuts: [usize; 3],
-    /// §IV time-steps fused into each tile's pipeline this pass (1 =
-    /// single-step; deeper fusion grows the per-tile halos by
-    /// `radii * fused_steps` — visible in [`Self::halo_points`] — and
-    /// divides the per-step DRAM traffic by the depth).
-    pub fused_steps: usize,
-    /// Total halo points loaded across tasks (redundant-load overhead).
-    pub halo_points: u64,
-    /// Fraction of the grid read more than once because of halo overlap.
-    pub redundant_read_fraction: f64,
-    /// Slowest tile's total cycles — the parallel makespan.
-    pub makespan_cycles: u64,
-    /// Sum of cycles across tiles (serial-equivalent work).
-    pub total_cycles: u64,
-    pub total_flops: f64,
-    pub per_tile: Vec<TileReport>,
-    /// Aggregate achieved GFLOPS across the tile array.
-    pub gflops: f64,
-    /// Host wall-clock seconds spent simulating.
-    pub wall_seconds: f64,
-}
-
-impl RunReport {
-    /// Total grid-point loads across the tile array — the §IV currency:
-    /// a fused chunk loads its input once regardless of depth, so at
-    /// equal total steps a spatially-fused run loads strictly less than
-    /// the host-driven loop.
-    pub fn total_loads(&self) -> u64 {
-        self.per_tile.iter().map(|t| t.mem.loads).sum()
-    }
-}
-
-/// Multi-tile coordinator.
+/// Deprecated one-call wrapper around [`compile`](crate::compile::compile)
+/// + [`Session`]: each `run`/`run_steps` compiles a fresh artifact and
+/// executes it once. Prefer the two-phase API wherever the same
+/// workload runs more than once.
 #[derive(Debug, Clone)]
 pub struct Coordinator {
     pub machine: Machine,
@@ -139,7 +38,7 @@ pub struct Coordinator {
     /// Scheduler core every tile simulation runs on (bit-identical
     /// either way; `Event` is the default and the fast one).
     pub sim_core: SimCore,
-    /// How [`Self::run_steps`] traverses time (default: host-driven).
+    /// How [`Self::run_steps`] traverses time.
     pub fuse: FuseMode,
 }
 
@@ -178,164 +77,42 @@ impl Coordinator {
         self
     }
 
+    /// The [`CompileOptions`] equivalent of this coordinator's builder
+    /// state — the bridge old call sites cross to the new API.
+    pub fn compile_options(&self, w: usize) -> CompileOptions {
+        CompileOptions {
+            machine: self.machine.clone(),
+            workers: w,
+            tiles: self.tiles,
+            fabric_tokens: self.fabric_tokens,
+            decomp: self.decomp,
+            fuse: self.fuse,
+        }
+    }
+
     /// Plan the decomposition: enough tiles to feed the array, each
     /// small enough to fit the per-tile fabric budget.
     pub fn plan(&self, spec: &StencilSpec, w: usize) -> Result<DecompPlan> {
         decomp::plan(spec, w, self.fabric_tokens, self.decomp, self.tiles)
     }
 
-    /// One DFG per distinct tile shape in the plan: same-extent tiles
-    /// share it (cloned only at simulator construction). Plans with a
-    /// fused depth > 1 map each tile through the §IV temporal pipeline
-    /// instead of the single-step mapper.
-    fn build_graphs(
-        &self,
-        spec: &StencilSpec,
-        w: usize,
-        plan: &DecompPlan,
-    ) -> Result<HashMap<[usize; 3], Arc<Graph>>> {
-        let mut graphs: HashMap<[usize; 3], Arc<Graph>> = HashMap::new();
-        for t in &plan.tiles {
-            let dims = [t.in_extent(0), t.in_extent(1), t.in_extent(2)];
-            if !graphs.contains_key(&dims) {
-                let sub = t.sub_spec(spec);
-                let g = if plan.fused_steps > 1 {
-                    temporal::build_nd(&sub, w, plan.fused_steps)?
-                } else {
-                    build_graph(&sub, w)?
-                };
-                graphs.insert(dims, Arc::new(g));
-            }
-        }
-        Ok(graphs)
+    fn session(&self, spec: &StencilSpec, w: usize, steps: usize) -> Result<Session> {
+        let compiled = compile::compile(spec, steps, &self.compile_options(w))?;
+        Ok(Session::new(Arc::new(compiled), self.machine.clone()).with_sim_core(self.sim_core))
     }
 
-    /// Run one stencil application across the tile array. Supports any
-    /// spec `build_graph` supports: 1-D, 2-D and 3-D, star or box.
+    /// Run one stencil application across the tile array: compile a
+    /// single-step artifact and execute it once. Supports any spec the
+    /// mapper supports: 1-D, 2-D and 3-D, star or box.
     pub fn run(&self, spec: &StencilSpec, w: usize, input: &[f64]) -> Result<RunReport> {
-        let plan = self.plan(spec, w)?;
-        let graphs = self.build_graphs(spec, w, &plan)?;
-        self.run_planned(spec, input, &plan, &graphs)
+        let outcome = self.session(spec, w, 1)?.run(input)?;
+        Ok(outcome.reports.into_iter().next().expect("one chunk for one step"))
     }
 
-    /// Execute a pre-planned decomposition with pre-built graphs — the
-    /// shared core of [`Self::run`] and [`Self::run_steps`] (which plans
-    /// and maps once across all steps).
-    fn run_planned(
-        &self,
-        spec: &StencilSpec,
-        input: &[f64],
-        plan: &DecompPlan,
-        graphs: &HashMap<[usize; 3], Arc<Graph>>,
-    ) -> Result<RunReport> {
-        ensure!(
-            input.len() == spec.grid_points(),
-            "input length {} != grid {}",
-            input.len(),
-            spec.grid_points()
-        );
-        let t0 = std::time::Instant::now();
-        let tasks: VecDeque<TileTask> = plan
-            .tiles
-            .iter()
-            .enumerate()
-            .map(|(id, t)| TileTask {
-                id,
-                tile: *t,
-                input: t.extract(spec, input),
-                graph: Arc::clone(
-                    &graphs[&[t.in_extent(0), t.in_extent(1), t.in_extent(2)]],
-                ),
-            })
-            .collect();
-        let n_tasks = tasks.len();
-
-        let queue = Arc::new(Mutex::new(tasks));
-        let (tx, rx) = mpsc::channel();
-        let mut handles = Vec::new();
-        for tile_id in 0..self.tiles.min(n_tasks).max(1) {
-            let queue = Arc::clone(&queue);
-            let tx = tx.clone();
-            let machine = self.machine.clone();
-            let core = self.sim_core;
-            handles.push(std::thread::spawn(move || -> Result<()> {
-                loop {
-                    let task = { queue.lock().unwrap().pop_front() };
-                    let Some(task) = task else { break };
-                    let res = Simulator::build(
-                        task.graph.as_ref().clone(),
-                        &machine,
-                        task.input.clone(),
-                        task.input,
-                    )
-                    .and_then(|sim| sim.with_core(core).run())
-                    .with_context(|| format!("tile task {}", task.id))?;
-                    tx.send((tile_id, task.tile, res)).ok();
-                }
-                Ok(())
-            }));
-        }
-        drop(tx);
-
-        // Merge owned outputs into the global grid (boundary = input copy).
-        let mut output = input.to_vec();
-        let mut per_tile = vec![TileReport::default(); self.tiles];
-        let mut received = 0;
-        for (tile_id, tile, res) in rx {
-            tile.merge(spec, &mut output, &res.output);
-            let rep = &mut per_tile[tile_id];
-            rep.strips += 1;
-            rep.cycles += res.stats.cycles;
-            rep.halo_points += tile.halo_points() as u64;
-            rep.mem.accumulate(&res.stats.mem);
-            received += 1;
-        }
-        for h in handles {
-            h.join().expect("tile thread panicked")?;
-        }
-        ensure!(received == n_tasks, "lost tile results: {received}/{n_tasks}");
-
-        // Exact FLOP count from the spec (MUL = 1, MAC = 2 per output;
-        // fused plans sum the per-layer trapezoid interiors).
-        let total_flops = temporal::total_flops(spec, plan.fused_steps);
-
-        let makespan = per_tile.iter().map(|t| t.cycles).max().unwrap_or(0);
-        let total_cycles: u64 = per_tile.iter().map(|t| t.cycles).sum();
-        let gflops = if makespan > 0 {
-            total_flops * self.machine.clock_ghz / makespan as f64
-        } else {
-            0.0
-        };
-        Ok(RunReport {
-            output,
-            strips: n_tasks,
-            kind: plan.kind,
-            cuts: plan.cuts,
-            fused_steps: plan.fused_steps,
-            halo_points: plan.halo_points() as u64,
-            redundant_read_fraction: plan.redundant_read_fraction(spec),
-            makespan_cycles: makespan,
-            total_cycles,
-            total_flops,
-            per_tile,
-            gflops,
-            wall_seconds: t0.elapsed().as_secs_f64(),
-        })
-    }
-
-    /// Multi-step run. The [`FuseMode`] decides how time is traversed:
-    ///
-    /// * [`FuseMode::Host`] — one decomposition pass per step (full
-    ///   DRAM round-trip between steps); one [`RunReport`] per step.
-    /// * [`FuseMode::Spatial`] — §IV fused chunks: the decomposition
-    ///   planner picks the deepest depth `T` the per-tile token budget
-    ///   admits, each tile computes `T` steps on-fabric, and the host
-    ///   loops over `ceil(steps / T)` chunks; one report per chunk
-    ///   (`RunReport::fused_steps` tells its depth). The grid is valid
-    ///   on [`temporal::valid_box`]`(spec, steps)` — the ring outside
-    ///   it keeps chunk-input values (the trapezoid's price).
-    /// * [`FuseMode::Auto`] — `Spatial` when the budget admits a depth
-    ///   of at least 2, else `Host`.
+    /// Multi-step run: compile a `steps`-deep artifact (the [`FuseMode`]
+    /// decides the schedule — host-driven steps or §IV fused chunks with
+    /// a shallower tail) and execute it once. Returns the final grid and
+    /// one [`RunReport`] per executed chunk.
     pub fn run_steps(
         &self,
         spec: &StencilSpec,
@@ -346,112 +123,15 @@ impl Coordinator {
         if steps == 0 {
             return Ok((input.to_vec(), Vec::new()));
         }
-        match self.fuse {
-            FuseMode::Host => self.run_steps_host(spec, w, input, steps),
-            FuseMode::Spatial => self.run_steps_fused(spec, w, input, steps, None),
-            FuseMode::Auto => {
-                let probe = decomp::plan_fused(
-                    spec,
-                    w,
-                    self.fabric_tokens,
-                    self.decomp,
-                    self.tiles,
-                    steps,
-                )?;
-                if probe.fused_steps > 1 {
-                    // Hand the probe plan over as the first chunk's
-                    // cache so it is not planned twice.
-                    let graphs = self.build_graphs(spec, w, &probe)?;
-                    self.run_steps_fused(spec, w, input, steps, Some((probe, graphs)))
-                } else {
-                    self.run_steps_host(spec, w, input, steps)
-                }
-            }
-        }
-    }
-
-    /// Host-driven multi-step run (the paper's single-time-step use-case
-    /// iterated by the host). The decomposition is planned and the tile
-    /// DFGs are built once for all steps (they depend only on the spec
-    /// and `w`, not the data), and each step reads the previous report's
-    /// output in place — no per-step copy of the grid; the returned
-    /// final grid is the only whole-grid copy made here.
-    fn run_steps_host(
-        &self,
-        spec: &StencilSpec,
-        w: usize,
-        input: &[f64],
-        steps: usize,
-    ) -> Result<(Vec<f64>, Vec<RunReport>)> {
-        let plan = self.plan(spec, w)?;
-        let graphs = self.build_graphs(spec, w, &plan)?;
-        let mut reports: Vec<RunReport> = Vec::with_capacity(steps);
-        for _ in 0..steps {
-            let rep = match reports.last() {
-                None => self.run_planned(spec, input, &plan, &graphs)?,
-                Some(prev) => self.run_planned(spec, &prev.output, &plan, &graphs)?,
-            };
-            reports.push(rep);
-        }
-        let grid = match reports.last() {
-            Some(last) => last.output.clone(),
-            None => input.to_vec(),
-        };
-        Ok((grid, reports))
-    }
-
-    /// §IV fused chunks with a host loop over chunks. The plan (and its
-    /// tile graphs) is reused while whole chunks of its depth remain
-    /// (`cached` may arrive pre-seeded from the Auto probe); a shallower
-    /// tail chunk replans once. Each chunk reads the previous report's
-    /// output in place — like the host path, no per-chunk grid copy.
-    fn run_steps_fused(
-        &self,
-        spec: &StencilSpec,
-        w: usize,
-        input: &[f64],
-        steps: usize,
-        mut cached: Option<(DecompPlan, HashMap<[usize; 3], Arc<Graph>>)>,
-    ) -> Result<(Vec<f64>, Vec<RunReport>)> {
-        let mut reports: Vec<RunReport> = Vec::new();
-        let mut remaining = steps;
-        while remaining > 0 {
-            let stale = match &cached {
-                None => true,
-                Some((p, _)) => p.fused_steps > remaining,
-            };
-            if stale {
-                let plan = decomp::plan_fused(
-                    spec,
-                    w,
-                    self.fabric_tokens,
-                    self.decomp,
-                    self.tiles,
-                    remaining,
-                )?;
-                let graphs = self.build_graphs(spec, w, &plan)?;
-                cached = Some((plan, graphs));
-            }
-            let (plan, graphs) = cached.as_ref().expect("plan cached above");
-            let src: &[f64] = match reports.last() {
-                None => input,
-                Some(prev) => prev.output.as_slice(),
-            };
-            let rep = self.run_planned(spec, src, plan, graphs)?;
-            remaining -= plan.fused_steps;
-            reports.push(rep);
-        }
-        let grid = match reports.last() {
-            Some(last) => last.output.clone(),
-            None => input.to_vec(),
-        };
-        Ok((grid, reports))
+        let outcome = self.session(spec, w, steps)?.run(input)?;
+        Ok((outcome.output, outcome.reports))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::stencil::temporal;
     use crate::util::rng::XorShift;
     use crate::verify::golden::{
         max_abs_diff, stencil1d_ref, stencil2d_ref, stencil_ref, stencil_ref_steps,
@@ -546,7 +226,7 @@ mod tests {
         let mut rng = XorShift::new(0xF0F0);
         let x = rng.normal_vec(24 * 16);
         let steps = 4;
-        let host = Coordinator::new(2, Machine::paper());
+        let host = Coordinator::new(2, Machine::paper()).with_fuse(FuseMode::Host);
         let (_, hreps) = host.run_steps(&spec, 2, &x, steps).unwrap();
         let fused = Coordinator::new(2, Machine::paper()).with_fuse(FuseMode::Spatial);
         let (fout, freps) = fused.run_steps(&spec, 2, &x, steps).unwrap();
@@ -595,5 +275,24 @@ mod tests {
         let spec = StencilSpec::heat2d(16, 10, 0.2);
         let coord = Coordinator::new(1, Machine::paper());
         assert!(coord.run(&spec, 1, &[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn shim_equals_two_phase_api_bitwise() {
+        // The coordinator is the compile+session API; pin it.
+        let spec = StencilSpec::heat2d(28, 14, 0.2);
+        let mut rng = XorShift::new(0x2FA5);
+        let x = rng.normal_vec(28 * 14);
+        let coord = Coordinator::new(2, Machine::paper());
+        let (out, reports) = coord.run_steps(&spec, 2, &x, 2).unwrap();
+        let compiled = compile::compile(&spec, 2, &coord.compile_options(2)).unwrap();
+        let session = Session::new(Arc::new(compiled), Machine::paper());
+        let outcome = session.run(&x).unwrap();
+        assert_eq!(outcome.output, out);
+        assert_eq!(outcome.reports.len(), reports.len());
+        for (a, b) in outcome.reports.iter().zip(&reports) {
+            assert_eq!(a.output, b.output);
+            assert_eq!(a.makespan_cycles, b.makespan_cycles);
+        }
     }
 }

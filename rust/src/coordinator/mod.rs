@@ -1,28 +1,26 @@
-//! L3 coordinator — the multi-tile runtime (§IV, §VIII-A).
+//! L3 coordinator — legacy one-call wrappers over the two-phase API
+//! (§IV, §VIII-A).
 //!
-//! Table I compares 16 CGRA tiles against one V100 ("16 CGRA units should
-//! occupy the same chip area"). The paper extrapolates a single-tile
-//! simulation x16; this coordinator instead *actually runs* the 16 tiles:
-//! the grid is decomposed into halo-padded N-dim tiles
-//! ([`crate::stencil::decomp`] — slab/pencil/block cuts for 1-D, 2-D and
-//! 3-D grids), tiles become tasks in a shared work queue, and one worker
-//! thread per hardware tile pulls tasks, builds the sub-grid's DFG,
-//! simulates it and returns the outputs to the leader, which stitches
-//! the global grid. Each tile has its own 100 GB/s channel (aggregate
-//! 1600 GB/s, the Table-I assumption); halo re-reads between neighboring
-//! tiles are the decomposition's overhead and are accounted per run.
+//! Table I compares 16 CGRA tiles against one V100 ("16 CGRA units
+//! should occupy the same chip area"). The multi-tile machinery that
+//! actually runs those 16 tiles now lives behind the
+//! compile-once/execute-many split: [`mod@crate::compile`] resolves the
+//! decomposition and places one DFG per tile shape into an immutable
+//! [`crate::compile::CompiledStencil`], and [`crate::session::Session`]
+//! executes it — concurrently, any number of times, without ever
+//! re-planning. This module keeps the older single-call surface on top
+//! of that:
 //!
-//! * [`leader`] — the leader/worker engine: work queue, tile threads,
-//!   result merge, per-tile cycle and halo accounting.
+//! * [`leader`] — [`Coordinator`], the deprecated compile-and-run-once
+//!   shim (same plans, graphs and bitwise results as the two-phase
+//!   API).
 //! * [`dnc`] — §IV's recursive divide-and-conquer decomposition and the
-//!   hybrid CPU+CGRA execution mode.
-
-//! Multi-step runs traverse time per [`FuseMode`]: host-driven (one
-//! decomposition pass per step) or §IV spatially fused (each tile runs
-//! a `T`-deep temporal pipeline per memory round-trip; the host loops
-//! over chunks).
+//!   hybrid CPU+CGRA execution mode, sharing the compile phase's placed
+//!   graphs.
 
 pub mod dnc;
 pub mod leader;
 
-pub use leader::{Coordinator, FuseMode, RunReport, TileReport};
+pub use crate::compile::FuseMode;
+pub use crate::session::{RunReport, TileReport};
+pub use leader::Coordinator;

@@ -32,6 +32,30 @@
 //!
 //! [`stencil::build_graph`] dispatches any spec to its mapping.
 //!
+//! ## Compile once, execute many
+//!
+//! The public API splits the paper's flow (§III map once, stream many
+//! grids) into two phases:
+//!
+//! ```text
+//! let artifact = Arc::new(compile(&spec, steps, &CompileOptions::default())?);
+//! let session  = Session::new(artifact, Machine::paper());
+//! let outcome  = session.run(&grid)?;          // &self — call from any thread
+//! ```
+//!
+//! [`compile::compile`] does everything data-independent exactly once:
+//! resolves the worker count, plans the N-dim tile decomposition
+//! (including the §IV fused depth and a shallower tail chunk), builds
+//! and **places** one DFG per distinct tile shape
+//! ([`cgra::PlacedGraph`]), and computes the halo-adjusted roofline.
+//! The resulting [`compile::CompiledStencil`] is immutable and
+//! `Arc`-shareable; [`session::Session`] executes it concurrently
+//! without ever re-planning (pinned by work counters in
+//! [`stencil::metrics`]). [`compile::CompileCache`] adds an LRU keyed
+//! by `(spec, steps, options)` for serve paths, and
+//! [`compile::CompiledStencil::save`]/`load` serialize artifacts in the
+//! `runtime` manifest schema.
+//!
 //! ## Layers
 //!
 //! * [`dfg`] — the dataflow-graph IR and the §V DSL builder that emits
@@ -51,10 +75,18 @@
 //!   halo-adjusted multi-tile view ([`roofline::analyze_tiled`]).
 //! * [`gpu_model`] — the §VII analytical NVIDIA V100 baseline, covering
 //!   the paper's 1-D/2-D/3-D anchors and the box-window extension.
-//! * [`coordinator`] — the L3 runtime: a 16-tile leader/worker manager
-//!   executing decomposed tiles of any dimensionality, with §IV
-//!   divide-and-conquer task generation and halo/redundant-load
-//!   accounting per run.
+//! * [`mod@compile`] — phase 1: planning. [`compile::compile`] turns
+//!   `(spec, steps, options)` into an immutable
+//!   [`compile::CompiledStencil`] (plan + placed per-tile-shape DFGs +
+//!   roofline analysis), with an LRU [`compile::CompileCache`] and
+//!   save/load in the runtime's manifest schema.
+//! * [`session`] — phase 2: execution. [`session::Session`] is a
+//!   `Send + Sync` executor over a compiled artifact: the 16-tile
+//!   leader/worker engine with halo/redundant-load accounting per
+//!   chunk, callable concurrently through `&self`.
+//! * [`coordinator`] — the legacy one-call wrappers: a deprecated
+//!   compile-and-run-once [`coordinator::Coordinator`] shim plus the
+//!   §IV divide-and-conquer / hybrid CPU+CGRA mode.
 //! * [`runtime`] — the artifact runtime: reads `artifacts/manifest.txt`
 //!   and executes each named kernel with a native interpreter backed by
 //!   the golden oracles (the PJRT/XLA path is an offline substitution;
@@ -78,14 +110,18 @@
 
 pub mod cgra;
 pub mod cli;
+pub mod compile;
 pub mod config;
 pub mod coordinator;
 pub mod dfg;
 pub mod gpu_model;
 pub mod roofline;
 pub mod runtime;
+pub mod session;
 pub mod stencil;
 pub mod util;
 pub mod verify;
 
+pub use compile::{compile, CompileCache, CompileOptions, CompiledStencil, FuseMode};
+pub use session::{RunOutcome, RunReport, Session};
 pub use stencil::spec::{StencilShape, StencilSpec};

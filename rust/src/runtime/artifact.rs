@@ -36,6 +36,30 @@ fn parse_shape(s: &str) -> Result<Vec<usize>> {
         .collect()
 }
 
+fn shape_text(s: &[usize]) -> String {
+    if s.is_empty() {
+        "s".to_string()
+    } else {
+        s.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x")
+    }
+}
+
+impl ArtifactMeta {
+    /// Render back to the one-line schema [`Manifest::parse`] reads —
+    /// the inverse of parsing, used by the CGRA compile phase so its
+    /// saved artifacts share this manifest format.
+    pub fn to_line(&self) -> String {
+        format!(
+            "{}|{}|{}|{}|{}",
+            self.name,
+            self.file,
+            self.dtype,
+            self.in_shapes.iter().map(|s| shape_text(s)).collect::<Vec<_>>().join(","),
+            shape_text(&self.out_shape)
+        )
+    }
+}
+
 impl Manifest {
     pub fn parse(text: &str) -> Result<Self> {
         let mut entries = Vec::new();
@@ -96,6 +120,22 @@ mod tests {
     fn rejects_malformed_lines() {
         assert!(Manifest::parse("just|three|fields").is_err());
         assert!(Manifest::parse("a|b|c|1xq|2").is_err());
+    }
+
+    #[test]
+    fn to_line_round_trips_through_parse() {
+        let line = "stencil2d_r12_96x96|stencil2d_r12_96x96.hlo.txt|f64|96x96,25,24|96x96";
+        let m = Manifest::parse(line).unwrap();
+        assert_eq!(m.entries[0].to_line(), line);
+        let scalar = ArtifactMeta {
+            name: "n".into(),
+            file: "f".into(),
+            dtype: "f64".into(),
+            in_shapes: vec![vec![]],
+            out_shape: vec![4, 2],
+        };
+        let re = Manifest::parse(&scalar.to_line()).unwrap();
+        assert_eq!(re.entries[0], scalar);
     }
 
     #[test]

@@ -21,6 +21,11 @@
 //! Re-enabling a real PJRT backend is a matter of swapping
 //! [`Runtime::execute`]'s interpreter for the compiled executable cache;
 //! the manifest and call sites need no change.
+//!
+//! The manifest schema is shared with the CGRA compile phase:
+//! `crate::compile::CompiledStencil::save` writes its header in exactly
+//! this line format ([`ArtifactMeta::to_line`]), so both runtimes
+//! consume one artifact-description format.
 
 pub mod artifact;
 
@@ -67,8 +72,10 @@ impl Runtime {
     }
 
     /// Execute artifact `name` on f64 inputs (shapes per the manifest).
-    /// Returns the flattened f64 output.
-    pub fn execute(&mut self, name: &str, inputs: &[&[f64]]) -> Result<Vec<f64>> {
+    /// Returns the flattened f64 output. Takes `&self`: the runtime
+    /// holds only the immutable manifest, so one shared instance can
+    /// serve concurrent callers (the `Session` serve path does).
+    pub fn execute(&self, name: &str, inputs: &[&[f64]]) -> Result<Vec<f64>> {
         let meta = self
             .meta(name)
             .with_context(|| format!("unknown artifact `{name}`"))?

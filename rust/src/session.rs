@@ -1,0 +1,374 @@
+//! Phase 2 of the compile-once / execute-many API: execution.
+//!
+//! A [`Session`] binds an immutable [`CompiledStencil`] to a
+//! [`Machine`] and executes it against input grids — any number of
+//! times, from any number of threads ([`Session`] is `Send + Sync` and
+//! [`Session::run`] takes `&self`). Execution walks the artifact's
+//! stages in order: each chunk decomposes the grid into the plan's
+//! halo-padded tiles, pushes [`TileTask`]s into a shared queue, and
+//! spawns one OS thread per hardware tile. Tiles pull greedily (natural
+//! load balancing — the same work-stealing effect §IV's hybrid
+//! algorithm relies on), instantiate a simulator over the stage's
+//! shared placed graph ([`Simulator::from_placed`] — no re-validation,
+//! no re-placement, no graph clone), and send results back over a
+//! channel. The leader merges owned outputs into the global grid; the
+//! reported makespan is the slowest tile's total, which is what 16
+//! parallel tiles would take on silicon.
+//!
+//! Nothing here plans or builds graphs — the
+//! [`crate::stencil::metrics`] counters stay flat across `run` calls,
+//! which `rust/tests/compile_once.rs` pins.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::cgra::stats::MemStats;
+use crate::cgra::{Machine, PlacedGraph, SimCore, Simulator};
+use crate::compile::CompiledStencil;
+use crate::stencil::decomp::{DecompKind, DecompPlan, Tile};
+use crate::stencil::{temporal, StencilSpec};
+
+/// One unit of work: a halo-padded tile of the global grid.
+#[derive(Clone)]
+pub struct TileTask {
+    pub id: usize,
+    pub tile: Tile,
+    /// Contiguous copy of the tile's input box.
+    pub input: Vec<f64>,
+    /// The placed graph for the tile's shape — shared by every tile
+    /// with the same input extents (the graph depends only on dims and
+    /// the worker count, not the data).
+    pub graph: Arc<PlacedGraph>,
+}
+
+/// Per-hardware-tile accounting.
+#[derive(Debug, Clone, Default)]
+pub struct TileReport {
+    /// Tile tasks executed on this hardware tile.
+    pub strips: usize,
+    /// Sum of simulated cycles over this tile's tasks.
+    pub cycles: u64,
+    /// Halo points this tile loaded beyond the outputs it owned.
+    pub halo_points: u64,
+    pub mem: MemStats,
+}
+
+/// Result of one executed chunk (one plan application).
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub output: Vec<f64>,
+    /// Number of tile tasks the decomposition produced.
+    pub strips: usize,
+    /// Resolved decomposition strategy.
+    pub kind: DecompKind,
+    /// Cuts per axis, `[x, y, z]`.
+    pub cuts: [usize; 3],
+    /// §IV time-steps fused into each tile's pipeline this pass (1 =
+    /// single-step; deeper fusion grows the per-tile halos by
+    /// `radii * fused_steps` — visible in [`Self::halo_points`] — and
+    /// divides the per-step DRAM traffic by the depth).
+    pub fused_steps: usize,
+    /// Total halo points loaded across tasks (redundant-load overhead).
+    pub halo_points: u64,
+    /// Fraction of the grid read more than once because of halo overlap.
+    pub redundant_read_fraction: f64,
+    /// Slowest tile's total cycles — the parallel makespan.
+    pub makespan_cycles: u64,
+    /// Sum of cycles across tiles (serial-equivalent work).
+    pub total_cycles: u64,
+    pub total_flops: f64,
+    pub per_tile: Vec<TileReport>,
+    /// Aggregate achieved GFLOPS across the tile array.
+    pub gflops: f64,
+    /// Host wall-clock seconds spent simulating.
+    pub wall_seconds: f64,
+}
+
+impl RunReport {
+    /// Total grid-point loads across the tile array — the §IV currency:
+    /// a fused chunk loads its input once regardless of depth, so at
+    /// equal total steps a spatially-fused run loads strictly less than
+    /// the host-driven loop.
+    pub fn total_loads(&self) -> u64 {
+        self.per_tile.iter().map(|t| t.mem.loads).sum()
+    }
+}
+
+/// Everything one [`Session::run`] produced: the final grid and one
+/// [`RunReport`] per executed chunk (host schedules: one per step).
+#[derive(Debug, Clone)]
+pub struct RunOutcome {
+    pub output: Vec<f64>,
+    pub reports: Vec<RunReport>,
+}
+
+impl RunOutcome {
+    /// The last chunk's report (every execution has at least one).
+    pub fn final_report(&self) -> &RunReport {
+        self.reports.last().expect("an execution always produces a report")
+    }
+}
+
+/// A concurrent executor over a compiled artifact. Cheap to construct,
+/// `Send + Sync`, and stateless across calls: every [`Session::run`]
+/// only instantiates per-run simulator state from the artifact's shared
+/// placed graphs.
+#[derive(Clone)]
+pub struct Session {
+    compiled: Arc<CompiledStencil>,
+    machine: Machine,
+    /// Hardware tiles executing tile tasks (defaults to the compile
+    /// options' tile count).
+    tiles: usize,
+    sim_core: SimCore,
+}
+
+impl Session {
+    /// Build an executor from a compiled artifact and the machine to
+    /// simulate on. Placement was fixed at compile time; `machine`
+    /// drives the per-run memory system and the clock.
+    pub fn new(compiled: Arc<CompiledStencil>, machine: Machine) -> Self {
+        let tiles = compiled.options.tiles.max(1);
+        Self {
+            compiled,
+            machine,
+            tiles,
+            sim_core: SimCore::default(),
+        }
+    }
+
+    /// Override the simulator scheduler core (bit-identical either way;
+    /// `Event` is the default and the fast one).
+    pub fn with_sim_core(mut self, core: SimCore) -> Self {
+        self.sim_core = core;
+        self
+    }
+
+    /// Override the hardware tile count pulling tasks.
+    pub fn with_tiles(mut self, tiles: usize) -> Self {
+        self.tiles = tiles.max(1);
+        self
+    }
+
+    pub fn compiled(&self) -> &Arc<CompiledStencil> {
+        &self.compiled
+    }
+
+    pub fn machine(&self) -> &Machine {
+        &self.machine
+    }
+
+    /// Execute the compiled workload (all `steps` it was compiled for)
+    /// on `input`. Never plans, never builds or places a graph; safe to
+    /// call concurrently from many threads on distinct inputs.
+    pub fn run(&self, input: &[f64]) -> Result<RunOutcome> {
+        let spec = &self.compiled.spec;
+        ensure!(
+            input.len() == spec.grid_points(),
+            "input length {} != grid {}",
+            input.len(),
+            spec.grid_points()
+        );
+        let mut reports: Vec<RunReport> = Vec::with_capacity(self.compiled.total_chunks());
+        for stage in &self.compiled.stages {
+            for _ in 0..stage.repeats {
+                let src: &[f64] = match reports.last() {
+                    None => input,
+                    Some(prev) => prev.output.as_slice(),
+                };
+                let rep = execute_stage(
+                    &self.machine,
+                    self.tiles,
+                    self.sim_core,
+                    spec,
+                    src,
+                    &stage.plan,
+                    &stage.graphs,
+                )?;
+                reports.push(rep);
+            }
+        }
+        let output = match reports.last() {
+            Some(last) => last.output.clone(),
+            None => input.to_vec(),
+        };
+        Ok(RunOutcome { output, reports })
+    }
+}
+
+/// Execute one chunk: decompose `input` per `plan`, run every tile task
+/// on the `hw_tiles`-thread pool against the shared placed graphs, and
+/// merge the owned outputs. The shared core of [`Session::run`] and the
+/// legacy [`crate::coordinator::Coordinator`] shim.
+pub(crate) fn execute_stage(
+    machine: &Machine,
+    hw_tiles: usize,
+    core: SimCore,
+    spec: &StencilSpec,
+    input: &[f64],
+    plan: &DecompPlan,
+    graphs: &HashMap<[usize; 3], Arc<PlacedGraph>>,
+) -> Result<RunReport> {
+    ensure!(
+        input.len() == spec.grid_points(),
+        "input length {} != grid {}",
+        input.len(),
+        spec.grid_points()
+    );
+    let t0 = std::time::Instant::now();
+    let tasks: VecDeque<TileTask> = plan
+        .tiles
+        .iter()
+        .enumerate()
+        .map(|(id, t)| TileTask {
+            id,
+            tile: *t,
+            input: t.extract(spec, input),
+            graph: Arc::clone(&graphs[&[t.in_extent(0), t.in_extent(1), t.in_extent(2)]]),
+        })
+        .collect();
+    let n_tasks = tasks.len();
+
+    let queue = Arc::new(Mutex::new(tasks));
+    let (tx, rx) = mpsc::channel();
+    let mut handles = Vec::new();
+    for tile_id in 0..hw_tiles.min(n_tasks).max(1) {
+        let queue = Arc::clone(&queue);
+        let tx = tx.clone();
+        let machine = machine.clone();
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            loop {
+                let task = { queue.lock().unwrap().pop_front() };
+                let Some(task) = task else { break };
+                let sim = Simulator::from_placed(
+                    task.graph.as_ref(),
+                    &machine,
+                    task.input.clone(),
+                    task.input,
+                );
+                let res = sim
+                    .with_core(core)
+                    .run()
+                    .with_context(|| format!("tile task {}", task.id))?;
+                tx.send((tile_id, task.tile, res)).ok();
+            }
+            Ok(())
+        }));
+    }
+    drop(tx);
+
+    // Merge owned outputs into the global grid (boundary = input copy).
+    let mut output = input.to_vec();
+    let mut per_tile = vec![TileReport::default(); hw_tiles];
+    let mut received = 0;
+    for (tile_id, tile, res) in rx {
+        tile.merge(spec, &mut output, &res.output);
+        let rep = &mut per_tile[tile_id];
+        rep.strips += 1;
+        rep.cycles += res.stats.cycles;
+        rep.halo_points += tile.halo_points() as u64;
+        rep.mem.accumulate(&res.stats.mem);
+        received += 1;
+    }
+    for h in handles {
+        h.join().expect("tile thread panicked")?;
+    }
+    ensure!(received == n_tasks, "lost tile results: {received}/{n_tasks}");
+
+    // Exact FLOP count from the spec (MUL = 1, MAC = 2 per output;
+    // fused plans sum the per-layer trapezoid interiors).
+    let total_flops = temporal::total_flops(spec, plan.fused_steps);
+
+    let makespan = per_tile.iter().map(|t| t.cycles).max().unwrap_or(0);
+    let total_cycles: u64 = per_tile.iter().map(|t| t.cycles).sum();
+    let gflops = if makespan > 0 {
+        total_flops * machine.clock_ghz / makespan as f64
+    } else {
+        0.0
+    };
+    Ok(RunReport {
+        output,
+        strips: n_tasks,
+        kind: plan.kind,
+        cuts: plan.cuts,
+        fused_steps: plan.fused_steps,
+        halo_points: plan.halo_points() as u64,
+        redundant_read_fraction: plan.redundant_read_fraction(spec),
+        makespan_cycles: makespan,
+        total_cycles,
+        total_flops,
+        per_tile,
+        gflops,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compile::{compile, CompileOptions};
+    use crate::util::rng::XorShift;
+    use crate::verify::golden::{max_abs_diff, stencil_ref, stencil_ref_steps};
+
+    fn session(spec: &StencilSpec, steps: usize, opts: CompileOptions) -> Session {
+        let machine = opts.machine.clone();
+        Session::new(Arc::new(compile(spec, steps, &opts).unwrap()), machine)
+    }
+
+    #[test]
+    fn session_runs_single_step_against_oracle() {
+        let spec = StencilSpec::heat2d(32, 14, 0.2);
+        let mut rng = XorShift::new(0x5E55);
+        let x = rng.normal_vec(32 * 14);
+        let s = session(&spec, 1, CompileOptions::default().with_workers(2).with_tiles(2));
+        let out = s.run(&x).unwrap();
+        assert_eq!(out.reports.len(), 1);
+        let want = stencil_ref(&x, &spec);
+        assert!(max_abs_diff(&out.output, &want) < 1e-11);
+        assert_eq!(out.final_report().output, out.output);
+    }
+
+    #[test]
+    fn repeated_runs_are_bitwise_identical() {
+        let spec = StencilSpec::heat2d(24, 12, 0.2);
+        let mut rng = XorShift::new(0xD1D1);
+        let x = rng.normal_vec(24 * 12);
+        let s = session(&spec, 2, CompileOptions::default().with_workers(2));
+        let a = s.run(&x).unwrap();
+        let b = s.run(&x).unwrap();
+        assert_eq!(a.output, b.output);
+        assert_eq!(
+            a.reports.iter().map(|r| r.makespan_cycles).collect::<Vec<_>>(),
+            b.reports.iter().map(|r| r.makespan_cycles).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn multi_step_host_schedule_matches_iterated_oracle() {
+        let spec = StencilSpec::heat2d(20, 12, 0.2);
+        let mut rng = XorShift::new(0xFEED);
+        let x = rng.normal_vec(20 * 12);
+        let s = session(
+            &spec,
+            3,
+            CompileOptions::default()
+                .with_workers(2)
+                .with_tiles(2)
+                .with_fuse(crate::compile::FuseMode::Host),
+        );
+        let out = s.run(&x).unwrap();
+        assert_eq!(out.reports.len(), 3);
+        let want = stencil_ref_steps(&spec, &x, 3);
+        assert!(max_abs_diff(&out.output, &want) < 1e-11);
+    }
+
+    #[test]
+    fn session_rejects_wrong_input_length() {
+        let spec = StencilSpec::heat2d(16, 10, 0.2);
+        let s = session(&spec, 1, CompileOptions::default().with_workers(1));
+        assert!(s.run(&[0.0; 3]).is_err());
+    }
+}

@@ -183,6 +183,10 @@ pub struct DecompPlan {
     /// §IV time-steps each tile fuses per memory round-trip (1 = the
     /// single-step mapper; tile halos are `radii * fused_steps` wide).
     pub fused_steps: usize,
+    /// Compute workers per tile the plan was budgeted for — recorded so
+    /// the plan is self-describing: executing or serializing it needs no
+    /// out-of-band worker count.
+    pub workers: usize,
     pub tiles: Vec<Tile>,
 }
 
@@ -415,6 +419,7 @@ fn plan_kind(
         kind,
         cuts,
         fused_steps: steps,
+        workers: w,
         tiles: tiles_for_cuts_depth(spec, cuts, steps),
     })
 }
@@ -447,6 +452,7 @@ pub fn plan_depth(
 ) -> Result<DecompPlan> {
     ensure!(w >= 1, "need at least one worker");
     ensure!(steps >= 1, "need at least one time-step");
+    super::metrics::count_plan();
     let (n, r) = (extents(spec), radii(spec));
     for a in 0..spec.ndim() {
         ensure!(

@@ -35,9 +35,44 @@ use anyhow::Result;
 
 use crate::dfg::Graph;
 
+/// Process-wide work counters pinning the compile-once contract.
+///
+/// Every decomposition plan ([`decomp::plan_depth`]) and every DFG
+/// construction ([`build_graph`], [`temporal::build_nd`]) bumps a
+/// monotone counter here. The counters exist so tests can assert
+/// *deltas*: executing a `CompiledStencil` must leave both unchanged,
+/// and a plan-cache hit must do zero planning/graph work. They are
+/// global and relaxed — meaningful only as before/after differences in
+/// a test that serializes its measurements.
+pub mod metrics {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static PLANS: AtomicU64 = AtomicU64::new(0);
+    static GRAPH_BUILDS: AtomicU64 = AtomicU64::new(0);
+
+    pub(crate) fn count_plan() {
+        PLANS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn count_graph_build() {
+        GRAPH_BUILDS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Decomposition plans computed since process start.
+    pub fn plans() -> u64 {
+        PLANS.load(Ordering::Relaxed)
+    }
+
+    /// Dataflow graphs built since process start.
+    pub fn graph_builds() -> u64 {
+        GRAPH_BUILDS.load(Ordering::Relaxed)
+    }
+}
+
 /// Map any supported spec (1-D/2-D/3-D, star or box) to its dataflow
 /// graph — the single entry point the simulator helpers and the CLI use.
 pub fn build_graph(spec: &StencilSpec, w: usize) -> Result<Graph> {
+    metrics::count_graph_build();
     if spec.is_3d() {
         map3d::build(spec, w)
     } else if spec.is_1d() {

@@ -374,6 +374,7 @@ fn layer_tap_filter(spec: &StencilSpec, layer: usize, dz: i64, dy: i64, dx: i64)
 /// read exactly once; only the final layer stores, over [`valid_box`].
 pub fn build_nd(spec: &StencilSpec, w: usize, steps: usize) -> Result<Graph> {
     ensure!(steps >= 1, "need at least one time-step");
+    super::metrics::count_graph_build();
     if spec.is_1d() {
         return build(spec, w, steps);
     }

@@ -1,0 +1,92 @@
+//! Counter pins for the compile-once contract.
+//!
+//! `stencil::metrics` counts every decomposition plan and every DFG
+//! construction process-wide. These tests assert *deltas*, so they
+//! serialize on a local mutex (and live in their own test binary so no
+//! other test's planning runs concurrently).
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use stencil_cgra::cgra::Machine;
+use stencil_cgra::compile::{compile, CompileCache, CompileOptions};
+use stencil_cgra::session::Session;
+use stencil_cgra::stencil::{metrics, StencilSpec};
+use stencil_cgra::util::rng::XorShift;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn counters() -> (u64, u64) {
+    (metrics::plans(), metrics::graph_builds())
+}
+
+/// Acceptance pin: executing the same `CompiledStencil` any number of
+/// times performs planning and DFG construction exactly once — at
+/// compile time.
+#[test]
+fn executing_a_compiled_stencil_never_replans() {
+    let _g = lock();
+    let spec = StencilSpec::heat2d(26, 14, 0.2);
+    let opts = CompileOptions::default().with_workers(2).with_tiles(2);
+
+    let (p0, g0) = counters();
+    let compiled = Arc::new(compile(&spec, 2, &opts).unwrap());
+    let (p1, g1) = counters();
+    assert!(p1 > p0, "compile must plan");
+    assert!(g1 > g0, "compile must build graphs");
+
+    let session = Session::new(Arc::clone(&compiled), Machine::paper());
+    let x = XorShift::new(0xABCD).normal_vec(spec.grid_points());
+    let a = session.run(&x).unwrap();
+    let b = session.run(&x).unwrap();
+    let (p2, g2) = counters();
+    assert_eq!(p2, p1, "Session::run must not plan");
+    assert_eq!(g2, g1, "Session::run must not build graphs");
+    assert_eq!(a.output, b.output, "repeat executions are bitwise identical");
+}
+
+/// Plan-cache pin: a second `compile` through the cache with an equal
+/// `(spec, steps, options)` key does zero decomposition and zero graph
+/// work, and returns the same artifact.
+#[test]
+fn cache_hit_does_zero_planning_and_graph_work() {
+    let _g = lock();
+    let cache = CompileCache::new(8);
+    let spec = StencilSpec::heat2d(30, 16, 0.2);
+    let opts = CompileOptions::default().with_workers(2);
+
+    let first = cache.get_or_compile(&spec, 3, &opts).unwrap();
+    let (p1, g1) = counters();
+    let second = cache.get_or_compile(&spec, 3, &opts).unwrap();
+    let (p2, g2) = counters();
+    assert!(Arc::ptr_eq(&first, &second), "hit returns the cached artifact");
+    assert_eq!(p2, p1, "cache hit must not plan");
+    assert_eq!(g2, g1, "cache hit must not build graphs");
+
+    // A different key misses and does real work again.
+    let third = cache.get_or_compile(&spec, 4, &opts).unwrap();
+    let (p3, g3) = counters();
+    assert!(!Arc::ptr_eq(&second, &third));
+    assert!(p3 > p2 && g3 > g2, "cache miss compiles");
+}
+
+/// Loading a saved artifact rebuilds graphs (deterministically) but
+/// never re-runs the budget search: the plan is taken from the file.
+#[test]
+fn loading_an_artifact_rebuilds_graphs_without_replanning() {
+    let _g = lock();
+    let spec = StencilSpec::heat2d(24, 12, 0.2);
+    let opts = CompileOptions::default().with_workers(2);
+    let compiled = compile(&spec, 2, &opts).unwrap();
+    let text = compiled.to_text();
+
+    let (p1, g1) = counters();
+    let loaded = stencil_cgra::compile::CompiledStencil::parse(&text).unwrap();
+    let (p2, g2) = counters();
+    assert_eq!(p2, p1, "load takes the plan from the file");
+    assert!(g2 > g1, "load rebuilds the placed graphs");
+    assert_eq!(loaded.stages[0].plan, compiled.stages[0].plan);
+}

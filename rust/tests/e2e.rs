@@ -21,7 +21,7 @@ fn heat_diffusion_all_layers_agree_over_20_steps() {
     assert_eq!(reports.len(), steps);
 
     // L2/L1 through PJRT: iterate the single-step artifact.
-    let mut rt = Runtime::open(Runtime::default_dir()).unwrap();
+    let rt = Runtime::open(Runtime::default_dir()).unwrap();
     let mut pjrt_out = x.clone();
     for _ in 0..steps {
         pjrt_out = rt.execute("heat2d_step_96x96", &[&pjrt_out]).unwrap();

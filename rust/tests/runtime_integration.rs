@@ -37,7 +37,7 @@ fn manifest_lists_all_experiment_artifacts() {
 
 #[test]
 fn every_artifact_compiles() {
-    let mut rt = rt();
+    let rt = rt();
     let names: Vec<String> = rt.names().iter().map(|s| s.to_string()).collect();
     for name in names {
         let meta = rt.meta(&name).unwrap().clone();
@@ -55,7 +55,7 @@ fn every_artifact_compiles() {
 
 #[test]
 fn artifact_1d_matches_native_oracle() {
-    let mut rt = rt();
+    let rt = rt();
     let mut rng = XorShift::new(42);
     let x = rng.normal_vec(4096);
     let c = symmetric_taps(8);
@@ -66,7 +66,7 @@ fn artifact_1d_matches_native_oracle() {
 
 #[test]
 fn artifact_2d_matches_native_oracle() {
-    let mut rt = rt();
+    let rt = rt();
     let mut rng = XorShift::new(43);
     let x = rng.normal_vec(96 * 96);
     let cx = symmetric_taps(12);
@@ -81,7 +81,7 @@ fn artifact_2d_matches_native_oracle() {
 fn kernel_and_reference_artifacts_agree() {
     // The kernel-vs-ref check done in pytest, repeated through the runtime:
     // both artifacts must produce identical results.
-    let mut rt = rt();
+    let rt = rt();
     let mut rng = XorShift::new(44);
     let x = rng.normal_vec(96 * 96);
     let cx = symmetric_taps(12);
@@ -93,7 +93,7 @@ fn kernel_and_reference_artifacts_agree() {
 
 #[test]
 fn heat_step_artifact_matches_oracle() {
-    let mut rt = rt();
+    let rt = rt();
     let mut rng = XorShift::new(45);
     let x = rng.normal_vec(96 * 96);
     let out = rt.execute("heat2d_step_96x96", &[&x]).unwrap();
@@ -105,7 +105,7 @@ fn heat_step_artifact_matches_oracle() {
 fn heat_run200_is_200_fused_steps() {
     // §IV temporal locality: the fused 200-step artifact equals 200
     // applications of the single-step oracle.
-    let mut rt = rt();
+    let rt = rt();
     let mut x = vec![0.0; 96 * 96];
     x[48 * 96 + 48] = 100.0; // hot spot
     let fused = rt.execute("heat2d_run200_96x96", &[&x]).unwrap();
@@ -119,7 +119,7 @@ fn heat_run200_is_200_fused_steps() {
 #[test]
 fn full_scale_1d_artifact_runs() {
     // The Table-I grid (194400 points) end to end through the runtime.
-    let mut rt = rt();
+    let rt = rt();
     let mut rng = XorShift::new(46);
     let x = rng.normal_vec(194400);
     let c = symmetric_taps(8);
@@ -130,14 +130,14 @@ fn full_scale_1d_artifact_runs() {
 
 #[test]
 fn wrong_input_count_is_a_clean_error() {
-    let mut rt = rt();
+    let rt = rt();
     let x = vec![0.0; 256];
     assert!(rt.execute("stencil1d_r1_n256", &[&x]).is_err());
 }
 
 #[test]
 fn wrong_input_shape_is_a_clean_error() {
-    let mut rt = rt();
+    let rt = rt();
     let x = vec![0.0; 100]; // wrong length
     let c = vec![0.0; 3];
     assert!(rt.execute("stencil1d_r1_n256", &[&x, &c]).is_err());

@@ -1,0 +1,124 @@
+//! Serve-path tests for the compile-once/execute-many API: one
+//! `Arc<CompiledStencil>` executed concurrently from many threads must
+//! be bitwise-equal to sequential runs on both simulator cores, and a
+//! saved/loaded artifact must execute identically to the in-memory one.
+
+use std::sync::Arc;
+
+use stencil_cgra::cgra::{Machine, SimCore};
+use stencil_cgra::compile::{compile, CompileOptions, CompiledStencil, FuseMode};
+use stencil_cgra::session::Session;
+use stencil_cgra::stencil::StencilSpec;
+use stencil_cgra::util::rng::XorShift;
+use stencil_cgra::verify::golden::{max_abs_diff, stencil_ref_steps};
+
+#[test]
+fn session_and_compiled_stencil_are_send_sync() {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Session>();
+    assert_send_sync::<CompiledStencil>();
+    assert_send_sync::<Arc<CompiledStencil>>();
+}
+
+/// N threads, one shared artifact, distinct inputs: every thread's
+/// output and cycle counts must equal the sequential reference run,
+/// bitwise, on both scheduler cores.
+#[test]
+fn concurrent_runs_bitwise_equal_sequential_on_both_cores() {
+    let spec = StencilSpec::heat2d(32, 18, 0.2);
+    let steps = 2;
+    let opts = CompileOptions::default().with_workers(2).with_tiles(4);
+    let compiled = Arc::new(compile(&spec, steps, &opts).unwrap());
+
+    let inputs: Vec<Vec<f64>> = (0..4)
+        .map(|i| XorShift::new(0xA110 + i as u64).normal_vec(spec.grid_points()))
+        .collect();
+
+    for core in [SimCore::Dense, SimCore::Event] {
+        let session = Session::new(Arc::clone(&compiled), Machine::paper()).with_sim_core(core);
+
+        // Sequential reference.
+        let sequential: Vec<_> = inputs.iter().map(|x| session.run(x).unwrap()).collect();
+
+        // Concurrent: all four inputs at once through the same &Session.
+        let session_ref = &session;
+        let concurrent: Vec<_> = std::thread::scope(|scope| {
+            let handles: Vec<_> = inputs
+                .iter()
+                .map(|x| scope.spawn(move || session_ref.run(x).unwrap()))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+
+        for (i, (seq, conc)) in sequential.iter().zip(&concurrent).enumerate() {
+            assert_eq!(seq.output, conc.output, "core {core}, input {i}");
+            assert_eq!(seq.reports.len(), conc.reports.len());
+            for (a, b) in seq.reports.iter().zip(&conc.reports) {
+                assert_eq!(a.output, b.output, "core {core}, input {i}");
+                assert_eq!(a.makespan_cycles, b.makespan_cycles);
+                assert_eq!(a.total_cycles, b.total_cycles);
+            }
+            // And both match the iterated oracle.
+            let want = stencil_ref_steps(&spec, &inputs[i], steps);
+            assert!(max_abs_diff(&conc.output, &want) < 1e-11, "core {core}");
+        }
+    }
+}
+
+/// The two cores remain bit-identical through the session path.
+#[test]
+fn session_cores_agree_bitwise() {
+    let spec = StencilSpec::heat3d(12, 10, 8, 0.1);
+    let opts = CompileOptions::default().with_workers(2).with_tiles(4);
+    let compiled = Arc::new(compile(&spec, 1, &opts).unwrap());
+    let x = XorShift::new(0xC0FE).normal_vec(spec.grid_points());
+    let dense = Session::new(Arc::clone(&compiled), Machine::paper())
+        .with_sim_core(SimCore::Dense)
+        .run(&x)
+        .unwrap();
+    let event = Session::new(Arc::clone(&compiled), Machine::paper())
+        .with_sim_core(SimCore::Event)
+        .run(&x)
+        .unwrap();
+    assert_eq!(dense.output, event.output);
+    assert_eq!(dense.reports[0].makespan_cycles, event.reports[0].makespan_cycles);
+}
+
+/// Round-trip pin: a loaded artifact executes bitwise-identically to
+/// the artifact it was saved from — including a fused multi-stage
+/// schedule with a tail chunk.
+#[test]
+fn saved_artifact_executes_identically_after_load() {
+    let spec = StencilSpec::heat2d(28, 20, 0.2);
+    let steps = 5;
+    let opts = CompileOptions::default()
+        .with_workers(2)
+        .with_tiles(2)
+        .with_fuse(FuseMode::Spatial);
+    let compiled = compile(&spec, steps, &opts).unwrap();
+
+    let path = std::env::temp_dir().join(format!("scgra_roundtrip_{}.txt", std::process::id()));
+    compiled.save(&path).unwrap();
+    let loaded = CompiledStencil::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(loaded.spec, compiled.spec);
+    assert_eq!(loaded.steps, compiled.steps);
+    assert_eq!(loaded.workers, compiled.workers);
+    assert_eq!(loaded.stages.len(), compiled.stages.len());
+    for (a, b) in loaded.stages.iter().zip(&compiled.stages) {
+        assert_eq!(a.plan, b.plan);
+        assert_eq!(a.repeats, b.repeats);
+    }
+
+    let x = XorShift::new(0x10AD).normal_vec(spec.grid_points());
+    let mem = Session::new(Arc::new(compiled), Machine::paper()).run(&x).unwrap();
+    let disk = Session::new(Arc::new(loaded), Machine::paper()).run(&x).unwrap();
+    assert_eq!(mem.output, disk.output, "loaded artifact must execute bitwise");
+    assert_eq!(mem.reports.len(), disk.reports.len());
+    for (a, b) in mem.reports.iter().zip(&disk.reports) {
+        assert_eq!(a.output, b.output);
+        assert_eq!(a.makespan_cycles, b.makespan_cycles);
+        assert_eq!(a.fused_steps, b.fused_steps);
+    }
+}
