@@ -7,15 +7,23 @@
 //! check (outputs, cycles and memory stats are asserted equal).
 //! `EXPERIMENTS.md` §Perf records the before/after trajectory; the same
 //! numbers are written to `BENCH_sim.json` for machines (CI uploads it
-//! as an artifact on every push).
+//! as an artifact on every push). The halo-exchange section runs the
+//! same compiled workload under `--halo reload` and `--halo exchange`
+//! (bitwise-asserted equal) and writes its DRAM-traffic differential to
+//! `BENCH_exchange.json` for `EXPERIMENTS.md` §Exchange.
 //!
 //! Run: `cargo bench --bench sim_hotpath`
 //! Short mode (CI): `BENCH_QUICK=1 cargo bench --bench sim_hotpath`
 //! (1 iteration, no warmup — regression visibility, not statistics).
 
+use std::sync::Arc;
+
 use stencil_cgra::cgra::channel::Fifo;
 use stencil_cgra::cgra::{Machine, SimCore, Simulator, Token};
-use stencil_cgra::stencil::spec::{symmetric_taps, y_taps};
+use stencil_cgra::compile::{compile, CompileOptions, FuseMode, HaloMode};
+use stencil_cgra::session::Session;
+use stencil_cgra::stencil::decomp::DecompKind;
+use stencil_cgra::stencil::spec::{symmetric_taps, y_taps, z_taps};
 use stencil_cgra::stencil::{build_graph, StencilSpec};
 use stencil_cgra::util::bench;
 
@@ -123,6 +131,89 @@ fn sim_throughput(
     );
 }
 
+struct HaloRun {
+    mean_s: f64,
+    dram_reads: u64,
+    output: Vec<f64>,
+}
+
+/// Execute one compiled workload under `halo`, timing `Session::run`
+/// only (compilation happens once, outside the loop — the
+/// execute-many path is what exchange accelerates).
+fn time_halo(
+    name: &str,
+    spec: &StencilSpec,
+    steps: usize,
+    base: &CompileOptions,
+    halo: HaloMode,
+    sink: &mut bench::JsonSink,
+) -> HaloRun {
+    let x = vec![1.0; spec.grid_points()];
+    let compiled = Arc::new(compile(spec, steps, &base.clone().with_halo(halo)).unwrap());
+    let machine = compiled.options.machine.clone();
+    let session = Session::new(compiled, machine);
+    let (iters, warmup) = if quick() { (1, 0) } else { (3, 1) };
+    let mut dram = 0u64;
+    let mut exchanged = 0u64;
+    let mut makespan = 0u64;
+    let mut frac = 0.0f64;
+    let mut output = Vec::new();
+    let case = format!("{name}/{halo}");
+    let stats = bench::run(&case, warmup, iters, || {
+        let out = session.run(&x).unwrap();
+        dram = out.reports.iter().map(|r| r.dram_point_reads()).sum();
+        exchanged = out.reports.iter().map(|r| r.exchanged_points).sum();
+        makespan = out.reports.iter().map(|r| r.makespan_cycles).sum();
+        frac = out.final_report().redundant_read_fraction;
+        output = out.output;
+    });
+    println!(
+        "  -> {} sim cycles, {} DRAM point reads, {} exchanged points, \
+         final-chunk redundancy {:.4}",
+        makespan, dram, exchanged, frac
+    );
+    sink.record(
+        &stats,
+        &[
+            ("sim_cycles", makespan as f64),
+            ("dram_point_reads", dram as f64),
+            ("exchanged_points", exchanged as f64),
+            ("redundant_read_fraction_last", frac),
+        ],
+    );
+    HaloRun {
+        mean_s: stats.mean_s,
+        dram_reads: dram,
+        output,
+    }
+}
+
+/// §Exchange — reload-vs-exchange differential on one workload: same
+/// compiled plan twice, outputs asserted bitwise equal, steady-state
+/// DRAM traffic reported for both.
+fn halo_exchange_bench(
+    name: &str,
+    spec: &StencilSpec,
+    steps: usize,
+    base: &CompileOptions,
+    sink: &mut bench::JsonSink,
+) {
+    let reload = time_halo(name, spec, steps, base, HaloMode::Reload, sink);
+    let exchange = time_halo(name, spec, steps, base, HaloMode::Exchange, sink);
+    assert_eq!(
+        reload.output, exchange.output,
+        "{name}: exchange must be bitwise-identical to reload"
+    );
+    println!(
+        "  == DRAM point reads {} -> {} ({:.1}% saved), wall {:.3}s -> {:.3}s",
+        reload.dram_reads,
+        exchange.dram_reads,
+        100.0 * (1.0 - exchange.dram_reads as f64 / reload.dram_reads.max(1) as f64),
+        reload.mean_s,
+        exchange.mean_s,
+    );
+}
+
 fn main() {
     let mut sink = bench::JsonSink::new();
     let m = Machine::paper();
@@ -168,6 +259,34 @@ fn main() {
         3,
         &mut sink,
     );
+
+    bench::section("halo exchange vs reload (steady-state DRAM traffic)");
+    let mut xsink = bench::JsonSink::new();
+    // ny = 16 caps the trapezoid at depth 7, so 8 steps always split
+    // into at least two chunks — a warm chunk exists to exchange into.
+    halo_exchange_bench(
+        "2d_heat_96x16_t4_spatial_s8",
+        &StencilSpec::heat2d(96, 16, 0.2),
+        8,
+        &CompileOptions::default()
+            .with_workers(4)
+            .with_tiles(4)
+            .with_fuse(FuseMode::Spatial),
+        &mut xsink,
+    );
+    halo_exchange_bench(
+        "3d_acoustic_16tile_pencil_s4",
+        &StencilSpec::dim3(16, 20, 12, symmetric_taps(2), y_taps(2), z_taps(2)).unwrap(),
+        4,
+        &CompileOptions::default()
+            .with_workers(2)
+            .with_tiles(16)
+            .with_decomp(DecompKind::Pencil)
+            .with_fuse(FuseMode::Host),
+        &mut xsink,
+    );
+    let xpath = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_exchange.json");
+    xsink.write(xpath).expect("writing BENCH_exchange.json");
 
     bench::section("channel microbench");
     let mut f = Fifo::new(64, 1);

@@ -76,6 +76,11 @@ pub struct MemSys {
     /// these to schedule Load/Store wakeups).
     resolved: Vec<Ticket>,
     record_resolved: bool,
+    /// Halo-exchange mode: the whole input buffer is already resident on
+    /// the fabric (delivered by a neighboring tile's exchange or held
+    /// from this tile's previous chunk), so loads complete at hit
+    /// latency without touching the cache or DRAM.
+    fabric_resident: bool,
     pub stats: MemStats,
 }
 
@@ -103,8 +108,18 @@ impl MemSys {
             queue: VecDeque::new(),
             resolved: Vec::new(),
             record_resolved: false,
+            fabric_resident: false,
             stats: MemStats::default(),
         }
+    }
+
+    /// Mark the whole input buffer as fabric-resident (halo exchange):
+    /// every subsequent load is served at hit latency and counted in
+    /// [`MemStats::exchanged`] instead of going through the cache/DRAM
+    /// model. Purely a timing/accounting change — the functional value
+    /// read is identical either way, so outputs cannot differ.
+    pub fn set_fabric_resident(&mut self, on: bool) {
+        self.fabric_resident = on;
     }
 
     fn new_ticket(&mut self) -> Ticket {
@@ -189,6 +204,16 @@ impl MemSys {
     pub fn load(&mut self, addr: u64, now: u64) -> (f64, Ticket) {
         let val = self.input[addr as usize];
         self.stats.loads += 1;
+        if self.fabric_resident {
+            // Exchange hit: the word is already on fabric. Completion is
+            // known at issue (like a cache hit with no line-arrival
+            // bound), so the event core's sleep-until-completion path
+            // works unchanged and no resolved record is needed.
+            let t = self.new_ticket();
+            self.tickets[t as usize] = now + self.hit_latency;
+            self.stats.exchanged += 1;
+            return (val, t);
+        }
         let line = addr / self.line_words;
         let set = (line % self.sets.len() as u64) as usize;
         let t = self.new_ticket();
@@ -426,6 +451,22 @@ mod tests {
         let before = b.stats.clone();
         assert_eq!(b.advance_to(40, 100_000), None);
         assert_eq!(b.stats, before);
+    }
+
+    #[test]
+    fn fabric_resident_loads_bypass_cache_and_dram() {
+        let mut m = mk((0..256).map(|i| i as f64).collect());
+        m.set_fabric_resident(true);
+        let (v, t) = m.load(17, 5);
+        assert_eq!(v, 17.0, "functional value is unchanged");
+        // Completion is known at issue, at hit latency.
+        assert_eq!(m.completion(t), Some(5 + Machine::paper().cache_hit_latency as u64));
+        assert_eq!(m.stats.loads, 1);
+        assert_eq!(m.stats.exchanged, 1);
+        assert_eq!(m.stats.hits + m.stats.misses + m.stats.merged, 0);
+        assert!(!m.busy(), "no fill was queued");
+        m.step(6);
+        assert_eq!(m.stats.dram_read_bytes, 0);
     }
 
     #[test]

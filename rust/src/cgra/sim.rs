@@ -458,6 +458,20 @@ impl Simulator {
         self
     }
 
+    /// Mark the input buffer as fabric-resident (halo exchange): every
+    /// load completes at hit latency and counts in
+    /// [`super::stats::MemStats::exchanged`] instead of walking the
+    /// cache/DRAM model. Values are read functionally at issue either
+    /// way, so this changes timing and traffic accounting only — both
+    /// scheduler cores stay bit-identical on outputs by construction
+    /// (resident tickets have issue-time-known completions, exactly like
+    /// cache hits, so the event core's sleep-until-completion path needs
+    /// no new machinery).
+    pub fn with_fabric_resident(mut self, on: bool) -> Self {
+        self.mem.set_fabric_resident(on);
+        self
+    }
+
     /// Run to completion (DoneTree fires) and return the output + stats.
     pub fn run(self) -> Result<SimResult> {
         match self.core {

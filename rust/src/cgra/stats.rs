@@ -16,6 +16,10 @@ pub struct MemStats {
     /// Misses to lines that were previously resident (conflict misses).
     pub conflict_misses: u64,
     pub evictions: u64,
+    /// Loads served from a fabric-resident buffer (halo exchange): the
+    /// value never touches the cache or DRAM — a neighboring tile (or
+    /// this tile's previous chunk) already holds it on fabric.
+    pub exchanged: u64,
     pub dram_read_bytes: u64,
     pub dram_write_bytes: u64,
 }
@@ -34,6 +38,7 @@ impl MemStats {
             merged,
             conflict_misses,
             evictions,
+            exchanged,
             dram_read_bytes,
             dram_write_bytes,
         } = other;
@@ -44,6 +49,7 @@ impl MemStats {
         self.merged += merged;
         self.conflict_misses += conflict_misses;
         self.evictions += evictions;
+        self.exchanged += exchanged;
         self.dram_read_bytes += dram_read_bytes;
         self.dram_write_bytes += dram_write_bytes;
     }
@@ -52,12 +58,13 @@ impl MemStats {
         self.dram_read_bytes + self.dram_write_bytes
     }
 
-    /// Fraction of loads served without a DRAM fill.
+    /// Fraction of loads served without a DRAM fill (cache hits, MSHR
+    /// merges and fabric-resident exchange hits alike).
     pub fn reuse_ratio(&self) -> f64 {
         if self.loads == 0 {
             return 0.0;
         }
-        (self.hits + self.merged) as f64 / self.loads as f64
+        (self.hits + self.merged + self.exchanged) as f64 / self.loads as f64
     }
 }
 
@@ -191,6 +198,7 @@ mod tests {
             merged: 5,
             conflict_misses: 6,
             evictions: 7,
+            exchanged: 10,
             dram_read_bytes: 8,
             dram_write_bytes: 9,
         };
@@ -206,6 +214,7 @@ mod tests {
                 merged: 10,
                 conflict_misses: 12,
                 evictions: 14,
+                exchanged: 20,
                 dram_read_bytes: 16,
                 dram_write_bytes: 18,
             }

@@ -8,7 +8,9 @@
 //! the N-dim [`DecompPlan`] (including the §IV fused depth and a
 //! shallower tail chunk when `steps % depth != 0`), one **placed** DFG
 //! per distinct tile shape ([`PlacedGraph`]: validation, placement,
-//! channel latencies, evaluation order), and the halo-adjusted roofline
+//! channel latencies, evaluation order), the time-tiled boundary-ring
+//! schedule with its own depth-1 graphs ([`ring_stages`]), the
+//! per-chunk halo [`ExchangeSchedule`]s, and the halo-adjusted roofline
 //! — into an immutable, `Arc`-shareable [`CompiledStencil`].
 //!
 //! Execution never plans: [`crate::session::Session`] walks the
@@ -35,6 +37,7 @@ use crate::config::Config;
 use crate::roofline::{self, TiledAnalysis};
 use crate::runtime::artifact::{ArtifactMeta, Manifest};
 use crate::stencil::decomp::{self, DecompKind, DecompPlan, Tile};
+use crate::stencil::exchange::ExchangeSchedule;
 use crate::stencil::spec::StencilShape;
 use crate::stencil::{build_graph, temporal, StencilSpec};
 
@@ -78,6 +81,43 @@ impl std::fmt::Display for FuseMode {
     }
 }
 
+/// Where a chunk's halo (and, more broadly, its whole input) comes
+/// from at a chunk boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum HaloMode {
+    /// Tiles retain their buffers across chunks and ship halo faces to
+    /// neighbors through in-fabric channels
+    /// ([`crate::stencil::exchange`]); only the cold first chunk reads
+    /// the grid from DRAM, so the steady-state redundant-read fraction
+    /// is zero.
+    #[default]
+    Exchange,
+    /// Every chunk re-reads its full input box (grid + halo overlap)
+    /// from DRAM — the pre-exchange behaviour, kept as the differential
+    /// baseline.
+    Reload,
+}
+
+impl HaloMode {
+    /// Parse a CLI/config value (`exchange|reload`).
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "exchange" => HaloMode::Exchange,
+            "reload" => HaloMode::Reload,
+            other => bail!("unknown halo mode `{other}` (exchange|reload)"),
+        })
+    }
+}
+
+impl std::fmt::Display for HaloMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.pad(match self {
+            HaloMode::Exchange => "exchange",
+            HaloMode::Reload => "reload",
+        })
+    }
+}
+
 /// Everything the compile phase needs besides the workload itself.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CompileOptions {
@@ -93,6 +133,8 @@ pub struct CompileOptions {
     pub decomp: DecompKind,
     /// §IV temporal traversal for multi-step workloads.
     pub fuse: FuseMode,
+    /// Halo sourcing at chunk boundaries (exchange vs DRAM reload).
+    pub halo: HaloMode,
 }
 
 impl Default for CompileOptions {
@@ -104,6 +146,7 @@ impl Default for CompileOptions {
             fabric_tokens: decomp::DEFAULT_FABRIC_TOKENS,
             decomp: DecompKind::Auto,
             fuse: FuseMode::Auto,
+            halo: HaloMode::Exchange,
         }
     }
 }
@@ -147,6 +190,11 @@ impl CompileOptions {
         self
     }
 
+    pub fn with_halo(mut self, halo: HaloMode) -> Self {
+        self.halo = halo;
+        self
+    }
+
     /// Resolve the worker count: the explicit setting, or the §VI
     /// roofline-optimal pick when 0.
     pub fn resolve_workers(&self, spec: &StencilSpec) -> usize {
@@ -172,6 +220,22 @@ pub struct CompiledStage {
     /// tile's `[x, y, z]` input extents and shared by every same-extent
     /// tile.
     pub graphs: HashMap<[usize; 3], Arc<PlacedGraph>>,
+    /// Time-tiled boundary-ring schedule, one band-tile list per fused
+    /// layer `s = 1..=fused_steps` ([`temporal::ring_band_boxes`]):
+    /// depth-1 tiles that advance the ring outside
+    /// [`temporal::valid_box`] in lock-step with the fused trapezoid.
+    /// Empty at depth 1 (host chunks have no ring).
+    pub ring: Vec<Vec<Tile>>,
+    /// Placed depth-1 graphs for the ring tiles, keyed like [`Self::graphs`]
+    /// but kept separate: a ring tile and a fused tile with equal input
+    /// extents map to different pipelines.
+    pub ring_graphs: HashMap<[usize; 3], Arc<PlacedGraph>>,
+    /// Halo movement between consecutive chunks of this stage.
+    pub intra_exchange: ExchangeSchedule,
+    /// Halo movement entering this stage from the previous stage's last
+    /// chunk (`None` for the first stage — its first chunk is the cold
+    /// DRAM read).
+    pub entry_exchange: Option<ExchangeSchedule>,
 }
 
 impl CompiledStage {
@@ -179,6 +243,39 @@ impl CompiledStage {
     pub fn steps(&self) -> usize {
         self.plan.fused_steps * self.repeats
     }
+
+    /// Points of the boundary ring this stage computes per chunk.
+    pub fn ring_points(&self) -> usize {
+        self.ring
+            .last()
+            .map(|tiles| tiles.iter().map(|t| t.out_points()).sum())
+            .unwrap_or(0)
+    }
+}
+
+/// Workers for a depth-1 ring tile: the planned width clamped to the
+/// tile's output columns (band boxes can be narrower than the fused
+/// tiles the width was budgeted for).
+pub fn ring_workers(w: usize, tile: &Tile) -> usize {
+    w.min(tile.out_extent(0)).max(1)
+}
+
+/// The time-tiled ring schedule of a plan: band boxes per fused layer,
+/// as depth-1 tiles with single-step halos. A pure function of
+/// `(spec, plan)`, so [`CompiledStencil::parse`] rebuilds it exactly.
+pub fn ring_stages(spec: &StencilSpec, plan: &DecompPlan) -> Vec<Vec<Tile>> {
+    if plan.fused_steps <= 1 {
+        return Vec::new();
+    }
+    let r = [spec.rx, spec.ry, spec.rz];
+    (1..=plan.fused_steps)
+        .map(|s| {
+            temporal::ring_band_boxes(spec, plan.fused_steps, s)
+                .into_iter()
+                .map(|(lo, hi)| Tile::with_halo(lo, hi, r))
+                .collect()
+        })
+        .collect()
 }
 
 /// The immutable product of [`compile`]: plan + placed graphs +
@@ -216,6 +313,26 @@ impl CompiledStencil {
     /// Chunks one execution runs (= reports a session returns).
     pub fn total_chunks(&self) -> usize {
         self.stages.iter().map(|s| s.repeats).sum()
+    }
+
+    /// Workload-level redundant-read fraction under [`HaloMode::Reload`]:
+    /// per-stage plan fractions weighted by chunk count. The tail stage
+    /// re-reads `radii * T_tail` halos, not the primary depth's, so this
+    /// differs from stage 0's fraction whenever `steps % fused != 0` —
+    /// it equals the measured `Σ chunk inputs / (chunks * grid) - 1`.
+    /// Under [`HaloMode::Exchange`] only the cold first chunk pays it.
+    pub fn redundant_read_fraction(&self) -> f64 {
+        let grid = self.spec.grid_points() as f64;
+        let mut loaded = 0.0;
+        let mut chunks = 0.0;
+        for st in &self.stages {
+            loaded += st.plan.total_input_points() as f64 * st.repeats as f64;
+            chunks += st.repeats as f64;
+        }
+        if chunks == 0.0 {
+            return 0.0;
+        }
+        (loaded - grid * chunks) / (grid * chunks)
     }
 
     /// Distinct placed graphs across all stages.
@@ -318,6 +435,11 @@ impl CompiledStencil {
             fabric_tokens: cfg_num(&c, "options", "fabric_tokens")?,
             decomp: DecompKind::parse(cfg_str(&c, "options", "decomp")?)?,
             fuse: FuseMode::parse(cfg_str(&c, "options", "fuse")?)?,
+            // Tolerate pre-exchange artifacts that carry no halo line.
+            halo: match c.get("options", "halo") {
+                None => HaloMode::default(),
+                Some(v) => HaloMode::parse(v)?,
+            },
         };
         let steps: usize = cfg_num(&c, "options", "steps")?;
         let workers: usize = cfg_num(&c, "options", "resolved_workers")?;
@@ -342,9 +464,8 @@ impl CompiledStencil {
                 workers,
                 tiles: decomp::tiles_for_cuts_depth(&spec, cuts, fused_steps),
             };
-            let graphs =
-                placed_graphs(&spec, workers, fused_steps, &plan.tiles, &options.machine)?;
-            stages.push(CompiledStage { plan, repeats, graphs });
+            let prev = stages.last().map(|s: &CompiledStage| s.plan.clone());
+            stages.push(stage(&spec, workers, &options.machine, plan, repeats, prev.as_ref())?);
         }
         ensure!(!stages.is_empty(), "compiled artifact has no stages");
         let covered: usize = stages.iter().map(|s| s.steps()).sum();
@@ -385,17 +506,17 @@ pub fn compile(spec: &StencilSpec, steps: usize, opts: &CompileOptions) -> Resul
     let stages = match opts.fuse {
         FuseMode::Host => {
             let plan = decomp::plan(spec, w, opts.fabric_tokens, opts.decomp, opts.tiles)?;
-            vec![stage(spec, w, opts, plan, steps)?]
+            vec![stage(spec, w, &opts.machine, plan, steps, None)?]
         }
         FuseMode::Spatial | FuseMode::Auto => {
             let probe =
                 decomp::plan_fused(spec, w, opts.fabric_tokens, opts.decomp, opts.tiles, steps)?;
             let depth = probe.fused_steps;
             if depth == 1 {
-                vec![stage(spec, w, opts, probe, steps)?]
+                vec![stage(spec, w, &opts.machine, probe, steps, None)?]
             } else {
                 let (full, rem) = (steps / depth, steps % depth);
-                let mut v = vec![stage(spec, w, opts, probe, full)?];
+                let mut v = vec![stage(spec, w, &opts.machine, probe, full, None)?];
                 if rem > 0 {
                     // rem < depth, so a depth-rem plan is always
                     // feasible (buffering is monotone in depth) and the
@@ -408,7 +529,8 @@ pub fn compile(spec: &StencilSpec, steps: usize, opts: &CompileOptions) -> Resul
                         opts.tiles,
                         rem,
                     )?;
-                    v.push(stage(spec, w, opts, tail, 1)?);
+                    let prev = v[0].plan.clone();
+                    v.push(stage(spec, w, &opts.machine, tail, 1, Some(&prev))?);
                 }
                 v
             }
@@ -425,15 +547,40 @@ pub fn compile(spec: &StencilSpec, steps: usize, opts: &CompileOptions) -> Resul
     })
 }
 
+/// Finish one stage: place the fused graphs, attach the time-tiled ring
+/// schedule (with its own depth-1 placed graphs), and precompute the
+/// exchange schedules. Shared by [`compile`] and
+/// [`CompiledStencil::parse`] so a loaded artifact carries the same
+/// ring/exchange state as a fresh one.
 fn stage(
     spec: &StencilSpec,
     w: usize,
-    opts: &CompileOptions,
+    machine: &Machine,
     plan: DecompPlan,
     repeats: usize,
+    prev: Option<&DecompPlan>,
 ) -> Result<CompiledStage> {
-    let graphs = placed_graphs(spec, w, plan.fused_steps, &plan.tiles, &opts.machine)?;
-    Ok(CompiledStage { plan, repeats, graphs })
+    let graphs = placed_graphs(spec, w, plan.fused_steps, &plan.tiles, machine)?;
+    let ring = ring_stages(spec, &plan);
+    let mut ring_graphs: HashMap<[usize; 3], Arc<PlacedGraph>> = HashMap::new();
+    for t in ring.iter().flatten() {
+        let dims = [t.in_extent(0), t.in_extent(1), t.in_extent(2)];
+        if !ring_graphs.contains_key(&dims) {
+            let g = build_graph(&t.sub_spec(spec), ring_workers(w, t))?;
+            ring_graphs.insert(dims, Arc::new(PlacedGraph::new(g, machine)?));
+        }
+    }
+    let intra_exchange = ExchangeSchedule::build(spec, &plan, &plan);
+    let entry_exchange = prev.map(|p| ExchangeSchedule::build(spec, &plan, p));
+    Ok(CompiledStage {
+        plan,
+        repeats,
+        graphs,
+        ring,
+        ring_graphs,
+        intra_exchange,
+        entry_exchange,
+    })
 }
 
 /// Build one placed graph per distinct tile input shape — the dedup the
@@ -531,11 +678,21 @@ impl CompileCache {
     }
 }
 
-/// Canonical text key for the LRU — the same serialization `save` uses
-/// for the spec and options, so two requests share an entry iff their
-/// compiled artifacts would be identical.
+/// Canonical text key for the LRU — the `save` serialization of the
+/// spec and options plus a bit-pattern rendering of the machine floats.
+/// The save format prints machine floats with `Display` (so
+/// `Config::machine` can reparse them), but `Display` is not injective
+/// on f64 — every NaN payload prints `NaN` — so the key alone must
+/// carry the exact bits: two requests share an entry iff their compiled
+/// artifacts would be bitwise-identical.
 fn cache_key(spec: &StencilSpec, steps: usize, opts: &CompileOptions) -> String {
-    format!("{}{}", spec_text(spec), options_text(opts, steps))
+    let m = &opts.machine;
+    format!(
+        "{}{}machine_bits = \"{}\"\n",
+        spec_text(spec),
+        options_text(opts, steps),
+        bits_csv(&[m.clock_ghz, m.bw_gbps]),
+    )
 }
 
 fn bits_csv(v: &[f64]) -> String {
@@ -588,7 +745,7 @@ fn options_text(o: &CompileOptions, steps: usize) -> String {
          cache_hit_latency = {}\nmshr_per_load = {}\nmax_instr_per_pe = {}\n\
          hops_per_cycle = {}\n\
          [options]\nworkers = {}\ntiles = {}\nfabric_tokens = {}\n\
-         decomp = \"{}\"\nfuse = \"{}\"\nsteps = {}\n",
+         decomp = \"{}\"\nfuse = \"{}\"\nhalo = \"{}\"\nsteps = {}\n",
         m.clock_ghz,
         m.grid_rows,
         m.grid_cols,
@@ -606,6 +763,7 @@ fn options_text(o: &CompileOptions, steps: usize) -> String {
         o.fabric_tokens,
         o.decomp,
         o.fuse,
+        o.halo,
         steps,
     )
 }
@@ -768,5 +926,95 @@ mod tests {
         // Different steps / options are different keys.
         let a3 = cache.get_or_compile(&a, 2, &opts).unwrap();
         assert!(!Arc::ptr_eq(&a2, &a3));
+    }
+
+    #[test]
+    fn cache_key_distinguishes_bitwise_different_machine_floats() {
+        // `Display` collapses every NaN payload to "NaN" and (on older
+        // toolchains) -0.0 to "0"; the key must keep the exact bits so
+        // such machines never share an artifact.
+        let spec = StencilSpec::heat2d(10, 8, 0.2);
+        let nan_a = f64::from_bits(0x7ff8_0000_0000_0000);
+        let nan_b = f64::from_bits(0x7ff8_0000_0000_0001);
+        for (x, y) in [(nan_a, nan_b), (0.0, -0.0)] {
+            let mk = |bw: f64| {
+                CompileOptions::default()
+                    .with_workers(1)
+                    .with_machine(Machine { bw_gbps: bw, ..Machine::paper() })
+            };
+            let ka = cache_key(&spec, 1, &mk(x));
+            let kb = cache_key(&spec, 1, &mk(y));
+            assert_ne!(ka, kb, "bits {:016x} vs {:016x}", x.to_bits(), y.to_bits());
+            let cache = CompileCache::new(4);
+            let ca = cache.get_or_compile(&spec, 1, &mk(x)).unwrap();
+            let cb = cache.get_or_compile(&spec, 1, &mk(y)).unwrap();
+            assert!(!Arc::ptr_eq(&ca, &cb), "distinct machines collided");
+            assert_eq!(cache.len(), 2);
+        }
+    }
+
+    #[test]
+    fn fused_stages_carry_ring_and_exchange_schedules() {
+        let spec = StencilSpec::heat2d(40, 24, 0.2);
+        let opts = CompileOptions::default()
+            .with_workers(2)
+            .with_tiles(2)
+            .with_fuse(FuseMode::Spatial);
+        let c = compile(&spec, 7, &opts).unwrap();
+        let depth = c.fused_steps();
+        assert!(depth > 1);
+        let st = &c.stages[0];
+        assert_eq!(st.ring.len(), depth);
+        assert_eq!(st.ring_points(), temporal::ring_point_count(&spec, depth));
+        // Every ring tile has a placed depth-1 graph and stays in-grid.
+        for t in st.ring.iter().flatten() {
+            let dims = [t.in_extent(0), t.in_extent(1), t.in_extent(2)];
+            assert!(st.ring_graphs.contains_key(&dims));
+            assert!(t.in_hi[0] <= spec.nx && t.in_hi[1] <= spec.ny);
+        }
+        // Exchange: stage 0 has no entry (cold chunk); the tail stage
+        // enters from stage 0's plan.
+        assert!(st.entry_exchange.is_none());
+        assert_eq!(st.intra_exchange.tiles.len(), st.plan.tiles.len());
+        if c.stages.len() == 2 {
+            assert!(c.stages[1].entry_exchange.is_some());
+        }
+        // Host chunks have no ring.
+        let host = compile(
+            &spec,
+            2,
+            &CompileOptions::default().with_workers(2).with_fuse(FuseMode::Host),
+        )
+        .unwrap();
+        assert!(host.stages[0].ring.is_empty());
+        assert_eq!(host.stages[0].ring_points(), 0);
+    }
+
+    #[test]
+    fn artifact_round_trip_preserves_halo_ring_and_exchange() {
+        let spec = StencilSpec::heat2d(40, 24, 0.2);
+        let opts = CompileOptions::default()
+            .with_workers(2)
+            .with_tiles(2)
+            .with_fuse(FuseMode::Spatial)
+            .with_halo(HaloMode::Reload);
+        let c = compile(&spec, 7, &opts).unwrap();
+        let back = CompiledStencil::parse(&c.to_text()).unwrap();
+        assert_eq!(back.options.halo, HaloMode::Reload);
+        for (a, b) in back.stages.iter().zip(&c.stages) {
+            assert_eq!(a.ring, b.ring);
+            assert_eq!(a.intra_exchange, b.intra_exchange);
+            assert_eq!(a.entry_exchange, b.entry_exchange);
+            assert_eq!(a.ring_graphs.len(), b.ring_graphs.len());
+        }
+        // Artifacts that predate the halo line parse to the default.
+        let stripped: String = c
+            .to_text()
+            .lines()
+            .filter(|l| !l.starts_with("halo = "))
+            .map(|l| format!("{l}\n"))
+            .collect();
+        let old = CompiledStencil::parse(&stripped).unwrap();
+        assert_eq!(old.options.halo, HaloMode::Exchange);
     }
 }

@@ -10,7 +10,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::cgra::{Machine, SimCore};
-use crate::compile::{CompileOptions, FuseMode};
+use crate::compile::{CompileOptions, FuseMode, HaloMode};
 use crate::stencil::decomp::{self, DecompKind};
 use crate::stencil::StencilSpec;
 
@@ -163,8 +163,9 @@ impl Config {
 
     /// `[run]` knobs: workers (0 = roofline-optimal), tiles, steps,
     /// decomposition kind (`decomp = "slab|pencil|block|auto"`),
-    /// simulator core (`sim_core = "dense|event"`) and §IV fuse mode
-    /// (`fuse = "host|spatial|auto"`, default auto).
+    /// simulator core (`sim_core = "dense|event"`), §IV fuse mode
+    /// (`fuse = "host|spatial|auto"`, default auto) and halo mode
+    /// (`halo = "exchange|reload"`, default exchange).
     pub fn run_params(&self) -> Result<RunParams> {
         let decomp = match self.get("run", "decomp") {
             None => DecompKind::Auto,
@@ -178,6 +179,10 @@ impl Config {
             None => FuseMode::Auto,
             Some(v) => FuseMode::parse(v)?,
         };
+        let halo = match self.get("run", "halo") {
+            None => HaloMode::default(),
+            Some(v) => HaloMode::parse(v)?,
+        };
         Ok(RunParams {
             workers: self.num("run", "workers", 0usize)?,
             tiles: self.num("run", "tiles", 1usize)?,
@@ -186,6 +191,7 @@ impl Config {
             decomp,
             sim_core,
             fuse,
+            halo,
         })
     }
 
@@ -201,6 +207,7 @@ impl Config {
             fabric_tokens: decomp::DEFAULT_FABRIC_TOKENS,
             decomp: p.decomp,
             fuse: p.fuse,
+            halo: p.halo,
         })
     }
 }
@@ -220,6 +227,9 @@ pub struct RunParams {
     /// §IV temporal traversal for multi-step runs (default auto: fuse
     /// spatially when the fabric budget admits depth >= 2).
     pub fuse: FuseMode,
+    /// Chunk-boundary halo movement (default exchange: in-fabric
+    /// channels, no redundant DRAM reads after the cold chunk).
+    pub halo: HaloMode,
 }
 
 impl Default for RunParams {
@@ -235,6 +245,7 @@ impl Default for RunParams {
             decomp: DecompKind::Auto,
             sim_core: SimCore::default(),
             fuse: FuseMode::Auto,
+            halo: HaloMode::default(),
         }
     }
 }
@@ -354,6 +365,18 @@ tiles = 16
         let c = Config::parse("[run]\nfuse = \"host\"\n").unwrap();
         assert_eq!(c.run_params().unwrap().fuse, FuseMode::Host);
         let c = Config::parse("[run]\nfuse = \"temporal\"\n").unwrap();
+        assert!(c.run_params().is_err());
+    }
+
+    #[test]
+    fn halo_mode_parses_defaults_and_rejects() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.run_params().unwrap().halo, HaloMode::Exchange);
+        let c = Config::parse("[run]\nhalo = \"reload\"\n").unwrap();
+        assert_eq!(c.run_params().unwrap().halo, HaloMode::Reload);
+        let c = Config::parse("[run]\nhalo = \"exchange\"\n").unwrap();
+        assert_eq!(c.run_params().unwrap().halo, HaloMode::Exchange);
+        let c = Config::parse("[run]\nhalo = \"teleport\"\n").unwrap();
         assert!(c.run_params().is_err());
     }
 

@@ -12,6 +12,7 @@
 //! the MAC budget (`#MACs / points` workers fit).
 
 use crate::cgra::Machine;
+use crate::compile::HaloMode;
 use crate::stencil::decomp::DecompPlan;
 use crate::stencil::spec::BYTES_PER_POINT;
 use crate::stencil::{temporal, StencilSpec};
@@ -107,8 +108,28 @@ pub fn analyze_tiled(
     plan: &DecompPlan,
     array_tiles: usize,
 ) -> TiledAnalysis {
+    analyze_tiled_halo(spec, m, w, plan, array_tiles, HaloMode::Reload)
+}
+
+/// [`analyze_tiled`] with the halo mode made explicit: under
+/// [`HaloMode::Exchange`] the geometric overlap moves over in-fabric
+/// channels instead of DRAM, so the redundant-read term drops out of the
+/// steady-state byte count and the effective intensity recovers the
+/// halo-free fused value. `Reload` charges the plan's full overlap — the
+/// differential baseline.
+pub fn analyze_tiled_halo(
+    spec: &StencilSpec,
+    m: &Machine,
+    w: usize,
+    plan: &DecompPlan,
+    array_tiles: usize,
+    halo: HaloMode,
+) -> TiledAnalysis {
     let base = analyze(spec, m, w);
-    let redundant = plan.redundant_read_fraction(spec);
+    let redundant = match halo {
+        HaloMode::Reload => plan.redundant_read_fraction(spec),
+        HaloMode::Exchange => 0.0,
+    };
     let fused_steps = plan.fused_steps.max(1);
     // One fused chunk: read the grid (1 + redundant) times, write it
     // once, compute fused_steps trapezoid layers.
@@ -233,6 +254,26 @@ mod tests {
                 .abs()
                 < 1e-9
         );
+    }
+
+    #[test]
+    fn exchange_recovers_the_halo_free_intensity() {
+        use crate::stencil::decomp::{self, DecompKind};
+        let spec = StencilSpec::heat3d(24, 20, 16, 0.1);
+        let m = Machine::paper();
+        let w = 2;
+        let multi =
+            decomp::plan(&spec, w, decomp::DEFAULT_FABRIC_TOKENS, DecompKind::Pencil, 16)
+                .unwrap();
+        let reload = analyze_tiled_halo(&spec, &m, w, &multi, 16, HaloMode::Reload);
+        let exch = analyze_tiled_halo(&spec, &m, w, &multi, 16, HaloMode::Exchange);
+        assert!(reload.redundant_read_fraction > 0.0);
+        assert_eq!(exch.redundant_read_fraction, 0.0);
+        assert!(exch.effective_ai > reload.effective_ai);
+        // With the overlap gone, the effective intensity is the
+        // whole-grid single-step value again.
+        assert!((exch.effective_ai - exch.base.arithmetic_intensity).abs() < 1e-12);
+        assert!(exch.attainable_gflops_tile >= reload.attainable_gflops_tile);
     }
 
     #[test]

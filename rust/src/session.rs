@@ -4,31 +4,50 @@
 //! [`Machine`] and executes it against input grids — any number of
 //! times, from any number of threads ([`Session`] is `Send + Sync` and
 //! [`Session::run`] takes `&self`). Execution walks the artifact's
-//! stages in order: each chunk decomposes the grid into the plan's
-//! halo-padded tiles, pushes [`TileTask`]s into a shared queue, and
-//! spawns one OS thread per hardware tile. Tiles pull greedily (natural
-//! load balancing — the same work-stealing effect §IV's hybrid
-//! algorithm relies on), instantiate a simulator over the stage's
-//! shared placed graph ([`Simulator::from_placed`] — no re-validation,
-//! no re-placement, no graph clone), and send results back over a
-//! channel. The leader merges owned outputs into the global grid; the
-//! reported makespan is the slowest tile's total, which is what 16
-//! parallel tiles would take on silicon.
+//! stages in order; each chunk runs three precompiled pieces:
+//!
+//! 1. **Fused tiles** — the grid decomposes into the plan's halo-padded
+//!    tiles, [`TileTask`]s go into a shared queue, and one OS thread
+//!    per hardware tile pulls greedily (natural load balancing),
+//!    instantiating a simulator over the stage's shared placed graph
+//!    ([`Simulator::from_placed`] — no re-validation, no re-placement,
+//!    no graph clone). The leader merges owned outputs into the global
+//!    grid; the reported makespan is the slowest tile's total.
+//! 2. **Time-tiled ring stages** — at fused depth `T > 1` the trapezoid
+//!    only writes [`crate::stencil::temporal::valid_box`]; the
+//!    artifact's per-layer band tiles
+//!    ([`crate::compile::CompiledStage::ring`]) advance the boundary
+//!    ring one step per stage against a scratch copy of the chunk
+//!    input, and the final band — exactly the ring — is copied into the
+//!    chunk output. That makes every chunk bitwise-equal to the
+//!    iterated oracle on the **full** grid, not just the valid box.
+//! 3. **Halo exchange** — under [`HaloMode::Exchange`] (the default)
+//!    tiles retain their buffers across chunks, so every chunk after
+//!    the cold first one finds its whole input fabric-resident: the
+//!    compile-time [`ExchangeSchedule`] says which neighbor shipped
+//!    each halo face, the simulators run with
+//!    [`Simulator::with_fabric_resident`] (loads complete at hit
+//!    latency, no cache/DRAM traffic — a timing/accounting change only,
+//!    so exchange and reload runs are bitwise-identical), and the
+//!    report's `redundant_read_fraction` drops to zero.
+//!    [`HaloMode::Reload`] keeps the old re-read-everything behaviour
+//!    as the differential baseline.
 //!
 //! Nothing here plans or builds graphs — the
 //! [`crate::stencil::metrics`] counters stay flat across `run` calls,
 //! which `rust/tests/compile_once.rs` pins.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
 use anyhow::{ensure, Context, Result};
 
 use crate::cgra::stats::MemStats;
-use crate::cgra::{Machine, PlacedGraph, SimCore, Simulator};
-use crate::compile::CompiledStencil;
-use crate::stencil::decomp::{DecompKind, DecompPlan, Tile};
+use crate::cgra::{Machine, PlacedGraph, SimCore, SimResult, Simulator};
+use crate::compile::{CompiledStage, CompiledStencil, HaloMode};
+use crate::stencil::decomp::{DecompKind, Tile};
+use crate::stencil::exchange::ExchangeSchedule;
 use crate::stencil::{temporal, StencilSpec};
 
 /// One unit of work: a halo-padded tile of the global grid.
@@ -73,8 +92,21 @@ pub struct RunReport {
     pub fused_steps: usize,
     /// Total halo points loaded across tasks (redundant-load overhead).
     pub halo_points: u64,
-    /// Fraction of the grid read more than once because of halo overlap.
+    /// Fraction of the grid this chunk read from DRAM more than once.
+    /// Equal to the plan's geometric overlap for cold chunks and reload
+    /// mode; 0 for a warm exchange chunk (the halo arrived over fabric
+    /// channels instead).
     pub redundant_read_fraction: f64,
+    /// Points this chunk received through in-fabric halo exchange
+    /// instead of DRAM (0 for cold chunks and reload mode).
+    pub exchanged_points: u64,
+    /// Boundary-ring points the time-tiled band stages computed and
+    /// merged into the output (0 at fused depth 1 — there is no ring).
+    pub ring_points: u64,
+    /// Memory counters of the ring band stages, kept separate from
+    /// `per_tile` so [`Self::total_loads`] stays the §IV fused-pipeline
+    /// currency.
+    pub ring_mem: MemStats,
     /// Slowest tile's total cycles — the parallel makespan.
     pub makespan_cycles: u64,
     /// Sum of cycles across tiles (serial-equivalent work).
@@ -88,12 +120,26 @@ pub struct RunReport {
 }
 
 impl RunReport {
-    /// Total grid-point loads across the tile array — the §IV currency:
-    /// a fused chunk loads its input once regardless of depth, so at
-    /// equal total steps a spatially-fused run loads strictly less than
-    /// the host-driven loop.
+    /// Total grid-point loads across the fused tile array — the §IV
+    /// currency: a fused chunk loads its input once regardless of depth,
+    /// so at equal total steps a spatially-fused run loads strictly less
+    /// than the host-driven loop. Exchange hits still count (the load
+    /// issued; it was just served from fabric — see
+    /// [`Self::dram_point_reads`]), and ring-stage loads are accounted
+    /// separately in [`Self::ring_mem`].
     pub fn total_loads(&self) -> u64 {
         self.per_tile.iter().map(|t| t.mem.loads).sum()
+    }
+
+    /// Loads the fused tiles actually sent to the cache/DRAM side: total
+    /// loads minus fabric-resident exchange hits. Zero for a warm
+    /// exchange chunk — the measurement behind the reported
+    /// post-exchange `redundant_read_fraction`.
+    pub fn dram_point_reads(&self) -> u64 {
+        self.per_tile
+            .iter()
+            .map(|t| t.mem.loads - t.mem.exchanged)
+            .sum()
     }
 }
 
@@ -172,21 +218,36 @@ impl Session {
             input.len(),
             spec.grid_points()
         );
+        let halo = self.compiled.options.halo;
         let mut reports: Vec<RunReport> = Vec::with_capacity(self.compiled.total_chunks());
         for stage in &self.compiled.stages {
-            for _ in 0..stage.repeats {
+            for rep_i in 0..stage.repeats {
                 let src: &[f64] = match reports.last() {
                     None => input,
                     Some(prev) => prev.output.as_slice(),
                 };
-                let rep = execute_stage(
+                // The first chunk of the run is cold (its input comes
+                // from DRAM no matter what); afterwards, exchange mode
+                // finds the previous chunk's results fabric-resident —
+                // via the intra-stage schedule between repeats, or the
+                // entry schedule when crossing into the tail stage.
+                let exchange = if halo == HaloMode::Exchange && !reports.is_empty() {
+                    Some(if rep_i == 0 {
+                        stage.entry_exchange.as_ref().unwrap_or(&stage.intra_exchange)
+                    } else {
+                        &stage.intra_exchange
+                    })
+                } else {
+                    None
+                };
+                let rep = execute_chunk(
                     &self.machine,
                     self.tiles,
                     self.sim_core,
                     spec,
                     src,
-                    &stage.plan,
-                    &stage.graphs,
+                    stage,
+                    exchange,
                 )?;
                 reports.push(rep);
             }
@@ -199,39 +260,21 @@ impl Session {
     }
 }
 
-/// Execute one chunk: decompose `input` per `plan`, run every tile task
-/// on the `hw_tiles`-thread pool against the shared placed graphs, and
-/// merge the owned outputs. The shared core of [`Session::run`] and the
-/// legacy [`crate::coordinator::Coordinator`] shim.
-pub(crate) fn execute_stage(
+/// Run a batch of tile tasks on the `hw_tiles`-thread pool and return
+/// every `(hardware tile, task tile, result)` triple. With `resident`
+/// set, simulators treat the whole input as fabric-resident
+/// ([`Simulator::with_fabric_resident`]) — warm halo-exchange chunks.
+fn run_pool(
     machine: &Machine,
     hw_tiles: usize,
     core: SimCore,
-    spec: &StencilSpec,
-    input: &[f64],
-    plan: &DecompPlan,
-    graphs: &HashMap<[usize; 3], Arc<PlacedGraph>>,
-) -> Result<RunReport> {
-    ensure!(
-        input.len() == spec.grid_points(),
-        "input length {} != grid {}",
-        input.len(),
-        spec.grid_points()
-    );
-    let t0 = std::time::Instant::now();
-    let tasks: VecDeque<TileTask> = plan
-        .tiles
-        .iter()
-        .enumerate()
-        .map(|(id, t)| TileTask {
-            id,
-            tile: *t,
-            input: t.extract(spec, input),
-            graph: Arc::clone(&graphs[&[t.in_extent(0), t.in_extent(1), t.in_extent(2)]]),
-        })
-        .collect();
+    resident: bool,
+    tasks: VecDeque<TileTask>,
+) -> Result<Vec<(usize, Tile, SimResult)>> {
     let n_tasks = tasks.len();
-
+    if n_tasks == 0 {
+        return Ok(Vec::new());
+    }
     let queue = Arc::new(Mutex::new(tasks));
     let (tx, rx) = mpsc::channel();
     let mut handles = Vec::new();
@@ -251,6 +294,7 @@ pub(crate) fn execute_stage(
                 );
                 let res = sim
                     .with_core(core)
+                    .with_fabric_resident(resident)
                     .run()
                     .with_context(|| format!("tile task {}", task.id))?;
                 tx.send((tile_id, task.tile, res)).ok();
@@ -259,31 +303,130 @@ pub(crate) fn execute_stage(
         }));
     }
     drop(tx);
+    let results: Vec<(usize, Tile, SimResult)> = rx.into_iter().collect();
+    for h in handles {
+        h.join().expect("tile thread panicked")?;
+    }
+    ensure!(
+        results.len() == n_tasks,
+        "lost tile results: {}/{n_tasks}",
+        results.len()
+    );
+    Ok(results)
+}
+
+/// Copy the `[lo, hi)` box from `src` into `dst` (both full grids).
+fn copy_box(spec: &StencilSpec, dst: &mut [f64], src: &[f64], lo: [usize; 3], hi: [usize; 3]) {
+    let (nx, ny) = (spec.nx, spec.ny);
+    for z in lo[2]..hi[2] {
+        for y in lo[1]..hi[1] {
+            let row = (z * ny + y) * nx;
+            dst[row + lo[0]..row + hi[0]].copy_from_slice(&src[row + lo[0]..row + hi[0]]);
+        }
+    }
+}
+
+/// Execute one chunk: decompose `input` per the stage's plan, run every
+/// fused tile task on the `hw_tiles`-thread pool against the shared
+/// placed graphs, merge the owned outputs, then advance the boundary
+/// ring through the stage's time-tiled band tiles so the chunk output
+/// equals the iterated oracle on the full grid. The shared core of
+/// [`Session::run`] and the legacy [`crate::coordinator::Coordinator`]
+/// shim. `exchange` is `Some` for a warm chunk under
+/// [`HaloMode::Exchange`]: every simulator runs fabric-resident and the
+/// schedule's shipped-point count lands in the report.
+pub(crate) fn execute_chunk(
+    machine: &Machine,
+    hw_tiles: usize,
+    core: SimCore,
+    spec: &StencilSpec,
+    input: &[f64],
+    stage: &CompiledStage,
+    exchange: Option<&ExchangeSchedule>,
+) -> Result<RunReport> {
+    ensure!(
+        input.len() == spec.grid_points(),
+        "input length {} != grid {}",
+        input.len(),
+        spec.grid_points()
+    );
+    let t0 = std::time::Instant::now();
+    let plan = &stage.plan;
+    let resident = exchange.is_some();
+    let tasks: VecDeque<TileTask> = plan
+        .tiles
+        .iter()
+        .enumerate()
+        .map(|(id, t)| TileTask {
+            id,
+            tile: *t,
+            input: t.extract(spec, input),
+            graph: Arc::clone(&stage.graphs[&[t.in_extent(0), t.in_extent(1), t.in_extent(2)]]),
+        })
+        .collect();
+    let n_tasks = tasks.len();
+    let results = run_pool(machine, hw_tiles, core, resident, tasks)?;
 
     // Merge owned outputs into the global grid (boundary = input copy).
     let mut output = input.to_vec();
     let mut per_tile = vec![TileReport::default(); hw_tiles];
-    let mut received = 0;
-    for (tile_id, tile, res) in rx {
+    for (tile_id, tile, res) in results {
         tile.merge(spec, &mut output, &res.output);
         let rep = &mut per_tile[tile_id];
         rep.strips += 1;
         rep.cycles += res.stats.cycles;
         rep.halo_points += tile.halo_points() as u64;
         rep.mem.accumulate(&res.stats.mem);
-        received += 1;
     }
-    for h in handles {
-        h.join().expect("tile thread panicked")?;
+    let mut makespan = per_tile.iter().map(|t| t.cycles).max().unwrap_or(0);
+    let mut total_cycles: u64 = per_tile.iter().map(|t| t.cycles).sum();
+
+    // Time-tiled ring stages: band s advances the boundary ring to step
+    // s against a scratch copy of the chunk input; bands run after the
+    // fused trapezoid (a sequential barrier per stage), and the final
+    // band — exactly interior ∖ valid_box — lands in the chunk output.
+    let mut ring_mem = MemStats::default();
+    let mut ring_outputs: u64 = 0;
+    if !stage.ring.is_empty() {
+        let mut cur = input.to_vec();
+        for bands in &stage.ring {
+            let tasks: VecDeque<TileTask> = bands
+                .iter()
+                .enumerate()
+                .map(|(id, t)| TileTask {
+                    id,
+                    tile: *t,
+                    input: t.extract(spec, &cur),
+                    graph: Arc::clone(
+                        &stage.ring_graphs[&[t.in_extent(0), t.in_extent(1), t.in_extent(2)]],
+                    ),
+                })
+                .collect();
+            let results = run_pool(machine, hw_tiles, core, resident, tasks)?;
+            let mut stage_max = 0u64;
+            for (_, tile, res) in results {
+                tile.merge(spec, &mut cur, &res.output);
+                stage_max = stage_max.max(res.stats.cycles);
+                total_cycles += res.stats.cycles;
+                ring_mem.accumulate(&res.stats.mem);
+                ring_outputs += tile.out_points() as u64;
+            }
+            makespan += stage_max;
+        }
+        if let Some(last) = stage.ring.last() {
+            for t in last {
+                copy_box(spec, &mut output, &cur, t.out_lo, t.out_hi);
+            }
+        }
     }
-    ensure!(received == n_tasks, "lost tile results: {received}/{n_tasks}");
+    let ring_points = stage.ring_points() as u64;
 
-    // Exact FLOP count from the spec (MUL = 1, MAC = 2 per output;
-    // fused plans sum the per-layer trapezoid interiors).
-    let total_flops = temporal::total_flops(spec, plan.fused_steps);
+    // Exact FLOP count from the spec (MUL = 1, MAC = 2 per output):
+    // fused plans sum the per-layer trapezoid interiors, plus one
+    // application per ring-band output.
+    let total_flops = temporal::total_flops(spec, plan.fused_steps)
+        + ring_outputs as f64 * spec.flops_per_output();
 
-    let makespan = per_tile.iter().map(|t| t.cycles).max().unwrap_or(0);
-    let total_cycles: u64 = per_tile.iter().map(|t| t.cycles).sum();
     let gflops = if makespan > 0 {
         total_flops * machine.clock_ghz / makespan as f64
     } else {
@@ -296,7 +439,14 @@ pub(crate) fn execute_stage(
         cuts: plan.cuts,
         fused_steps: plan.fused_steps,
         halo_points: plan.halo_points() as u64,
-        redundant_read_fraction: plan.redundant_read_fraction(spec),
+        redundant_read_fraction: if resident {
+            0.0
+        } else {
+            plan.redundant_read_fraction(spec)
+        },
+        exchanged_points: exchange.map(|s| s.exchanged_points()).unwrap_or(0) as u64,
+        ring_points,
+        ring_mem,
         makespan_cycles: makespan,
         total_cycles,
         total_flops,

@@ -20,15 +20,34 @@
 //! buffer-relevant axes: an x cut shrinks every row the delay lines
 //! hold; a y cut additionally shrinks the 3-D plane-buffer depth; z
 //! cuts never reduce buffering, only work. Tiles only share read-only
-//! halo input, so the coordinator executes them independently — halo
-//! re-reads are the price, accounted by
-//! [`DecompPlan::redundant_read_fraction`].
+//! halo input, so the coordinator executes them independently.
+//!
+//! **Where the halo bytes come from is a separate, per-chunk decision.**
+//! The plan records the overlap geometry —
+//! [`DecompPlan::redundant_read_fraction`] is the fraction of the grid
+//! that more than one tile reads — but whether that overlap costs DRAM
+//! traffic depends on the halo mode
+//! ([`crate::compile::HaloMode`]): under `reload` every chunk re-reads
+//! its full input box from memory, so the fraction is paid on every
+//! chunk; under `exchange` the [`crate::stencil::exchange`] schedule
+//! ships each halo point from the neighboring tile that owns it (or
+//! from this tile's own previous chunk) through in-fabric channels, so
+//! after the cold first chunk the fraction drops to zero. The planner
+//! itself is mode-independent: the same cuts, halos and graphs serve
+//! both modes, which is what makes the exchange-vs-reload differential
+//! suite a pure data-movement comparison.
 //!
 //! The §IV temporal dimension composes with the same machinery:
 //! [`plan_fused`] searches the deepest fused depth `T` whose per-tile
 //! `T`-layer pipeline ([`temporal::required_tokens`]) still fits the
 //! token budget, widening every tile halo to `radii * T` so a tile can
 //! compute `T` steps of its owned outputs with no inter-tile traffic.
+//! The fused trapezoid shrinks layer by layer — layer `ℓ` of a tile
+//! computes an interior narrowed by `radii * ℓ`, so the useful worker
+//! count shrinks with it ([`DecompPlan::layer_workers`]); the boundary
+//! ring outside [`temporal::valid_box`] is covered by the time-tiled
+//! band stages ([`temporal::ring_band_boxes`]) the compiler attaches to
+//! every fused stage.
 
 use anyhow::{bail, ensure, Result};
 
@@ -203,10 +222,34 @@ impl DecompPlan {
 
     /// Fraction of the grid read more than once because of halo
     /// overlap: `(Σ tile inputs - grid points) / grid points`. Zero for
-    /// a single tile.
+    /// a single tile. This is the *geometric* overlap; whether it costs
+    /// DRAM traffic depends on the halo mode (see the module docs).
     pub fn redundant_read_fraction(&self, spec: &StencilSpec) -> f64 {
         let grid = spec.grid_points() as f64;
         (self.total_input_points() as f64 - grid) / grid
+    }
+
+    /// Useful compute workers per fused layer, for the worst (narrowest)
+    /// tile: layer `ℓ` (0-based) of a `T`-deep pipeline writes an
+    /// interior narrowed by `rx * (ℓ + 1)` per side, so past workers
+    /// beyond that x-extent no output column remains to interleave. The
+    /// mapped graph keeps the planned uniform `workers` on every layer
+    /// (idle lanes simply stream); this view is the occupancy the
+    /// roofline and reports charge.
+    pub fn layer_workers(&self, spec: &StencilSpec) -> Vec<usize> {
+        let rx = spec.rx;
+        let min_in_x = self
+            .tiles
+            .iter()
+            .map(|t| t.in_extent(0))
+            .min()
+            .unwrap_or(spec.nx);
+        (1..=self.fused_steps)
+            .map(|l| {
+                let out_x = min_in_x.saturating_sub(2 * rx * l).max(1);
+                self.workers.min(out_x).max(1)
+            })
+            .collect()
     }
 }
 
@@ -757,6 +800,24 @@ mod tests {
         let spec = StencilSpec::paper_2d();
         let p = plan(&spec, 5, DEFAULT_FABRIC_TOKENS, DecompKind::Slab, 4).unwrap();
         assert_eq!(p.fused_steps, 1);
+    }
+
+    #[test]
+    fn layer_workers_taper_with_fused_depth() {
+        let spec = StencilSpec::heat2d(24, 16, 0.2);
+        let p = plan_fused(&spec, 4, DEFAULT_FABRIC_TOKENS, DecompKind::Slab, 2, 3).unwrap();
+        let lw = p.layer_workers(&spec);
+        assert_eq!(lw.len(), p.fused_steps);
+        // Monotone non-increasing, never zero, capped by the plan width.
+        for w in lw.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        assert!(lw.iter().all(|&w| w >= 1 && w <= p.workers));
+        // Worst tile: in-x = interior/2 + 2*r*T; layer ℓ keeps
+        // in-x - 2*(ℓ+1) columns.
+        let min_in_x = p.tiles.iter().map(|t| t.in_extent(0)).min().unwrap();
+        assert_eq!(lw[0], p.workers.min(min_in_x - 2));
+        assert_eq!(*lw.last().unwrap(), p.workers.min(min_in_x - 2 * p.fused_steps));
     }
 
     #[test]

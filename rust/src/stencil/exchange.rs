@@ -1,0 +1,271 @@
+//! Inter-tile halo exchange — the data-movement schedule that makes
+//! redundant DRAM halo reads disappear (ROADMAP open item 2).
+//!
+//! A [`DecompPlan`] gives every tile an input box that overlaps its
+//! neighbors' output boxes by `radii * fused_steps`. Under `reload`
+//! halo mode the overlap is re-read from DRAM on every chunk; under
+//! `exchange` it is shipped through in-fabric channels from whoever
+//! already holds the current value, StencilFlow-style. This module
+//! computes *who that is*, per receiving tile, for one chunk boundary:
+//!
+//! * **resident** — points the tile already holds: its own previous
+//!   output box, plus the immutable grid frame outside the single-step
+//!   interior (Dirichlet boundary — read once in the cold chunk, valid
+//!   forever).
+//! * **from_tiles** — points inside a *different* tile's previous
+//!   output box: a face/edge/corner transfer from that neighbor.
+//! * **from_ring** — points in the boundary ring between the previous
+//!   chunk's [`temporal::valid_box`] and the single-step interior,
+//!   freshly computed by the time-tiled band stages
+//!   ([`temporal::ring_band_boxes`]) and broadcast from wherever those
+//!   bands ran.
+//!
+//! The three classes partition each tile's input box exactly (previous
+//! output boxes tile the valid region, the ring and the frame are
+//! disjoint from them and each other), so
+//! `resident + exchanged == in_points` per tile — the invariant the
+//! accounting tests pin. The schedule is pure geometry computed at
+//! compile time; at run time a non-cold exchange chunk simply runs with
+//! the whole input buffer fabric-resident
+//! ([`crate::cgra::sim::Simulator::with_fabric_resident`]), which is a
+//! timing/accounting change only and therefore cannot perturb values —
+//! the basis of the exchange-vs-reload bitwise differential suite.
+
+use super::decomp::{DecompPlan, Tile};
+use super::spec::StencilSpec;
+use super::temporal;
+
+/// Where one receiving tile's input box comes from at a chunk boundary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TileExchange {
+    /// Points already on this tile: own previous outputs + immutable
+    /// grid frame.
+    pub resident: usize,
+    /// `(source tile index, points)` for every neighbor whose previous
+    /// output box overlaps this tile's input box.
+    pub from_tiles: Vec<(usize, usize)>,
+    /// Points from the previous chunk's time-tiled boundary ring.
+    pub from_ring: usize,
+}
+
+impl TileExchange {
+    /// Points shipped over fabric channels (everything not resident).
+    pub fn exchanged(&self) -> usize {
+        self.from_ring + self.from_tiles.iter().map(|&(_, n)| n).sum::<usize>()
+    }
+}
+
+/// The per-chunk exchange schedule: one [`TileExchange`] per tile of
+/// the *receiving* plan. Built against the plan of the chunk that just
+/// finished (`prev`), which may differ from the receiving plan at a
+/// stage boundary (e.g. full-depth stage → shallower tail stage).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExchangeSchedule {
+    pub tiles: Vec<TileExchange>,
+}
+
+/// Volume of the intersection of two `[lo, hi)` boxes.
+fn isect(alo: [usize; 3], ahi: [usize; 3], blo: [usize; 3], bhi: [usize; 3]) -> usize {
+    (0..3)
+        .map(|a| ahi[a].min(bhi[a]).saturating_sub(alo[a].max(blo[a])))
+        .product()
+}
+
+impl ExchangeSchedule {
+    /// Partition every receiving tile's input box by source. `prev` is
+    /// the plan of the chunk whose results are on fabric; tiles are
+    /// matched to array slots by index (slot `t` keeps its buffer across
+    /// chunks), so `plan.tiles[t]` receives `prev.tiles[t]`'s outputs
+    /// for free.
+    pub fn build(spec: &StencilSpec, plan: &DecompPlan, prev: &DecompPlan) -> Self {
+        let dims = [spec.nx, spec.ny, spec.nz];
+        let radii = [spec.rx, spec.ry, spec.rz];
+        let ilo = radii;
+        let ihi = [
+            dims[0] - radii[0],
+            dims[1] - radii[1],
+            dims[2] - radii[2],
+        ];
+        let (vlo, vhi) = temporal::valid_box(spec, prev.fused_steps);
+        let tiles = plan
+            .tiles
+            .iter()
+            .enumerate()
+            .map(|(t, tile)| Self::tile_exchange(tile, t, prev, ilo, ihi, vlo, vhi))
+            .collect();
+        Self { tiles }
+    }
+
+    fn tile_exchange(
+        tile: &Tile,
+        t: usize,
+        prev: &DecompPlan,
+        ilo: [usize; 3],
+        ihi: [usize; 3],
+        vlo: [usize; 3],
+        vhi: [usize; 3],
+    ) -> TileExchange {
+        let (lo, hi) = (tile.in_lo, tile.in_hi);
+        let total = tile.in_points();
+        let interior = isect(lo, hi, ilo, ihi);
+        let frame = total - interior;
+        let mut own = 0usize;
+        let mut from_tiles = Vec::new();
+        let mut in_valid = 0usize;
+        for (u, p) in prev.tiles.iter().enumerate() {
+            let v = isect(lo, hi, p.out_lo, p.out_hi);
+            in_valid += v;
+            if v == 0 {
+                continue;
+            }
+            if u == t {
+                own += v;
+            } else {
+                from_tiles.push((u, v));
+            }
+        }
+        // Previous output boxes tile the previous valid box exactly, so
+        // anything of the interior outside them is the boundary ring.
+        debug_assert_eq!(in_valid, isect(lo, hi, vlo, vhi));
+        let from_ring = interior - in_valid;
+        TileExchange {
+            resident: own + frame,
+            from_tiles,
+            from_ring,
+        }
+    }
+
+    /// Total points shipped over fabric channels this chunk boundary.
+    pub fn exchanged_points(&self) -> usize {
+        self.tiles.iter().map(|t| t.exchanged()).sum()
+    }
+
+    /// Total points already resident (no movement at all).
+    pub fn resident_points(&self) -> usize {
+        self.tiles.iter().map(|t| t.resident).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::decomp::{plan_depth, DecompKind, DEFAULT_FABRIC_TOKENS};
+    use crate::stencil::spec::{symmetric_taps, y_taps, z_taps};
+
+    fn plan_of(spec: &StencilSpec, kind: DecompKind, tiles: usize, steps: usize) -> DecompPlan {
+        plan_depth(spec, 2, DEFAULT_FABRIC_TOKENS, kind, tiles, steps).unwrap()
+    }
+
+    /// Brute-force point classification must match the box arithmetic.
+    fn check_partition(spec: &StencilSpec, plan: &DecompPlan, prev: &DecompPlan) {
+        let sched = ExchangeSchedule::build(spec, plan, prev);
+        let (nx, ny, nz) = (spec.nx, spec.ny, spec.nz);
+        let (rx, ry, rz) = (spec.rx, spec.ry, spec.rz);
+        let (vlo, vhi) = crate::stencil::temporal::valid_box(spec, prev.fused_steps);
+        for (t, (tile, ex)) in plan.tiles.iter().zip(&sched.tiles).enumerate() {
+            let mut resident = 0;
+            let mut ring = 0;
+            let mut from = vec![0usize; prev.tiles.len()];
+            for z in tile.in_lo[2]..tile.in_hi[2] {
+                for y in tile.in_lo[1]..tile.in_hi[1] {
+                    for x in tile.in_lo[0]..tile.in_hi[0] {
+                        let interior = (rx..nx - rx).contains(&x)
+                            && (ry..ny - ry).contains(&y)
+                            && (rz..nz - rz).contains(&z);
+                        if !interior {
+                            resident += 1; // immutable frame
+                            continue;
+                        }
+                        let owner = prev.tiles.iter().position(|p| {
+                            (p.out_lo[0]..p.out_hi[0]).contains(&x)
+                                && (p.out_lo[1]..p.out_hi[1]).contains(&y)
+                                && (p.out_lo[2]..p.out_hi[2]).contains(&z)
+                        });
+                        match owner {
+                            Some(u) if u == t => resident += 1,
+                            Some(u) => from[u] += 1,
+                            None => {
+                                // Must be the ring, not a coverage hole.
+                                let valid = (vlo[0]..vhi[0]).contains(&x)
+                                    && (vlo[1]..vhi[1]).contains(&y)
+                                    && (vlo[2]..vhi[2]).contains(&z);
+                                assert!(!valid, "valid point without an owner");
+                                ring += 1;
+                            }
+                        }
+                    }
+                }
+            }
+            assert_eq!(ex.resident, resident, "tile {t} resident");
+            assert_eq!(ex.from_ring, ring, "tile {t} ring");
+            let mut want: Vec<(usize, usize)> = from
+                .iter()
+                .enumerate()
+                .filter(|&(u, &n)| n > 0 && u != t)
+                .map(|(u, &n)| (u, n))
+                .collect();
+            want.sort_unstable();
+            let mut got = ex.from_tiles.clone();
+            got.sort_unstable();
+            assert_eq!(got, want, "tile {t} sources");
+            assert_eq!(ex.resident + ex.exchanged(), tile.in_points(), "tile {t} total");
+        }
+    }
+
+    #[test]
+    fn steady_state_partition_is_exact_2d() {
+        let spec = StencilSpec::heat2d(26, 18, 0.2);
+        for kind in [DecompKind::Slab, DecompKind::Block] {
+            for steps in [1usize, 2] {
+                let p = plan_of(&spec, kind, 4, steps);
+                check_partition(&spec, &p, &p);
+            }
+        }
+    }
+
+    #[test]
+    fn steady_state_partition_is_exact_3d_pencil() {
+        let spec =
+            StencilSpec::dim3(14, 12, 10, symmetric_taps(1), y_taps(1), z_taps(1)).unwrap();
+        let p = plan_of(&spec, DecompKind::Pencil, 6, 2);
+        assert!(p.tiles.len() >= 6);
+        check_partition(&spec, &p, &p);
+    }
+
+    #[test]
+    fn stage_transition_partition_is_exact() {
+        // Full-depth stage feeding a shallower tail stage: receiving
+        // tiles own the shrunk trapezoid, the previous valid box
+        // differs, and the schedule must still partition exactly.
+        let spec = StencilSpec::heat2d(26, 18, 0.2);
+        let full = plan_of(&spec, DecompKind::Slab, 4, 2);
+        let tail = plan_of(&spec, DecompKind::Slab, 4, 1);
+        check_partition(&spec, &tail, &full);
+        check_partition(&spec, &full, &tail);
+    }
+
+    #[test]
+    fn multi_tile_plans_exchange_their_halos() {
+        let spec = StencilSpec::heat2d(26, 18, 0.2);
+        let p = plan_of(&spec, DecompKind::Slab, 4, 1);
+        let s = ExchangeSchedule::build(&spec, &p, &p);
+        // Depth 1 has no ring; every halo point comes from a neighbor.
+        assert_eq!(s.exchanged_points(), p.halo_points());
+        assert!(s.tiles.iter().all(|t| t.from_ring == 0));
+        // Interior tiles have a left and a right source.
+        assert_eq!(s.tiles[1].from_tiles.len(), 2);
+    }
+
+    #[test]
+    fn single_tile_exchanges_only_the_ring() {
+        let spec = StencilSpec::heat2d(26, 18, 0.2);
+        let p = plan_of(&spec, DecompKind::Slab, 1, 2);
+        assert_eq!(p.tiles.len(), 1);
+        let s = ExchangeSchedule::build(&spec, &p, &p);
+        assert!(s.tiles[0].from_tiles.is_empty());
+        assert_eq!(
+            s.tiles[0].from_ring,
+            crate::stencil::temporal::ring_point_count(&spec, 2)
+        );
+    }
+}

@@ -19,9 +19,14 @@
 //!   mandatory buffering, and for multi-tile execution.
 //! * [`temporal`] — the §IV multi-time-step pipeline, shape-generic
 //!   (`temporal::build_nd` fuses `T` steps of any 1-D/2-D/3-D star or
-//!   box spec into one spatial pipeline).
+//!   box spec into one spatial pipeline), plus the time-tiled boundary
+//!   band geometry (`temporal::ring_band_boxes`).
+//! * [`exchange`] — the inter-tile halo-exchange schedule: which
+//!   neighbor ships each halo point at a chunk boundary, so steady-state
+//!   chunks re-read nothing from DRAM.
 
 pub mod decomp;
+pub mod exchange;
 pub mod filter;
 pub mod map1d;
 pub mod map2d;

@@ -218,6 +218,90 @@ pub fn valid_box(spec: &StencilSpec, steps: usize) -> ([usize; 3], [usize; 3]) {
     (lo, hi)
 }
 
+/// One out-box of a time-tiled boundary-ring stage: `[lo, hi)` per axis
+/// in `[x, y, z]` order. See [`ring_band_boxes`].
+pub type RingBox = ([usize; 3], [usize; 3]);
+
+fn push_if_nonempty(boxes: &mut Vec<RingBox>, lo: [usize; 3], hi: [usize; 3]) {
+    if (0..3).all(|a| lo[a] < hi[a]) {
+        boxes.push((lo, hi));
+    }
+}
+
+/// Time-tiled boundary-ring geometry (the trapezoid stages that make a
+/// fused chunk correct on the **full** interior, not just [`valid_box`]).
+///
+/// The `T`-deep fused pipeline only writes `[r*T, n - r*T)`; the ring
+/// between that box and the single-step interior `[r, n - r)` still
+/// needs its `T` time-steps. Stage `s` (1-based, `s = 1..=T`) computes
+/// the step-`s` values of **band** `s` = interior ∖ `B_s`, where `B_s`
+/// keeps width `w_s^a = r_a * (2T - s)` per axis. The bands telescope:
+///
+/// * Stage `s+1` reads only points of band `s` plus grid-boundary points
+///   (distance < `r` from the edge, which hold input values — exactly
+///   the oracle's Dirichlet copy): a band-`(s+1)` point is within
+///   `w_{s+1}^a = w_s^a - r_a` of the interior edge on some axis, so its
+///   distance-≤`r` neighbors stay outside `B_s`.
+/// * `w_T^a = r_a * T`, so band `T` = interior ∖ [`valid_box`] — exactly
+///   the ring the fused graph leaves stale.
+/// * At `T = 1`, `w_1^a = r_a` makes every band empty: unfused chunks
+///   need no ring stages, automatically.
+///
+/// Each band decomposes onion-style into at most `2 * ndim` disjoint
+/// boxes (z lo/hi slabs, then y, then x, shrinking the outer box after
+/// each axis); axes with radius 0 contribute nothing. When the grid is
+/// barely larger than `2 * r * T`, `B_s` clamps to empty and the band is
+/// the whole interior — still handled by the same decomposition.
+pub fn ring_band_boxes(spec: &StencilSpec, steps: usize, s: usize) -> Vec<RingBox> {
+    assert!(s >= 1 && s <= steps, "stage {s} outside 1..={steps}");
+    let dims = [spec.nx, spec.ny, spec.nz];
+    let radii = [spec.rx, spec.ry, spec.rz];
+    // Outer box: the single-step interior.
+    let mut olo = [radii[0], radii[1], radii[2]];
+    let mut ohi = [
+        dims[0].saturating_sub(radii[0]),
+        dims[1].saturating_sub(radii[1]),
+        dims[2].saturating_sub(radii[2]),
+    ];
+    if (0..3).any(|a| olo[a] >= ohi[a]) {
+        return Vec::new(); // empty interior: nothing to compute
+    }
+    let mut boxes = Vec::new();
+    for a in (0..3).rev() {
+        if radii[a] == 0 {
+            continue; // unused axis: band and interior agree
+        }
+        let w = radii[a] * (2 * steps - s);
+        let ilo = w.clamp(olo[a], ohi[a]);
+        let ihi = dims[a].saturating_sub(w).clamp(ilo, ohi[a]);
+        if ilo > olo[a] {
+            let mut hi = ohi;
+            hi[a] = ilo;
+            push_if_nonempty(&mut boxes, olo, hi);
+        }
+        if ohi[a] > ihi {
+            let mut lo = olo;
+            lo[a] = ihi;
+            push_if_nonempty(&mut boxes, lo, ohi);
+        }
+        olo[a] = ilo;
+        ohi[a] = ihi;
+    }
+    boxes
+}
+
+/// Points in the boundary ring a `steps`-deep fused chunk leaves to the
+/// time-tiled stages: the single-step interior minus [`valid_box`].
+/// Zero at `steps = 1`.
+pub fn ring_point_count(spec: &StencilSpec, steps: usize) -> usize {
+    let dims = [spec.nx, spec.ny, spec.nz];
+    let radii = [spec.rx, spec.ry, spec.rz];
+    let ext = |lo: usize, n: usize| n.saturating_sub(2 * lo);
+    let interior: usize = (0..3).map(|a| ext(radii[a], dims[a])).product();
+    let valid: usize = (0..3).map(|a| ext(radii[a] * steps, dims[a])).product();
+    interior.saturating_sub(valid)
+}
+
 /// Total FLOPs of one `steps`-deep fused application: layer `ℓ` computes
 /// the interior shrunk by `radii * (ℓ+1)` per axis, so deeper layers do
 /// slightly less work (the trapezoid tapers). `steps = 1` equals
@@ -751,5 +835,178 @@ mod tests {
         let t2 = total_flops(&spec, 2);
         assert!(t2 > spec.total_flops());
         assert!(t2 < 2.0 * spec.total_flops(), "deeper layers shrink");
+    }
+
+    /// All points of band `s`, flattened, in `(x, y, z)` form.
+    fn band_points(spec: &StencilSpec, steps: usize, s: usize) -> Vec<(usize, usize, usize)> {
+        let mut pts = Vec::new();
+        for (lo, hi) in ring_band_boxes(spec, steps, s) {
+            for z in lo[2]..hi[2] {
+                for y in lo[1]..hi[1] {
+                    for x in lo[0]..hi[0] {
+                        pts.push((x, y, z));
+                    }
+                }
+            }
+        }
+        pts
+    }
+
+    #[test]
+    fn ring_bands_empty_for_unfused_chunks() {
+        let specs = [
+            spec3(30),
+            StencilSpec::heat2d(18, 12, 0.2),
+            StencilSpec::heat3d(10, 8, 6, 0.1),
+        ];
+        for spec in &specs {
+            assert!(
+                ring_band_boxes(spec, 1, 1).is_empty(),
+                "dims {:?}",
+                spec.dims()
+            );
+            assert_eq!(ring_point_count(spec, 1), 0);
+        }
+    }
+
+    #[test]
+    fn last_band_is_exactly_the_ring() {
+        use std::collections::HashSet;
+        let cases = [
+            (spec3(30), 3usize),
+            (StencilSpec::heat2d(20, 14, 0.2), 3),
+            // nx = 7 clamps B_s to empty on x for the early stages.
+            (StencilSpec::heat2d(7, 14, 0.2), 3),
+            (StencilSpec::heat3d(12, 10, 8, 0.1), 2),
+            (
+                StencilSpec::box2d(16, 13, 1, 2, uniform_box_taps(1, 2, 0)).unwrap(),
+                2,
+            ),
+        ];
+        for (spec, steps) in &cases {
+            let band = band_points(spec, *steps, *steps);
+            let set: HashSet<_> = band.iter().copied().collect();
+            assert_eq!(band.len(), set.len(), "overlapping boxes, dims {:?}", spec.dims());
+            let (vlo, vhi) = valid_box(spec, *steps);
+            let (nx, ny, nz) = (spec.nx, spec.ny, spec.nz);
+            let (rx, ry, rz) = (spec.rx, spec.ry, spec.rz);
+            let mut want = HashSet::new();
+            for z in rz..nz - rz {
+                for y in ry..ny - ry {
+                    for x in rx..nx - rx {
+                        let inside = (vlo[0]..vhi[0]).contains(&x)
+                            && (vlo[1]..vhi[1]).contains(&y)
+                            && (vlo[2]..vhi[2]).contains(&z);
+                        if !inside {
+                            want.insert((x, y, z));
+                        }
+                    }
+                }
+            }
+            assert_eq!(set, want, "dims {:?} steps {steps}", spec.dims());
+            assert_eq!(ring_point_count(spec, *steps), want.len());
+        }
+    }
+
+    #[test]
+    fn band_reads_stay_within_previous_band_or_boundary() {
+        use std::collections::HashSet;
+        let cases = [
+            (StencilSpec::heat2d(20, 14, 0.2), 3usize),
+            (StencilSpec::heat2d(7, 14, 0.2), 3),
+            (StencilSpec::heat3d(12, 10, 8, 0.1), 2),
+        ];
+        for (spec, steps) in &cases {
+            let (nx, ny, nz) = (spec.nx, spec.ny, spec.nz);
+            let (rx, ry, rz) = (spec.rx, spec.ry, spec.rz);
+            let interior = |x: usize, y: usize, z: usize| {
+                (rx..nx - rx).contains(&x)
+                    && (ry..ny - ry).contains(&y)
+                    && (rz..nz - rz).contains(&z)
+            };
+            for s in 2..=*steps {
+                let prev: HashSet<_> = band_points(spec, *steps, s - 1).iter().copied().collect();
+                for (x, y, z) in band_points(spec, *steps, s) {
+                    for dz in -(rz as i64)..=rz as i64 {
+                        for dy in -(ry as i64)..=ry as i64 {
+                            for dx in -(rx as i64)..=rx as i64 {
+                                let q = (
+                                    (x as i64 + dx) as usize,
+                                    (y as i64 + dy) as usize,
+                                    (z as i64 + dz) as usize,
+                                );
+                                assert!(
+                                    !interior(q.0, q.1, q.2) || prev.contains(&q),
+                                    "stage {s} point ({x},{y},{z}) reads {q:?} \
+                                     outside band {} (dims {:?})",
+                                    s - 1,
+                                    spec.dims()
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ring_schedule_reproduces_the_oracle_on_the_ring() {
+        // Host-execute the band schedule: one chain_taps-ordered step per
+        // stage, restricted to that stage's boxes. After stage T the ring
+        // must hold the step-T oracle values bitwise.
+        let cases = [
+            (spec3(30), 3usize),
+            (StencilSpec::heat2d(20, 14, 0.2), 3),
+            (StencilSpec::heat2d(7, 14, 0.2), 3),
+            (StencilSpec::heat3d(12, 10, 8, 0.1), 2),
+            (
+                StencilSpec::box2d(16, 13, 1, 2, uniform_box_taps(1, 2, 0)).unwrap(),
+                2,
+            ),
+        ];
+        for (spec, steps) in &cases {
+            let (nx, ny) = (spec.nx, spec.ny);
+            let taps = spec.chain_taps();
+            let input: Vec<f64> = (0..spec.grid_points())
+                .map(|i| ((i * 37 % 101) as f64) * 0.25 - 12.0)
+                .collect();
+            let mut cur = input.clone();
+            for s in 1..=*steps {
+                let mut next = cur.clone();
+                for (lo, hi) in ring_band_boxes(spec, *steps, s) {
+                    for z in lo[2]..hi[2] {
+                        for y in lo[1]..hi[1] {
+                            for x in lo[0]..hi[0] {
+                                let mut acc = 0.0;
+                                for (k, &(dz, dy, dx, co)) in taps.iter().enumerate() {
+                                    let zz = (z as i64 + dz) as usize;
+                                    let yy = (y as i64 + dy) as usize;
+                                    let xx = (x as i64 + dx) as usize;
+                                    let v = co * cur[(zz * ny + yy) * nx + xx];
+                                    if k == 0 {
+                                        acc = v;
+                                    } else {
+                                        acc += v;
+                                    }
+                                }
+                                next[(z * ny + y) * nx + x] = acc;
+                            }
+                        }
+                    }
+                }
+                cur = next;
+            }
+            let want = crate::verify::golden::stencil_ref_steps(spec, &input, *steps);
+            for (x, y, z) in band_points(spec, *steps, *steps) {
+                let i = (z * ny + y) * nx + x;
+                assert_eq!(
+                    cur[i].to_bits(),
+                    want[i].to_bits(),
+                    "ring point ({x},{y},{z}) dims {:?} steps {steps}",
+                    spec.dims()
+                );
+            }
+        }
     }
 }

@@ -134,6 +134,64 @@ fn slab_2d_multi_tile_still_matches_through_tile_path() {
 }
 
 #[test]
+fn reported_redundant_reads_equal_measured_including_tail() {
+    // Satellite accounting pin: under `reload` the geometric fraction a
+    // report carries must equal what the simulators actually loaded —
+    // per chunk AND as the workload aggregate, tail stage included
+    // (the tail fuses fewer steps, so its halos are narrower and its
+    // fraction smaller; a stage-0-only aggregate would overstate it).
+    use std::sync::Arc;
+    use stencil_cgra::compile::{compile, CompileOptions, FuseMode, HaloMode};
+    use stencil_cgra::session::Session;
+
+    // ny = 10 caps the trapezoid at depth 3 (need ny > 2T), so steps = 7
+    // always leaves a tail stage (7 % d != 0 for d in 2..=3).
+    let spec = StencilSpec::heat2d(40, 10, 0.2);
+    let mut rng = XorShift::new(0x2ED5);
+    let x = rng.normal_vec(spec.grid_points());
+    let opts = CompileOptions::default()
+        .with_workers(2)
+        .with_tiles(2)
+        .with_fuse(FuseMode::Spatial)
+        .with_halo(HaloMode::Reload);
+    let compiled = Arc::new(compile(&spec, 7, &opts).unwrap());
+    let depth = compiled.fused_steps();
+    assert!((2..=3).contains(&depth));
+    assert_eq!(compiled.stages.len(), 2, "7 % {depth} != 0 leaves a tail");
+    let machine = compiled.options.machine.clone();
+    let out = Session::new(Arc::clone(&compiled), machine).run(&x).unwrap();
+
+    let grid = spec.grid_points() as f64;
+    for (i, r) in out.reports.iter().enumerate() {
+        let measured = r.total_loads() as f64 / grid - 1.0;
+        assert!(
+            (r.redundant_read_fraction - measured).abs() < 1e-12,
+            "chunk {i}: reported {} vs measured {measured}",
+            r.redundant_read_fraction
+        );
+        assert_eq!(r.total_loads(), r.dram_point_reads(), "reload never exchanges");
+        assert_eq!(r.exchanged_points, 0);
+    }
+    // The tail chunk fuses fewer steps, so its halos — and fraction —
+    // are strictly narrower than the primary stage's.
+    let (first, tail) = (&out.reports[0], out.reports.last().unwrap());
+    assert!(tail.fused_steps < first.fused_steps);
+    assert!(tail.redundant_read_fraction < first.redundant_read_fraction);
+
+    // Workload aggregate, tail included: the artifact-level fraction
+    // equals the measured mean over all chunks.
+    let chunks = out.reports.len() as f64;
+    let measured_total: f64 =
+        out.reports.iter().map(|r| r.total_loads() as f64).sum::<f64>() / (grid * chunks)
+            - 1.0;
+    assert!(
+        (compiled.redundant_read_fraction() - measured_total).abs() < 1e-12,
+        "workload: reported {} vs measured {measured_total}",
+        compiled.redundant_read_fraction()
+    );
+}
+
+#[test]
 fn acoustic_shape_runs_on_16_tiles_via_pencil() {
     // Scaled-down version of the acoustic_3d example's acceptance
     // criterion: 16 tiles, pencil cuts, oracle agreement, and halo

@@ -9,8 +9,12 @@
 //! extending `tests/sim_integration.rs`'s 1-D version), the capacity
 //! accounting pin (`temporal::required_tokens` equals the built graph's
 //! mandatory queue capacities), and the coordinator-level contract:
-//! spatially-fused multi-tile runs match the oracle and load strictly
-//! less than the host-driven loop at equal steps.
+//! spatially-fused multi-tile runs are bitwise-equal to the oracle on
+//! the **full grid** (the time-tiled ring stages cover the boundary
+//! band the raw trapezoid leaves out) and load strictly less than the
+//! host-driven loop at equal steps. The raw-pipeline checks here stay
+//! on the valid box on purpose — the ring belongs to the session layer,
+//! not to `build_nd`.
 
 use stencil_cgra::cgra::{Machine, SimCore, Simulator};
 use stencil_cgra::coordinator::{Coordinator, FuseMode};
@@ -207,8 +211,9 @@ fn required_tokens_matches_built_graph_capacities() {
 #[test]
 fn fused_coordinator_multitile_3d_matches_oracle_and_saves_loads() {
     // Acceptance contract: a `--fuse spatial --steps 4` 3-D multi-tile
-    // run is bitwise-equal to the iterated oracle on the valid interior
-    // and loads strictly less than the host-driven loop.
+    // run is bitwise-equal to the iterated oracle on the FULL grid —
+    // valid trapezoid, boundary ring and Dirichlet frame alike — and
+    // loads strictly less than the host-driven loop.
     let spec = StencilSpec::heat3d(14, 12, 10, 0.1);
     let mut rng = XorShift::new(0x7E40_0005);
     let x = rng.normal_vec(14 * 12 * 10);
@@ -220,10 +225,9 @@ fn fused_coordinator_multitile_3d_matches_oracle_and_saves_loads() {
     assert_eq!(freps.iter().map(|r| r.fused_steps).sum::<usize>(), steps);
     assert!(freps[0].fused_steps > 1, "default budget must admit fusion");
     let want = stencil_ref_steps(&spec, &x, steps);
-    let (lo, hi) = temporal::valid_box(&spec, steps);
-    for z in lo[2]..hi[2] {
-        for y in lo[1]..hi[1] {
-            for c in lo[0]..hi[0] {
+    for z in 0..spec.nz {
+        for y in 0..spec.ny {
+            for c in 0..spec.nx {
                 let i = (z * spec.ny + y) * spec.nx + c;
                 assert_eq!(fout[i], want[i], "(z={z}, y={y}, x={c})");
             }
@@ -232,4 +236,43 @@ fn fused_coordinator_multitile_3d_matches_oracle_and_saves_loads() {
     let host_loads: u64 = hreps.iter().map(|r| r.total_loads()).sum();
     let fused_loads: u64 = freps.iter().map(|r| r.total_loads()).sum();
     assert!(fused_loads < host_loads, "{fused_loads} !< {host_loads}");
+}
+
+#[test]
+fn session_auto_fuse_is_full_grid_bitwise_across_shapes() {
+    // The satellite-1 regression: `Session::run` under Spatial/Auto used
+    // to be correct only inside `temporal::valid_box`; the ring stages
+    // must make it bitwise-equal to the host-stepped oracle everywhere.
+    use std::sync::Arc;
+    use stencil_cgra::compile::{compile, CompileOptions, FuseMode as CFuse};
+    use stencil_cgra::session::Session;
+
+    let mut rng = XorShift::new(0x7E40_0006);
+    let cases: Vec<(StencilSpec, usize)> = vec![
+        (StencilSpec::heat2d(24, 16, 0.2), 5),
+        (StencilSpec::heat3d(12, 10, 8, 0.1), 4),
+        (
+            StencilSpec::box2d(18, 13, 1, 2, coeffs(&mut rng, 15)).unwrap(),
+            3,
+        ),
+    ];
+    for (spec, steps) in cases {
+        let x = rng.normal_vec(spec.grid_points());
+        let want = stencil_ref_steps(&spec, &x, steps);
+        for fuse in [CFuse::Spatial, CFuse::Auto] {
+            let opts = CompileOptions::default()
+                .with_workers(2)
+                .with_tiles(2)
+                .with_fuse(fuse);
+            let compiled = Arc::new(compile(&spec, steps, &opts).unwrap());
+            let machine = compiled.options.machine.clone();
+            let out = Session::new(compiled, machine).run(&x).unwrap();
+            assert_eq!(
+                out.output,
+                want,
+                "dims {:?} steps={steps} fuse={fuse:?}",
+                spec.dims()
+            );
+        }
+    }
 }
