@@ -10,7 +10,13 @@
 //! as an artifact on every push). The halo-exchange section runs the
 //! same compiled workload under `--halo reload` and `--halo exchange`
 //! (bitwise-asserted equal) and writes its DRAM-traffic differential to
-//! `BENCH_exchange.json` for `EXPERIMENTS.md` §Exchange.
+//! `BENCH_exchange.json` for `EXPERIMENTS.md` §Exchange. The trace
+//! section records a session run, replays it on the other scheduler
+//! core (cycle counts asserted equal record-for-record) and writes
+//! `BENCH_replay.json`.
+//!
+//! Timed region: `Simulator::from_placed` + the cycle loop — placement
+//! runs once outside, matching the compile-once/execute-many split.
 //!
 //! Run: `cargo bench --bench sim_hotpath`
 //! Short mode (CI): `BENCH_QUICK=1 cargo bench --bench sim_hotpath`
@@ -19,9 +25,10 @@
 use std::sync::Arc;
 
 use stencil_cgra::cgra::channel::Fifo;
-use stencil_cgra::cgra::{Machine, SimCore, Simulator, Token};
+use stencil_cgra::cgra::{Machine, PlacedGraph, SimCore, Simulator, Token};
 use stencil_cgra::compile::{compile, CompileOptions, FuseMode, HaloMode};
 use stencil_cgra::session::Session;
+use stencil_cgra::util::trace::Trace;
 use stencil_cgra::stencil::decomp::DecompKind;
 use stencil_cgra::stencil::spec::{symmetric_taps, y_taps, z_taps};
 use stencil_cgra::stencil::{build_graph, StencilSpec};
@@ -50,18 +57,21 @@ fn time_core(
     sink: &mut bench::JsonSink,
 ) -> CoreRun {
     let warmup = if quick() { 0 } else { 1 };
+    // Validation + placement run once, outside the timed region — in
+    // the two-phase API the compile phase owns them. The loop times the
+    // execute-many path only: per-run state carving
+    // (`Simulator::from_placed`) plus the cycle loop, which is the hot
+    // path `Session::run` repeats per tile task.
+    let pg = Arc::new(PlacedGraph::new(build_graph(spec, w).unwrap(), m).unwrap());
+    let nodes = pg.node_count();
     let mut cycles = 0u64;
     let mut fires = 0u64;
-    let mut nodes = 0usize;
     let mut skipped = 0u64;
     let mut wakeups = 0u64;
     let mut output_sum = 0.0f64;
     let case = format!("{name}/{core}");
     let stats = bench::run(&case, warmup, iters, || {
-        let g = build_graph(spec, w).unwrap();
-        nodes = g.node_count();
-        let res = Simulator::build(g, m, x.to_vec(), x.to_vec())
-            .unwrap()
+        let res = Simulator::from_placed(&pg, m, x.to_vec(), x.to_vec())
             .with_core(core)
             .run()
             .unwrap();
@@ -289,14 +299,14 @@ fn main() {
     xsink.write(xpath).expect("writing BENCH_exchange.json");
 
     bench::section("channel microbench");
-    let mut f = Fifo::new(64, 1);
+    let (mut f, mut arena) = Fifo::standalone(64, 1);
     let tok = Token::new(1.0, 0, 0);
     let stats = bench::run("fifo_push_pop_1M", 2, 10, || {
         for i in 0..1_000_000u64 {
             if f.can_push() {
-                f.push(tok, i);
+                f.push(&mut arena, tok, i);
             }
-            bench::black_box(f.pop(i + 2));
+            bench::black_box(f.pop(&mut arena, i + 2));
         }
     });
     println!("  -> {:.1} M push+pop/s", 1.0 / stats.mean_s);
@@ -317,6 +327,65 @@ fn main() {
     });
     println!("  -> {:.2} M loads/s", 0.1 / stats.mean_s);
     sink.record(&stats, &[("loads", 1e5)]);
+
+    bench::section("deterministic trace record/replay");
+    let mut rsink = bench::JsonSink::new();
+    {
+        let spec = StencilSpec::heat2d(96, 32, 0.2);
+        let compiled = Arc::new(
+            compile(
+                &spec,
+                2,
+                &CompileOptions::default().with_workers(4).with_tiles(2),
+            )
+            .unwrap(),
+        );
+        let machine = compiled.options.machine.clone();
+        let x = vec![1.0; spec.grid_points()];
+        let session = Session::new(compiled, machine);
+        let (iters, warmup) = if quick() { (1, 0) } else { (3, 1) };
+        let mut trace = Trace::default();
+        let rec = bench::run("2d_heat_96x32_t2_s2/record", warmup, iters, || {
+            let (_, t) = session.run_recorded(&x).unwrap();
+            trace = t;
+        });
+        let rec_cycles: u64 = trace.records.iter().map(|r| r.cycles).sum();
+        rsink.record(
+            &rec,
+            &[
+                ("records", trace.records.len() as f64),
+                ("total_cycles", rec_cycles as f64),
+            ],
+        );
+        // Replay on the *other* core: `Trace::matches` pins cycles,
+        // fires, tickets and both hashes per tile task, so a clean
+        // replay IS the record-vs-replay cycle-count assertion — and
+        // running it under the dense core pins the cross-core property.
+        let dense = session.clone().with_sim_core(SimCore::Dense);
+        let rep = bench::run("2d_heat_96x32_t2_s2/replay_dense", warmup, iters, || {
+            dense.run_replay(&x, &trace).unwrap();
+        });
+        let (_, dense_trace) = dense.run_recorded(&x).unwrap();
+        let dense_cycles: u64 = dense_trace.records.iter().map(|r| r.cycles).sum();
+        assert_eq!(
+            rec_cycles, dense_cycles,
+            "record-then-replay cycle counts diverged across cores"
+        );
+        rsink.record(
+            &rep,
+            &[
+                ("records", dense_trace.records.len() as f64),
+                ("total_cycles", dense_cycles as f64),
+            ],
+        );
+        println!(
+            "  == {} records, {} total task cycles, replay clean across cores",
+            trace.records.len(),
+            rec_cycles
+        );
+    }
+    let rpath = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_replay.json");
+    rsink.write(rpath).expect("writing BENCH_replay.json");
 
     // Anchor to the workspace root (cargo runs bench binaries with CWD =
     // the package dir, i.e. rust/), so CI finds the artifact in one place.

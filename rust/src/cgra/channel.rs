@@ -1,10 +1,23 @@
 //! Bounded FIFO channels with delivery latency — the PE input/output
-//! queues plus the on-chip network link between them (§II-A).
+//! queues plus the on-chip network link between them (§II-A) — stored
+//! as fixed power-of-two ring buffers over one shared SoA token arena.
 //!
 //! A token pushed at cycle `t` becomes visible to the consumer at
 //! `t + latency`. Capacity counts *all* in-flight tokens (queued +
 //! traversing the link), which is how credit-based flow control behaves:
 //! the producer needs a credit before injecting.
+//!
+//! **Storage layout.** A [`Fifo`] is plain data: a base offset into a
+//! [`ChanArena`], a power-of-two ring mask, and monotonically wrapping
+//! `head`/`tail` push/pop counters. The arena holds every channel's
+//! token payloads in four parallel arrays (`vals`/`rows`/`cols`/
+//! `ready`), sized once at graph build by [`assign_arena`] — so a warm
+//! simulation performs **zero heap allocations** on the push/pop path,
+//! and the dense sweep walks contiguous memory instead of chasing
+//! per-channel `VecDeque` blocks. The ring is `capacity`
+//! rounded up to a power of two (asserted); `can_push` still gates on
+//! the *exact* credit capacity, so flow control is unchanged — the
+//! ring slack merely keeps the index math branch-free.
 //!
 //! Channels additionally know their **endpoint node ids** (bound by the
 //! simulator from the DFG edge): a `push` is a future wake event for the
@@ -13,18 +26,68 @@
 //! ready-list scheduling from exactly these two endpoints; the dense
 //! core ignores them.
 
-use std::collections::VecDeque;
-
 use super::Token;
 
 /// Endpoint placeholder for a Fifo constructed outside a DFG (tests,
 /// microbenches). [`Fifo::with_endpoints`] replaces it.
 pub const NO_NODE: u32 = u32::MAX;
 
+/// The shared token arena: one SoA block per simulator holding every
+/// channel's in-flight tokens, indexed by `Fifo::base + (counter & mask)`.
+/// Slots are assigned once by [`assign_arena`]; after that the arena
+/// never grows.
+#[derive(Debug, Clone)]
+pub struct ChanArena {
+    vals: Box<[f64]>,
+    rows: Box<[u32]>,
+    cols: Box<[u32]>,
+    /// Cycle at which the slot's token becomes consumer-visible.
+    ready: Box<[u64]>,
+}
+
+impl ChanArena {
+    /// An arena with `slots` token slots (the sum of ring sizes that
+    /// [`assign_arena`] returned).
+    pub fn new(slots: usize) -> Self {
+        Self {
+            vals: vec![0.0; slots].into_boxed_slice(),
+            rows: vec![0; slots].into_boxed_slice(),
+            cols: vec![0; slots].into_boxed_slice(),
+            ready: vec![0; slots].into_boxed_slice(),
+        }
+    }
+
+    /// Total token slots.
+    pub fn slots(&self) -> usize {
+        self.vals.len()
+    }
+}
+
+/// Assign each channel a disjoint base offset in the arena; returns the
+/// total slot count an arena for these channels needs. Called once at
+/// graph build ([`crate::cgra::PlacedGraph`]) — ring sizes are fixed
+/// from then on.
+pub fn assign_arena(fifos: &mut [Fifo]) -> usize {
+    let mut off: u32 = 0;
+    for f in fifos {
+        f.base = off;
+        off += f.ring_slots() as u32;
+    }
+    off as usize
+}
+
 #[derive(Debug, Clone)]
 pub struct Fifo {
-    buf: VecDeque<(Token, u64)>,
-    capacity: usize,
+    /// First arena slot of this channel's ring.
+    base: u32,
+    /// `ring_slots - 1`; ring size is a power of two `>= capacity`.
+    mask: u32,
+    /// Monotonic push counter (wraps mod 2^32; slot = `base + (head & mask)`).
+    head: u32,
+    /// Monotonic pop counter.
+    tail: u32,
+    /// Credit capacity — the *exact* in-flight token limit.
+    capacity: u32,
     latency: u64,
     /// Producer node id (`NO_NODE` when unbound).
     src_node: u32,
@@ -37,14 +100,31 @@ pub struct Fifo {
 impl Fifo {
     pub fn new(capacity: usize, latency: u32) -> Self {
         assert!(capacity > 0, "zero-capacity channel deadlocks");
+        assert!(capacity <= u32::MAX as usize / 2, "channel capacity overflows ring index");
+        let ring = capacity.next_power_of_two();
+        // Ring sizing is exact-and-asserted: a power of two at least the
+        // credit capacity, so `counter & mask` indexing never aliases a
+        // live token (occupancy is gated on `capacity <= ring`).
+        assert!(ring.is_power_of_two() && ring >= capacity, "ring must cover capacity");
         Self {
-            buf: VecDeque::with_capacity(capacity.min(1024)),
-            capacity,
+            base: 0,
+            mask: (ring - 1) as u32,
+            head: 0,
+            tail: 0,
+            capacity: capacity as u32,
             latency: latency as u64,
             src_node: NO_NODE,
             dst_node: NO_NODE,
             max_occupancy: 0,
         }
+    }
+
+    /// An unbound Fifo plus a private arena exactly sized for it — the
+    /// standalone form unit tests and microbenches use.
+    pub fn standalone(capacity: usize, latency: u32) -> (Self, ChanArena) {
+        let f = Self::new(capacity, latency);
+        let a = ChanArena::new(f.ring_slots());
+        (f, a)
     }
 
     /// Bind the producer/consumer node ids (the DFG edge endpoints).
@@ -72,49 +152,65 @@ impl Fifo {
         self.latency
     }
 
+    /// Ring slots this channel occupies in the arena (power of two).
     #[inline]
-    pub fn can_push(&self) -> bool {
-        self.buf.len() < self.capacity
+    pub fn ring_slots(&self) -> usize {
+        self.mask as usize + 1
     }
 
     #[inline]
-    pub fn push(&mut self, t: Token, now: u64) {
+    pub fn can_push(&self) -> bool {
+        self.len() < self.capacity as usize
+    }
+
+    #[inline]
+    pub fn push(&mut self, a: &mut ChanArena, t: Token, now: u64) {
         debug_assert!(self.can_push());
-        self.buf.push_back((t, now + self.latency));
-        if self.buf.len() > self.max_occupancy {
-            self.max_occupancy = self.buf.len();
+        let slot = (self.base + (self.head & self.mask)) as usize;
+        a.vals[slot] = t.val;
+        a.rows[slot] = t.row;
+        a.cols[slot] = t.col;
+        a.ready[slot] = now + self.latency;
+        self.head = self.head.wrapping_add(1);
+        let len = self.len();
+        if len > self.max_occupancy {
+            self.max_occupancy = len;
         }
     }
 
     /// The token at the head, if it has arrived.
     #[inline]
-    pub fn peek(&self, now: u64) -> Option<&Token> {
-        match self.buf.front() {
-            Some((t, ready)) if *ready <= now => Some(t),
-            _ => None,
+    pub fn peek(&self, a: &ChanArena, now: u64) -> Option<Token> {
+        if self.is_empty() {
+            return None;
+        }
+        let slot = (self.base + (self.tail & self.mask)) as usize;
+        if a.ready[slot] <= now {
+            Some(Token::new(a.vals[slot], a.rows[slot], a.cols[slot]))
+        } else {
+            None
         }
     }
 
     #[inline]
-    pub fn pop(&mut self, now: u64) -> Option<Token> {
-        match self.buf.front() {
-            Some((_, ready)) if *ready <= now => self.buf.pop_front().map(|(t, _)| t),
-            _ => None,
-        }
+    pub fn pop(&mut self, a: &mut ChanArena, now: u64) -> Option<Token> {
+        let t = self.peek(a, now)?;
+        self.tail = self.tail.wrapping_add(1);
+        Some(t)
     }
 
     #[inline]
     pub fn len(&self) -> usize {
-        self.buf.len()
+        self.head.wrapping_sub(self.tail) as usize
     }
 
     #[inline]
     pub fn is_empty(&self) -> bool {
-        self.buf.is_empty()
+        self.head == self.tail
     }
 
     pub fn capacity(&self) -> usize {
-        self.capacity
+        self.capacity as usize
     }
 }
 
@@ -128,31 +224,31 @@ mod tests {
 
     #[test]
     fn respects_capacity() {
-        let mut f = Fifo::new(2, 0);
+        let (mut f, mut a) = Fifo::standalone(2, 0);
         assert!(f.can_push());
-        f.push(tok(1.0), 0);
-        f.push(tok(2.0), 0);
+        f.push(&mut a, tok(1.0), 0);
+        f.push(&mut a, tok(2.0), 0);
         assert!(!f.can_push());
     }
 
     #[test]
     fn latency_hides_tokens() {
-        let mut f = Fifo::new(4, 3);
-        f.push(tok(1.0), 10);
-        assert!(f.peek(10).is_none());
-        assert!(f.peek(12).is_none());
-        assert_eq!(f.peek(13).unwrap().val, 1.0);
-        assert_eq!(f.pop(13).unwrap().val, 1.0);
+        let (mut f, mut a) = Fifo::standalone(4, 3);
+        f.push(&mut a, tok(1.0), 10);
+        assert!(f.peek(&a, 10).is_none());
+        assert!(f.peek(&a, 12).is_none());
+        assert_eq!(f.peek(&a, 13).unwrap().val, 1.0);
+        assert_eq!(f.pop(&mut a, 13).unwrap().val, 1.0);
     }
 
     #[test]
     fn fifo_order_preserved() {
-        let mut f = Fifo::new(8, 1);
+        let (mut f, mut a) = Fifo::standalone(8, 1);
         for i in 0..5 {
-            f.push(tok(i as f64), i);
+            f.push(&mut a, tok(i as f64), i);
         }
         for i in 0..5 {
-            assert_eq!(f.pop(100).unwrap().val, i as f64);
+            assert_eq!(f.pop(&mut a, 100).unwrap().val, i as f64);
         }
         assert!(f.is_empty());
     }
@@ -160,21 +256,21 @@ mod tests {
     #[test]
     fn head_blocks_until_ready_even_if_later_pushed_earlier() {
         // Order is strictly FIFO: a head with later ready time blocks.
-        let mut f = Fifo::new(4, 5);
-        f.push(tok(1.0), 10); // ready 15
-        f.push(tok(2.0), 10); // ready 15
-        assert!(f.pop(14).is_none());
-        assert_eq!(f.pop(15).unwrap().val, 1.0);
+        let (mut f, mut a) = Fifo::standalone(4, 5);
+        f.push(&mut a, tok(1.0), 10); // ready 15
+        f.push(&mut a, tok(2.0), 10); // ready 15
+        assert!(f.pop(&mut a, 14).is_none());
+        assert_eq!(f.pop(&mut a, 15).unwrap().val, 1.0);
     }
 
     #[test]
     fn tracks_max_occupancy() {
-        let mut f = Fifo::new(8, 0);
+        let (mut f, mut a) = Fifo::standalone(8, 0);
         for i in 0..6 {
-            f.push(tok(i as f64), 0);
+            f.push(&mut a, tok(i as f64), 0);
         }
-        f.pop(0);
-        f.pop(0);
+        f.pop(&mut a, 0);
+        f.pop(&mut a, 0);
         assert_eq!(f.max_occupancy, 6);
     }
 
@@ -187,6 +283,74 @@ mod tests {
         assert_eq!(f.src_node(), 3);
         assert_eq!(f.dst_node(), 7);
         assert_eq!(f.latency(), 1);
+    }
+
+    #[test]
+    fn ring_sizes_are_exact_powers_of_two_covering_capacity() {
+        // The old implementation clamped its pre-allocation hint to 1024
+        // entries; ring sizing must instead be exact for any capacity.
+        for cap in [1usize, 2, 3, 7, 64, 1000, 1024, 1025, 5000] {
+            let f = Fifo::new(cap, 1);
+            assert!(f.ring_slots().is_power_of_two());
+            assert!(f.ring_slots() >= cap, "ring {} < cap {cap}", f.ring_slots());
+            assert_eq!(f.capacity(), cap);
+        }
+    }
+
+    #[test]
+    fn large_capacity_fills_exactly() {
+        // Past the old 1024-entry hint: all 3000 credits usable, FIFO order kept.
+        let (mut f, mut a) = Fifo::standalone(3000, 0);
+        for i in 0..3000 {
+            assert!(f.can_push(), "credit {i} missing");
+            f.push(&mut a, tok(i as f64), 0);
+        }
+        assert!(!f.can_push());
+        for i in 0..3000 {
+            assert_eq!(f.pop(&mut a, 0).unwrap().val, i as f64);
+        }
+    }
+
+    #[test]
+    fn wraparound_preserves_order_and_payload() {
+        // Drive the monotonic counters through many ring revolutions.
+        let (mut f, mut a) = Fifo::standalone(3, 0); // ring = 4 > capacity = 3
+        let mut next_in = 0u64;
+        let mut next_out = 0u64;
+        for _ in 0..1000 {
+            while f.can_push() {
+                f.push(&mut a, Token::new(next_in as f64, next_in as u32, 7), 0);
+                next_in += 1;
+            }
+            for _ in 0..2 {
+                let t = f.pop(&mut a, 0).unwrap();
+                assert_eq!(t.val, next_out as f64);
+                assert_eq!(t.row, next_out as u32);
+                assert_eq!(t.col, 7);
+                next_out += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn arena_assignment_is_disjoint_and_dense() {
+        let mut fifos = vec![Fifo::new(3, 1), Fifo::new(1, 1), Fifo::new(5, 2)];
+        let total = assign_arena(&mut fifos);
+        assert_eq!(total, 4 + 1 + 8);
+        let mut a = ChanArena::new(total);
+        assert_eq!(a.slots(), total);
+        // Fill every channel to capacity with channel-tagged payloads and
+        // check no channel's traffic clobbers another's.
+        for (ci, f) in fifos.iter_mut().enumerate() {
+            for k in 0..f.capacity() {
+                f.push(&mut a, Token::new(ci as f64 * 100.0 + k as f64, 0, 0), 0);
+            }
+        }
+        for (ci, f) in fifos.iter_mut().enumerate() {
+            for k in 0..f.capacity() {
+                assert_eq!(f.pop(&mut a, 0).unwrap().val, ci as f64 * 100.0 + k as f64);
+            }
+        }
     }
 
     #[test]

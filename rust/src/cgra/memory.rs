@@ -23,6 +23,11 @@
 //! per-cycle arbiter across a gap of skipped cycles — bit-identically to
 //! calling [`MemSys::step`] once per cycle, but O(1) once the bandwidth
 //! budget saturates with an empty queue.
+//!
+//! The hot path is **allocation-free after warm-up**: callers size the
+//! ticket table and transaction queue up front via [`MemSys::reserve`],
+//! and fill waiters form intrusive lists threaded through a
+//! tickets-parallel array instead of per-line vectors.
 
 use std::collections::HashMap;
 use std::collections::VecDeque;
@@ -35,6 +40,8 @@ pub type Ticket = u32;
 
 const UNGRANTED: u64 = u64::MAX;
 const NO_TAG: u64 = u64::MAX;
+/// End-of-chain sentinel for the intrusive fill-waiter lists.
+const NO_WAITER: Ticket = Ticket::MAX;
 
 #[derive(Debug)]
 enum Txn {
@@ -65,9 +72,14 @@ pub struct MemSys {
     /// bounded record behind conflict-miss classification: a miss that
     /// refetches the set's last victim is a conflict miss.
     last_evicted: Vec<u64>,
-    /// Tickets waiting on a line fill, keyed by line (bounded by the
-    /// number of in-flight fills).
-    line_waiters: HashMap<u64, Vec<Ticket>>,
+    /// Head ticket of the intrusive waiter list per in-flight line fill
+    /// (bounded by the number of in-flight fills). The rest of each
+    /// list is threaded through `waiter_next`, so MSHR merges never
+    /// allocate on the hot path.
+    line_waiters: HashMap<u64, Ticket>,
+    /// Intrusive next-pointers, parallel to `tickets` (`NO_WAITER` ends
+    /// a chain).
+    waiter_next: Vec<Ticket>,
     /// Completion cycle per ticket (`UNGRANTED` until known).
     tickets: Vec<u64>,
     queue: VecDeque<(f64, Txn)>,
@@ -104,6 +116,7 @@ impl MemSys {
             set_fill_done: vec![0; n_sets],
             last_evicted: vec![NO_TAG; n_sets],
             line_waiters: HashMap::new(),
+            waiter_next: Vec::new(),
             tickets: Vec::new(),
             queue: VecDeque::new(),
             resolved: Vec::new(),
@@ -122,8 +135,24 @@ impl MemSys {
         self.fabric_resident = on;
     }
 
+    /// Preallocate for a run that will issue at most `tickets` tickets
+    /// and hold at most `inflight` simultaneously outstanding
+    /// transactions. With honest bounds, the cycle loop performs zero
+    /// heap allocations inside this module: tickets grow within the
+    /// reserved capacity, the transaction queue and resolved list never
+    /// exceed the MSHR-limited in-flight count, and the waiter map holds
+    /// one entry per in-flight fill.
+    pub fn reserve(&mut self, tickets: usize, inflight: usize) {
+        self.tickets.reserve(tickets);
+        self.waiter_next.reserve(tickets);
+        self.queue.reserve(inflight);
+        self.resolved.reserve(inflight);
+        self.line_waiters.reserve(inflight);
+    }
+
     fn new_ticket(&mut self) -> Ticket {
         self.tickets.push(UNGRANTED);
+        self.waiter_next.push(NO_WAITER);
         (self.tickets.len() - 1) as Ticket
     }
 
@@ -152,12 +181,16 @@ impl MemSys {
                     }
                     self.sets[set] = line;
                     self.set_fill_done[set] = done;
-                    if let Some(ws) = self.line_waiters.remove(&line) {
-                        for t in ws {
+                    if let Some(head) = self.line_waiters.remove(&line) {
+                        let mut t = head;
+                        while t != NO_WAITER {
                             self.tickets[t as usize] = done;
                             if self.record_resolved {
                                 self.resolved.push(t);
                             }
+                            let next = self.waiter_next[t as usize];
+                            self.waiter_next[t as usize] = NO_WAITER;
+                            t = next;
                         }
                     }
                 }
@@ -222,9 +255,12 @@ impl MemSys {
             let arrive = self.set_fill_done[set];
             self.tickets[t as usize] = (now + self.hit_latency).max(arrive);
             self.stats.hits += 1;
-        } else if let Some(ws) = self.line_waiters.get_mut(&line) {
-            // Fill already queued: merge (MSHR).
-            ws.push(t);
+        } else if let Some(head) = self.line_waiters.get_mut(&line) {
+            // Fill already queued: merge (MSHR). Prepend to the intrusive
+            // chain — all waiters on one fill complete at the same cycle,
+            // so order within the chain is unobservable.
+            self.waiter_next[t as usize] = *head;
+            *head = t;
             self.stats.merged += 1;
         } else {
             // Miss: queue a line fill. Refetching the set's last victim
@@ -233,7 +269,7 @@ impl MemSys {
                 self.stats.conflict_misses += 1;
             }
             self.stats.misses += 1;
-            self.line_waiters.insert(line, vec![t]);
+            self.line_waiters.insert(line, t);
             self.queue.push_back((self.line_bytes, Txn::Fill { line }));
         }
         (val, t)
@@ -467,6 +503,39 @@ mod tests {
         assert!(!m.busy(), "no fill was queued");
         m.step(6);
         assert_eq!(m.stats.dram_read_bytes, 0);
+    }
+
+    #[test]
+    fn merged_waiters_all_complete_at_the_fill() {
+        // Three loads to one line: one fill, two MSHR merges, and every
+        // ticket in the intrusive waiter chain completes at the same
+        // grant + dram_latency cycle.
+        let mut m = mk((0..100).map(|i| i as f64).collect());
+        let (_, t1) = m.load(0, 0);
+        let (_, t2) = m.load(1, 0);
+        let (_, t3) = m.load(2, 0);
+        assert_eq!(m.stats.misses, 1);
+        assert_eq!(m.stats.merged, 2);
+        assert_eq!(m.completion(t1), None);
+        m.step(1);
+        for t in [t1, t2, t3] {
+            assert_eq!(m.completion(t), Some(1 + 100));
+        }
+    }
+
+    #[test]
+    fn reserve_preallocates_without_changing_behaviour() {
+        let grid: Vec<f64> = (0..512).map(|i| i as f64).collect();
+        let mut a = mk(grid.clone());
+        let mut b = mk(grid);
+        b.reserve(64, 16);
+        for i in 0..8 {
+            assert_eq!(a.load(i * 8, 0), b.load(i * 8, 0));
+        }
+        for c in 1..=20 {
+            assert_eq!(a.step(c), b.step(c));
+        }
+        assert_eq!(a.stats, b.stats);
     }
 
     #[test]

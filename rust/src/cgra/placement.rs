@@ -63,6 +63,23 @@ impl Placement {
         }
         pe_instrs
     }
+
+    /// [`Self::eval_slots`] flattened to CSR form — `(nodes, starts)`
+    /// where slot `s` holds `nodes[starts[s]..starts[s+1]]`. This is the
+    /// layout the simulator sweeps: one contiguous node-id array instead
+    /// of a `Vec<Vec<u32>>`, so the dense core's per-cycle walk touches
+    /// one allocation.
+    pub fn eval_order(&self, g: &Graph, m: &Machine) -> (Vec<u32>, Vec<u32>) {
+        let slots = self.eval_slots(g, m);
+        let mut nodes = Vec::with_capacity(g.node_count());
+        let mut starts = Vec::with_capacity(slots.len() + 1);
+        starts.push(0u32);
+        for s in &slots {
+            nodes.extend_from_slice(s);
+            starts.push(nodes.len() as u32);
+        }
+        (nodes, starts)
+    }
 }
 
 fn manhattan(a: (u16, u16), b: (u16, u16)) -> u32 {
@@ -301,6 +318,21 @@ mod tests {
         }
         for ch in &g.channels {
             assert!(pos[ch.src] < pos[ch.dst], "channel {} not topo-ordered", ch.id);
+        }
+    }
+
+    #[test]
+    fn eval_order_csr_matches_eval_slots() {
+        let spec = StencilSpec::dim1(32, vec![0.25, 0.5, 0.25]).unwrap();
+        let mut g = map1d::build(&spec, 2).unwrap();
+        let m = Machine::tiny();
+        let p = place(&mut g, &m).unwrap();
+        let slots = p.eval_slots(&g, &m);
+        let (nodes, starts) = p.eval_order(&g, &m);
+        assert_eq!(starts.len(), slots.len() + 1);
+        assert_eq!(nodes.len(), g.node_count());
+        for (s, group) in slots.iter().enumerate() {
+            assert_eq!(&nodes[starts[s] as usize..starts[s + 1] as usize], &group[..]);
         }
     }
 

@@ -94,6 +94,11 @@ pub struct SimStats {
     /// `node_count * cycles`; the ratio is the work the scheduler
     /// avoided. Always 0 under the dense core.
     pub wakeups: u64,
+    /// Order-sensitive FNV-style hash of the `(node, cycle)` fire
+    /// sequence — the behavioural fingerprint `util::trace` records.
+    /// Identical across the dense and event cores because the fire
+    /// *sequences* are identical, not just the counts.
+    pub fire_hash: u64,
     pub mem: MemStats,
 }
 
@@ -106,6 +111,20 @@ impl SimStats {
             Stage::Writer => self.fires_writer += 1,
             Stage::Sync => self.fires_sync += 1,
         }
+    }
+
+    /// Fold one firing of node `id` at cycle `now` into [`fire_hash`].
+    /// Must be called in execution order; non-firing evaluations must
+    /// not call it.
+    ///
+    /// [`fire_hash`]: SimStats::fire_hash
+    #[inline]
+    pub fn note_fire_event(&mut self, id: u32, now: u64) {
+        const P: u64 = 0x100000001b3;
+        self.fire_hash ^= id as u64 + 1;
+        self.fire_hash = self.fire_hash.wrapping_mul(P);
+        self.fire_hash ^= now;
+        self.fire_hash = self.fire_hash.wrapping_mul(P);
     }
 
     pub fn total_fires(&self) -> u64 {
@@ -219,6 +238,22 @@ mod tests {
                 dram_write_bytes: 18,
             }
         );
+    }
+
+    #[test]
+    fn fire_hash_is_order_sensitive() {
+        let mut a = SimStats::default();
+        a.note_fire_event(3, 10);
+        a.note_fire_event(7, 10);
+        let mut b = SimStats::default();
+        b.note_fire_event(7, 10);
+        b.note_fire_event(3, 10);
+        assert_ne!(a.fire_hash, b.fire_hash, "order must matter");
+        let mut c = SimStats::default();
+        c.note_fire_event(3, 10);
+        c.note_fire_event(7, 10);
+        assert_eq!(a.fire_hash, c.fire_hash, "same sequence, same hash");
+        assert_ne!(a.fire_hash, 0);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! scgra compile  --stencil S [--steps N] [--out F]        phase 1: plan + place
 //! scgra run      --stencil S [-w N] [--tiles N] [--decomp K] [--steps N] [--fuse M] [--halo H]
 //! scgra run      --artifact F                             phase 2: execute a saved artifact
+//! scgra run      ... --trace record F | --trace replay F  deterministic replay check
 //! scgra compare                                           Table I
 //! scgra validate                                          3-layer check
 //! ```
@@ -49,6 +50,7 @@ use crate::stencil::decomp::{self, DecompKind};
 use crate::stencil::spec::{symmetric_taps, uniform_box_taps, y_taps, z_taps};
 use crate::stencil::{build_graph, StencilSpec};
 use crate::util::rng::XorShift;
+use crate::util::trace::{Trace, TraceMode};
 use crate::verify::golden::{max_abs_diff, run_sim, stencil2d_ref, stencil_ref_steps};
 
 /// Parsed command line: subcommand + `--flag value` pairs.
@@ -68,11 +70,18 @@ impl Args {
                 .strip_prefix("--")
                 .or_else(|| a.strip_prefix('-'))
                 .with_context(|| format!("expected flag, got `{a}`"))?;
-            let val = if i + 1 < argv.len() && !argv[i + 1].starts_with('-') {
+            // Consecutive non-flag tokens are space-joined into one
+            // value, so multi-word flags read naturally:
+            // `--trace record /tmp/t.trace` -> trace = "record /tmp/t.trace".
+            let mut parts: Vec<&str> = Vec::new();
+            while i + 1 < argv.len() && !argv[i + 1].starts_with('-') {
                 i += 1;
-                argv[i].clone()
-            } else {
+                parts.push(argv[i].as_str());
+            }
+            let val = if parts.is_empty() {
                 "true".to_string()
+            } else {
+                parts.join(" ")
             };
             flags.insert(key.to_string(), val);
             i += 1;
@@ -281,6 +290,10 @@ USAGE: scgra <info|dfg|roofline|compile|run|compare|validate> [--flags]
                         DRAM every chunk, the differential baseline)
   --sim-core C          scheduler core: dense|event (default event; both
                         are bit-identical — event skips idle cycles)
+  --trace record FILE   fingerprint every tile task (cycles, fires,
+                        tickets, fire/output hashes) and save the trace
+  --trace replay FILE   re-run and fail on the first divergence from a
+                        recorded trace (replays across sim cores)
   --fabric-tokens N     per-tile on-fabric token budget (default 65536)
   --out FILE            where `compile` writes the artifact
                         (default compiled_stencil.txt)
@@ -479,7 +492,33 @@ fn cmd_run(args: &Args, m: &Machine, cfg: Option<&Config>) -> Result<()> {
         compiled.options.halo,
     );
     let session = Session::new(Arc::new(compiled), machine.clone()).with_sim_core(sim_core);
-    let outcome = session.run(&input)?;
+    // Deterministic trace capture/replay (`--trace record F` /
+    // `--trace replay F`, or `[run] trace` in the config): record
+    // fingerprints every tile task; replay re-runs and fails loudly on
+    // the first divergence. Traces replay across sim cores — `matches`
+    // ignores the core-dependent wakeup counter.
+    let trace_mode = match args.get("trace").or(defaults.trace.as_deref()) {
+        Some(s) => Some(TraceMode::parse(s)?),
+        None => None,
+    };
+    let outcome = match &trace_mode {
+        None => session.run(&input)?,
+        Some(TraceMode::Record(path)) => {
+            let (outcome, trace) = session.run_recorded(&input)?;
+            trace.save(path)?;
+            println!("recorded {} tile-task fingerprints -> {path}", trace.records.len());
+            outcome
+        }
+        Some(TraceMode::Replay(path)) => {
+            let reference = Trace::load(path)?;
+            let outcome = session.run_replay(&input, &reference)?;
+            println!(
+                "replayed {path}: all {} tile-task fingerprints match",
+                reference.records.len()
+            );
+            outcome
+        }
+    };
     let (out, reports) = (outcome.output, outcome.reports);
     let first = &reports[0];
     println!(
@@ -614,6 +653,20 @@ mod tests {
     fn boolean_flags() {
         let a = Args::parse(&sv(&["dfg", "--verbose"])).unwrap();
         assert_eq!(a.get("verbose"), Some("true"));
+    }
+
+    #[test]
+    fn multi_token_flag_values_are_space_joined() {
+        let a = Args::parse(&sv(&[
+            "run", "--trace", "record", "/tmp/t.trace", "--tiles", "2",
+        ]))
+        .unwrap();
+        assert_eq!(a.get("trace"), Some("record /tmp/t.trace"));
+        assert_eq!(a.num("tiles", 1usize).unwrap(), 2);
+        // A flag right after the key still reads as a boolean flag.
+        let b = Args::parse(&sv(&["run", "--verbose", "--tiles", "4"])).unwrap();
+        assert_eq!(b.get("verbose"), Some("true"));
+        assert_eq!(b.num("tiles", 1usize).unwrap(), 4);
     }
 
     #[test]
@@ -795,6 +848,44 @@ mod tests {
     #[test]
     fn run_missing_artifact_is_an_error() {
         assert!(run(&sv(&["run", "--artifact", "/nonexistent/artifact.txt"])).is_err());
+    }
+
+    #[test]
+    fn trace_record_then_replay_roundtrip_across_cores() {
+        let path = std::env::temp_dir()
+            .join(format!("scgra_cli_trace_{}.trace", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        // Record under the event core...
+        run(&sv(&[
+            "run", "--shape", "star", "--dims", "24,16", "--workers", "2",
+            "--tiles", "2", "--steps", "2", "--seed", "11",
+            "--trace", "record", path.as_str(),
+        ]))
+        .unwrap();
+        // ...replay under the dense core: `matches` ignores wakeups.
+        run(&sv(&[
+            "run", "--shape", "star", "--dims", "24,16", "--workers", "2",
+            "--tiles", "2", "--steps", "2", "--seed", "11",
+            "--sim-core", "dense", "--trace", "replay", path.as_str(),
+        ]))
+        .unwrap();
+        // A different workload must fail the replay.
+        assert!(run(&sv(&[
+            "run", "--shape", "star", "--dims", "24,16", "--workers", "2",
+            "--tiles", "2", "--steps", "2", "--seed", "12",
+            "--trace", "replay", path.as_str(),
+        ]))
+        .is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bad_trace_value_is_an_error() {
+        assert!(run(&sv(&["run", "--stencil", "3pt", "--trace", "record"])).is_err());
+        assert!(run(&sv(&[
+            "run", "--stencil", "3pt", "--trace", "verify", "/tmp/x"
+        ]))
+        .is_err());
     }
 
     #[test]

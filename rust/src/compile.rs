@@ -16,6 +16,12 @@
 //! Execution never plans: [`crate::session::Session`] walks the
 //! artifact's stages and only touches per-run state. The
 //! [`crate::stencil::metrics`] counters pin that contract in tests.
+//! Each [`PlacedGraph`] also pre-computes the per-run *allocation
+//! budget* — the flat token-arena layout its channels index, the SoA
+//! node-state sizes, the event wheel horizon — so
+//! `Simulator::from_placed` carves a run's entire mutable state up
+//! front and the cycle loop itself never allocates (the
+//! zero-allocation contract `tests/alloc_free.rs` enforces).
 //!
 //! For the serve path, [`CompileCache`] is an LRU over compiled
 //! artifacts keyed by `(spec, steps, options)`, and

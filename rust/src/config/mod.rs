@@ -164,8 +164,10 @@ impl Config {
     /// `[run]` knobs: workers (0 = roofline-optimal), tiles, steps,
     /// decomposition kind (`decomp = "slab|pencil|block|auto"`),
     /// simulator core (`sim_core = "dense|event"`), §IV fuse mode
-    /// (`fuse = "host|spatial|auto"`, default auto) and halo mode
-    /// (`halo = "exchange|reload"`, default exchange).
+    /// (`fuse = "host|spatial|auto"`, default auto), halo mode
+    /// (`halo = "exchange|reload"`, default exchange) and deterministic
+    /// tracing (`trace = "record PATH"` / `"replay PATH"`; validated by
+    /// `TraceMode::parse` at use).
     pub fn run_params(&self) -> Result<RunParams> {
         let decomp = match self.get("run", "decomp") {
             None => DecompKind::Auto,
@@ -192,6 +194,7 @@ impl Config {
             sim_core,
             fuse,
             halo,
+            trace: self.get("run", "trace").map(|s| s.to_string()),
         })
     }
 
@@ -230,6 +233,10 @@ pub struct RunParams {
     /// Chunk-boundary halo movement (default exchange: in-fabric
     /// channels, no redundant DRAM reads after the cold chunk).
     pub halo: HaloMode,
+    /// Deterministic trace capture/replay: `record PATH` or
+    /// `replay PATH` (see [`crate::util::trace::TraceMode`]); `None`
+    /// runs untraced.
+    pub trace: Option<String>,
 }
 
 impl Default for RunParams {
@@ -246,6 +253,7 @@ impl Default for RunParams {
             sim_core: SimCore::default(),
             fuse: FuseMode::Auto,
             halo: HaloMode::default(),
+            trace: None,
         }
     }
 }
@@ -378,6 +386,17 @@ tiles = 16
         assert_eq!(c.run_params().unwrap().halo, HaloMode::Exchange);
         let c = Config::parse("[run]\nhalo = \"teleport\"\n").unwrap();
         assert!(c.run_params().is_err());
+    }
+
+    #[test]
+    fn trace_param_defaults_off_and_passes_through() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.run_params().unwrap().trace, None);
+        let c = Config::parse("[run]\ntrace = \"record /tmp/run.trace\"\n").unwrap();
+        assert_eq!(
+            c.run_params().unwrap().trace.as_deref(),
+            Some("record /tmp/run.trace")
+        );
     }
 
     #[test]

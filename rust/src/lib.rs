@@ -123,5 +123,6 @@ pub mod util;
 pub mod verify;
 
 pub use compile::{compile, CompileCache, CompileOptions, CompiledStencil, FuseMode};
-pub use session::{RunOutcome, RunReport, Session};
+pub use session::{ExecMode, RunOutcome, RunReport, Session};
 pub use stencil::spec::{StencilShape, StencilSpec};
+pub use util::trace::{Trace, TraceMode};

@@ -7,12 +7,17 @@
 //! stages in order; each chunk runs three precompiled pieces:
 //!
 //! 1. **Fused tiles** — the grid decomposes into the plan's halo-padded
-//!    tiles, [`TileTask`]s go into a shared queue, and one OS thread
-//!    per hardware tile pulls greedily (natural load balancing),
+//!    tiles, [`TileTask`]s go into a shared queue, and the session's
+//!    **persistent worker pool** (one OS thread per hardware tile,
+//!    spawned once on first use and reused by every subsequent batch,
+//!    chunk and `run` call) pulls greedily (natural load balancing),
 //!    instantiating a simulator over the stage's shared placed graph
 //!    ([`Simulator::from_placed`] — no re-validation, no re-placement,
 //!    no graph clone). The leader merges owned outputs into the global
-//!    grid; the reported makespan is the slowest tile's total.
+//!    grid; the reported makespan is the slowest tile's total. A tile
+//!    task that panics is caught on the worker and surfaced as an
+//!    `Err` from [`Session::run`] — it never aborts the process, and
+//!    the pool stays usable.
 //! 2. **Time-tiled ring stages** — at fused depth `T > 1` the trapezoid
 //!    only writes [`crate::stencil::temporal::valid_box`]; the
 //!    artifact's per-layer band tiles
@@ -33,15 +38,27 @@
 //!    [`HaloMode::Reload`] keeps the old re-read-everything behaviour
 //!    as the differential baseline.
 //!
+//! Because each simulator run is deterministic and tile outputs merge
+//! into disjoint owned boxes, the pooled execution is **bitwise
+//! identical** to running every task sequentially on the caller thread
+//! ([`ExecMode::Sequential`]) in every data-dependent observable:
+//! output grid, per-task cycle counts, fire hashes and memory counters.
+//! Only the *attribution* of tasks to hardware tiles (`per_tile`,
+//! `makespan_cycles`) depends on scheduling. `rust/tests/sim_cores.rs`
+//! pins the equality; [`Session::run_recorded`] /
+//! [`Session::run_replay`] turn the per-task fingerprints into an
+//! on-disk [`Trace`] for cross-build and cross-core regression checks.
+//!
 //! Nothing here plans or builds graphs — the
 //! [`crate::stencil::metrics`] counters stay flat across `run` calls,
 //! which `rust/tests/compile_once.rs` pins.
 
 use std::collections::VecDeque;
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::cgra::stats::MemStats;
 use crate::cgra::{Machine, PlacedGraph, SimCore, SimResult, Simulator};
@@ -49,6 +66,7 @@ use crate::compile::{CompiledStage, CompiledStencil, HaloMode};
 use crate::stencil::decomp::{DecompKind, Tile};
 use crate::stencil::exchange::ExchangeSchedule;
 use crate::stencil::{temporal, StencilSpec};
+use crate::util::trace::{hash_f64s, Trace, TraceRecord};
 
 /// One unit of work: a halo-padded tile of the global grid.
 #[derive(Clone)]
@@ -61,6 +79,268 @@ pub struct TileTask {
     /// with the same input extents (the graph depends only on dims and
     /// the worker count, not the data).
     pub graph: Arc<PlacedGraph>,
+}
+
+/// How tile tasks are executed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// The session's persistent worker pool (default): one OS thread
+    /// per hardware tile, spawned once and reused across batches and
+    /// `run` calls.
+    #[default]
+    Pooled,
+    /// Run every task inline on the calling thread, in task order
+    /// (attribution lands on hardware tile 0). The differential
+    /// baseline the pooled mode is pinned bitwise-equal against.
+    Sequential,
+}
+
+/// One completed tile task: `(task id, hardware tile, tile, result)`.
+type TaskResult = (usize, usize, Tile, SimResult);
+
+/// Completion state of one submitted batch.
+#[derive(Default)]
+struct BatchDone {
+    results: Vec<TaskResult>,
+    /// Tasks accounted for (completed or cancelled by an error).
+    completed: usize,
+    /// First failure (error or caught panic) — cancels the batch.
+    error: Option<String>,
+}
+
+/// One batch of tile tasks submitted to the pool; the submitter blocks
+/// on `done_cv` until every task is accounted for.
+struct TileBatch {
+    machine: Machine,
+    core: SimCore,
+    resident: bool,
+    tasks: Mutex<VecDeque<TileTask>>,
+    done: Mutex<BatchDone>,
+    done_cv: Condvar,
+    n_tasks: usize,
+}
+
+/// State shared between the pool handle and its worker threads.
+struct PoolShared {
+    /// FIFO of open batches; workers drain the front batch's tasks.
+    queue: Mutex<VecDeque<Arc<TileBatch>>>,
+    work_cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// A persistent tile-worker pool: `threads` OS threads spawned once,
+/// parked on a condvar between batches. Replaces the old
+/// spawn-per-batch executor — a warm [`Session::run`] performs no
+/// thread creation at all.
+struct TilePool {
+    shared: Arc<PoolShared>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+/// Render a caught panic payload for the error message.
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    p.downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| p.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".to_string())
+}
+
+/// Simulate one tile task (shared by pool workers and sequential mode).
+fn simulate_task(
+    machine: &Machine,
+    core: SimCore,
+    resident: bool,
+    task: TileTask,
+) -> Result<SimResult> {
+    let sim = Simulator::from_placed(&task.graph, machine, task.input.clone(), task.input);
+    sim.with_core(core).with_fabric_resident(resident).run()
+}
+
+fn worker_loop(worker_id: usize, shared: Arc<PoolShared>) {
+    loop {
+        // Claim the front batch with unclaimed tasks (drained batches
+        // are popped; their stragglers finish on whoever claimed them).
+        let batch = {
+            let mut q = shared.queue.lock().unwrap();
+            'find: loop {
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                while let Some(b) = q.front() {
+                    if b.tasks.lock().unwrap().is_empty() {
+                        q.pop_front();
+                    } else {
+                        break 'find Arc::clone(b);
+                    }
+                }
+                q = shared.work_cv.wait(q).unwrap();
+            }
+        };
+        // Drain its tasks greedily.
+        loop {
+            let Some(task) = batch.tasks.lock().unwrap().pop_front() else {
+                break;
+            };
+            let task_id = task.id;
+            let tile = task.tile;
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                simulate_task(&batch.machine, batch.core, batch.resident, task)
+            }));
+            let failure = match outcome {
+                Ok(Ok(res)) => {
+                    let mut done = batch.done.lock().unwrap();
+                    done.results.push((task_id, worker_id, tile, res));
+                    done.completed += 1;
+                    if done.completed >= batch.n_tasks {
+                        batch.done_cv.notify_all();
+                    }
+                    continue;
+                }
+                Ok(Err(e)) => format!("tile task {task_id}: {e}"),
+                Err(p) => format!("tile task {task_id} panicked: {}", panic_msg(&*p)),
+            };
+            // Failure: cancel the batch's unclaimed tasks and account
+            // for them so the submitter wakes. Tasks already claimed by
+            // other workers account for themselves.
+            let cancelled = {
+                let mut t = batch.tasks.lock().unwrap();
+                let n = t.len();
+                t.clear();
+                n
+            };
+            let mut done = batch.done.lock().unwrap();
+            if done.error.is_none() {
+                done.error = Some(failure);
+            }
+            done.completed += 1 + cancelled;
+            if done.completed >= batch.n_tasks {
+                batch.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+impl TilePool {
+    fn new(threads: usize) -> Self {
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            work_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (0..threads.max(1))
+            .map(|w| {
+                let s = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("scgra-tile-{w}"))
+                    .spawn(move || worker_loop(w, s))
+                    .expect("spawning tile worker")
+            })
+            .collect();
+        Self {
+            shared,
+            workers: Mutex::new(workers),
+        }
+    }
+
+    /// Run a batch to completion and return the results sorted by task
+    /// id. Blocks the caller; worker panics and task errors come back
+    /// as `Err` with the first failure's message.
+    fn submit(
+        &self,
+        machine: &Machine,
+        core: SimCore,
+        resident: bool,
+        tasks: VecDeque<TileTask>,
+    ) -> Result<Vec<TaskResult>> {
+        let n = tasks.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let batch = Arc::new(TileBatch {
+            machine: machine.clone(),
+            core,
+            resident,
+            tasks: Mutex::new(tasks),
+            done: Mutex::new(BatchDone::default()),
+            done_cv: Condvar::new(),
+            n_tasks: n,
+        });
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push_back(Arc::clone(&batch));
+            self.shared.work_cv.notify_all();
+        }
+        let mut done = batch.done.lock().unwrap();
+        while done.completed < n {
+            done = batch.done_cv.wait(done).unwrap();
+        }
+        if let Some(e) = done.error.take() {
+            bail!("{e}");
+        }
+        let mut results = std::mem::take(&mut done.results);
+        drop(done);
+        results.sort_by_key(|r| r.0);
+        ensure!(
+            results.len() == n,
+            "lost tile results: {}/{n}",
+            results.len()
+        );
+        Ok(results)
+    }
+}
+
+impl Drop for TilePool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        // Hold the queue lock while notifying so no worker misses the
+        // flag between checking it and parking.
+        drop(self.shared.queue.lock().unwrap());
+        self.shared.work_cv.notify_all();
+        for h in self.workers.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Execution backend for one chunk: the session's pool or the caller
+/// thread.
+#[derive(Clone, Copy)]
+enum ExecRef<'a> {
+    Pool(&'a TilePool),
+    Sequential,
+}
+
+impl ExecRef<'_> {
+    /// Run a batch, returning results in task-id order.
+    fn run_batch(
+        &self,
+        machine: &Machine,
+        core: SimCore,
+        resident: bool,
+        tasks: VecDeque<TileTask>,
+    ) -> Result<Vec<TaskResult>> {
+        match self {
+            ExecRef::Pool(pool) => pool.submit(machine, core, resident, tasks),
+            ExecRef::Sequential => {
+                let mut results = Vec::with_capacity(tasks.len());
+                for task in tasks {
+                    let task_id = task.id;
+                    let tile = task.tile;
+                    let outcome = catch_unwind(AssertUnwindSafe(|| {
+                        simulate_task(machine, core, resident, task)
+                    }));
+                    match outcome {
+                        Ok(Ok(res)) => results.push((task_id, 0, tile, res)),
+                        Ok(Err(e)) => bail!("tile task {task_id}: {e}"),
+                        Err(p) => {
+                            bail!("tile task {task_id} panicked: {}", panic_msg(&*p))
+                        }
+                    }
+                }
+                Ok(results)
+            }
+        }
+    }
 }
 
 /// Per-hardware-tile accounting.
@@ -159,9 +439,10 @@ impl RunOutcome {
 }
 
 /// A concurrent executor over a compiled artifact. Cheap to construct,
-/// `Send + Sync`, and stateless across calls: every [`Session::run`]
-/// only instantiates per-run simulator state from the artifact's shared
-/// placed graphs.
+/// `Send + Sync`, and stateless across calls except for its lazily
+/// spawned worker pool: every [`Session::run`] only instantiates
+/// per-run simulator state from the artifact's shared placed graphs.
+/// Clones share the pool.
 #[derive(Clone)]
 pub struct Session {
     compiled: Arc<CompiledStencil>,
@@ -170,6 +451,9 @@ pub struct Session {
     /// options' tile count).
     tiles: usize,
     sim_core: SimCore,
+    exec: ExecMode,
+    /// Persistent worker pool, spawned on first pooled `run`.
+    pool: OnceLock<Arc<TilePool>>,
 }
 
 impl Session {
@@ -183,6 +467,8 @@ impl Session {
             machine,
             tiles,
             sim_core: SimCore::default(),
+            exec: ExecMode::default(),
+            pool: OnceLock::new(),
         }
     }
 
@@ -193,9 +479,17 @@ impl Session {
         self
     }
 
-    /// Override the hardware tile count pulling tasks.
+    /// Override the hardware tile count pulling tasks. Detaches from
+    /// any already-spawned pool (the new count needs new workers).
     pub fn with_tiles(mut self, tiles: usize) -> Self {
         self.tiles = tiles.max(1);
+        self.pool = OnceLock::new();
+        self
+    }
+
+    /// Select the execution backend (default [`ExecMode::Pooled`]).
+    pub fn with_exec(mut self, exec: ExecMode) -> Self {
+        self.exec = exec;
         self
     }
 
@@ -207,10 +501,47 @@ impl Session {
         &self.machine
     }
 
+    fn exec_ref(&self) -> ExecRef<'_> {
+        match self.exec {
+            ExecMode::Sequential => ExecRef::Sequential,
+            ExecMode::Pooled => {
+                ExecRef::Pool(self.pool.get_or_init(|| Arc::new(TilePool::new(self.tiles))))
+            }
+        }
+    }
+
     /// Execute the compiled workload (all `steps` it was compiled for)
-    /// on `input`. Never plans, never builds or places a graph; safe to
-    /// call concurrently from many threads on distinct inputs.
+    /// on `input`. Never plans, never builds or places a graph, and on
+    /// a warm session never spawns a thread; safe to call concurrently
+    /// from many threads on distinct inputs.
     pub fn run(&self, input: &[f64]) -> Result<RunOutcome> {
+        self.run_inner(input, None)
+    }
+
+    /// [`Session::run`], also capturing a [`Trace`]: one fingerprint
+    /// record per executed tile task, in deterministic task order.
+    pub fn run_recorded(&self, input: &[f64]) -> Result<(RunOutcome, Trace)> {
+        let mut records = Vec::new();
+        let outcome = self.run_inner(input, Some(&mut records))?;
+        Ok((outcome, Trace { records }))
+    }
+
+    /// Run and verify against a previously recorded [`Trace`]: any
+    /// behavioural divergence (cycles, fires, tickets, fire hash or
+    /// output hash of any tile task) fails with the first mismatch.
+    /// Core-dependent counters (`wakeups`) are ignored, so a trace
+    /// recorded under one sim core replays under the other.
+    pub fn run_replay(&self, input: &[f64], reference: &Trace) -> Result<RunOutcome> {
+        let (outcome, trace) = self.run_recorded(input)?;
+        trace.matches(reference)?;
+        Ok(outcome)
+    }
+
+    fn run_inner(
+        &self,
+        input: &[f64],
+        mut trace: Option<&mut Vec<TraceRecord>>,
+    ) -> Result<RunOutcome> {
         let spec = &self.compiled.spec;
         ensure!(
             input.len() == spec.grid_points(),
@@ -218,6 +549,7 @@ impl Session {
             input.len(),
             spec.grid_points()
         );
+        let exec = self.exec_ref();
         let halo = self.compiled.options.halo;
         let mut reports: Vec<RunReport> = Vec::with_capacity(self.compiled.total_chunks());
         for stage in &self.compiled.stages {
@@ -242,12 +574,15 @@ impl Session {
                 };
                 let rep = execute_chunk(
                     &self.machine,
+                    exec,
                     self.tiles,
                     self.sim_core,
                     spec,
                     src,
                     stage,
                     exchange,
+                    reports.len() as u32,
+                    trace.as_deref_mut(),
                 )?;
                 reports.push(rep);
             }
@@ -258,61 +593,6 @@ impl Session {
         };
         Ok(RunOutcome { output, reports })
     }
-}
-
-/// Run a batch of tile tasks on the `hw_tiles`-thread pool and return
-/// every `(hardware tile, task tile, result)` triple. With `resident`
-/// set, simulators treat the whole input as fabric-resident
-/// ([`Simulator::with_fabric_resident`]) — warm halo-exchange chunks.
-fn run_pool(
-    machine: &Machine,
-    hw_tiles: usize,
-    core: SimCore,
-    resident: bool,
-    tasks: VecDeque<TileTask>,
-) -> Result<Vec<(usize, Tile, SimResult)>> {
-    let n_tasks = tasks.len();
-    if n_tasks == 0 {
-        return Ok(Vec::new());
-    }
-    let queue = Arc::new(Mutex::new(tasks));
-    let (tx, rx) = mpsc::channel();
-    let mut handles = Vec::new();
-    for tile_id in 0..hw_tiles.min(n_tasks).max(1) {
-        let queue = Arc::clone(&queue);
-        let tx = tx.clone();
-        let machine = machine.clone();
-        handles.push(std::thread::spawn(move || -> Result<()> {
-            loop {
-                let task = { queue.lock().unwrap().pop_front() };
-                let Some(task) = task else { break };
-                let sim = Simulator::from_placed(
-                    task.graph.as_ref(),
-                    &machine,
-                    task.input.clone(),
-                    task.input,
-                );
-                let res = sim
-                    .with_core(core)
-                    .with_fabric_resident(resident)
-                    .run()
-                    .with_context(|| format!("tile task {}", task.id))?;
-                tx.send((tile_id, task.tile, res)).ok();
-            }
-            Ok(())
-        }));
-    }
-    drop(tx);
-    let results: Vec<(usize, Tile, SimResult)> = rx.into_iter().collect();
-    for h in handles {
-        h.join().expect("tile thread panicked")?;
-    }
-    ensure!(
-        results.len() == n_tasks,
-        "lost tile results: {}/{n_tasks}",
-        results.len()
-    );
-    Ok(results)
 }
 
 /// Copy the `[lo, hi)` box from `src` into `dst` (both full grids).
@@ -326,23 +606,49 @@ fn copy_box(spec: &StencilSpec, dst: &mut [f64], src: &[f64], lo: [usize; 3], hi
     }
 }
 
+/// Append one [`TraceRecord`] per task result (already in task order).
+fn trace_batch(
+    sink: &mut Vec<TraceRecord>,
+    chunk: u32,
+    phase: u32,
+    results: &[TaskResult],
+) {
+    for (task_id, _, _, res) in results {
+        sink.push(TraceRecord {
+            chunk,
+            phase,
+            task: *task_id as u32,
+            cycles: res.stats.cycles,
+            fires: res.stats.total_fires(),
+            tickets: res.stats.mem.loads + res.stats.mem.stores,
+            fire_hash: res.stats.fire_hash,
+            output_hash: hash_f64s(&res.output),
+            wakeups: res.stats.wakeups,
+        });
+    }
+}
+
 /// Execute one chunk: decompose `input` per the stage's plan, run every
-/// fused tile task on the `hw_tiles`-thread pool against the shared
+/// fused tile task through the execution backend against the shared
 /// placed graphs, merge the owned outputs, then advance the boundary
 /// ring through the stage's time-tiled band tiles so the chunk output
-/// equals the iterated oracle on the full grid. The shared core of
-/// [`Session::run`] and the legacy [`crate::coordinator::Coordinator`]
-/// shim. `exchange` is `Some` for a warm chunk under
-/// [`HaloMode::Exchange`]: every simulator runs fabric-resident and the
-/// schedule's shipped-point count lands in the report.
-pub(crate) fn execute_chunk(
+/// equals the iterated oracle on the full grid. `exchange` is `Some`
+/// for a warm chunk under [`HaloMode::Exchange`]: every simulator runs
+/// fabric-resident and the schedule's shipped-point count lands in the
+/// report. With a `trace` sink, fingerprints are appended per batch
+/// (fused tiles = phase 0, ring bands = phase 1..) in task order.
+#[allow(clippy::too_many_arguments)]
+fn execute_chunk(
     machine: &Machine,
+    exec: ExecRef<'_>,
     hw_tiles: usize,
     core: SimCore,
     spec: &StencilSpec,
     input: &[f64],
     stage: &CompiledStage,
     exchange: Option<&ExchangeSchedule>,
+    chunk: u32,
+    mut trace: Option<&mut Vec<TraceRecord>>,
 ) -> Result<RunReport> {
     ensure!(
         input.len() == spec.grid_points(),
@@ -365,12 +671,15 @@ pub(crate) fn execute_chunk(
         })
         .collect();
     let n_tasks = tasks.len();
-    let results = run_pool(machine, hw_tiles, core, resident, tasks)?;
+    let results = exec.run_batch(machine, core, resident, tasks)?;
+    if let Some(sink) = trace.as_deref_mut() {
+        trace_batch(sink, chunk, 0, &results);
+    }
 
     // Merge owned outputs into the global grid (boundary = input copy).
     let mut output = input.to_vec();
     let mut per_tile = vec![TileReport::default(); hw_tiles];
-    for (tile_id, tile, res) in results {
+    for (_, tile_id, tile, res) in results {
         tile.merge(spec, &mut output, &res.output);
         let rep = &mut per_tile[tile_id];
         rep.strips += 1;
@@ -389,7 +698,7 @@ pub(crate) fn execute_chunk(
     let mut ring_outputs: u64 = 0;
     if !stage.ring.is_empty() {
         let mut cur = input.to_vec();
-        for bands in &stage.ring {
+        for (band_i, bands) in stage.ring.iter().enumerate() {
             let tasks: VecDeque<TileTask> = bands
                 .iter()
                 .enumerate()
@@ -402,9 +711,12 @@ pub(crate) fn execute_chunk(
                     ),
                 })
                 .collect();
-            let results = run_pool(machine, hw_tiles, core, resident, tasks)?;
+            let results = exec.run_batch(machine, core, resident, tasks)?;
+            if let Some(sink) = trace.as_deref_mut() {
+                trace_batch(sink, chunk, band_i as u32 + 1, &results);
+            }
             let mut stage_max = 0u64;
-            for (_, tile, res) in results {
+            for (_, _, tile, res) in results {
                 tile.merge(spec, &mut cur, &res.output);
                 stage_max = stage_max.max(res.stats.cycles);
                 total_cycles += res.stats.cycles;
@@ -520,5 +832,132 @@ mod tests {
         let spec = StencilSpec::heat2d(16, 10, 0.2);
         let s = session(&spec, 1, CompileOptions::default().with_workers(1));
         assert!(s.run(&[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn pool_is_reused_across_runs_and_clones_share_it() {
+        let spec = StencilSpec::heat2d(20, 10, 0.2);
+        let x = vec![1.0; 200];
+        let s = session(&spec, 1, CompileOptions::default().with_workers(2).with_tiles(2));
+        let a = s.run(&x).unwrap();
+        let pool_ptr = Arc::as_ptr(s.pool.get().expect("pool spawned on first run"));
+        let s2 = s.clone();
+        let b = s2.run(&x).unwrap();
+        assert_eq!(a.output, b.output);
+        assert_eq!(
+            pool_ptr,
+            Arc::as_ptr(s2.pool.get().unwrap()),
+            "clones must share the worker pool"
+        );
+    }
+
+    #[test]
+    fn panicked_tile_task_reports_error_and_pool_survives() {
+        // A task whose input buffer is empty makes the simulator's
+        // functional load index out of bounds -> panic on the worker.
+        // The old executor aborted the whole process on join; now the
+        // panic must surface as Err and the pool must stay usable.
+        let spec = StencilSpec::heat2d(16, 10, 0.2);
+        let opts = CompileOptions::default().with_workers(2).with_tiles(2);
+        let machine = opts.machine.clone();
+        let compiled = Arc::new(compile(&spec, 1, &opts).unwrap());
+        let stage = &compiled.stages[0];
+        let tile = stage.plan.tiles[0];
+        let graph = Arc::clone(
+            &stage.graphs[&[tile.in_extent(0), tile.in_extent(1), tile.in_extent(2)]],
+        );
+        let poisoned = TileTask {
+            id: 0,
+            tile,
+            input: Vec::new(), // wrong length -> out-of-bounds load
+            graph,
+        };
+
+        let pool = TilePool::new(2);
+        let err = pool
+            .submit(&machine, SimCore::Event, false, VecDeque::from([poisoned.clone()]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("panicked"), "got: {err}");
+
+        // The pool survives and runs a healthy batch afterwards.
+        let healthy = TileTask {
+            input: tile.extract(&spec, &vec![1.0; 160]),
+            ..poisoned.clone()
+        };
+        let ok = pool
+            .submit(&machine, SimCore::Event, false, VecDeque::from([healthy]))
+            .unwrap();
+        assert_eq!(ok.len(), 1);
+
+        // Sequential mode propagates the same class of error.
+        let err2 = ExecRef::Sequential
+            .run_batch(&machine, SimCore::Event, false, VecDeque::from([poisoned]))
+            .unwrap_err()
+            .to_string();
+        assert!(err2.contains("panicked"), "got: {err2}");
+    }
+
+    #[test]
+    fn failed_batch_cancels_remaining_tasks_without_hanging() {
+        // One poisoned task among many: submit must return Err (not
+        // hang waiting for cancelled tasks, not abort).
+        let spec = StencilSpec::heat2d(16, 10, 0.2);
+        let opts = CompileOptions::default().with_workers(2).with_tiles(2);
+        let machine = opts.machine.clone();
+        let compiled = Arc::new(compile(&spec, 1, &opts).unwrap());
+        let stage = &compiled.stages[0];
+        let input = vec![1.0; 160];
+        let mut tasks: VecDeque<TileTask> = stage
+            .plan
+            .tiles
+            .iter()
+            .enumerate()
+            .map(|(id, t)| TileTask {
+                id,
+                tile: *t,
+                input: t.extract(&spec, &input),
+                graph: Arc::clone(&stage.graphs
+                    [&[t.in_extent(0), t.in_extent(1), t.in_extent(2)]]),
+            })
+            .collect();
+        tasks.front_mut().unwrap().input = Vec::new(); // poison the first
+        let pool = TilePool::new(1); // single worker: failure then cancel
+        let err = pool
+            .submit(&machine, SimCore::Event, false, tasks)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("tile task"), "got: {err}");
+    }
+
+    #[test]
+    fn sequential_mode_matches_pooled_outputs() {
+        let spec = StencilSpec::heat2d(28, 14, 0.2);
+        let mut rng = XorShift::new(0xAB);
+        let x = rng.normal_vec(28 * 14);
+        let s = session(&spec, 2, CompileOptions::default().with_workers(2).with_tiles(3));
+        let pooled = s.run(&x).unwrap();
+        let seq = s.clone().with_exec(ExecMode::Sequential).run(&x).unwrap();
+        assert_eq!(pooled.output, seq.output);
+        for (p, q) in pooled.reports.iter().zip(&seq.reports) {
+            assert_eq!(p.total_cycles, q.total_cycles);
+            assert_eq!(p.strips, q.strips);
+        }
+    }
+
+    #[test]
+    fn recorded_trace_replays_and_detects_tampering() {
+        let spec = StencilSpec::heat2d(24, 12, 0.2);
+        let mut rng = XorShift::new(0x77AC);
+        let x = rng.normal_vec(24 * 12);
+        let s = session(&spec, 2, CompileOptions::default().with_workers(2).with_tiles(2));
+        let (out, trace) = s.run_recorded(&x).unwrap();
+        assert!(!trace.records.is_empty());
+        let replayed = s.run_replay(&x, &trace).unwrap();
+        assert_eq!(out.output, replayed.output);
+        let mut tampered = trace.clone();
+        tampered.records[0].fire_hash ^= 1;
+        let err = s.run_replay(&x, &tampered).unwrap_err().to_string();
+        assert!(err.contains("fire_hash"), "got: {err}");
     }
 }

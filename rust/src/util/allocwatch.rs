@@ -1,0 +1,116 @@
+//! Allocation watchdog for the simulator's zero-allocation contract.
+//!
+//! The simulator cycle loops ([`crate::cgra::sim`]) promise **zero heap
+//! allocations after warm-up**: every growable structure (channel token
+//! arena, memory tickets, waiter lists, the event wheel) is sized at
+//! build time. This module is how that promise is *tested* rather than
+//! asserted in prose:
+//!
+//! * The cycle loops wrap themselves in [`enter_hot_region`] guards.
+//! * `rust/tests/alloc_free.rs` installs a counting `#[global_allocator]`
+//!   that forwards to the system allocator and calls [`note_alloc`] on
+//!   every allocation.
+//! * An allocation performed *by a thread inside a hot region* counts as
+//!   a violation; the test asserts [`violations`]` == 0` over a warm
+//!   `Session::run`.
+//!
+//! The region flag is thread-local, so pool workers simulating tiles are
+//! watched while the session thread merging outputs (which legitimately
+//! allocates) is not. When no counting allocator is installed (normal
+//! builds, benches), the guards cost two TLS writes per simulation and
+//! nothing else.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+thread_local! {
+    static IN_HOT_REGION: Cell<bool> = const { Cell::new(false) };
+}
+
+static VIOLATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Record one allocation. Called by a test-installed global allocator;
+/// counts a violation iff the calling thread is inside a hot region.
+/// Never panics (allocator context): TLS teardown reads as "not hot".
+#[inline]
+pub fn note_alloc() {
+    if IN_HOT_REGION.try_with(Cell::get).unwrap_or(false) {
+        VIOLATIONS.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Total allocations observed inside hot regions since the last [`reset`].
+pub fn violations() -> u64 {
+    VIOLATIONS.load(Ordering::Relaxed)
+}
+
+/// Zero the violation counter (test setup between warm-up and the
+/// measured run).
+pub fn reset() {
+    VIOLATIONS.store(0, Ordering::Relaxed);
+}
+
+/// RAII guard marking the current thread as inside an allocation-free
+/// hot region. Nesting is preserved (the previous flag is restored).
+pub struct HotRegionGuard {
+    prev: bool,
+}
+
+/// Enter a hot region on this thread; exits when the guard drops.
+pub fn enter_hot_region() -> HotRegionGuard {
+    let prev = IN_HOT_REGION.with(|c| c.replace(true));
+    HotRegionGuard { prev }
+}
+
+impl Drop for HotRegionGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        let _ = IN_HOT_REGION.try_with(|c| c.set(prev));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn guard_scopes_the_flag_and_counts() {
+        reset();
+        note_alloc(); // outside: ignored
+        assert_eq!(violations(), 0);
+        {
+            let _g = enter_hot_region();
+            note_alloc();
+            note_alloc();
+        }
+        note_alloc(); // outside again
+        assert!(violations() >= 2, "in-region allocs counted");
+    }
+
+    #[test]
+    fn nested_guards_restore_outer_state() {
+        let _outer = enter_hot_region();
+        {
+            let _inner = enter_hot_region();
+        }
+        // Still hot after the inner guard drops.
+        let before = violations();
+        note_alloc();
+        assert_eq!(violations(), before + 1);
+    }
+
+    #[test]
+    fn other_threads_are_not_hot() {
+        reset();
+        let _g = enter_hot_region();
+        std::thread::spawn(|| {
+            note_alloc(); // that thread never entered a region
+        })
+        .join()
+        .unwrap();
+        // Only allocations we note on *this* thread count.
+        let before = violations();
+        note_alloc();
+        assert_eq!(violations(), before + 1);
+    }
+}

@@ -1,9 +1,12 @@
 //! Small self-contained utilities: a deterministic PRNG for
 //! property-style tests, a mini benchmark harness (criterion is not
-//! available in the offline vendor set), and timing helpers.
+//! available in the offline vendor set), the simulator's
+//! allocation watchdog, deterministic run traces, and timing helpers.
 
+pub mod allocwatch;
 pub mod bench;
 pub mod rng;
+pub mod trace;
 
 /// Ceiling division for unsigned sizes.
 #[inline]

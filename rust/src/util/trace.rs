@@ -1,0 +1,318 @@
+//! Deterministic run traces: record the per-tile simulation fingerprint
+//! of a `scgra run`, then replay a later run against it and fail loudly
+//! on the first divergence.
+//!
+//! The simulator is deterministic by construction (see `cgra/sim.rs`),
+//! so a perf rework that accidentally changes *behaviour* — one extra
+//! fire, one reordered memory grant — shows up as a different cycle
+//! count, fire count, ticket count, fire-sequence hash or output hash
+//! for some tile task. A trace is one [`TraceRecord`] per executed tile
+//! task (fused phase plus each boundary-ring band), keyed by
+//! `(chunk, phase, task)` in deterministic task order.
+//!
+//! [`Trace::matches`] deliberately ignores `wakeups`: that counter is
+//! core-dependent bookkeeping (always 0 under the dense core), so a
+//! trace recorded under `--sim-core dense` replays cleanly under
+//! `--sim-core event` — the cross-core differential in CI rides on
+//! exactly this property.
+//!
+//! The on-disk format is a versioned plain-text table (one line per
+//! record) so diffs are reviewable and no serde dependency is needed.
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+/// What `--trace <mode> <path>` asked for.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TraceMode {
+    /// Run normally and write the trace to the path.
+    Record(String),
+    /// Run normally, load the trace from the path, and fail on mismatch.
+    Replay(String),
+}
+
+impl TraceMode {
+    /// Parse the CLI/config form: `record PATH` / `replay PATH`
+    /// (a `mode:PATH` colon form is accepted too).
+    pub fn parse(s: &str) -> Result<TraceMode> {
+        let s = s.trim();
+        let (mode, path) = s
+            .split_once(char::is_whitespace)
+            .or_else(|| s.split_once(':'))
+            .ok_or_else(|| {
+                anyhow!("expected `record PATH` or `replay PATH`, got `{s}`")
+            })?;
+        let path = path.trim().to_string();
+        ensure!(!path.is_empty(), "trace path is empty in `{s}`");
+        match mode {
+            "record" => Ok(TraceMode::Record(path)),
+            "replay" => Ok(TraceMode::Replay(path)),
+            other => bail!("unknown trace mode `{other}` (record|replay)"),
+        }
+    }
+}
+
+/// Fingerprint of one executed tile task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TraceRecord {
+    /// Host-schedule chunk index.
+    pub chunk: u32,
+    /// 0 = fused interior phase; 1.. = boundary-ring bands.
+    pub phase: u32,
+    /// Task index within the phase (deterministic task order).
+    pub task: u32,
+    /// Simulated cycles for this task.
+    pub cycles: u64,
+    /// Total instruction fires.
+    pub fires: u64,
+    /// Memory tickets issued (loads + stores).
+    pub tickets: u64,
+    /// Order-sensitive hash of the (node, cycle) fire sequence.
+    pub fire_hash: u64,
+    /// FNV-1a hash of the task's output grid bit patterns.
+    pub output_hash: u64,
+    /// Event-core wakeups (0 under dense) — recorded for inspection,
+    /// ignored by [`Trace::matches`].
+    pub wakeups: u64,
+}
+
+/// A recorded run: one record per executed tile task.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Trace {
+    pub records: Vec<TraceRecord>,
+}
+
+const HEADER: &str = "scgra-trace v1";
+
+impl Trace {
+    /// Serialize to the versioned text format.
+    pub fn to_text(&self) -> String {
+        let mut out = String::with_capacity(32 + self.records.len() * 96);
+        out.push_str(HEADER);
+        out.push('\n');
+        for r in &self.records {
+            out.push_str(&format!(
+                "{} {} {} {} {} {} {:016x} {:016x} {}\n",
+                r.chunk,
+                r.phase,
+                r.task,
+                r.cycles,
+                r.fires,
+                r.tickets,
+                r.fire_hash,
+                r.output_hash,
+                r.wakeups
+            ));
+        }
+        out
+    }
+
+    /// Parse the text format produced by [`Trace::to_text`].
+    pub fn parse(text: &str) -> Result<Trace> {
+        let mut lines = text.lines();
+        let head = lines.next().unwrap_or("").trim();
+        ensure!(
+            head == HEADER,
+            "not a trace file: expected `{HEADER}` header, got `{head}`"
+        );
+        let mut records = Vec::new();
+        for (i, line) in lines.enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let f: Vec<&str> = line.split_whitespace().collect();
+            ensure!(
+                f.len() == 9,
+                "trace line {}: expected 9 fields, got {}",
+                i + 2,
+                f.len()
+            );
+            let dec = |s: &str, what: &str| -> Result<u64> {
+                s.parse::<u64>()
+                    .map_err(|_| anyhow!("trace line {}: bad {what} `{s}`", i + 2))
+            };
+            let hex = |s: &str, what: &str| -> Result<u64> {
+                u64::from_str_radix(s, 16)
+                    .map_err(|_| anyhow!("trace line {}: bad {what} `{s}`", i + 2))
+            };
+            records.push(TraceRecord {
+                chunk: dec(f[0], "chunk")? as u32,
+                phase: dec(f[1], "phase")? as u32,
+                task: dec(f[2], "task")? as u32,
+                cycles: dec(f[3], "cycles")?,
+                fires: dec(f[4], "fires")?,
+                tickets: dec(f[5], "tickets")?,
+                fire_hash: hex(f[6], "fire_hash")?,
+                output_hash: hex(f[7], "output_hash")?,
+                wakeups: dec(f[8], "wakeups")?,
+            });
+        }
+        Ok(Trace { records })
+    }
+
+    /// Write to `path` in text form.
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_text())
+            .with_context(|| format!("writing trace to {path}"))
+    }
+
+    /// Load from `path`.
+    pub fn load(path: &str) -> Result<Trace> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace from {path}"))?;
+        Trace::parse(&text).with_context(|| format!("parsing trace {path}"))
+    }
+
+    /// Compare a fresh run (`self`) against a recorded `reference`.
+    /// Everything except `wakeups` must match record-for-record;
+    /// reports the first divergence with both values.
+    pub fn matches(&self, reference: &Trace) -> Result<()> {
+        ensure!(
+            self.records.len() == reference.records.len(),
+            "trace length mismatch: run has {} tile tasks, recording has {}",
+            self.records.len(),
+            reference.records.len()
+        );
+        for (got, want) in self.records.iter().zip(&reference.records) {
+            let key = format!(
+                "chunk {} phase {} task {}",
+                want.chunk, want.phase, want.task
+            );
+            ensure!(
+                (got.chunk, got.phase, got.task) == (want.chunk, want.phase, want.task),
+                "trace task order diverged at {key}: run has chunk {} phase {} task {}",
+                got.chunk,
+                got.phase,
+                got.task
+            );
+            let diff = |name: &str, g: u64, w: u64| -> Result<()> {
+                ensure!(g == w, "trace mismatch at {key}: {name} {g} != recorded {w}");
+                Ok(())
+            };
+            diff("cycles", got.cycles, want.cycles)?;
+            diff("fires", got.fires, want.fires)?;
+            diff("tickets", got.tickets, want.tickets)?;
+            ensure!(
+                got.fire_hash == want.fire_hash,
+                "trace mismatch at {key}: fire_hash {:016x} != recorded {:016x}",
+                got.fire_hash,
+                want.fire_hash
+            );
+            ensure!(
+                got.output_hash == want.output_hash,
+                "trace mismatch at {key}: output_hash {:016x} != recorded {:016x}",
+                got.output_hash,
+                want.output_hash
+            );
+            // wakeups intentionally not compared: core-dependent.
+        }
+        Ok(())
+    }
+}
+
+/// FNV-1a over the bit patterns of a float slice — the output fingerprint
+/// stored per trace record. Bitwise, so `-0.0 != 0.0` and NaN payloads
+/// count: exactly the identity the cross-core tests pin.
+pub fn hash_f64s(xs: &[f64]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for x in xs {
+        for b in x.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Trace {
+        Trace {
+            records: vec![
+                TraceRecord {
+                    chunk: 0,
+                    phase: 0,
+                    task: 0,
+                    cycles: 1234,
+                    fires: 999,
+                    tickets: 48,
+                    fire_hash: 0xdeadbeefcafe,
+                    output_hash: 0x12345678,
+                    wakeups: 777,
+                },
+                TraceRecord {
+                    chunk: 0,
+                    phase: 1,
+                    task: 2,
+                    cycles: 88,
+                    fires: 12,
+                    tickets: 4,
+                    fire_hash: 1,
+                    output_hash: 2,
+                    wakeups: 0,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn text_roundtrip_is_lossless() {
+        let t = sample();
+        let back = Trace::parse(&t.to_text()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Trace::parse("not a trace").is_err());
+        assert!(Trace::parse("scgra-trace v1\n1 2 3\n").is_err());
+        assert!(Trace::parse("scgra-trace v1\n1 2 3 4 5 6 zz 0 0\n").is_err());
+    }
+
+    #[test]
+    fn matches_ignores_wakeups_but_pins_everything_else() {
+        let t = sample();
+        let mut other = t.clone();
+        other.records[0].wakeups = 0; // dense-core replay of an event trace
+        t.matches(&other).unwrap();
+        other.records[1].cycles += 1;
+        let err = t.matches(&other).unwrap_err().to_string();
+        assert!(err.contains("cycles"), "{err}");
+        assert!(err.contains("chunk 0 phase 1 task 2"), "{err}");
+    }
+
+    #[test]
+    fn matches_detects_length_and_hash_divergence() {
+        let t = sample();
+        let mut short = t.clone();
+        short.records.pop();
+        assert!(t.matches(&short).is_err());
+        let mut tampered = t.clone();
+        tampered.records[0].output_hash ^= 1;
+        let err = t.matches(&tampered).unwrap_err().to_string();
+        assert!(err.contains("output_hash"), "{err}");
+    }
+
+    #[test]
+    fn trace_mode_parses_both_forms() {
+        assert_eq!(
+            TraceMode::parse("record /tmp/t.trace").unwrap(),
+            TraceMode::Record("/tmp/t.trace".into())
+        );
+        assert_eq!(
+            TraceMode::parse("replay:out.trace").unwrap(),
+            TraceMode::Replay("out.trace".into())
+        );
+        assert!(TraceMode::parse("record").is_err());
+        assert!(TraceMode::parse("verify x").is_err());
+    }
+
+    #[test]
+    fn hash_is_bitwise() {
+        assert_ne!(hash_f64s(&[0.0]), hash_f64s(&[-0.0]));
+        assert_eq!(hash_f64s(&[1.5, 2.5]), hash_f64s(&[1.5, 2.5]));
+        assert_ne!(hash_f64s(&[1.5, 2.5]), hash_f64s(&[2.5, 1.5]));
+    }
+}

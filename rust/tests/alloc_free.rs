@@ -1,0 +1,127 @@
+//! The zero-allocation contract, enforced: a counting global allocator
+//! forwards every allocation to the system allocator and reports it to
+//! `util::allocwatch`, which counts it as a violation iff the calling
+//! thread is inside a simulator cycle loop (the hot region the cores
+//! enter around their scheduling loops). A warm `Session::run` must
+//! perform **zero** heap allocations there — every growable structure
+//! (token arena, SoA node state, memory tickets, intrusive waiter
+//! lists, the event wheel) is sized before the loop starts.
+//!
+//! The hot-region flag is thread-local, so the persistent pool's tile
+//! workers are watched while the session thread stitching outputs
+//! (which legitimately allocates) is not. Covered matrix: both
+//! scheduler cores x star/box x 1/2/3-D, pooled and sequential.
+//!
+//! Tests in this binary share one global violation counter, so they
+//! serialize on a mutex — a violation must be attributed to the run
+//! that caused it.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::{Arc, Mutex};
+
+use stencil_cgra::cgra::SimCore;
+use stencil_cgra::compile::{compile, CompileOptions};
+use stencil_cgra::session::{ExecMode, Session};
+use stencil_cgra::stencil::spec::{symmetric_taps, uniform_box_taps, y_taps, z_taps};
+use stencil_cgra::stencil::StencilSpec;
+use stencil_cgra::util::allocwatch;
+
+struct CountingAlloc;
+
+// SAFETY: forwards verbatim to `System`; `note_alloc` is documented
+// allocator-safe (no allocation, no panic).
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        allocwatch::note_alloc();
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        allocwatch::note_alloc();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        allocwatch::note_alloc();
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Warm-up run, reset the counter, run again, assert the cycle loops
+/// stayed allocation-free and the two runs agree bitwise.
+fn assert_zero_alloc(name: &str, spec: &StencilSpec, core: SimCore, tiles: usize, exec: ExecMode) {
+    // A failed assert poisons the lock; later cases should still run.
+    let _serial = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let opts = CompileOptions::default().with_workers(2).with_tiles(tiles);
+    let compiled = Arc::new(compile(spec, 1, &opts).unwrap());
+    let machine = compiled.options.machine.clone();
+    let session = Session::new(compiled, machine)
+        .with_sim_core(core)
+        .with_exec(exec);
+    let x = vec![1.0; spec.grid_points()];
+
+    let cold = session.run(&x).unwrap();
+    allocwatch::reset();
+    let warm = session.run(&x).unwrap();
+    assert_eq!(
+        allocwatch::violations(),
+        0,
+        "{name}/{core}: warm cycle loop allocated"
+    );
+    assert_eq!(warm.output, cold.output, "{name}/{core}: runs diverged");
+}
+
+fn all_cores(name: &str, spec: &StencilSpec, tiles: usize, exec: ExecMode) {
+    assert_zero_alloc(name, spec, SimCore::Dense, tiles, exec);
+    assert_zero_alloc(name, spec, SimCore::Event, tiles, exec);
+}
+
+#[test]
+fn star_1d_is_alloc_free_warm() {
+    let spec = StencilSpec::dim1(96, symmetric_taps(2)).unwrap();
+    all_cores("star1d", &spec, 1, ExecMode::Pooled);
+}
+
+#[test]
+fn star_2d_is_alloc_free_warm_pooled_two_tiles() {
+    // Two tiles through the persistent pool: the per-thread hot-region
+    // flag watches each worker's cycle loop independently.
+    let spec = StencilSpec::dim2(24, 16, symmetric_taps(1), y_taps(1)).unwrap();
+    all_cores("star2d", &spec, 2, ExecMode::Pooled);
+}
+
+#[test]
+fn star_3d_is_alloc_free_warm() {
+    let spec =
+        StencilSpec::dim3(12, 8, 6, symmetric_taps(1), y_taps(1), z_taps(1)).unwrap();
+    all_cores("star3d", &spec, 1, ExecMode::Pooled);
+}
+
+#[test]
+fn box_2d_is_alloc_free_warm() {
+    let spec = StencilSpec::box2d(20, 12, 1, 1, uniform_box_taps(1, 1, 0)).unwrap();
+    all_cores("box2d", &spec, 1, ExecMode::Pooled);
+}
+
+#[test]
+fn box_3d_is_alloc_free_warm_sequential() {
+    // Sequential mode runs the cycle loop on the session thread itself;
+    // the contract must hold there exactly as on pool workers.
+    let spec = StencilSpec::box3d(10, 8, 6, 1, 1, 1, uniform_box_taps(1, 1, 1)).unwrap();
+    all_cores("box3d", &spec, 1, ExecMode::Sequential);
+}
+
+#[test]
+fn sequential_2d_is_alloc_free_warm() {
+    let spec = StencilSpec::dim2(24, 16, symmetric_taps(1), y_taps(1)).unwrap();
+    all_cores("star2d_seq", &spec, 2, ExecMode::Sequential);
+}

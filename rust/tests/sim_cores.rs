@@ -8,9 +8,20 @@
 //! The dense loop is the executable specification; the event core is
 //! the optimization. Any divergence here is a scheduler bug, not a
 //! tolerance question — everything is compared with `==`.
+//!
+//! The session matrix at the bottom extends the differential across the
+//! execution engines (persistent pool vs in-thread sequential) and the
+//! trace recorder: every data-dependent observable — outputs, per-task
+//! cycles, fire counts/hashes, memory counters — is identical across
+//! dense/event x pooled/sequential, and a trace recorded under any
+//! combination replays cleanly under every other.
+
+use std::sync::Arc;
 
 use stencil_cgra::cgra::{Machine, SimCore, Simulator};
+use stencil_cgra::compile::{compile, CompileOptions};
 use stencil_cgra::coordinator::{Coordinator, FuseMode};
+use stencil_cgra::session::{ExecMode, RunOutcome, Session};
 use stencil_cgra::stencil::decomp::DecompKind;
 use stencil_cgra::stencil::spec::{symmetric_taps, uniform_box_taps, y_taps, z_taps};
 use stencil_cgra::stencil::{build_graph, temporal, StencilSpec};
@@ -51,6 +62,10 @@ fn assert_cores_identical(spec: &StencilSpec, w: usize, m: &Machine, seed: u64) 
     assert_eq!(
         dense.stats.max_queue_occupancy, event.stats.max_queue_occupancy,
         "{label}: queue occupancy differs"
+    );
+    assert_eq!(
+        dense.stats.fire_hash, event.stats.fire_hash,
+        "{label}: (node, cycle) fire sequences differ"
     );
     assert_eq!(dense.stats.skipped_cycles, 0, "{label}: dense never skips");
     assert!(
@@ -271,4 +286,134 @@ fn multitile_2d_slab_cores_identical() {
 fn multitile_3d_pencil_cores_identical() {
     let spec = StencilSpec::dim3(14, 10, 8, symmetric_taps(1), y_taps(1), z_taps(1)).unwrap();
     assert_coordinator_cores_identical(&spec, 2, 4, DecompKind::Pencil, 0xA3);
+}
+
+// ---------------------------------------------------------------------------
+// Session matrix: dense/event x pooled/sequential x trace replay.
+//
+// Under the greedy persistent pool, *which worker* runs which tile task
+// depends on thread scheduling, so `makespan_cycles` and the per-tile
+// attribution (`per_tile`, `TileReport`) are scheduling-dependent and
+// deliberately excluded. Everything data-dependent — the stitched
+// output, the summed task cycles, the array-wide memory counters, the
+// per-task fingerprints a trace records — must be `==` across all four
+// combinations.
+// ---------------------------------------------------------------------------
+
+fn session_matrix_fixture() -> (Session, Vec<f64>) {
+    let spec = StencilSpec::dim2(32, 20, symmetric_taps(2), y_taps(1)).unwrap();
+    let opts = CompileOptions::default()
+        .with_workers(2)
+        .with_tiles(3)
+        .with_fuse(FuseMode::Spatial);
+    let compiled = Arc::new(compile(&spec, 3, &opts).unwrap());
+    let machine = compiled.options.machine.clone();
+    let mut rng = XorShift::new(0x5E55);
+    let x = rng.normal_vec(spec.grid_points());
+    (Session::new(compiled, machine), x)
+}
+
+const COMBOS: [(SimCore, ExecMode); 4] = [
+    (SimCore::Dense, ExecMode::Pooled),
+    (SimCore::Dense, ExecMode::Sequential),
+    (SimCore::Event, ExecMode::Pooled),
+    (SimCore::Event, ExecMode::Sequential),
+];
+
+fn sum_cycles(o: &RunOutcome) -> u64 {
+    o.reports.iter().map(|r| r.total_cycles).sum()
+}
+
+fn sum_mem(o: &RunOutcome) -> stencil_cgra::cgra::stats::MemStats {
+    let mut acc = stencil_cgra::cgra::stats::MemStats::default();
+    for rep in &o.reports {
+        for t in &rep.per_tile {
+            acc.accumulate(&t.mem);
+        }
+        acc.accumulate(&rep.ring_mem);
+    }
+    acc
+}
+
+#[test]
+fn session_exec_modes_and_cores_bitwise_identical() {
+    let (base, x) = session_matrix_fixture();
+    let runs: Vec<(String, RunOutcome)> = COMBOS
+        .iter()
+        .map(|&(core, exec)| {
+            let s = base.clone().with_sim_core(core).with_exec(exec);
+            (format!("{core}/{exec:?}"), s.run(&x).unwrap())
+        })
+        .collect();
+    let (ref_name, reference) = &runs[0];
+    for (name, o) in &runs[1..] {
+        assert_eq!(
+            o.output, reference.output,
+            "{name} vs {ref_name}: stitched grids differ"
+        );
+        assert_eq!(
+            sum_cycles(o),
+            sum_cycles(reference),
+            "{name} vs {ref_name}: summed task cycles differ"
+        );
+        assert_eq!(
+            sum_mem(o),
+            sum_mem(reference),
+            "{name} vs {ref_name}: array MemStats differ"
+        );
+        assert_eq!(o.reports.len(), reference.reports.len());
+        for (a, b) in o.reports.iter().zip(&reference.reports) {
+            assert_eq!(a.strips, b.strips, "{name}: task counts differ");
+            assert_eq!(
+                a.dram_point_reads(),
+                b.dram_point_reads(),
+                "{name}: DRAM point reads differ"
+            );
+            assert_eq!(
+                a.exchanged_points, b.exchanged_points,
+                "{name}: exchange accounting differs"
+            );
+        }
+    }
+}
+
+#[test]
+fn trace_recorded_under_any_combo_replays_under_every_other() {
+    let (base, x) = session_matrix_fixture();
+    // Record once per combination: per-task cycles, fires, tickets and
+    // fire/output hashes are scheduling-independent, so all four traces
+    // are identical and each replays against each.
+    let traces: Vec<_> = COMBOS
+        .iter()
+        .map(|&(core, exec)| {
+            let s = base.clone().with_sim_core(core).with_exec(exec);
+            let (_, t) = s.run_recorded(&x).unwrap();
+            t
+        })
+        .collect();
+    for (i, t) in traces.iter().enumerate().skip(1) {
+        assert_eq!(
+            t, &traces[0],
+            "trace under {:?} differs from {:?}",
+            COMBOS[i], COMBOS[0]
+        );
+    }
+    for &(core, exec) in &COMBOS {
+        let s = base.clone().with_sim_core(core).with_exec(exec);
+        s.run_replay(&x, &traces[0]).unwrap();
+    }
+}
+
+#[test]
+fn tampered_trace_fails_replay_with_the_divergent_field() {
+    let (base, x) = session_matrix_fixture();
+    let (_, trace) = base.run_recorded(&x).unwrap();
+    let mut tampered = trace.clone();
+    tampered.records[0].output_hash ^= 1;
+    let err = base.run_replay(&x, &tampered).unwrap_err().to_string();
+    assert!(err.contains("output_hash"), "{err}");
+    let mut short = trace;
+    short.records.pop();
+    let err = base.run_replay(&x, &short).unwrap_err().to_string();
+    assert!(err.contains("length mismatch"), "{err}");
 }
