@@ -13,7 +13,12 @@
 //! `BENCH_exchange.json` for `EXPERIMENTS.md` §Exchange. The trace
 //! section records a session run, replays it on the other scheduler
 //! core (cycle counts asserted equal record-for-record) and writes
-//! `BENCH_replay.json`.
+//! `BENCH_replay.json`. The fault section runs the same workload
+//! fault-free, under an unarmed plan (asserted cycle- and bit-identical
+//! to fault-free — arming is the only cost) and under an armed plan
+//! (values still bit-identical; the makespan inflation and retry count
+//! are the measured overhead), writing `BENCH_fault.json` for
+//! `EXPERIMENTS.md` §Faults.
 //!
 //! Timed region: `Simulator::from_placed` + the cycle loop — placement
 //! runs once outside, matching the compile-once/execute-many split.
@@ -33,6 +38,7 @@ use stencil_cgra::stencil::decomp::DecompKind;
 use stencil_cgra::stencil::spec::{symmetric_taps, y_taps, z_taps};
 use stencil_cgra::stencil::{build_graph, StencilSpec};
 use stencil_cgra::util::bench;
+use stencil_cgra::FaultPlan;
 
 fn quick() -> bool {
     std::env::var("BENCH_QUICK").map(|v| v != "0").unwrap_or(false)
@@ -386,6 +392,107 @@ fn main() {
     }
     let rpath = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_replay.json");
     rsink.write(rpath).expect("writing BENCH_replay.json");
+
+    bench::section("fault injection overhead (unarmed must be free)");
+    let mut fsink = bench::JsonSink::new();
+    {
+        let spec = StencilSpec::heat2d(96, 32, 0.2);
+        let compiled = Arc::new(
+            compile(
+                &spec,
+                2,
+                &CompileOptions::default().with_workers(4).with_tiles(2),
+            )
+            .unwrap(),
+        );
+        let machine = compiled.options.machine.clone();
+        let x = vec![1.0; spec.grid_points()];
+        let (iters, warmup) = if quick() { (1, 0) } else { (5, 1) };
+
+        struct FaultRun {
+            mean_s: f64,
+            makespan: u64,
+            retries: u64,
+            output: Vec<f64>,
+        }
+        let mut run_case = |label: &str,
+                            plan: Option<FaultPlan>,
+                            fsink: &mut bench::JsonSink|
+         -> FaultRun {
+            let session =
+                Session::new(Arc::clone(&compiled), machine.clone()).with_fault_plan(plan);
+            let mut makespan = 0u64;
+            let mut retries = 0u64;
+            let mut output = Vec::new();
+            let stats = bench::run(
+                &format!("2d_heat_96x32_t2_s2/{label}"),
+                warmup,
+                iters,
+                || {
+                    let out = session.run(&x).unwrap();
+                    makespan = out.reports.iter().map(|r| r.makespan_cycles).sum();
+                    retries = out
+                        .reports
+                        .iter()
+                        .map(|r| {
+                            r.ring_mem.retries
+                                + r.per_tile.iter().map(|t| t.mem.retries).sum::<u64>()
+                        })
+                        .sum();
+                    output = out.output;
+                },
+            );
+            fsink.record(
+                &stats,
+                &[
+                    ("sim_cycles", makespan as f64),
+                    ("retries", retries as f64),
+                ],
+            );
+            FaultRun {
+                mean_s: stats.mean_s,
+                makespan,
+                retries,
+                output,
+            }
+        };
+        let base = run_case("baseline", None, &mut fsink);
+        // Zero unarmed overhead, pinned: an all-zero-rate plan is
+        // filtered out at the session boundary, so the hot loops take
+        // the exact fault-free path — same cycles, same bits, no
+        // retries. The recorded wall times let CI watch that the two
+        // rows also stay within noise of each other.
+        let unarmed = run_case("unarmed_plan", Some(FaultPlan::default()), &mut fsink);
+        assert_eq!(
+            base.makespan, unarmed.makespan,
+            "unarmed plan changed simulated cycles"
+        );
+        assert_eq!(base.output, unarmed.output, "unarmed plan changed values");
+        assert_eq!(unarmed.retries, 0, "unarmed plan retried fills");
+        let armed = run_case(
+            "armed_fill30_stall10_slow5",
+            Some(FaultPlan::parse("seed=9 fill=30 stall=10 extra=4 slow=5 epoch=128").unwrap()),
+            &mut fsink,
+        );
+        assert_eq!(
+            armed.output, base.output,
+            "faults must change timing, never values"
+        );
+        assert!(armed.retries > 0, "armed fill plan never retried");
+        println!(
+            "  == unarmed == baseline ({} cycles, zero overhead); armed: {} cycles \
+             (+{:.1}%), {} retried fills; wall {:.3}s / {:.3}s / {:.3}s",
+            base.makespan,
+            armed.makespan,
+            100.0 * (armed.makespan as f64 / base.makespan.max(1) as f64 - 1.0),
+            armed.retries,
+            base.mean_s,
+            unarmed.mean_s,
+            armed.mean_s,
+        );
+    }
+    let fpath = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fault.json");
+    fsink.write(fpath).expect("writing BENCH_fault.json");
 
     // Anchor to the workspace root (cargo runs bench binaries with CWD =
     // the package dir, i.e. rust/), so CI finds the artifact in one place.

@@ -165,12 +165,24 @@ impl Fifo {
 
     #[inline]
     pub fn push(&mut self, a: &mut ChanArena, t: Token, now: u64) {
+        self.push_delayed(a, t, now, 0);
+    }
+
+    /// Push with `extra` cycles of additional visibility latency on top
+    /// of the channel's base latency — the injection point for
+    /// fault-plan link-stall windows. `extra = 0` is exactly [`push`];
+    /// the fault-free path always passes 0, so the hot path is
+    /// unchanged when no plan is armed.
+    ///
+    /// [`push`]: Fifo::push
+    #[inline]
+    pub fn push_delayed(&mut self, a: &mut ChanArena, t: Token, now: u64, extra: u64) {
         debug_assert!(self.can_push());
         let slot = (self.base + (self.head & self.mask)) as usize;
         a.vals[slot] = t.val;
         a.rows[slot] = t.row;
         a.cols[slot] = t.col;
-        a.ready[slot] = now + self.latency;
+        a.ready[slot] = now + self.latency + extra;
         self.head = self.head.wrapping_add(1);
         let len = self.len();
         if len > self.max_occupancy {
@@ -261,6 +273,18 @@ mod tests {
         f.push(&mut a, tok(2.0), 10); // ready 15
         assert!(f.pop(&mut a, 14).is_none());
         assert_eq!(f.pop(&mut a, 15).unwrap().val, 1.0);
+    }
+
+    #[test]
+    fn push_delayed_adds_to_the_base_latency() {
+        let (mut f, mut a) = Fifo::standalone(4, 3);
+        f.push_delayed(&mut a, tok(1.0), 10, 5); // visible at 10 + 3 + 5
+        assert!(f.peek(&a, 17).is_none());
+        assert_eq!(f.peek(&a, 18).unwrap().val, 1.0);
+        // extra = 0 is exactly push().
+        f.push_delayed(&mut a, tok(2.0), 10, 0);
+        f.pop(&mut a, 18);
+        assert_eq!(f.peek(&a, 18).unwrap().val, 2.0);
     }
 
     #[test]

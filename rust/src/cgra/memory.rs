@@ -34,6 +34,7 @@ use std::collections::VecDeque;
 
 use super::machine::Machine;
 use super::stats::MemStats;
+use crate::util::fault::{FaultPlan, MAX_FILL_RETRIES};
 
 /// Handle for an outstanding memory operation.
 pub type Ticket = u32;
@@ -47,7 +48,10 @@ const NO_WAITER: Ticket = Ticket::MAX;
 enum Txn {
     /// A cache-line fill for `line`; completes `dram_latency` after the
     /// bandwidth grant and then backfills every ticket waiting on it.
-    Fill { line: u64 },
+    /// `retry` counts transient injected failures so far; `not_before`
+    /// is the backoff release cycle of the latest retry (0 on first
+    /// issue — never gates an un-faulted fill).
+    Fill { line: u64, retry: u32, not_before: u64 },
     /// An 8-byte store drain for `ticket`.
     Store { ticket: Ticket },
 }
@@ -93,6 +97,15 @@ pub struct MemSys {
     /// from this tile's previous chunk), so loads complete at hit
     /// latency without touching the cache or DRAM.
     fabric_resident: bool,
+    /// Armed fault plan, if any. `None` (the default) is the
+    /// zero-overhead path: the grant loop's only extra work is one
+    /// `not_before` compare against the constant 0.
+    fault: Option<FaultPlan>,
+    /// Global fill-grant attempt counter — the deterministic coordinate
+    /// `FaultPlan::fill_fails` is keyed on. Both scheduler cores grant
+    /// in the same order, so the sequence (and therefore every injected
+    /// failure) is identical across them.
+    fill_attempts: u64,
     pub stats: MemStats,
 }
 
@@ -122,8 +135,17 @@ impl MemSys {
             resolved: Vec::new(),
             record_resolved: false,
             fabric_resident: false,
+            fault: None,
+            fill_attempts: 0,
             stats: MemStats::default(),
         }
+    }
+
+    /// Arm a fault plan (or disarm with `None`). Only plans with a
+    /// non-zero fill-failure percentage change this module's behaviour;
+    /// stall/slow-down families are applied by the simulator cores.
+    pub fn set_fault_plan(&mut self, plan: Option<FaultPlan>) {
+        self.fault = plan.filter(|p| p.fill_fail_pct > 0);
     }
 
     /// Mark the whole input buffer as fabric-resident (halo exchange):
@@ -162,7 +184,16 @@ impl MemSys {
     pub fn step(&mut self, now: u64) -> bool {
         self.budget = (self.budget + self.bytes_per_cycle).min(self.budget_cap);
         let mut progressed = false;
-        while let Some((bytes, _)) = self.queue.front() {
+        while let Some((bytes, txn)) = self.queue.front() {
+            // A retried fill holds the head of the queue until its
+            // backoff expires (FIFO order is part of the determinism
+            // contract). `not_before` is 0 on every un-faulted fill, so
+            // the unarmed path pays one compare against a constant.
+            if let Txn::Fill { not_before, .. } = txn {
+                if *not_before > now {
+                    break;
+                }
+            }
             if *bytes > self.budget {
                 break;
             }
@@ -170,7 +201,31 @@ impl MemSys {
             self.budget -= bytes;
             progressed = true;
             match txn {
-                Txn::Fill { line } => {
+                Txn::Fill { line, retry, .. } => {
+                    // Transient fill failure: the grant consumed
+                    // bandwidth (the bus transfer was wasted) but no
+                    // data arrived — re-queue with exponential backoff.
+                    // Bounded: after MAX_FILL_RETRIES the fill succeeds
+                    // unconditionally, so forward progress holds under
+                    // any plan.
+                    let attempt = self.fill_attempts;
+                    self.fill_attempts += 1;
+                    if retry < MAX_FILL_RETRIES {
+                        if let Some(p) = &self.fault {
+                            if p.fill_fails(attempt) {
+                                self.stats.retries += 1;
+                                self.queue.push_back((
+                                    bytes,
+                                    Txn::Fill {
+                                        line,
+                                        retry: retry + 1,
+                                        not_before: now + FaultPlan::backoff(retry),
+                                    },
+                                ));
+                                continue;
+                            }
+                        }
+                    }
                     let done = now + self.dram_latency;
                     self.stats.dram_read_bytes += bytes as u64;
                     // Install the tag (evicting) and release the waiters.
@@ -270,7 +325,8 @@ impl MemSys {
             }
             self.stats.misses += 1;
             self.line_waiters.insert(line, t);
-            self.queue.push_back((self.line_bytes, Txn::Fill { line }));
+            self.queue
+                .push_back((self.line_bytes, Txn::Fill { line, retry: 0, not_before: 0 }));
         }
         (val, t)
     }
@@ -322,6 +378,43 @@ impl MemSys {
     /// Any queued or unresolved work? (for deadlock detection)
     pub fn busy(&self) -> bool {
         !self.queue.is_empty()
+    }
+
+    /// One-line state snapshot for the deadlock forensic report: queue
+    /// depth, the head transaction, and the oldest ticket still
+    /// outstanding at `now`. Cold path only — allocates freely; never
+    /// called from inside a hot region. Deliberately excludes the
+    /// bandwidth budget: it keeps replenishing during the dense core's
+    /// idle quiet period while the event core's memory clock stops at
+    /// the last event, and the forensic text must stay byte-identical
+    /// across cores.
+    pub fn forensic_summary(&self, now: u64) -> String {
+        let head = match self.queue.front() {
+            None => "queue empty".to_string(),
+            Some((bytes, Txn::Fill { line, retry, not_before })) => format!(
+                "head fill line {line} ({bytes:.0} B, retry {retry}, not before cycle {not_before})"
+            ),
+            Some((bytes, Txn::Store { ticket })) => {
+                format!("head store ticket #{ticket} ({bytes:.0} B)")
+            }
+        };
+        let oldest = self
+            .tickets
+            .iter()
+            .enumerate()
+            .find(|(_, &done)| done == UNGRANTED || done > now);
+        let oldest = match oldest {
+            None => "no outstanding tickets".to_string(),
+            Some((t, &done)) if done == UNGRANTED => {
+                format!("oldest outstanding ticket #{t} (ungranted)")
+            }
+            Some((t, &done)) => format!("oldest outstanding ticket #{t} (due cycle {done})"),
+        };
+        format!(
+            "memory: {} queued txn(s), {head}, {oldest}, {} retried fill(s)",
+            self.queue.len(),
+            self.stats.retries
+        )
     }
 
     /// Take the output grid at end of simulation.
@@ -554,5 +647,93 @@ mod tests {
         assert_eq!(out, vec![t2, st]);
         assert_eq!(m.completion(t2), Some(3 + 100));
         assert_eq!(m.completion(st), Some(3 + 2));
+    }
+
+    #[test]
+    fn always_failing_fills_retry_until_the_bound_then_succeed() {
+        let mut m = mk((0..100).map(|i| i as f64).collect());
+        m.set_fault_plan(Some(FaultPlan {
+            fill_fail_pct: 100,
+            ..FaultPlan::default()
+        }));
+        let (_, t) = m.load(0, 0);
+        let mut cycle = 1;
+        while m.busy() {
+            m.step(cycle);
+            cycle += 1;
+            assert!(cycle < 10_000, "retried fill never drained");
+        }
+        assert_eq!(m.stats.retries, MAX_FILL_RETRIES as u64);
+        assert_eq!(m.stats.misses, 1, "a retried fill is one miss");
+        let done = m.completion(t).expect("bounded retries guarantee completion");
+        // Backoffs 8+16+32+64+128+256 cycles push the grant well past
+        // the fault-free grant cycle of 1.
+        assert!(done > 1 + 100 + 500, "backoff not applied: done={done}");
+    }
+
+    #[test]
+    fn unarmed_plan_is_bitwise_identical_to_no_plan() {
+        let grid: Vec<f64> = (0..8192).map(|i| i as f64).collect();
+        let mut a = mk(grid.clone());
+        let mut b = mk(grid);
+        b.set_fault_plan(Some(FaultPlan::default())); // all pcts 0
+        let mut ta = Vec::new();
+        let mut tb = Vec::new();
+        for i in 0..16 {
+            ta.push(a.load(i * 64, 0).1);
+            tb.push(b.load(i * 64, 0).1);
+        }
+        for c in 1..=60 {
+            assert_eq!(a.step(c), b.step(c));
+        }
+        for (x, y) in ta.iter().zip(&tb) {
+            assert_eq!(a.completion(*x), b.completion(*y));
+        }
+        assert_eq!(a.stats, b.stats);
+        assert_eq!(b.stats.retries, 0);
+    }
+
+    #[test]
+    fn advance_to_replays_injected_failures_bit_identically() {
+        // The replay-parity pin under faults: per-cycle stepping and
+        // advance_to must agree on grant times, retries and stats even
+        // while fills are failing and backing off.
+        let plan = FaultPlan { seed: 5, fill_fail_pct: 50, ..FaultPlan::default() };
+        let grid: Vec<f64> = (0..8192).map(|i| i as f64).collect();
+        let mut a = mk(grid.clone());
+        let mut b = mk(grid);
+        a.set_fault_plan(Some(plan.clone()));
+        b.set_fault_plan(Some(plan));
+        let mut ta = Vec::new();
+        let mut tb = Vec::new();
+        for i in 0..8 {
+            ta.push(a.load(i * 64, 5).1);
+            tb.push(b.load(i * 64, 5).1);
+        }
+        let mut last_a = None;
+        for c in 6..=4000u64 {
+            if a.step(c) {
+                last_a = Some(c);
+            }
+        }
+        let last_b = b.advance_to(5, 4000);
+        assert_eq!(last_a, last_b);
+        for (x, y) in ta.iter().zip(&tb) {
+            assert_eq!(a.completion(*x), b.completion(*y));
+        }
+        assert_eq!(a.stats, b.stats);
+        assert!(a.stats.retries > 0, "plan at 50% should have injected retries");
+    }
+
+    #[test]
+    fn forensic_summary_names_the_oldest_outstanding_ticket() {
+        let mut m = mk((0..100).map(|i| i as f64).collect());
+        let (_, t) = m.load(0, 0);
+        let s = m.forensic_summary(0);
+        assert!(s.contains(&format!("oldest outstanding ticket #{t} (ungranted)")), "{s}");
+        assert!(s.contains("1 queued txn(s)"), "{s}");
+        m.step(1);
+        let s = m.forensic_summary(2);
+        assert!(s.contains(&format!("oldest outstanding ticket #{t} (due cycle 101)")), "{s}");
     }
 }

@@ -93,8 +93,26 @@
 //! Deadlock detection becomes trivial in the event core: an empty wheel
 //! with the done-tree not fired *is* a deadlock, reported at the same
 //! cycle (and with the same text) the dense loop's quiet-period counter
-//! would produce.
+//! would produce. The report is forensic: blocked instructions, full
+//! channels with their endpoint instructions, and the memory system's
+//! outstanding work — byte-identical across cores.
+//!
+//! # Fault injection (`util::fault`)
+//!
+//! An armed [`crate::util::fault::FaultPlan`] (attached via
+//! [`Simulator::with_fault_plan`]) injects transient faults into a
+//! run: memory-line fill failures (retried by [`MemSys`] with bounded
+//! exponential backoff), channel stall windows (extra token-visibility
+//! latency on push) and PE slow-down epochs (whole placement slots
+//! suppressed from issuing). Every injection decision is a pure
+//! function of the plan's seed and stable coordinates (fill-attempt
+//! index, `(channel, epoch)`, `(slot, epoch)`) — never of host state
+//! or evaluation order — so both cores replay the same faults and the
+//! bit-identity guarantee above holds **under any plan**. An unarmed
+//! plan costs one predicted branch per injection site and nothing
+//! else, preserving the zero-allocation contract.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
@@ -102,6 +120,7 @@ use anyhow::{bail, Result};
 use crate::dfg::node::{AddrIter, FilterSpec, Op, Stage};
 use crate::dfg::Graph;
 use crate::util::allocwatch;
+use crate::util::fault::FaultPlan;
 
 use super::channel::{assign_arena, ChanArena, Fifo};
 use super::machine::Machine;
@@ -398,6 +417,13 @@ pub struct Simulator {
     /// ticket-owner table); sound because the mappings are
     /// read-once/write-once per grid point.
     ticket_hint: usize,
+    /// Armed fault plan for channel stalls / PE slow-downs (`None`
+    /// unless one of those families is enabled — fill failures live in
+    /// [`MemSys`]).
+    fault: Option<FaultPlan>,
+    /// Cooperative cancellation (run deadlines): when the flag flips,
+    /// both cores abandon the run with a "cancelled" error.
+    cancel: Option<Arc<AtomicBool>>,
 }
 
 impl PlacedGraph {
@@ -579,6 +605,8 @@ impl Simulator {
             },
             core: SimCore::default(),
             ticket_hint,
+            fault: None,
+            cancel: None,
         }
     }
 
@@ -608,6 +636,24 @@ impl Simulator {
         self
     }
 
+    /// Arm a deterministic fault-injection plan for this run (see the
+    /// module docs). `None` — or a plan with every percentage at 0 —
+    /// leaves the run bit-identical to an unfaulted one.
+    pub fn with_fault_plan(mut self, plan: Option<FaultPlan>) -> Self {
+        self.mem.set_fault_plan(plan.clone());
+        self.fault = plan.filter(|p| p.stall_pct > 0 || p.slow_pct > 0);
+        self
+    }
+
+    /// Attach a cooperative cancellation flag (run deadlines): when it
+    /// becomes true, the cycle loop exits with a "run cancelled" error
+    /// instead of completing. Checked coarsely (every ~1k cycles on
+    /// the dense core) so the hot path stays one predictable branch.
+    pub fn with_cancel(mut self, flag: Arc<AtomicBool>) -> Self {
+        self.cancel = Some(flag);
+        self
+    }
+
     /// Run to completion (DoneTree fires) and return the output + stats.
     pub fn run(self) -> Result<SimResult> {
         match self.core {
@@ -621,9 +667,12 @@ impl Simulator {
         enum Exit {
             Done(u64),
             Deadlock(u64),
+            Cancelled,
             Cap,
         }
         let pg = Arc::clone(&self.pg);
+        let fault = self.fault.clone();
+        let cancel = self.cancel.clone();
         // Everything past this point runs under the zero-allocation
         // watchdog; error *formatting* happens after the guard drops.
         let exit = {
@@ -635,9 +684,21 @@ impl Simulator {
                     break Exit::Done(now);
                 }
                 now += 1;
+                if let Some(cf) = &cancel {
+                    // Coarse check (cycle 1, then every 1024th) keeps
+                    // the flag off the per-cycle critical path.
+                    if now & 1023 == 1 && cf.load(Ordering::Relaxed) {
+                        break Exit::Cancelled;
+                    }
+                }
                 let mem_prog = self.mem.step(now);
                 let mut fired = false;
                 for s in 0..pg.slot_start.len() - 1 {
+                    if let Some(p) = &fault {
+                        if p.pe_suppressed(s as u32, now) {
+                            continue; // slow-down epoch: this PE issues nothing
+                        }
+                    }
                     let (lo, hi) =
                         (pg.slot_start[s] as usize, pg.slot_start[s + 1] as usize);
                     for k in lo..hi {
@@ -651,6 +712,7 @@ impl Simulator {
                             &mut self.mem,
                             &mut self.stats,
                             now,
+                            fault.as_ref(),
                         ) {
                             fired = true;
                             break; // one instruction per PE per cycle
@@ -670,6 +732,7 @@ impl Simulator {
         match exit {
             Exit::Done(now) => self.finish(now),
             Exit::Deadlock(at) => bail!(self.deadlock_report(at)),
+            Exit::Cancelled => bail!("run cancelled: deadline exceeded"),
             Exit::Cap => bail!("simulation exceeded {} cycles", self.max_cycles),
         }
     }
@@ -680,9 +743,12 @@ impl Simulator {
         enum Exit {
             Done(u64),
             Deadlock(u64),
+            Cancelled,
             Cap,
         }
         let pg = Arc::clone(&self.pg);
+        let fault = self.fault.clone();
+        let cancel = self.cancel.clone();
         let nslots = pg.slot_start.len() - 1;
         // Pseudo-slot that keeps the arbiter granting once per cycle
         // while transactions are queued. Highest slot id, so it never
@@ -690,8 +756,12 @@ impl Simulator {
         let mem_slot = nslots as u32;
 
         // Warm-up: everything below allocates once, before the watched
-        // cycle loop starts.
-        let mut wheel = Wheel::new(nslots + 1, pg.horizon);
+        // cycle loop starts. Stall windows lengthen token visibility
+        // by up to `max_extra_latency`, so the wheel is sized for it —
+        // a far wake must never alias into a near bucket.
+        let wheel_horizon = pg.horizon
+            + fault.as_ref().map(|p| p.max_extra_latency()).unwrap_or(0);
+        let mut wheel = Wheel::new(nslots + 1, wheel_horizon);
         // ticket id -> issuing slot (ticket ids are sequential).
         let mut ticket_owner: Vec<u32> = Vec::with_capacity(self.ticket_hint);
         let mut resolved: Vec<Ticket> =
@@ -722,10 +792,30 @@ impl Simulator {
                         Exit::Deadlock(report_at)
                     };
                 };
+                // The dense loop checks its quiet-period counter every
+                // cycle; if the next event lies beyond the cycle where
+                // that counter expires, the dense core would report a
+                // deadlock before ever reaching it. Fault plans make
+                // this reachable with a non-empty wheel: suppression
+                // re-arms hold far-future wakeups that promise no
+                // progress. Reproduce the dense bail cycle exactly.
+                let quiet_expiry = last_progress + pg.deadlock_quiet + 1;
+                if next > quiet_expiry {
+                    break if quiet_expiry > self.max_cycles + 1 {
+                        Exit::Cap
+                    } else {
+                        Exit::Deadlock(quiet_expiry)
+                    };
+                }
                 if next > self.max_cycles {
                     // The dense loop gives up at max_cycles + 1, before
                     // this event would ever be reached.
                     break Exit::Cap;
+                }
+                if let Some(cf) = &cancel {
+                    if cf.load(Ordering::Relaxed) {
+                        break Exit::Cancelled;
+                    }
                 }
                 self.stats.skipped_cycles += next - now - 1;
                 // Replay the per-cycle memory arbiter across the gap
@@ -754,6 +844,22 @@ impl Simulator {
                     if s == mem_slot {
                         continue; // arbiter pump: advance_to above did the work
                     }
+                    if let Some(p) = &fault {
+                        if p.pe_suppressed(s, now) {
+                            // Slow-down epoch: nothing on this PE may
+                            // issue until the epoch ends. Chunked
+                            // re-arm, clamped to the wheel horizon;
+                            // the wake re-checks, because the next
+                            // epoch may be suppressed too. Exact
+                            // vs. the dense core: a ready slot stays
+                            // ready through suppression (only its own
+                            // firing consumes its inputs), so both
+                            // cores fire it at the first unsuppressed
+                            // ready cycle.
+                            wheel.insert(p.pe_release(now).min(now + wheel_horizon), s);
+                            continue;
+                        }
+                    }
                     let s_us = s as usize;
                     self.stats.wakeups += 1;
                     let (lo, hi) = (
@@ -773,6 +879,7 @@ impl Simulator {
                             &mut self.mem,
                             &mut self.stats,
                             now,
+                            fault.as_ref(),
                         );
                         for _ in tickets_before..self.mem.ticket_count() {
                             ticket_owner.push(s);
@@ -791,12 +898,19 @@ impl Simulator {
                                 wheel.insert(if p > s { now } else { now + 1 }, p);
                             }
                             // Pushed tokens become visible `latency`
-                            // cycles out (ports we did not push into get a
-                            // spurious, harmless wake).
+                            // (+ any stall-window extra — computed from
+                            // the same (channel, cycle) coordinates the
+                            // push used, so the wake lands exactly at
+                            // visibility) cycles out; ports we did not
+                            // push into get a spurious, harmless wake.
                             for port in &d.outs {
                                 for &c in port {
+                                    let extra = fault
+                                        .as_ref()
+                                        .map(|p| p.stall_extra_at(c, now))
+                                        .unwrap_or(0);
                                     wheel.insert(
-                                        now + pg.chan_lat[c as usize],
+                                        now + pg.chan_lat[c as usize] + extra,
                                         pg.chan_dst_slot[c as usize],
                                     );
                                 }
@@ -835,6 +949,7 @@ impl Simulator {
         match exit {
             Exit::Done(now) => self.finish(now),
             Exit::Deadlock(at) => bail!(self.deadlock_report(at)),
+            Exit::Cancelled => bail!("run cancelled: deadline exceeded"),
             Exit::Cap => bail!("simulation exceeded {} cycles", self.max_cycles),
         }
     }
@@ -856,7 +971,14 @@ impl Simulator {
         })
     }
 
-    /// Human-readable account of why nothing can make progress.
+    /// Forensic account of why nothing can make progress: blocked
+    /// instructions (which input is starved, which output is backed
+    /// up), every full channel with the producer/consumer pair at its
+    /// endpoints, and the memory system's outstanding work. Both cores
+    /// produce this byte-identically at the same cycle: all simulator
+    /// state froze at the last progress cycle, and `now` is the same
+    /// reported quiet-period expiry. The header line is load-bearing —
+    /// `ScgraError::classify` keys on its prefix.
     fn deadlock_report(&self, now: u64) -> String {
         let pg = &self.pg;
         let mut lines = vec![format!(
@@ -894,6 +1016,25 @@ impl Simulator {
                 }
             }
         }
+        // Backpressure edges: a full channel names the stalled
+        // producer -> consumer pair holding the cycle together.
+        let mut full = 0usize;
+        for (c, f) in self.chans.iter().enumerate() {
+            if !f.can_push() {
+                full += 1;
+                if lines.len() < 40 {
+                    lines.push(format!(
+                        "  ch{c}: full {}/{} {} -> {}",
+                        f.len(),
+                        f.capacity(),
+                        pg.names[f.src_node() as usize],
+                        pg.names[f.dst_node() as usize],
+                    ));
+                }
+            }
+        }
+        lines.push(format!("  {} full channel(s) total", full));
+        lines.push(format!("  {}", self.mem.forensic_summary(now)));
         lines.join("\n")
     }
 }
@@ -904,9 +1045,29 @@ fn can_push_all(chans: &[Fifo], outs: &[u32]) -> bool {
 }
 
 #[inline]
-fn push_all(chans: &mut [Fifo], a: &mut ChanArena, outs: &[u32], t: Token, now: u64) {
-    for &c in outs {
-        chans[c as usize].push(a, t, now);
+fn push_all(
+    chans: &mut [Fifo],
+    a: &mut ChanArena,
+    outs: &[u32],
+    t: Token,
+    now: u64,
+    fault: Option<&FaultPlan>,
+) {
+    match fault {
+        None => {
+            for &c in outs {
+                chans[c as usize].push(a, t, now);
+            }
+        }
+        // Stall window: visibility is delayed by the plan's extra for
+        // this (channel, epoch). The event core computes the same
+        // extra from the same coordinates when scheduling the
+        // consumer's wake.
+        Some(p) => {
+            for &c in outs {
+                chans[c as usize].push_delayed(a, t, now, p.stall_extra_at(c, now));
+            }
+        }
     }
 }
 
@@ -925,13 +1086,14 @@ fn fire(
     mem: &mut MemSys,
     stats: &mut SimStats,
     now: u64,
+    fault: Option<&FaultPlan>,
 ) -> bool {
     let fired = match d.op {
         Op::AddrGen => {
             if st.agen_pos[id] < d.agen_len && can_push_all(chans, &d.out0) {
                 let (row, col, addr) = d.agen.as_ref().unwrap().token(st.agen_pos[id]);
                 st.agen_pos[id] += 1;
-                push_all(chans, arena, &d.out0, Token::new(addr as f64, row, col), now);
+                push_all(chans, arena, &d.out0, Token::new(addr as f64, row, col), now, fault);
                 true
             } else {
                 false
@@ -943,7 +1105,7 @@ fn fire(
             if let Some((t, tok)) = st.inflight_front(d.mem_idx) {
                 if mem.done(t, now) && can_push_all(chans, &d.out0) {
                     st.inflight_pop(d.mem_idx);
-                    push_all(chans, arena, &d.out0, tok, now);
+                    push_all(chans, arena, &d.out0, tok, now, fault);
                     acted = true;
                 }
             }
@@ -968,7 +1130,7 @@ fn fire(
             if let Some((t, tok)) = st.inflight_front(d.mem_idx) {
                 if mem.done(t, now) && can_push_all(chans, &d.out0) {
                     st.inflight_pop(d.mem_idx);
-                    push_all(chans, arena, &d.out0, tok, now);
+                    push_all(chans, arena, &d.out0, tok, now, fault);
                     acted = true;
                 }
             }
@@ -1000,6 +1162,7 @@ fn fire(
                     &d.out0,
                     Token::new(d.coeff * t.val, t.row, t.col),
                     now,
+                    fault,
                 );
                 true
             } else {
@@ -1021,6 +1184,7 @@ fn fire(
                     &d.out0,
                     Token::new(part.val + d.coeff * data.val, data.row, data.col),
                     now,
+                    fault,
                 );
                 true
             } else {
@@ -1042,6 +1206,7 @@ fn fire(
                     &d.out0,
                     Token::new(x.val + y.val, x.row, x.col),
                     now,
+                    fault,
                 );
                 true
             } else {
@@ -1052,7 +1217,7 @@ fn fire(
             let ch = d.in0 as usize;
             if chans[ch].peek(arena, now).is_some() && can_push_all(chans, &d.out0) {
                 let t = chans[ch].pop(arena, now).unwrap();
-                push_all(chans, arena, &d.out0, t, now);
+                push_all(chans, arena, &d.out0, t, now, fault);
                 true
             } else {
                 false
@@ -1070,7 +1235,7 @@ fn fire(
                     if can_push_all(chans, &d.out0) {
                         chans[ch].pop(arena, now);
                         st.filter_idx[id] += 1;
-                        push_all(chans, arena, &d.out0, tok, now);
+                        push_all(chans, arena, &d.out0, tok, now, fault);
                         true
                     } else {
                         false
@@ -1096,7 +1261,7 @@ fn fire(
                 chans[s].pop(arena, now);
                 let data = chans[dd].pop(arena, now).unwrap();
                 if pass {
-                    push_all(chans, arena, &d.out0, data, now);
+                    push_all(chans, arena, &d.out0, data, now, fault);
                 }
                 true
             } else {
@@ -1111,7 +1276,7 @@ fn fire(
                 let port = (tok.row as usize) % nports;
                 if can_push_all(chans, &d.outs[port]) {
                     chans[ch].pop(arena, now);
-                    push_all(chans, arena, &d.outs[port], tok, now);
+                    push_all(chans, arena, &d.outs[port], tok, now, fault);
                     true
                 } else {
                     false
@@ -1129,7 +1294,7 @@ fn fire(
                 let x = chans[a].pop(arena, now).unwrap();
                 let y = chans[b].pop(arena, now).unwrap();
                 let v = if x.val <= y.val { 1.0 } else { 0.0 };
-                push_all(chans, arena, &d.out0, Token::new(v, x.row, x.col), now);
+                push_all(chans, arena, &d.out0, Token::new(v, x.row, x.col), now, fault);
                 true
             } else {
                 false
@@ -1144,7 +1309,7 @@ fn fire(
                 let x = chans[a].pop(arena, now).unwrap();
                 let y = chans[b].pop(arena, now).unwrap();
                 let v = if x.val != 0.0 || y.val != 0.0 { 1.0 } else { 0.0 };
-                push_all(chans, arena, &d.out0, Token::new(v, x.row, x.col), now);
+                push_all(chans, arena, &d.out0, Token::new(v, x.row, x.col), now, fault);
                 true
             } else {
                 false
@@ -1166,7 +1331,14 @@ fn fire(
                     .unwrap_or(true);
                 if outs_ok {
                     if let Some(o) = d.outs.first() {
-                        push_all(chans, arena, o, Token::new(st.count[id] as f64, 0, 0), now);
+                        push_all(
+                            chans,
+                            arena,
+                            o,
+                            Token::new(st.count[id] as f64, 0, 0),
+                            now,
+                            fault,
+                        );
                     }
                     st.emitted[id] = true;
                     acted = true;
@@ -1190,7 +1362,7 @@ fn fire(
                         chans[c as usize].pop(arena, now);
                     }
                     st.emitted[id] = true;
-                    push_all(chans, arena, &d.out0, Token::new(1.0, 0, 0), now);
+                    push_all(chans, arena, &d.out0, Token::new(1.0, 0, 0), now, fault);
                     true
                 } else {
                     false
@@ -1201,7 +1373,7 @@ fn fire(
             // `expected` defaults to u64::MAX (unlimited stream).
             if st.count[id] < d.expected && can_push_all(chans, &d.out0) {
                 st.count[id] += 1;
-                push_all(chans, arena, &d.out0, Token::new(d.coeff, 0, 0), now);
+                push_all(chans, arena, &d.out0, Token::new(d.coeff, 0, 0), now, fault);
                 true
             } else {
                 false
@@ -1410,6 +1582,11 @@ mod tests {
             errs.push(err);
         }
         assert_eq!(errs[0], errs[1], "cores must report the same deadlock");
+        // The report is forensic: full channels named with their
+        // endpoint instructions, plus the memory system's state.
+        assert!(errs[0].contains("full channel(s) total"), "{}", errs[0]);
+        assert!(errs[0].contains(" -> "), "endpoints expected: {}", errs[0]);
+        assert!(errs[0].contains("memory:"), "{}", errs[0]);
     }
 
     #[test]
@@ -1509,7 +1686,7 @@ mod tests {
         let m = Machine::paper();
         let mut mem = MemSys::new(&m, vec![0.0], vec![0.0]);
         let mut stats = SimStats::default();
-        assert!(!fire(0, &d, &mut st, &mut chans, &mut arena, &mut mem, &mut stats, 1));
+        assert!(!fire(0, &d, &mut st, &mut chans, &mut arena, &mut mem, &mut stats, 1, None));
         assert!(!st.emitted[0], "must block, not emit-and-drop");
         assert!(
             chans[0].peek(&arena, 1).is_some(),
@@ -1517,7 +1694,7 @@ mod tests {
         );
         // Credit frees: now it completes and the token is delivered.
         chans[1].pop(&mut arena, 1);
-        assert!(fire(0, &d, &mut st, &mut chans, &mut arena, &mut mem, &mut stats, 2));
+        assert!(fire(0, &d, &mut st, &mut chans, &mut arena, &mut mem, &mut stats, 2, None));
         assert!(st.emitted[0]);
         assert_eq!(chans[1].len(), 1, "completion token delivered, not dropped");
         assert!(chans[0].peek(&arena, 2).is_none(), "input consumed on completion");
@@ -1585,6 +1762,128 @@ mod tests {
             let res = sim.run().unwrap();
             assert!(res.stats.cycles > 0);
         }
+    }
+
+    #[test]
+    fn injected_fill_faults_retry_and_stay_bit_identical_across_cores() {
+        let m = Machine::paper();
+        let spec = StencilSpec::heat2d(18, 12, 0.2);
+        let mut rng = XorShift::new(21);
+        let x = rng.normal_vec(18 * 12);
+        let run = |core, plan: Option<FaultPlan>| {
+            let g = map2d::build(&spec, 2).unwrap();
+            Simulator::build(g, &m, x.clone(), x.clone())
+                .unwrap()
+                .with_core(core)
+                .with_fault_plan(plan)
+                .run()
+                .unwrap()
+        };
+        let plan = FaultPlan { seed: 9, fill_fail_pct: 40, ..FaultPlan::default() };
+        let clean = run(SimCore::Event, None);
+        let dense = run(SimCore::Dense, Some(plan.clone()));
+        let event = run(SimCore::Event, Some(plan));
+        assert!(dense.stats.mem.retries > 0, "a 40% plan must inject retries");
+        assert_eq!(dense.output, event.output);
+        assert_eq!(dense.stats.cycles, event.stats.cycles);
+        assert_eq!(dense.stats.mem, event.stats.mem);
+        assert_eq!(dense.stats.fire_hash, event.stats.fire_hash);
+        // Transient faults perturb timing, never data.
+        assert_eq!(dense.output, clean.output);
+        assert!(dense.stats.cycles > clean.stats.cycles);
+        assert_eq!(clean.stats.mem.retries, 0);
+    }
+
+    #[test]
+    fn stall_and_slowdown_faults_stay_bit_identical_across_cores() {
+        let m = Machine::paper();
+        let spec = StencilSpec::dim1(96, crate::stencil::spec::symmetric_taps(3)).unwrap();
+        let mut rng = XorShift::new(31);
+        let x = rng.normal_vec(96);
+        let run = |core, plan: Option<FaultPlan>| {
+            let g = map1d::build(&spec, 3).unwrap();
+            Simulator::build(g, &m, x.clone(), x.clone())
+                .unwrap()
+                .with_core(core)
+                .with_fault_plan(plan)
+                .run()
+                .unwrap()
+        };
+        let plan = FaultPlan {
+            seed: 4,
+            stall_pct: 35,
+            stall_extra: 6,
+            slow_pct: 25,
+            epoch_cycles: 64,
+            ..FaultPlan::default()
+        };
+        let clean = run(SimCore::Event, None);
+        let dense = run(SimCore::Dense, Some(plan.clone()));
+        let event = run(SimCore::Event, Some(plan));
+        assert_eq!(dense.output, event.output);
+        assert_eq!(dense.stats.cycles, event.stats.cycles);
+        assert_eq!(dense.stats.mem, event.stats.mem);
+        assert_eq!(dense.stats.fire_hash, event.stats.fire_hash);
+        assert_eq!(dense.output, clean.output, "faults must not corrupt data");
+        assert!(
+            dense.stats.cycles > clean.stats.cycles,
+            "stalls + slow-downs must cost cycles ({} vs {})",
+            dense.stats.cycles,
+            clean.stats.cycles
+        );
+    }
+
+    #[test]
+    fn unarmed_fault_plan_is_bitwise_free() {
+        let m = Machine::paper();
+        let spec = StencilSpec::heat2d(14, 10, 0.2);
+        let x = vec![1.0; 140];
+        let run = |plan: Option<FaultPlan>| {
+            let g = map2d::build(&spec, 2).unwrap();
+            Simulator::build(g, &m, x.clone(), x.clone())
+                .unwrap()
+                .with_fault_plan(plan)
+                .run()
+                .unwrap()
+        };
+        let without = run(None);
+        let with = run(Some(FaultPlan::default())); // all percentages 0
+        assert_eq!(without.output, with.output);
+        assert_eq!(without.stats.cycles, with.stats.cycles);
+        assert_eq!(without.stats.fire_hash, with.stats.fire_hash);
+        assert_eq!(without.stats.mem, with.stats.mem);
+        assert_eq!(with.stats.mem.retries, 0);
+    }
+
+    #[test]
+    fn cancel_flag_aborts_both_cores_without_hanging() {
+        let m = Machine::paper();
+        let spec = StencilSpec::heat2d(16, 12, 0.2);
+        let x = vec![1.0; 16 * 12];
+        let flag = Arc::new(AtomicBool::new(true)); // pre-cancelled
+        for core in [SimCore::Dense, SimCore::Event] {
+            let g = map2d::build(&spec, 2).unwrap();
+            let err = Simulator::build(g, &m, x.clone(), x.clone())
+                .unwrap()
+                .with_core(core)
+                .with_cancel(Arc::clone(&flag))
+                .run()
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("cancelled"), "{core}: {err}");
+        }
+        // An un-tripped flag changes nothing.
+        let free = Arc::new(AtomicBool::new(false));
+        let g = map2d::build(&spec, 2).unwrap();
+        let a = Simulator::build(g, &m, x.clone(), x.clone())
+            .unwrap()
+            .with_cancel(free)
+            .run()
+            .unwrap();
+        let g = map2d::build(&spec, 2).unwrap();
+        let b = Simulator::build(g, &m, x.clone(), x.clone()).unwrap().run().unwrap();
+        assert_eq!(a.stats.cycles, b.stats.cycles);
+        assert_eq!(a.output, b.output);
     }
 
     #[test]

@@ -20,6 +20,10 @@ pub struct MemStats {
     /// value never touches the cache or DRAM — a neighboring tile (or
     /// this tile's previous chunk) already holds it on fabric.
     pub exchanged: u64,
+    /// Line fills that failed transiently (injected via
+    /// `util::fault::FaultPlan`) and were re-queued with exponential
+    /// backoff. Always 0 when no fault plan is armed.
+    pub retries: u64,
     pub dram_read_bytes: u64,
     pub dram_write_bytes: u64,
 }
@@ -39,6 +43,7 @@ impl MemStats {
             conflict_misses,
             evictions,
             exchanged,
+            retries,
             dram_read_bytes,
             dram_write_bytes,
         } = other;
@@ -50,6 +55,7 @@ impl MemStats {
         self.conflict_misses += conflict_misses;
         self.evictions += evictions;
         self.exchanged += exchanged;
+        self.retries += retries;
         self.dram_read_bytes += dram_read_bytes;
         self.dram_write_bytes += dram_write_bytes;
     }
@@ -218,6 +224,7 @@ mod tests {
             conflict_misses: 6,
             evictions: 7,
             exchanged: 10,
+            retries: 11,
             dram_read_bytes: 8,
             dram_write_bytes: 9,
         };
@@ -234,6 +241,7 @@ mod tests {
                 conflict_misses: 12,
                 evictions: 14,
                 exchanged: 20,
+                retries: 22,
                 dram_read_bytes: 16,
                 dram_write_bytes: 18,
             }

@@ -40,6 +40,7 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::cgra::{Machine, PlacedGraph};
 use crate::config::Config;
+use crate::error::ScgraError;
 use crate::roofline::{self, TiledAnalysis};
 use crate::runtime::artifact::{ArtifactMeta, Manifest};
 use crate::stencil::decomp::{self, DecompKind, DecompPlan, Tile};
@@ -399,16 +400,32 @@ impl CompiledStencil {
         s
     }
 
-    /// Write [`Self::to_text`] to `path`.
-    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+    /// Write [`Self::to_text`] to `path`. Filesystem failures come
+    /// back as [`ScgraError::Io`].
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), ScgraError> {
         std::fs::write(path.as_ref(), self.to_text())
-            .with_context(|| format!("writing {}", path.as_ref().display()))
+            .map_err(|e| ScgraError::Io(format!("writing {}: {e}", path.as_ref().display())))
     }
 
     /// Parse an artifact serialized by [`Self::to_text`] and rebuild
     /// its placed graphs. The result executes bitwise-identically to
-    /// the artifact that was saved.
-    pub fn parse(text: &str) -> Result<Self> {
+    /// the artifact that was saved. Any structural problem — truncated
+    /// text, wrong version line, unparseable body, inconsistent or
+    /// over-budget declared geometry — is
+    /// [`ScgraError::MalformedArtifact`]; corrupt input never panics
+    /// (planning runs under a `catch_unwind` backstop on top of the
+    /// structural validation).
+    pub fn parse(text: &str) -> Result<Self, ScgraError> {
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| Self::parse_inner(text))) {
+            Ok(Ok(c)) => Ok(c),
+            Ok(Err(e)) => Err(ScgraError::MalformedArtifact(e.to_string())),
+            Err(_) => Err(ScgraError::MalformedArtifact(
+                "compiled artifact drove planning into a panic".to_string(),
+            )),
+        }
+    }
+
+    fn parse_inner(text: &str) -> Result<Self> {
         // Split the manifest header line from the config body.
         let mut manifest_line = None;
         let mut body = String::new();
@@ -417,6 +434,15 @@ impl CompiledStencil {
             if manifest_line.is_none() && !t.is_empty() && !t.starts_with('#') {
                 manifest_line = Some(t.to_string());
             } else {
+                // The version header is a comment, but not an optional
+                // one: an artifact declaring any other version must be
+                // rejected, not silently misparsed.
+                if t.starts_with('#') && t.contains("compiled artifact") {
+                    ensure!(
+                        t == "# stencil-cgra compiled artifact v1",
+                        "unsupported artifact header `{t}`"
+                    );
+                }
                 body.push_str(line);
                 body.push('\n');
             }
@@ -428,8 +454,10 @@ impl CompiledStencil {
 
         let c = Config::parse(&body).context("compiled artifact body")?;
         let spec = spec_from_config(&c)?;
+        validate_parsed_spec(&spec)?;
+        let shape_points: u128 = meta.out_shape.iter().map(|&d| d as u128).product();
         ensure!(
-            meta.out_shape.iter().product::<usize>() == spec.grid_points(),
+            shape_points == spec.grid_points() as u128,
             "manifest shape {:?} disagrees with the [spec] grid",
             meta.out_shape
         );
@@ -461,8 +489,22 @@ impl CompiledStencil {
                 .collect::<Result<_>>()?;
             ensure!(cuts_v.len() == 3, "[{sect}] cuts needs 3 entries");
             let cuts = [cuts_v[0], cuts_v[1], cuts_v[2]];
+            // A cut count outside [1, extent] cannot come from `save`;
+            // reject before the decomposition arithmetic sees it.
+            for (axis, (&cut, dim)) in cuts.iter().zip([spec.nx, spec.ny, spec.nz]).enumerate() {
+                ensure!(
+                    cut >= 1 && cut <= dim,
+                    "[{sect}] cuts[{axis}] = {cut} outside the grid's 1..={dim}"
+                );
+            }
             let fused_steps: usize = cfg_num(&c, &sect, "fused_steps")?;
+            ensure!(
+                fused_steps >= 1 && fused_steps <= spec.nx,
+                "[{sect}] fused_steps = {fused_steps} infeasible for nx = {}",
+                spec.nx
+            );
             let repeats: usize = cfg_num(&c, &sect, "repeats")?;
+            ensure!(repeats >= 1, "[{sect}] repeats must be >= 1");
             let plan = DecompPlan {
                 kind,
                 cuts,
@@ -489,10 +531,12 @@ impl CompiledStencil {
         Ok(Self { spec, steps, workers, options, stages, analysis })
     }
 
-    /// Read and [`Self::parse`] an artifact file.
-    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+    /// Read and [`Self::parse`] an artifact file: missing/unreadable
+    /// files are [`ScgraError::Io`], everything structural is
+    /// [`ScgraError::MalformedArtifact`].
+    pub fn load(path: impl AsRef<Path>) -> Result<Self, ScgraError> {
         let text = std::fs::read_to_string(path.as_ref())
-            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+            .map_err(|e| ScgraError::Io(format!("reading {}: {e}", path.as_ref().display())))?;
         Self::parse(&text)
     }
 }
@@ -506,8 +550,38 @@ impl CompiledStencil {
 ///   admits; `steps / T` chunks plus a tail stage of depth `steps % T`.
 /// * [`FuseMode::Auto`] — `Spatial` when the probe finds depth >= 2,
 ///   else the host schedule.
-pub fn compile(spec: &StencilSpec, steps: usize, opts: &CompileOptions) -> Result<CompiledStencil> {
-    ensure!(steps >= 1, "need at least one time-step");
+///
+/// Failures are classified: an unusable spec (degenerate dims, radii
+/// leaving no interior, mismatched taps, zero steps) is
+/// [`ScgraError::InfeasibleSpec`]; a structurally fine workload no
+/// decomposition fits into the budget for is [`ScgraError::OverBudget`].
+pub fn compile(
+    spec: &StencilSpec,
+    steps: usize,
+    opts: &CompileOptions,
+) -> Result<CompiledStencil, ScgraError> {
+    if steps < 1 {
+        return Err(ScgraError::InfeasibleSpec(
+            "need at least one time-step".to_string(),
+        ));
+    }
+    validate_parsed_spec(spec).map_err(|e| ScgraError::InfeasibleSpec(e.to_string()))?;
+    compile_inner(spec, steps, opts).map_err(classify_planning)
+}
+
+/// Map a planning failure onto the public classification: budget
+/// exhaustion is [`ScgraError::OverBudget`], everything else defers to
+/// the generic prose classifier.
+fn classify_planning(e: anyhow::Error) -> ScgraError {
+    let msg = e.to_string();
+    if msg.contains("no feasible decomposition") || msg.contains("budget") {
+        ScgraError::OverBudget(msg)
+    } else {
+        ScgraError::classify(e)
+    }
+}
+
+fn compile_inner(spec: &StencilSpec, steps: usize, opts: &CompileOptions) -> Result<CompiledStencil> {
     let w = opts.resolve_workers(spec);
     let stages = match opts.fuse {
         FuseMode::Host => {
@@ -809,6 +883,71 @@ fn spec_from_config(c: &Config) -> Result<StencilSpec> {
     })
 }
 
+/// Upper bound on the grid a parsed artifact (or compile request) may
+/// declare: 2^30 points = 8 GiB per f64 grid copy. Anything larger is
+/// a corrupt or hostile artifact, not a plausible workload.
+pub const MAX_GRID_POINTS: u128 = 1 << 30;
+
+/// Re-establish the invariants the [`StencilSpec`] constructors
+/// enforce. [`spec_from_config`] builds the struct field-by-field from
+/// untrusted text, so without this a bit-flipped artifact could
+/// smuggle in a spec whose radii/tap/extent inconsistencies only
+/// surface as panics (or huge allocations) deep inside planning.
+fn validate_parsed_spec(s: &StencilSpec) -> Result<()> {
+    let (nx, ny, nz) = (s.nx, s.ny, s.nz);
+    ensure!(
+        nx >= 1 && ny >= 1 && nz >= 1,
+        "spec has an empty dimension ({nx}x{ny}x{nz})"
+    );
+    let points = nx as u128 * ny as u128 * nz as u128;
+    ensure!(
+        points <= MAX_GRID_POINTS,
+        "spec grid {nx}x{ny}x{nz} = {points} points exceeds the {MAX_GRID_POINTS}-point cap"
+    );
+    // Overflow-safe radius checks: a parsed radius can be any usize.
+    let fits = |n: usize, r: usize| r.checked_mul(2).map_or(false, |d| n > d);
+    ensure!(fits(nx, s.rx), "nx {nx} too small for rx {}", s.rx);
+    ensure!(fits(ny, s.ry), "ny {ny} too small for ry {}", s.ry);
+    ensure!(fits(nz, s.rz), "nz {nz} too small for rz {}", s.rz);
+    match s.shape {
+        StencilShape::Star => {
+            ensure!(
+                s.cx.len() == 2 * s.rx + 1 && s.rx >= 1,
+                "star cx has {} taps for rx {}",
+                s.cx.len(),
+                s.rx
+            );
+            ensure!(
+                s.cy.len() == 2 * s.ry,
+                "star cy has {} taps for ry {}",
+                s.cy.len(),
+                s.ry
+            );
+            ensure!(
+                s.cz.len() == 2 * s.rz,
+                "star cz has {} taps for rz {}",
+                s.cz.len(),
+                s.rz
+            );
+            ensure!(s.box_taps.is_empty(), "star spec carries box taps");
+        }
+        StencilShape::Box => {
+            ensure!(s.rx >= 1 && s.ry >= 1, "box radii must be >= 1");
+            let want = (2 * s.rx + 1) * (2 * s.ry + 1) * (2 * s.rz + 1);
+            ensure!(
+                s.box_taps.len() == want,
+                "box window needs {want} taps, got {}",
+                s.box_taps.len()
+            );
+            ensure!(
+                s.cx.is_empty() && s.cy.is_empty() && s.cz.is_empty(),
+                "box spec carries star taps"
+            );
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -957,6 +1096,32 @@ mod tests {
             assert!(!Arc::ptr_eq(&ca, &cb), "distinct machines collided");
             assert_eq!(cache.len(), 2);
         }
+    }
+
+    #[test]
+    fn typed_errors_classify_compile_and_artifact_failures() {
+        let spec = StencilSpec::heat2d(16, 10, 0.2);
+        // Zero steps: infeasible, not a prose-only failure.
+        let e = compile(&spec, 0, &CompileOptions::default().with_workers(1)).unwrap_err();
+        assert_eq!(e.kind(), "infeasible-spec");
+        let c = compile(&spec, 1, &CompileOptions::default().with_workers(1)).unwrap();
+        // Wrong version header: malformed.
+        let text = c.to_text().replace("artifact v1", "artifact v9");
+        let e = CompiledStencil::parse(&text).unwrap_err();
+        assert_eq!(e.kind(), "malformed-artifact");
+        assert!(e.to_string().contains("version") || e.to_string().contains("header"), "{e}");
+        // Truncation inside the manifest line: malformed.
+        let full = c.to_text();
+        assert_eq!(
+            CompiledStencil::parse(&full[..60]).unwrap_err().kind(),
+            "malformed-artifact"
+        );
+        // Absurd declared geometry: malformed (and no huge allocation).
+        let huge = full.replace("nx = 16", "nx = 123456789123");
+        assert_eq!(CompiledStencil::parse(&huge).unwrap_err().kind(), "malformed-artifact");
+        // Missing file: io.
+        let e = CompiledStencil::load("/nonexistent/scgra.artifact").unwrap_err();
+        assert_eq!(e.kind(), "io");
     }
 
     #[test]

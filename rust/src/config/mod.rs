@@ -13,6 +13,7 @@ use crate::cgra::{Machine, SimCore};
 use crate::compile::{CompileOptions, FuseMode, HaloMode};
 use crate::stencil::decomp::{self, DecompKind};
 use crate::stencil::StencilSpec;
+use crate::util::fault::{FaultPlan, MAX_STALL_EXTRA};
 
 /// Parsed key-value configuration grouped by `[section]`.
 #[derive(Debug, Clone, Default)]
@@ -161,13 +162,53 @@ impl Config {
         }
     }
 
+    /// Build a [`FaultPlan`] from the `[fault]` section, if present.
+    /// Keys mirror the one-line spec syntax (`FaultPlan::parse`):
+    /// `seed`, `fill`, `stall`, `extra`, `slow`, `epoch`. A section
+    /// with no keys yields the unarmed default plan — `Session`
+    /// filters unarmed plans, so listing `[fault]` alone is a no-op.
+    pub fn fault_plan(&self) -> Result<Option<FaultPlan>> {
+        if self.sections.get("fault").is_none() {
+            return Ok(None);
+        }
+        let d = FaultPlan::default();
+        let plan = FaultPlan {
+            seed: self.num("fault", "seed", d.seed)?,
+            fill_fail_pct: self.num("fault", "fill", d.fill_fail_pct)?,
+            stall_pct: self.num("fault", "stall", d.stall_pct)?,
+            stall_extra: self.num("fault", "extra", d.stall_extra)?,
+            slow_pct: self.num("fault", "slow", d.slow_pct)?,
+            epoch_cycles: self.num("fault", "epoch", d.epoch_cycles)?,
+        };
+        for (k, v) in [
+            ("fill", plan.fill_fail_pct),
+            ("stall", plan.stall_pct),
+            ("slow", plan.slow_pct),
+        ] {
+            if v > 100 {
+                bail!("[fault] {k} = {v}: percentage must be <= 100");
+            }
+        }
+        if plan.stall_extra > MAX_STALL_EXTRA {
+            bail!(
+                "[fault] extra = {}: must be <= {MAX_STALL_EXTRA}",
+                plan.stall_extra
+            );
+        }
+        if plan.epoch_cycles == 0 {
+            bail!("[fault] epoch = 0: epoch length must be >= 1 cycle");
+        }
+        Ok(Some(plan))
+    }
+
     /// `[run]` knobs: workers (0 = roofline-optimal), tiles, steps,
     /// decomposition kind (`decomp = "slab|pencil|block|auto"`),
     /// simulator core (`sim_core = "dense|event"`), §IV fuse mode
     /// (`fuse = "host|spatial|auto"`, default auto), halo mode
-    /// (`halo = "exchange|reload"`, default exchange) and deterministic
+    /// (`halo = "exchange|reload"`, default exchange), deterministic
     /// tracing (`trace = "record PATH"` / `"replay PATH"`; validated by
-    /// `TraceMode::parse` at use).
+    /// `TraceMode::parse` at use), a wall-clock run deadline
+    /// (`deadline = MILLISECONDS`), and the `[fault]` injection plan.
     pub fn run_params(&self) -> Result<RunParams> {
         let decomp = match self.get("run", "decomp") {
             None => DecompKind::Auto,
@@ -185,6 +226,18 @@ impl Config {
             None => HaloMode::default(),
             Some(v) => HaloMode::parse(v)?,
         };
+        let deadline_ms = match self.get("run", "deadline") {
+            None => None,
+            Some(v) => {
+                let ms: u64 = v
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("[run] deadline = {v}: {e}"))?;
+                if ms == 0 {
+                    bail!("[run] deadline = 0: a zero deadline cancels every run at submit");
+                }
+                Some(ms)
+            }
+        };
         Ok(RunParams {
             workers: self.num("run", "workers", 0usize)?,
             tiles: self.num("run", "tiles", 1usize)?,
@@ -195,6 +248,8 @@ impl Config {
             fuse,
             halo,
             trace: self.get("run", "trace").map(|s| s.to_string()),
+            deadline_ms,
+            fault: self.fault_plan()?,
         })
     }
 
@@ -237,6 +292,13 @@ pub struct RunParams {
     /// `replay PATH` (see [`crate::util::trace::TraceMode`]); `None`
     /// runs untraced.
     pub trace: Option<String>,
+    /// Wall-clock run deadline in milliseconds; `None` runs unbounded.
+    /// On expiry in-flight tile tasks are cancelled and the run
+    /// reports a partial [`crate::session::Outcome::DeadlineExceeded`].
+    pub deadline_ms: Option<u64>,
+    /// Deterministic fault-injection plan from `[fault]`; `None` (or
+    /// an unarmed plan) runs fault-free with zero hot-path overhead.
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for RunParams {
@@ -254,6 +316,8 @@ impl Default for RunParams {
             fuse: FuseMode::Auto,
             halo: HaloMode::default(),
             trace: None,
+            deadline_ms: None,
+            fault: None,
         }
     }
 }
@@ -408,6 +472,42 @@ tiles = 16
         assert_eq!(o.machine.mac_pes, 256);
         assert_eq!(o.decomp, DecompKind::Auto);
         assert_eq!(o.fuse, FuseMode::Auto);
+    }
+
+    #[test]
+    fn fault_section_builds_a_plan_and_validates_ranges() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.run_params().unwrap().fault, None);
+
+        let c = Config::parse("[fault]\nseed = 9\nfill = 20\nstall = 10\nextra = 4\n").unwrap();
+        let p = c.run_params().unwrap().fault.unwrap();
+        assert_eq!((p.seed, p.fill_fail_pct, p.stall_pct, p.stall_extra), (9, 20, 10, 4));
+        assert!(p.armed());
+
+        // A bare section is the unarmed default plan, not an error.
+        let c = Config::parse("[fault]\n").unwrap();
+        assert!(!c.run_params().unwrap().fault.unwrap().armed());
+
+        for bad in [
+            "[fault]\nfill = 101\n",
+            "[fault]\nstall = 200\n",
+            "[fault]\nextra = 100000\n",
+            "[fault]\nepoch = 0\n",
+            "[fault]\nfill = lots\n",
+        ] {
+            assert!(Config::parse(bad).unwrap().run_params().is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn deadline_parses_in_milliseconds_and_rejects_zero() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.run_params().unwrap().deadline_ms, None);
+        let c = Config::parse("[run]\ndeadline = 1500\n").unwrap();
+        assert_eq!(c.run_params().unwrap().deadline_ms, Some(1500));
+        for bad in ["[run]\ndeadline = 0\n", "[run]\ndeadline = soon\n"] {
+            assert!(Config::parse(bad).unwrap().run_params().is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -1,0 +1,173 @@
+//! Typed public error surface.
+//!
+//! Internally the crate uses the vendored string-backed `anyhow` shim —
+//! cheap context chaining, one rendered message. At the *public*
+//! boundaries (`compile`, `CompiledStencil::{save,load,parse}`,
+//! `Session::run`, the CLI) callers need to branch on failure class
+//! without parsing prose: a serving daemon retries a transient fault,
+//! rejects a malformed artifact permanently, and sheds load on
+//! `DeadlineExceeded`. [`ScgraError`] is that classification.
+//!
+//! Conversions are two-way and free of churn at internal call sites:
+//! `ScgraError` implements `std::error::Error`, so the shim's blanket
+//! `From<E: Error>` lifts it into `anyhow::Error` wherever `?` is used
+//! inside an `anyhow` function, and [`ScgraError::classify`] maps a
+//! rendered internal error back into the best-fitting variant at the
+//! boundary (structured variants are constructed directly where the
+//! failure is detected; `classify` only catches what bubbled up as
+//! prose).
+
+use std::fmt;
+
+/// The public failure classification for the compile/execute API.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScgraError {
+    /// A saved artifact failed structural validation: truncated file,
+    /// wrong version line, unparseable manifest or config body, or a
+    /// parsed spec that is internally inconsistent (radii vs extents,
+    /// tap counts, grids that would over-allocate).
+    MalformedArtifact(String),
+    /// The stencil specification itself is unusable: empty or
+    /// degenerate dims, radii that leave no interior, mismatched taps.
+    InfeasibleSpec(String),
+    /// The workload is structurally fine but exceeds a budget: grid
+    /// larger than the serve path will buffer, or no decomposition
+    /// fits the fabric token budget.
+    OverBudget(String),
+    /// Filesystem failure while reading or writing an artifact.
+    Io(String),
+    /// A tile task panicked (the pool itself recovers and respawns —
+    /// this reports the failed *run*, not a dead executor).
+    PoolPoisoned(String),
+    /// The simulator made no progress for the quiet period; the
+    /// message is the full forensic report (blocked nodes, full/empty
+    /// channels with endpoint ids, oldest outstanding memory ticket).
+    Deadlock(String),
+    /// The run's wall-clock deadline expired; in-flight tile tasks
+    /// were cancelled. Carries how far the run got.
+    DeadlineExceeded {
+        completed_tasks: usize,
+        total_tasks: usize,
+        deadline_ms: u64,
+    },
+    /// Command-line usage error (unknown flag, malformed value).
+    Usage(String),
+    /// Anything else that escaped classification.
+    Internal(String),
+}
+
+impl ScgraError {
+    /// Stable machine-readable tag for logs and protocol error codes.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Self::MalformedArtifact(_) => "malformed-artifact",
+            Self::InfeasibleSpec(_) => "infeasible-spec",
+            Self::OverBudget(_) => "over-budget",
+            Self::Io(_) => "io",
+            Self::PoolPoisoned(_) => "pool-poisoned",
+            Self::Deadlock(_) => "deadlock",
+            Self::DeadlineExceeded { .. } => "deadline-exceeded",
+            Self::Usage(_) => "usage",
+            Self::Internal(_) => "internal",
+        }
+    }
+
+    /// True for failures a serving layer may retry verbatim (transient
+    /// by construction), false for permanent rejections.
+    pub fn is_transient(&self) -> bool {
+        matches!(
+            self,
+            Self::PoolPoisoned(_) | Self::DeadlineExceeded { .. }
+        )
+    }
+
+    /// Map a rendered internal error onto the best-fitting variant.
+    /// Structured failures are constructed at their detection site;
+    /// this only classifies prose that crossed the boundary, keyed on
+    /// the stable prefixes the simulator and pool emit.
+    pub(crate) fn classify(e: anyhow::Error) -> Self {
+        let msg = e.to_string();
+        if msg.contains("deadlock: no progress") {
+            Self::Deadlock(msg)
+        } else if msg.contains("tile task") && msg.contains("panicked") {
+            Self::PoolPoisoned(msg)
+        } else {
+            Self::Internal(msg)
+        }
+    }
+}
+
+impl fmt::Display for ScgraError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::MalformedArtifact(m)
+            | Self::InfeasibleSpec(m)
+            | Self::OverBudget(m)
+            | Self::Io(m)
+            | Self::PoolPoisoned(m)
+            | Self::Deadlock(m)
+            | Self::Usage(m)
+            | Self::Internal(m) => f.write_str(m),
+            Self::DeadlineExceeded {
+                completed_tasks,
+                total_tasks,
+                deadline_ms,
+            } => write!(
+                f,
+                "deadline exceeded: {completed_tasks}/{total_tasks} tile tasks \
+                 completed within {deadline_ms} ms; in-flight tasks cancelled"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ScgraError {}
+
+impl From<anyhow::Error> for ScgraError {
+    fn from(e: anyhow::Error) -> Self {
+        Self::classify(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_keys_on_stable_prefixes() {
+        let d = ScgraError::classify(anyhow::anyhow!(
+            "deadlock: no progress for 360 cycles (at cycle 512)"
+        ));
+        assert_eq!(d.kind(), "deadlock");
+        let p = ScgraError::classify(anyhow::anyhow!("tile task 3 panicked: boom"));
+        assert_eq!(p.kind(), "pool-poisoned");
+        assert!(p.is_transient());
+        let o = ScgraError::classify(anyhow::anyhow!("anything else"));
+        assert_eq!(o.kind(), "internal");
+        assert!(!o.is_transient());
+    }
+
+    #[test]
+    fn round_trips_through_the_anyhow_shim() {
+        fn inner() -> Result<(), ScgraError> {
+            Err(ScgraError::OverBudget("grid too large".into()))
+        }
+        fn outer() -> anyhow::Result<()> {
+            inner()?; // blanket From<E: std::error::Error> lifts it
+            Ok(())
+        }
+        assert_eq!(outer().unwrap_err().to_string(), "grid too large");
+    }
+
+    #[test]
+    fn deadline_display_carries_progress() {
+        let e = ScgraError::DeadlineExceeded {
+            completed_tasks: 3,
+            total_tasks: 16,
+            deadline_ms: 50,
+        };
+        let s = e.to_string();
+        assert!(s.contains("3/16"), "{s}");
+        assert!(s.contains("50 ms"), "{s}");
+    }
+}

@@ -114,6 +114,7 @@ pub mod compile;
 pub mod config;
 pub mod coordinator;
 pub mod dfg;
+pub mod error;
 pub mod gpu_model;
 pub mod roofline;
 pub mod runtime;
@@ -123,6 +124,8 @@ pub mod util;
 pub mod verify;
 
 pub use compile::{compile, CompileCache, CompileOptions, CompiledStencil, FuseMode};
-pub use session::{ExecMode, RunOutcome, RunReport, Session};
+pub use error::ScgraError;
+pub use session::{ExecMode, Outcome, RunOutcome, RunReport, Session};
 pub use stencil::spec::{StencilShape, StencilSpec};
+pub use util::fault::FaultPlan;
 pub use util::trace::{Trace, TraceMode};

@@ -49,19 +49,35 @@
 //! [`Session::run_replay`] turn the per-task fingerprints into an
 //! on-disk [`Trace`] for cross-build and cross-core regression checks.
 //!
+//! Resilience: [`Session::with_deadline`] arms a wall-clock watchdog —
+//! when it expires, queued tile tasks are cancelled, in-flight
+//! simulators are signalled to stop through a cooperative flag they
+//! poll, and the run returns whatever chunks completed, tagged
+//! [`Outcome::DeadlineExceeded`]; it never hangs and never panics.
+//! [`Session::with_fault_plan`] threads a deterministic
+//! [`FaultPlan`] into every tile simulator; because every injection
+//! decision is a pure function of the seed and stable coordinates,
+//! faulted runs stay bitwise identical across sim cores and exec
+//! modes. Worker threads survive task panics (caught per task and
+//! surfaced as typed errors), and `submit` respawns any worker that
+//! somehow died before it enqueues new work.
+//!
 //! Nothing here plans or builds graphs — the
 //! [`crate::stencil::metrics`] counters stay flat across `run` calls,
 //! which `rust/tests/compile_once.rs` pins.
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Result};
 
 use crate::cgra::stats::MemStats;
 use crate::cgra::{Machine, PlacedGraph, SimCore, SimResult, Simulator};
+use crate::error::ScgraError;
+use crate::util::fault::FaultPlan;
 use crate::compile::{CompiledStage, CompiledStencil, HaloMode};
 use crate::stencil::decomp::{DecompKind, Tile};
 use crate::stencil::exchange::ExchangeSchedule;
@@ -108,12 +124,28 @@ struct BatchDone {
     error: Option<String>,
 }
 
-/// One batch of tile tasks submitted to the pool; the submitter blocks
-/// on `done_cv` until every task is accounted for.
-struct TileBatch {
+/// Everything a batch's simulators need besides the tasks themselves —
+/// shared by the pool and sequential mode so both execute identically.
+#[derive(Clone)]
+struct BatchParams {
     machine: Machine,
     core: SimCore,
     resident: bool,
+    /// Armed fault plan forwarded to every simulator in the batch.
+    fault: Option<FaultPlan>,
+    /// Absolute wall-clock deadline for the whole run, if any.
+    deadline: Option<Instant>,
+    /// Cooperative cancel flag polled by in-flight simulators; `Some`
+    /// exactly when `deadline` is. The watchdog (the submitter, on
+    /// timeout) flips it; simulators bail out at their next check.
+    cancel: Option<Arc<AtomicBool>>,
+}
+
+/// One batch of tile tasks submitted to the pool; the submitter blocks
+/// on `done_cv` until every task is accounted for or the deadline
+/// expires.
+struct TileBatch {
+    params: BatchParams,
     tasks: Mutex<VecDeque<TileTask>>,
     done: Mutex<BatchDone>,
     done_cv: Condvar,
@@ -126,6 +158,18 @@ struct PoolShared {
     queue: Mutex<VecDeque<Arc<TileBatch>>>,
     work_cv: Condvar,
     shutdown: AtomicBool,
+    /// Test hook: a worker that observes a nonzero count decrements it
+    /// and exits as if it had died, exercising `submit`'s respawn path.
+    /// Requires at least one surviving worker to drain open batches.
+    kill_one: AtomicUsize,
+}
+
+/// Lock ignoring poisoning. Task panics are caught on the worker, so a
+/// poisoned pool lock means a panic escaped pure bookkeeping code; the
+/// guarded data (queues and counters) stays consistent under every
+/// early exit, so recovering beats poisoning every later batch.
+fn lock_or_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 /// A persistent tile-worker pool: `threads` OS threads spawned once,
@@ -146,49 +190,59 @@ fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
 }
 
 /// Simulate one tile task (shared by pool workers and sequential mode).
-fn simulate_task(
-    machine: &Machine,
-    core: SimCore,
-    resident: bool,
-    task: TileTask,
-) -> Result<SimResult> {
-    let sim = Simulator::from_placed(&task.graph, machine, task.input.clone(), task.input);
-    sim.with_core(core).with_fabric_resident(resident).run()
+fn simulate_task(p: &BatchParams, task: TileTask) -> Result<SimResult> {
+    let mut sim = Simulator::from_placed(&task.graph, &p.machine, task.input.clone(), task.input)
+        .with_core(p.core)
+        .with_fabric_resident(p.resident)
+        .with_fault_plan(p.fault.clone());
+    if let Some(c) = &p.cancel {
+        sim = sim.with_cancel(Arc::clone(c));
+    }
+    sim.run()
 }
 
 fn worker_loop(worker_id: usize, shared: Arc<PoolShared>) {
     loop {
+        // Test hook: die "catastrophically" when asked, so the respawn
+        // path in `submit` is exercisable deterministically.
+        let k = shared.kill_one.load(Ordering::Acquire);
+        if k > 0
+            && shared
+                .kill_one
+                .compare_exchange(k, k - 1, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+        {
+            return;
+        }
         // Claim the front batch with unclaimed tasks (drained batches
         // are popped; their stragglers finish on whoever claimed them).
         let batch = {
-            let mut q = shared.queue.lock().unwrap();
+            let mut q = lock_or_recover(&shared.queue);
             'find: loop {
                 if shared.shutdown.load(Ordering::Acquire) {
                     return;
                 }
                 while let Some(b) = q.front() {
-                    if b.tasks.lock().unwrap().is_empty() {
+                    if lock_or_recover(&b.tasks).is_empty() {
                         q.pop_front();
                     } else {
                         break 'find Arc::clone(b);
                     }
                 }
-                q = shared.work_cv.wait(q).unwrap();
+                q = shared.work_cv.wait(q).unwrap_or_else(|e| e.into_inner());
             }
         };
         // Drain its tasks greedily.
         loop {
-            let Some(task) = batch.tasks.lock().unwrap().pop_front() else {
+            let Some(task) = lock_or_recover(&batch.tasks).pop_front() else {
                 break;
             };
             let task_id = task.id;
             let tile = task.tile;
-            let outcome = catch_unwind(AssertUnwindSafe(|| {
-                simulate_task(&batch.machine, batch.core, batch.resident, task)
-            }));
+            let outcome = catch_unwind(AssertUnwindSafe(|| simulate_task(&batch.params, task)));
             let failure = match outcome {
                 Ok(Ok(res)) => {
-                    let mut done = batch.done.lock().unwrap();
+                    let mut done = lock_or_recover(&batch.done);
                     done.results.push((task_id, worker_id, tile, res));
                     done.completed += 1;
                     if done.completed >= batch.n_tasks {
@@ -203,12 +257,12 @@ fn worker_loop(worker_id: usize, shared: Arc<PoolShared>) {
             // for them so the submitter wakes. Tasks already claimed by
             // other workers account for themselves.
             let cancelled = {
-                let mut t = batch.tasks.lock().unwrap();
+                let mut t = lock_or_recover(&batch.tasks);
                 let n = t.len();
                 t.clear();
                 n
             };
-            let mut done = batch.done.lock().unwrap();
+            let mut done = lock_or_recover(&batch.done);
             if done.error.is_none() {
                 done.error = Some(failure);
             }
@@ -220,12 +274,22 @@ fn worker_loop(worker_id: usize, shared: Arc<PoolShared>) {
     }
 }
 
+/// Outcome of one executed batch.
+enum BatchOutput {
+    /// Every task completed; results in task-id order.
+    Done(Vec<TaskResult>),
+    /// The run deadline expired mid-batch: `completed` of `total` tasks
+    /// finished before the watchdog cancelled the rest.
+    Deadline { completed: usize, total: usize },
+}
+
 impl TilePool {
     fn new(threads: usize) -> Self {
         let shared = Arc::new(PoolShared {
             queue: Mutex::new(VecDeque::new()),
             work_cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            kill_one: AtomicUsize::new(0),
         });
         let workers = (0..threads.max(1))
             .map(|w| {
@@ -242,37 +306,86 @@ impl TilePool {
         }
     }
 
-    /// Run a batch to completion and return the results sorted by task
-    /// id. Blocks the caller; worker panics and task errors come back
-    /// as `Err` with the first failure's message.
-    fn submit(
-        &self,
-        machine: &Machine,
-        core: SimCore,
-        resident: bool,
-        tasks: VecDeque<TileTask>,
-    ) -> Result<Vec<TaskResult>> {
+    /// Replace any worker whose thread has exited (a panic that escaped
+    /// the per-task `catch_unwind`, or the `kill_one` test hook). Called
+    /// by `submit` before enqueueing, so one dead worker costs one
+    /// respawn, never a permanently shrunken pool.
+    fn respawn_dead_workers(&self) {
+        let mut workers = lock_or_recover(&self.workers);
+        for (w, slot) in workers.iter_mut().enumerate() {
+            if slot.is_finished() {
+                let s = Arc::clone(&self.shared);
+                let fresh = std::thread::Builder::new()
+                    .name(format!("scgra-tile-{w}"))
+                    .spawn(move || worker_loop(w, s))
+                    .expect("respawning tile worker");
+                let dead = std::mem::replace(slot, fresh);
+                let _ = dead.join();
+            }
+        }
+    }
+
+    /// Run a batch to completion (or to its deadline) and return the
+    /// results sorted by task id. Blocks the caller; worker panics and
+    /// task errors come back as `Err` with the first failure's message;
+    /// an expired deadline comes back as [`BatchOutput::Deadline`] with
+    /// the partial accounting.
+    fn submit(&self, params: &BatchParams, tasks: VecDeque<TileTask>) -> Result<BatchOutput> {
         let n = tasks.len();
         if n == 0 {
-            return Ok(Vec::new());
+            return Ok(BatchOutput::Done(Vec::new()));
         }
+        // An already-expired deadline short-circuits before any work is
+        // queued — this makes a zero/past deadline deterministic.
+        if let Some(dl) = params.deadline {
+            if Instant::now() >= dl {
+                if let Some(c) = &params.cancel {
+                    c.store(true, Ordering::Release);
+                }
+                return Ok(BatchOutput::Deadline { completed: 0, total: n });
+            }
+        }
+        self.respawn_dead_workers();
         let batch = Arc::new(TileBatch {
-            machine: machine.clone(),
-            core,
-            resident,
+            params: params.clone(),
             tasks: Mutex::new(tasks),
             done: Mutex::new(BatchDone::default()),
             done_cv: Condvar::new(),
             n_tasks: n,
         });
         {
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = lock_or_recover(&self.shared.queue);
             q.push_back(Arc::clone(&batch));
             self.shared.work_cv.notify_all();
         }
-        let mut done = batch.done.lock().unwrap();
+        let mut done = lock_or_recover(&batch.done);
         while done.completed < n {
-            done = batch.done_cv.wait(done).unwrap();
+            let Some(deadline) = params.deadline else {
+                done = batch.done_cv.wait(done).unwrap_or_else(|e| e.into_inner());
+                continue;
+            };
+            let now = Instant::now();
+            if now >= deadline {
+                // The watchdog fires on the submitter thread: signal
+                // in-flight simulators to stop, drop the queued tasks,
+                // and return the partial accounting immediately. The
+                // stragglers poll the flag, bail out soon after, and
+                // account to a batch nobody watches any more — the Arc
+                // they hold keeps it alive exactly long enough.
+                if let Some(c) = &params.cancel {
+                    c.store(true, Ordering::Release);
+                }
+                lock_or_recover(&batch.tasks).clear();
+                return Ok(BatchOutput::Deadline {
+                    completed: done.results.len(),
+                    total: n,
+                });
+            }
+            let (g, _) = batch
+                .done_cv
+                .wait_timeout(done, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            done = g;
         }
         if let Some(e) = done.error.take() {
             bail!("{e}");
@@ -285,7 +398,7 @@ impl TilePool {
             "lost tile results: {}/{n}",
             results.len()
         );
-        Ok(results)
+        Ok(BatchOutput::Done(results))
     }
 }
 
@@ -294,9 +407,9 @@ impl Drop for TilePool {
         self.shared.shutdown.store(true, Ordering::Release);
         // Hold the queue lock while notifying so no worker misses the
         // flag between checking it and parking.
-        drop(self.shared.queue.lock().unwrap());
+        drop(lock_or_recover(&self.shared.queue));
         self.shared.work_cv.notify_all();
-        for h in self.workers.lock().unwrap().drain(..) {
+        for h in lock_or_recover(&self.workers).drain(..) {
             let _ = h.join();
         }
     }
@@ -311,24 +424,30 @@ enum ExecRef<'a> {
 }
 
 impl ExecRef<'_> {
-    /// Run a batch, returning results in task-id order.
-    fn run_batch(
-        &self,
-        machine: &Machine,
-        core: SimCore,
-        resident: bool,
-        tasks: VecDeque<TileTask>,
-    ) -> Result<Vec<TaskResult>> {
+    /// Run a batch, returning results in task-id order (or the partial
+    /// deadline accounting). Sequential mode checks the deadline
+    /// before each task — same typed outcome, coarser granularity.
+    fn run_batch(&self, params: &BatchParams, tasks: VecDeque<TileTask>) -> Result<BatchOutput> {
         match self {
-            ExecRef::Pool(pool) => pool.submit(machine, core, resident, tasks),
+            ExecRef::Pool(pool) => pool.submit(params, tasks),
             ExecRef::Sequential => {
-                let mut results = Vec::with_capacity(tasks.len());
+                let total = tasks.len();
+                let mut results = Vec::with_capacity(total);
                 for task in tasks {
+                    if let Some(deadline) = params.deadline {
+                        if Instant::now() >= deadline {
+                            if let Some(c) = &params.cancel {
+                                c.store(true, Ordering::Release);
+                            }
+                            return Ok(BatchOutput::Deadline {
+                                completed: results.len(),
+                                total,
+                            });
+                        }
+                    }
                     let task_id = task.id;
                     let tile = task.tile;
-                    let outcome = catch_unwind(AssertUnwindSafe(|| {
-                        simulate_task(machine, core, resident, task)
-                    }));
+                    let outcome = catch_unwind(AssertUnwindSafe(|| simulate_task(params, task)));
                     match outcome {
                         Ok(Ok(res)) => results.push((task_id, 0, tile, res)),
                         Ok(Err(e)) => bail!("tile task {task_id}: {e}"),
@@ -337,7 +456,7 @@ impl ExecRef<'_> {
                         }
                     }
                 }
-                Ok(results)
+                Ok(BatchOutput::Done(results))
             }
         }
     }
@@ -423,18 +542,38 @@ impl RunReport {
     }
 }
 
+/// How a [`Session::run`] ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Every chunk ran to completion.
+    Complete,
+    /// The wall-clock deadline expired mid-run: queued tile tasks were
+    /// cancelled, in-flight simulators were signalled to stop, and the
+    /// [`RunOutcome`] carries only the chunks that fully completed.
+    DeadlineExceeded {
+        /// Tile tasks of the interrupted batch that finished in time.
+        completed_tasks: usize,
+        /// Tile tasks the interrupted batch held in total.
+        total_tasks: usize,
+    },
+}
+
 /// Everything one [`Session::run`] produced: the final grid and one
 /// [`RunReport`] per executed chunk (host schedules: one per step).
 #[derive(Debug, Clone)]
 pub struct RunOutcome {
     pub output: Vec<f64>,
     pub reports: Vec<RunReport>,
+    /// Whether the run completed or was cut short by its deadline.
+    pub outcome: Outcome,
 }
 
 impl RunOutcome {
-    /// The last chunk's report (every execution has at least one).
+    /// The last chunk's report (every *completed* execution has at
+    /// least one). Panics on a deadline-exceeded outcome whose first
+    /// chunk never finished — check [`Self::outcome`] first.
     pub fn final_report(&self) -> &RunReport {
-        self.reports.last().expect("an execution always produces a report")
+        self.reports.last().expect("a completed execution always produces a report")
     }
 }
 
@@ -452,6 +591,10 @@ pub struct Session {
     tiles: usize,
     sim_core: SimCore,
     exec: ExecMode,
+    /// Armed fault-injection plan applied to every tile simulator.
+    fault: Option<FaultPlan>,
+    /// Wall-clock budget per `run` call.
+    deadline: Option<Duration>,
     /// Persistent worker pool, spawned on first pooled `run`.
     pool: OnceLock<Arc<TilePool>>,
 }
@@ -468,6 +611,8 @@ impl Session {
             tiles,
             sim_core: SimCore::default(),
             exec: ExecMode::default(),
+            fault: None,
+            deadline: None,
             pool: OnceLock::new(),
         }
     }
@@ -493,6 +638,25 @@ impl Session {
         self
     }
 
+    /// Arm a deterministic fault-injection plan applied to every tile
+    /// simulator in every subsequent run. `None` or an unarmed plan
+    /// (all rates zero) is bitwise-free: identical results and counters
+    /// to a session without one.
+    pub fn with_fault_plan(mut self, plan: Option<FaultPlan>) -> Self {
+        self.fault = plan.filter(FaultPlan::armed);
+        self
+    }
+
+    /// Give every subsequent `run` call a wall-clock budget. When it
+    /// expires mid-run, queued tile tasks are cancelled, in-flight
+    /// simulators are signalled to stop, and the run returns the chunks
+    /// that completed tagged [`Outcome::DeadlineExceeded`] — it never
+    /// hangs and never panics.
+    pub fn with_deadline(mut self, deadline: Option<Duration>) -> Self {
+        self.deadline = deadline;
+        self
+    }
+
     pub fn compiled(&self) -> &Arc<CompiledStencil> {
         &self.compiled
     }
@@ -513,14 +677,17 @@ impl Session {
     /// Execute the compiled workload (all `steps` it was compiled for)
     /// on `input`. Never plans, never builds or places a graph, and on
     /// a warm session never spawns a thread; safe to call concurrently
-    /// from many threads on distinct inputs.
-    pub fn run(&self, input: &[f64]) -> Result<RunOutcome> {
+    /// from many threads on distinct inputs. Failures come back as the
+    /// public [`ScgraError`] classification — a panicked tile task is
+    /// [`ScgraError::PoolPoisoned`], a wedged simulator is
+    /// [`ScgraError::Deadlock`] carrying the full forensic report.
+    pub fn run(&self, input: &[f64]) -> Result<RunOutcome, ScgraError> {
         self.run_inner(input, None)
     }
 
     /// [`Session::run`], also capturing a [`Trace`]: one fingerprint
     /// record per executed tile task, in deterministic task order.
-    pub fn run_recorded(&self, input: &[f64]) -> Result<(RunOutcome, Trace)> {
+    pub fn run_recorded(&self, input: &[f64]) -> Result<(RunOutcome, Trace), ScgraError> {
         let mut records = Vec::new();
         let outcome = self.run_inner(input, Some(&mut records))?;
         Ok((outcome, Trace { records }))
@@ -530,10 +697,23 @@ impl Session {
     /// behavioural divergence (cycles, fires, tickets, fire hash or
     /// output hash of any tile task) fails with the first mismatch.
     /// Core-dependent counters (`wakeups`) are ignored, so a trace
-    /// recorded under one sim core replays under the other.
-    pub fn run_replay(&self, input: &[f64], reference: &Trace) -> Result<RunOutcome> {
+    /// recorded under one sim core replays under the other. A run cut
+    /// short by the deadline cannot be verified and fails with
+    /// [`ScgraError::DeadlineExceeded`].
+    pub fn run_replay(&self, input: &[f64], reference: &Trace) -> Result<RunOutcome, ScgraError> {
         let (outcome, trace) = self.run_recorded(input)?;
-        trace.matches(reference)?;
+        if let Outcome::DeadlineExceeded {
+            completed_tasks,
+            total_tasks,
+        } = outcome.outcome
+        {
+            return Err(ScgraError::DeadlineExceeded {
+                completed_tasks,
+                total_tasks,
+                deadline_ms: self.deadline.map(|d| d.as_millis() as u64).unwrap_or(0),
+            });
+        }
+        trace.matches(reference).map_err(ScgraError::classify)?;
         Ok(outcome)
     }
 
@@ -541,16 +721,21 @@ impl Session {
         &self,
         input: &[f64],
         mut trace: Option<&mut Vec<TraceRecord>>,
-    ) -> Result<RunOutcome> {
+    ) -> Result<RunOutcome, ScgraError> {
         let spec = &self.compiled.spec;
-        ensure!(
-            input.len() == spec.grid_points(),
-            "input length {} != grid {}",
-            input.len(),
-            spec.grid_points()
-        );
+        if input.len() != spec.grid_points() {
+            return Err(ScgraError::InfeasibleSpec(format!(
+                "input length {} != grid {}",
+                input.len(),
+                spec.grid_points()
+            )));
+        }
         let exec = self.exec_ref();
         let halo = self.compiled.options.halo;
+        // One deadline and one cancel flag cover the whole run: every
+        // chunk's batches inherit the same absolute expiry instant.
+        let deadline = self.deadline.map(|d| Instant::now() + d);
+        let cancel = deadline.map(|_| Arc::new(AtomicBool::new(false)));
         let mut reports: Vec<RunReport> = Vec::with_capacity(self.compiled.total_chunks());
         for stage in &self.compiled.stages {
             for rep_i in 0..stage.repeats {
@@ -572,7 +757,7 @@ impl Session {
                 } else {
                     None
                 };
-                let rep = execute_chunk(
+                let chunk = execute_chunk(
                     &self.machine,
                     exec,
                     self.tiles,
@@ -583,15 +768,41 @@ impl Session {
                     exchange,
                     reports.len() as u32,
                     trace.as_deref_mut(),
-                )?;
-                reports.push(rep);
+                    self.fault.as_ref(),
+                    deadline,
+                    cancel.as_ref(),
+                )
+                .map_err(ScgraError::classify)?;
+                match chunk {
+                    ChunkOutput::Report(rep) => reports.push(rep),
+                    ChunkOutput::Deadline { completed, total } => {
+                        // Partial result: the grid as of the last chunk
+                        // that fully completed.
+                        let output = match reports.last() {
+                            Some(last) => last.output.clone(),
+                            None => input.to_vec(),
+                        };
+                        return Ok(RunOutcome {
+                            output,
+                            reports,
+                            outcome: Outcome::DeadlineExceeded {
+                                completed_tasks: completed,
+                                total_tasks: total,
+                            },
+                        });
+                    }
+                }
             }
         }
         let output = match reports.last() {
             Some(last) => last.output.clone(),
             None => input.to_vec(),
         };
-        Ok(RunOutcome { output, reports })
+        Ok(RunOutcome {
+            output,
+            reports,
+            outcome: Outcome::Complete,
+        })
     }
 }
 
@@ -628,6 +839,13 @@ fn trace_batch(
     }
 }
 
+/// What one [`execute_chunk`] call produced.
+enum ChunkOutput {
+    Report(RunReport),
+    /// The run deadline expired inside one of the chunk's batches.
+    Deadline { completed: usize, total: usize },
+}
+
 /// Execute one chunk: decompose `input` per the stage's plan, run every
 /// fused tile task through the execution backend against the shared
 /// placed graphs, merge the owned outputs, then advance the boundary
@@ -637,6 +855,8 @@ fn trace_batch(
 /// fabric-resident and the schedule's shipped-point count lands in the
 /// report. With a `trace` sink, fingerprints are appended per batch
 /// (fused tiles = phase 0, ring bands = phase 1..) in task order.
+/// `fault`/`deadline`/`cancel` thread the session's resilience state
+/// into every batch (see [`BatchParams`]).
 #[allow(clippy::too_many_arguments)]
 fn execute_chunk(
     machine: &Machine,
@@ -649,16 +869,27 @@ fn execute_chunk(
     exchange: Option<&ExchangeSchedule>,
     chunk: u32,
     mut trace: Option<&mut Vec<TraceRecord>>,
-) -> Result<RunReport> {
+    fault: Option<&FaultPlan>,
+    deadline: Option<Instant>,
+    cancel: Option<&Arc<AtomicBool>>,
+) -> Result<ChunkOutput> {
     ensure!(
         input.len() == spec.grid_points(),
         "input length {} != grid {}",
         input.len(),
         spec.grid_points()
     );
-    let t0 = std::time::Instant::now();
+    let t0 = Instant::now();
     let plan = &stage.plan;
     let resident = exchange.is_some();
+    let params = BatchParams {
+        machine: machine.clone(),
+        core,
+        resident,
+        fault: fault.cloned(),
+        deadline,
+        cancel: cancel.map(Arc::clone),
+    };
     let tasks: VecDeque<TileTask> = plan
         .tiles
         .iter()
@@ -671,7 +902,12 @@ fn execute_chunk(
         })
         .collect();
     let n_tasks = tasks.len();
-    let results = exec.run_batch(machine, core, resident, tasks)?;
+    let results = match exec.run_batch(&params, tasks)? {
+        BatchOutput::Done(r) => r,
+        BatchOutput::Deadline { completed, total } => {
+            return Ok(ChunkOutput::Deadline { completed, total })
+        }
+    };
     if let Some(sink) = trace.as_deref_mut() {
         trace_batch(sink, chunk, 0, &results);
     }
@@ -711,7 +947,12 @@ fn execute_chunk(
                     ),
                 })
                 .collect();
-            let results = exec.run_batch(machine, core, resident, tasks)?;
+            let results = match exec.run_batch(&params, tasks)? {
+                BatchOutput::Done(r) => r,
+                BatchOutput::Deadline { completed, total } => {
+                    return Ok(ChunkOutput::Deadline { completed, total })
+                }
+            };
             if let Some(sink) = trace.as_deref_mut() {
                 trace_batch(sink, chunk, band_i as u32 + 1, &results);
             }
@@ -744,7 +985,7 @@ fn execute_chunk(
     } else {
         0.0
     };
-    Ok(RunReport {
+    Ok(ChunkOutput::Report(RunReport {
         output,
         strips: n_tasks,
         kind: plan.kind,
@@ -765,7 +1006,7 @@ fn execute_chunk(
         per_tile,
         gflops,
         wall_seconds: t0.elapsed().as_secs_f64(),
-    })
+    }))
 }
 
 #[cfg(test)]
@@ -780,6 +1021,26 @@ mod tests {
         Session::new(Arc::new(compile(spec, steps, &opts).unwrap()), machine)
     }
 
+    /// Plain batch parameters: event core, cold, no faults, no deadline.
+    fn batch_params(machine: &Machine) -> BatchParams {
+        BatchParams {
+            machine: machine.clone(),
+            core: SimCore::Event,
+            resident: false,
+            fault: None,
+            deadline: None,
+            cancel: None,
+        }
+    }
+
+    /// Unwrap a batch that ran with no deadline armed.
+    fn done(out: BatchOutput) -> Vec<TaskResult> {
+        match out {
+            BatchOutput::Done(r) => r,
+            BatchOutput::Deadline { .. } => panic!("no deadline was armed"),
+        }
+    }
+
     #[test]
     fn session_runs_single_step_against_oracle() {
         let spec = StencilSpec::heat2d(32, 14, 0.2);
@@ -788,6 +1049,7 @@ mod tests {
         let s = session(&spec, 1, CompileOptions::default().with_workers(2).with_tiles(2));
         let out = s.run(&x).unwrap();
         assert_eq!(out.reports.len(), 1);
+        assert_eq!(out.outcome, Outcome::Complete);
         let want = stencil_ref(&x, &spec);
         assert!(max_abs_diff(&out.output, &want) < 1e-11);
         assert_eq!(out.final_report().output, out.output);
@@ -875,7 +1137,7 @@ mod tests {
 
         let pool = TilePool::new(2);
         let err = pool
-            .submit(&machine, SimCore::Event, false, VecDeque::from([poisoned.clone()]))
+            .submit(&batch_params(&machine), VecDeque::from([poisoned.clone()]))
             .unwrap_err()
             .to_string();
         assert!(err.contains("panicked"), "got: {err}");
@@ -885,17 +1147,24 @@ mod tests {
             input: tile.extract(&spec, &vec![1.0; 160]),
             ..poisoned.clone()
         };
-        let ok = pool
-            .submit(&machine, SimCore::Event, false, VecDeque::from([healthy]))
-            .unwrap();
+        let ok = done(
+            pool.submit(&batch_params(&machine), VecDeque::from([healthy]))
+                .unwrap(),
+        );
         assert_eq!(ok.len(), 1);
 
         // Sequential mode propagates the same class of error.
         let err2 = ExecRef::Sequential
-            .run_batch(&machine, SimCore::Event, false, VecDeque::from([poisoned]))
+            .run_batch(&batch_params(&machine), VecDeque::from([poisoned]))
             .unwrap_err()
             .to_string();
         assert!(err2.contains("panicked"), "got: {err2}");
+
+        // And the classification boundary maps it to PoolPoisoned.
+        assert_eq!(
+            ScgraError::classify(anyhow::anyhow!("{err2}")).kind(),
+            "pool-poisoned"
+        );
     }
 
     #[test]
@@ -924,7 +1193,7 @@ mod tests {
         tasks.front_mut().unwrap().input = Vec::new(); // poison the first
         let pool = TilePool::new(1); // single worker: failure then cancel
         let err = pool
-            .submit(&machine, SimCore::Event, false, tasks)
+            .submit(&batch_params(&machine), tasks)
             .unwrap_err()
             .to_string();
         assert!(err.contains("tile task"), "got: {err}");
@@ -959,5 +1228,131 @@ mod tests {
         tampered.records[0].fire_hash ^= 1;
         let err = s.run_replay(&x, &tampered).unwrap_err().to_string();
         assert!(err.contains("fire_hash"), "got: {err}");
+    }
+
+    #[test]
+    fn expired_deadline_returns_partial_outcome_not_a_hang() {
+        let spec = StencilSpec::heat2d(24, 12, 0.2);
+        let mut rng = XorShift::new(0xDEAD);
+        let x = rng.normal_vec(24 * 12);
+        for exec in [ExecMode::Pooled, ExecMode::Sequential] {
+            let s = session(&spec, 2, CompileOptions::default().with_workers(2).with_tiles(2))
+                .with_exec(exec)
+                .with_deadline(Some(Duration::ZERO));
+            let out = s.run(&x).unwrap();
+            match out.outcome {
+                Outcome::DeadlineExceeded {
+                    completed_tasks,
+                    total_tasks,
+                } => {
+                    assert!(total_tasks > 0);
+                    assert!(completed_tasks <= total_tasks);
+                }
+                Outcome::Complete => panic!("a zero deadline cannot complete ({exec:?})"),
+            }
+            assert!(out.reports.is_empty(), "no chunk can finish in zero time");
+            assert_eq!(out.output, x, "partial output falls back to the input grid");
+            // A partial run cannot be replay-verified.
+            let (_, trace) = session(&spec, 2, CompileOptions::default().with_workers(2))
+                .run_recorded(&x)
+                .unwrap();
+            let err = s.run_replay(&x, &trace).unwrap_err();
+            assert_eq!(err.kind(), "deadline-exceeded");
+            // Removing the deadline restores a full run on the same
+            // session (and, pooled, the same worker pool).
+            let full = s.with_deadline(None).run(&x).unwrap();
+            assert_eq!(full.outcome, Outcome::Complete);
+            assert_eq!(full.reports.len(), 2);
+        }
+    }
+
+    #[test]
+    fn armed_fault_plan_converges_and_counts_retries_in_reports() {
+        let spec = StencilSpec::heat2d(28, 14, 0.2);
+        let mut rng = XorShift::new(0xFA17);
+        let x = rng.normal_vec(28 * 14);
+        let opts = CompileOptions::default().with_workers(2).with_tiles(2);
+        let clean = session(&spec, 2, opts.clone()).run(&x).unwrap();
+        let plan = FaultPlan {
+            seed: 7,
+            fill_fail_pct: 35,
+            ..FaultPlan::default()
+        };
+        let s = session(&spec, 2, opts).with_fault_plan(Some(plan));
+        let faulted = s.run(&x).unwrap();
+        assert_eq!(faulted.outcome, Outcome::Complete);
+        assert_eq!(faulted.output, clean.output, "retries must converge bitwise");
+        let retries: u64 = faulted
+            .reports
+            .iter()
+            .flat_map(|r| r.per_tile.iter())
+            .map(|t| t.mem.retries)
+            .sum();
+        assert!(retries > 0, "a 35% fill-failure plan must retry");
+        // Pooled and sequential faulted runs stay bitwise identical.
+        let seq = s.clone().with_exec(ExecMode::Sequential).run(&x).unwrap();
+        assert_eq!(seq.output, faulted.output);
+        // An unarmed plan is filtered out entirely.
+        let noop = session(
+            &spec,
+            2,
+            CompileOptions::default().with_workers(2).with_tiles(2),
+        )
+        .with_fault_plan(Some(FaultPlan::default()));
+        assert!(noop.fault.is_none());
+    }
+
+    #[test]
+    fn pool_respawns_a_dead_worker_and_batches_still_complete() {
+        let spec = StencilSpec::heat2d(16, 10, 0.2);
+        let opts = CompileOptions::default().with_workers(2).with_tiles(2);
+        let machine = opts.machine.clone();
+        let compiled = Arc::new(compile(&spec, 1, &opts).unwrap());
+        let stage = &compiled.stages[0];
+        let input = vec![1.0; 160];
+        let make_tasks = || -> VecDeque<TileTask> {
+            stage
+                .plan
+                .tiles
+                .iter()
+                .enumerate()
+                .map(|(id, t)| TileTask {
+                    id,
+                    tile: *t,
+                    input: t.extract(&spec, &input),
+                    graph: Arc::clone(
+                        &stage.graphs[&[t.in_extent(0), t.in_extent(1), t.in_extent(2)]],
+                    ),
+                })
+                .collect()
+        };
+        let pool = TilePool::new(2);
+        // Ask exactly one worker to die; the survivor drains the batch.
+        pool.shared.kill_one.store(1, Ordering::Release);
+        let r = done(pool.submit(&batch_params(&machine), make_tasks()).unwrap());
+        assert_eq!(r.len(), stage.plan.tiles.len());
+        // Wait for the doomed worker to actually exit (it dies on its
+        // way back to the park loop, possibly after the batch is done).
+        for _ in 0..2000 {
+            if lock_or_recover(&pool.workers).iter().any(|w| w.is_finished()) {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(
+            lock_or_recover(&pool.workers).iter().any(|w| w.is_finished()),
+            "kill hook must take one worker down"
+        );
+        // The next submit notices the dead thread, respawns it, and the
+        // batch completes on a full-strength pool.
+        let r2 = done(pool.submit(&batch_params(&machine), make_tasks()).unwrap());
+        assert_eq!(r2.len(), stage.plan.tiles.len());
+        assert_eq!(pool.shared.kill_one.load(Ordering::Acquire), 0);
+        let workers = lock_or_recover(&pool.workers);
+        assert_eq!(workers.len(), 2);
+        assert!(
+            workers.iter().all(|w| !w.is_finished()),
+            "dead worker must be respawned"
+        );
     }
 }

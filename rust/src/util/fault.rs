@@ -1,0 +1,329 @@
+//! Deterministic, seeded fault injection for the simulated machine.
+//!
+//! A [`FaultPlan`] describes three transient fault families:
+//!
+//! * **memory-line fill failures** — a fraction of DRAM fill grants
+//!   fail and are retried by `MemSys` with bounded exponential backoff
+//!   (retries counted in `MemStats::retries`);
+//! * **channel/link stall windows** — pushes into a stalled channel
+//!   take extra cycles to become visible downstream;
+//! * **PE slow-down epochs** — a PE (placement slot) is suppressed
+//!   from firing for whole epochs at a time.
+//!
+//! Every decision is a *pure function* of the seed and quantities both
+//! scheduler cores compute bit-identically — the global fill-attempt
+//! index, `(channel id, epoch)`, `(slot id, epoch)` — never of host
+//! state, wall time, or evaluation order. That is what makes a faulted
+//! run replayable: `dense == event` holds under any plan, and the same
+//! plan + same input always produce the same cycle count, the same
+//! retry count and the same output bits. The generator is
+//! [`util::rng::XorShift`](super::rng::XorShift) used statelessly: one
+//! fresh generator per decision, keyed by seed + salt + coordinates.
+//!
+//! An unarmed plan (all percentages zero, the default) must cost
+//! nothing: every injection site branches on `armed()` once and the
+//! hooks allocate nothing, so the fault-free hot path stays
+//! allocation-free and bit-identical to a build without faults
+//! (pinned by `tests/alloc_free.rs` and the `sim_hotpath` fault
+//! section's zero-overhead gate).
+
+use anyhow::{bail, Result};
+
+use super::rng::XorShift;
+
+/// Salts separating the three decision streams drawn from one seed.
+const SALT_FILL: u64 = 0x66696C6C; // "fill"
+const SALT_STALL: u64 = 0x7374616C; // "stal"
+const SALT_SLOW: u64 = 0x736C6F77; // "slow"
+
+/// First retry waits this many cycles; each further retry doubles it.
+pub const BACKOFF_BASE_CYCLES: u64 = 8;
+/// Backoff is capped here regardless of retry count.
+pub const BACKOFF_CAP_CYCLES: u64 = 1024;
+/// After this many failed attempts a fill succeeds unconditionally —
+/// the model is *transient* faults, so forward progress is guaranteed.
+///
+/// The largest reachable backoff window,
+/// `BACKOFF_BASE_CYCLES << (MAX_FILL_RETRIES - 1)` = 256 cycles, must
+/// stay below the simulator's minimum deadlock quiet period (≥ 258
+/// cycles, see `PlacedGraph::deadlock_quiet`): a pending retry keeps
+/// the memory queue non-empty without making progress, and if the
+/// silence outlasted the quiet period the dense core would misreport a
+/// deadlock that the retry was about to break. Pinned by a unit test
+/// below.
+pub const MAX_FILL_RETRIES: u32 = 6;
+
+/// Upper bound accepted for `extra=` in [`FaultPlan::parse`]. Stalled
+/// visibility (`latency + extra`) must stay below the deadlock quiet
+/// period for the same reason as the backoff bound above.
+pub const MAX_STALL_EXTRA: u64 = 200;
+
+/// A seeded, serializable fault-injection schedule.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Seed for every decision stream.
+    pub seed: u64,
+    /// Percentage (0–100) of fill grants that fail transiently.
+    pub fill_fail_pct: u8,
+    /// Percentage (0–100) of `(channel, epoch)` windows that stall.
+    pub stall_pct: u8,
+    /// Extra visibility latency, in cycles, inside a stall window.
+    pub stall_extra: u64,
+    /// Percentage (0–100) of `(PE slot, epoch)` windows suppressed.
+    pub slow_pct: u8,
+    /// Epoch length in cycles for stall/slow-down windows.
+    pub epoch_cycles: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self {
+            seed: 1,
+            fill_fail_pct: 0,
+            stall_pct: 0,
+            stall_extra: 8,
+            slow_pct: 0,
+            epoch_cycles: 256,
+        }
+    }
+}
+
+/// One independent uniform draw in `[0, 100)` keyed by coordinates.
+fn pct_draw(seed: u64, salt: u64, a: u64, b: u64) -> u64 {
+    let key = seed
+        .wrapping_mul(0x9E3779B97F4A7C15)
+        .wrapping_add(salt)
+        .wrapping_add(a.wrapping_mul(0xBF58476D1CE4E5B9))
+        .wrapping_add(b.wrapping_mul(0x94D049BB133111EB));
+    XorShift::new(key).next_u64() % 100
+}
+
+impl FaultPlan {
+    /// True when any fault family is enabled. Every injection site
+    /// branches on this exactly once per decision.
+    #[inline]
+    pub fn armed(&self) -> bool {
+        self.fill_fail_pct > 0 || self.stall_pct > 0 || self.slow_pct > 0
+    }
+
+    /// Does the `attempt`-th fill grant (a global per-`MemSys`
+    /// counter) fail? Pure in `(seed, attempt)`.
+    #[inline]
+    pub fn fill_fails(&self, attempt: u64) -> bool {
+        self.fill_fail_pct > 0
+            && pct_draw(self.seed, SALT_FILL, attempt, 0) < self.fill_fail_pct as u64
+    }
+
+    /// Extra visibility latency for a push into channel `chan` at
+    /// cycle `now` (0 when the window is clean).
+    #[inline]
+    pub fn stall_extra_at(&self, chan: u32, now: u64) -> u64 {
+        if self.stall_pct == 0 {
+            return 0;
+        }
+        let epoch = now / self.epoch_cycles;
+        if pct_draw(self.seed, SALT_STALL, chan as u64, epoch) < self.stall_pct as u64 {
+            self.stall_extra
+        } else {
+            0
+        }
+    }
+
+    /// Is PE slot `slot` suppressed from firing at cycle `now`?
+    #[inline]
+    pub fn pe_suppressed(&self, slot: u32, now: u64) -> bool {
+        self.slow_pct > 0
+            && pct_draw(self.seed, SALT_SLOW, slot as u64, now / self.epoch_cycles)
+                < self.slow_pct as u64
+    }
+
+    /// First cycle after `now` at which a suppressed slot *may* run
+    /// again (the next epoch boundary — the new epoch is re-checked
+    /// there, so callers loop / re-arm).
+    #[inline]
+    pub fn pe_release(&self, now: u64) -> u64 {
+        (now / self.epoch_cycles + 1) * self.epoch_cycles
+    }
+
+    /// Upper bound on [`Self::stall_extra_at`] — the event core grows
+    /// its wheel horizon by this so stalled wakes never alias.
+    #[inline]
+    pub fn max_extra_latency(&self) -> u64 {
+        if self.stall_pct > 0 {
+            self.stall_extra
+        } else {
+            0
+        }
+    }
+
+    /// Backoff delay before the `retry`-th re-attempt of a failed
+    /// fill: exponential from [`BACKOFF_BASE_CYCLES`], capped at
+    /// [`BACKOFF_CAP_CYCLES`].
+    #[inline]
+    pub fn backoff(retry: u32) -> u64 {
+        (BACKOFF_BASE_CYCLES << retry.min(16)).min(BACKOFF_CAP_CYCLES)
+    }
+
+    /// Parse the `key=value` form used by `--fault` and the `[fault]`
+    /// config section: `seed=7 fill=20 stall=10 extra=12 slow=5
+    /// epoch=256` (any subset; unknown keys are errors).
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut plan = Self::default();
+        for tok in s.split_whitespace() {
+            let Some((k, v)) = tok.split_once('=') else {
+                bail!("fault spec token `{tok}`: expected key=value");
+            };
+            let n: u64 = v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("fault spec {k} = `{v}`: {e}"))?;
+            let pct = |k: &str| -> Result<u8> {
+                anyhow::ensure!(n <= 100, "fault spec {k} = {n}: percentage > 100");
+                Ok(n as u8)
+            };
+            match k {
+                "seed" => plan.seed = n,
+                "fill" => plan.fill_fail_pct = pct(k)?,
+                "stall" => plan.stall_pct = pct(k)?,
+                "extra" => {
+                    anyhow::ensure!(
+                        n <= MAX_STALL_EXTRA,
+                        "fault spec extra = {n}: must be <= {MAX_STALL_EXTRA}"
+                    );
+                    plan.stall_extra = n;
+                }
+                "slow" => plan.slow_pct = pct(k)?,
+                "epoch" => {
+                    anyhow::ensure!(n > 0, "fault spec epoch must be > 0");
+                    plan.epoch_cycles = n;
+                }
+                other => bail!(
+                    "fault spec: unknown key `{other}` \
+                     (seed|fill|stall|extra|slow|epoch)"
+                ),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Render back to the `key=value` form [`Self::parse`] reads —
+    /// artifact/config serialization round-trips through this.
+    pub fn to_spec(&self) -> String {
+        format!(
+            "seed={} fill={} stall={} extra={} slow={} epoch={}",
+            self.seed,
+            self.fill_fail_pct,
+            self.stall_pct,
+            self.stall_extra,
+            self.slow_pct,
+            self.epoch_cycles
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unarmed_by_default_and_cheap_answers() {
+        let p = FaultPlan::default();
+        assert!(!p.armed());
+        assert!(!p.fill_fails(0));
+        assert_eq!(p.stall_extra_at(3, 1000), 0);
+        assert!(!p.pe_suppressed(5, 1000));
+    }
+
+    #[test]
+    fn decisions_are_pure_functions_of_coordinates() {
+        let p = FaultPlan {
+            seed: 42,
+            fill_fail_pct: 30,
+            stall_pct: 25,
+            slow_pct: 20,
+            ..FaultPlan::default()
+        };
+        for i in 0..200 {
+            assert_eq!(p.fill_fails(i), p.fill_fails(i));
+            assert_eq!(p.stall_extra_at(3, i * 17), p.stall_extra_at(3, i * 17));
+            assert_eq!(p.pe_suppressed(9, i * 31), p.pe_suppressed(9, i * 31));
+        }
+        // A different seed gives a different schedule somewhere.
+        let q = FaultPlan { seed: 43, ..p.clone() };
+        assert!((0..500).any(|i| p.fill_fails(i) != q.fill_fails(i)));
+    }
+
+    #[test]
+    fn fill_failure_rate_tracks_the_percentage() {
+        let p = FaultPlan { seed: 7, fill_fail_pct: 25, ..FaultPlan::default() };
+        let n = 20_000u64;
+        let fails = (0..n).filter(|&i| p.fill_fails(i)).count() as f64;
+        let rate = fails / n as f64;
+        assert!((rate - 0.25).abs() < 0.02, "rate {rate}");
+    }
+
+    #[test]
+    fn stall_windows_are_epoch_granular() {
+        let p = FaultPlan {
+            seed: 11,
+            stall_pct: 50,
+            stall_extra: 12,
+            epoch_cycles: 256,
+            ..FaultPlan::default()
+        };
+        // Within one epoch the answer is constant.
+        for c in 0..64u32 {
+            let e0 = p.stall_extra_at(c, 512);
+            for t in 512..768 {
+                assert_eq!(p.stall_extra_at(c, t), e0);
+            }
+        }
+        assert_eq!(p.max_extra_latency(), 12);
+        assert_eq!(FaultPlan::default().max_extra_latency(), 0);
+    }
+
+    #[test]
+    fn release_is_the_next_epoch_boundary() {
+        let p = FaultPlan { epoch_cycles: 256, ..FaultPlan::default() };
+        assert_eq!(p.pe_release(0), 256);
+        assert_eq!(p.pe_release(255), 256);
+        assert_eq!(p.pe_release(256), 512);
+    }
+
+    #[test]
+    fn backoff_is_exponential_and_capped() {
+        assert_eq!(FaultPlan::backoff(0), 8);
+        assert_eq!(FaultPlan::backoff(1), 16);
+        assert_eq!(FaultPlan::backoff(2), 32);
+        assert_eq!(FaultPlan::backoff(40), BACKOFF_CAP_CYCLES);
+    }
+
+    #[test]
+    fn reachable_backoff_stays_below_the_minimum_deadlock_quiet_period() {
+        // See the MAX_FILL_RETRIES docs: the deepest reachable backoff
+        // window must be shorter than the smallest possible quiet
+        // period (dram_latency >= 1, max channel latency >= 1, + 256).
+        let deepest = (0..MAX_FILL_RETRIES).map(FaultPlan::backoff).max().unwrap();
+        assert!(deepest < 258, "deepest backoff {deepest} >= min quiet period");
+    }
+
+    #[test]
+    fn spec_round_trips() {
+        let p = FaultPlan::parse("seed=9 fill=20 stall=10 extra=4 slow=5 epoch=128").unwrap();
+        assert_eq!(p.seed, 9);
+        assert_eq!(p.fill_fail_pct, 20);
+        assert_eq!(p.stall_pct, 10);
+        assert_eq!(p.stall_extra, 4);
+        assert_eq!(p.slow_pct, 5);
+        assert_eq!(p.epoch_cycles, 128);
+        assert_eq!(FaultPlan::parse(&p.to_spec()).unwrap(), p);
+    }
+
+    #[test]
+    fn spec_rejects_bad_input() {
+        assert!(FaultPlan::parse("fill").is_err());
+        assert!(FaultPlan::parse("fill=abc").is_err());
+        assert!(FaultPlan::parse("fill=120").is_err());
+        assert!(FaultPlan::parse("warp=1").is_err());
+        assert!(FaultPlan::parse("epoch=0").is_err());
+    }
+}

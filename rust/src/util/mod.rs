@@ -1,10 +1,12 @@
 //! Small self-contained utilities: a deterministic PRNG for
 //! property-style tests, a mini benchmark harness (criterion is not
 //! available in the offline vendor set), the simulator's
-//! allocation watchdog, deterministic run traces, and timing helpers.
+//! allocation watchdog, deterministic run traces, seeded fault
+//! injection, and timing helpers.
 
 pub mod allocwatch;
 pub mod bench;
+pub mod fault;
 pub mod rng;
 pub mod trace;
 

@@ -125,3 +125,39 @@ fn sequential_2d_is_alloc_free_warm() {
     let spec = StencilSpec::dim2(24, 16, symmetric_taps(1), y_taps(1)).unwrap();
     all_cores("star2d_seq", &spec, 2, ExecMode::Sequential);
 }
+
+#[test]
+fn armed_fault_plan_keeps_the_cycle_loop_alloc_free() {
+    // Injection decisions are stateless hashes, retries re-use the
+    // reserved transaction queue, and stall/slow-down wakeups land in
+    // the pre-sized wheel — so even a heavily faulted run must stay
+    // allocation-free in the cycle loops.
+    use stencil_cgra::FaultPlan;
+    let _serial = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let spec = StencilSpec::dim2(24, 16, symmetric_taps(1), y_taps(1)).unwrap();
+    let opts = CompileOptions::default().with_workers(2).with_tiles(2);
+    let compiled = Arc::new(compile(&spec, 1, &opts).unwrap());
+    let machine = compiled.options.machine.clone();
+    let plan = FaultPlan {
+        seed: 11,
+        fill_fail_pct: 30,
+        stall_pct: 20,
+        slow_pct: 10,
+        ..FaultPlan::default()
+    };
+    let x = vec![1.0; spec.grid_points()];
+    for core in [SimCore::Dense, SimCore::Event] {
+        let session = Session::new(Arc::clone(&compiled), machine.clone())
+            .with_sim_core(core)
+            .with_fault_plan(Some(plan.clone()));
+        let cold = session.run(&x).unwrap();
+        allocwatch::reset();
+        let warm = session.run(&x).unwrap();
+        assert_eq!(
+            allocwatch::violations(),
+            0,
+            "fault/{core}: warm cycle loop allocated"
+        );
+        assert_eq!(warm.output, cold.output, "fault/{core}: runs diverged");
+    }
+}

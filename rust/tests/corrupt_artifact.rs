@@ -1,0 +1,113 @@
+//! Corrupt-artifact fuzz: a saved `CompiledStencil` text mangled by
+//! deterministic bit flips, truncations, line drops/duplications, and
+//! version rewrites must always come back from `parse` as a value or a
+//! typed [`ScgraError::MalformedArtifact`] — never a panic, never an
+//! unclassified error, and never a huge allocation from declared-vs-
+//! actual geometry lies (the parser validates the spec and caps grid
+//! points before trusting any number in the file).
+
+use stencil_cgra::compile::{compile, CompileOptions, CompiledStencil};
+use stencil_cgra::stencil::spec::{symmetric_taps, y_taps};
+use stencil_cgra::stencil::StencilSpec;
+use stencil_cgra::util::rng::XorShift;
+
+fn artifact_text() -> String {
+    let spec = StencilSpec::dim2(20, 12, symmetric_taps(1), y_taps(1)).unwrap();
+    let opts = CompileOptions::default().with_workers(2).with_tiles(2);
+    compile(&spec, 2, &opts).unwrap().to_text()
+}
+
+/// Every corruption outcome must be `Ok` (the mangled byte landed
+/// somewhere harmless) or a `malformed-artifact` error.
+fn assert_never_panics(corrupt: &str, what: &str) {
+    if let Err(e) = CompiledStencil::parse(corrupt) {
+        assert_eq!(e.kind(), "malformed-artifact", "{what}: {e}");
+        assert!(!e.is_transient(), "{what}: corruption is permanent");
+    }
+}
+
+#[test]
+fn random_ascii_bit_flips_never_panic() {
+    let text = artifact_text();
+    let mut rng = XorShift::new(0xC0FFEE);
+    for i in 0..300 {
+        let mut bytes = text.clone().into_bytes();
+        // Flip 1-3 bytes, staying in ASCII so the text remains valid
+        // UTF-8 (the artifact itself is pure ASCII).
+        for _ in 0..1 + rng.range(0, 3) {
+            let at = rng.range(0, bytes.len());
+            let mask = 1 + rng.range(0, 127) as u8;
+            bytes[at] = (bytes[at] ^ mask) & 0x7f;
+        }
+        let corrupt = String::from_utf8(bytes).unwrap();
+        assert_never_panics(&corrupt, &format!("flip #{i}"));
+    }
+}
+
+#[test]
+fn truncations_at_every_scale_never_panic() {
+    let text = artifact_text();
+    let mut rng = XorShift::new(0xBEEF);
+    for i in 0..100 {
+        let cut = rng.range(0, text.len());
+        assert_never_panics(&text[..cut], &format!("truncate at {cut} (#{i})"));
+    }
+    // The empty file and a header-only file are typed errors too.
+    assert!(CompiledStencil::parse("").is_err());
+    let header_only = text.lines().next().unwrap();
+    assert!(CompiledStencil::parse(header_only).is_err());
+}
+
+#[test]
+fn line_drops_duplications_and_swaps_never_panic() {
+    let text = artifact_text();
+    let lines: Vec<&str> = text.lines().collect();
+    let mut rng = XorShift::new(0xFEED);
+    for i in 0..120 {
+        let mut l = lines.clone();
+        match rng.range(0, 3) {
+            0 => {
+                l.remove(rng.range(0, l.len()));
+            }
+            1 => {
+                let at = rng.range(0, l.len());
+                l.insert(at, l[at]);
+            }
+            _ => {
+                let a = rng.range(0, l.len());
+                let b = rng.range(0, l.len());
+                l.swap(a, b);
+            }
+        }
+        assert_never_panics(&l.join("\n"), &format!("line edit #{i}"));
+    }
+}
+
+#[test]
+fn wrong_version_line_is_rejected_by_name() {
+    let text = artifact_text();
+    for bad in [
+        text.replace("artifact v1", "artifact v9"),
+        text.replace("artifact v1", "artifact"),
+        format!("# some other tool's file v1\n{text}"),
+    ] {
+        let e = CompiledStencil::parse(&bad).unwrap_err();
+        assert_eq!(e.kind(), "malformed-artifact", "{e}");
+    }
+}
+
+#[test]
+fn lying_geometry_is_rejected_without_allocating_it() {
+    let text = artifact_text();
+    for (from, to) in [
+        ("nx = 20", "nx = 184467440737095"),
+        ("ny = 12", "ny = 999999999999"),
+        ("rx = 1", "rx = 4000000000"),
+        ("steps = 2", "steps = 0"),
+    ] {
+        let corrupt = text.replace(from, to);
+        assert_ne!(corrupt, text, "replace `{from}` matched nothing");
+        let e = CompiledStencil::parse(&corrupt).unwrap_err();
+        assert_eq!(e.kind(), "malformed-artifact", "{from} -> {to}: {e}");
+    }
+}

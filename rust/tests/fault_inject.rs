@@ -1,0 +1,240 @@
+//! Chaos matrix for the resilience layer: deterministic fault plans
+//! (transient fill failures, channel stall windows, PE slow-down
+//! epochs) crossed with star/box stencils in 1/2/3-D, both scheduler
+//! cores, and pooled/sequential execution.
+//!
+//! The contracts under test:
+//!   * faults change *timing*, never *values* — every faulted run's
+//!     output is bit-identical to the fault-free run of the same plan;
+//!   * the dense and event cores replay a fault plan bit-identically
+//!     (same outputs, same makespans, same per-task trace fingerprints
+//!     including retried-fill counts);
+//!   * a fill-failure plan is actually exercised (`MemStats::retries`
+//!     lands in the reports);
+//!   * an expired deadline returns a typed partial outcome promptly —
+//!     no hang, and the session (including its worker pool) remains
+//!     usable for the next run.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use stencil_cgra::cgra::SimCore;
+use stencil_cgra::compile::{compile, CompileOptions, CompiledStencil};
+use stencil_cgra::session::{ExecMode, Outcome, Session};
+use stencil_cgra::stencil::spec::{symmetric_taps, uniform_box_taps, y_taps, z_taps};
+use stencil_cgra::stencil::StencilSpec;
+use stencil_cgra::util::rng::XorShift;
+use stencil_cgra::FaultPlan;
+
+/// The workload axis: star/box crossed with 1/2/3-D, tile counts
+/// mirroring the proven alloc-free matrix.
+fn workloads() -> Vec<(&'static str, StencilSpec, usize)> {
+    vec![
+        ("star1d", StencilSpec::dim1(72, symmetric_taps(2)).unwrap(), 1),
+        (
+            "star2d",
+            StencilSpec::dim2(24, 14, symmetric_taps(1), y_taps(1)).unwrap(),
+            2,
+        ),
+        (
+            "star3d",
+            StencilSpec::dim3(12, 8, 6, symmetric_taps(1), y_taps(1), z_taps(1)).unwrap(),
+            1,
+        ),
+        (
+            "box2d",
+            StencilSpec::box2d(18, 12, 1, 1, uniform_box_taps(1, 1, 0)).unwrap(),
+            1,
+        ),
+        (
+            "box3d",
+            StencilSpec::box3d(10, 8, 6, 1, 1, 1, uniform_box_taps(1, 1, 1)).unwrap(),
+            1,
+        ),
+    ]
+}
+
+/// The fault axis: each mechanism alone, then all three together.
+fn plans() -> Vec<(&'static str, FaultPlan)> {
+    vec![
+        (
+            "fill",
+            FaultPlan {
+                seed: 3,
+                fill_fail_pct: 35,
+                ..FaultPlan::default()
+            },
+        ),
+        (
+            "stall",
+            FaultPlan {
+                seed: 5,
+                stall_pct: 30,
+                stall_extra: 6,
+                ..FaultPlan::default()
+            },
+        ),
+        (
+            "slow",
+            FaultPlan {
+                seed: 7,
+                slow_pct: 25,
+                epoch_cycles: 64,
+                ..FaultPlan::default()
+            },
+        ),
+        (
+            "mixed",
+            FaultPlan::parse("seed=11 fill=20 stall=15 extra=4 slow=10 epoch=128").unwrap(),
+        ),
+    ]
+}
+
+fn compiled_for(spec: &StencilSpec, tiles: usize) -> Arc<CompiledStencil> {
+    let opts = CompileOptions::default().with_workers(2).with_tiles(tiles);
+    Arc::new(compile(spec, 2, &opts).unwrap())
+}
+
+fn session_for(
+    compiled: &Arc<CompiledStencil>,
+    core: SimCore,
+    exec: ExecMode,
+    fault: Option<FaultPlan>,
+) -> Session {
+    let machine = compiled.options.machine.clone();
+    Session::new(Arc::clone(compiled), machine)
+        .with_sim_core(core)
+        .with_exec(exec)
+        .with_fault_plan(fault)
+}
+
+fn total_retries(out: &stencil_cgra::RunOutcome) -> u64 {
+    out.reports
+        .iter()
+        .map(|r| {
+            r.ring_mem.retries + r.per_tile.iter().map(|t| t.mem.retries).sum::<u64>()
+        })
+        .sum()
+}
+
+#[test]
+fn chaos_matrix_is_value_exact_and_core_identical() {
+    for (wname, spec, tiles) in workloads() {
+        let compiled = compiled_for(&spec, tiles);
+        let input = XorShift::new(42).normal_vec(spec.grid_points());
+        // Fault-free oracle under the default (event) core.
+        let clean = session_for(&compiled, SimCore::Event, ExecMode::Sequential, None)
+            .run(&input)
+            .unwrap();
+        assert_eq!(clean.outcome, Outcome::Complete);
+
+        for (pname, plan) in plans() {
+            let mut per_core = Vec::new();
+            for core in [SimCore::Dense, SimCore::Event] {
+                for exec in [ExecMode::Pooled, ExecMode::Sequential] {
+                    let s = session_for(&compiled, core, exec, Some(plan.clone()));
+                    let (out, trace) = s.run_recorded(&input).unwrap();
+                    assert_eq!(
+                        out.outcome,
+                        Outcome::Complete,
+                        "{wname}/{pname}/{core}/{exec:?}"
+                    );
+                    // Faults never change values: bit-identical to the
+                    // fault-free grid.
+                    assert_eq!(
+                        out.output, clean.output,
+                        "{wname}/{pname}/{core}/{exec:?}: faulted values diverged"
+                    );
+                    if pname == "fill" || pname == "mixed" {
+                        assert!(
+                            total_retries(&out) > 0,
+                            "{wname}/{pname}/{core}/{exec:?}: fill plan never retried"
+                        );
+                    }
+                    per_core.push((core, exec, out, trace));
+                }
+            }
+            // Pooled and sequential execution of the same core agree,
+            // and the two cores replay the plan bit-identically: same
+            // makespans, retries, and per-task fingerprints (cycles,
+            // fires, tickets, fire/output hashes; wakeups excluded).
+            let (_, _, ref_out, ref_trace) = &per_core[0];
+            for (core, exec, out, trace) in &per_core[1..] {
+                let ctx = format!("{wname}/{pname}/{core}/{exec:?} vs dense/pooled");
+                assert_eq!(out.output, ref_out.output, "{ctx}: outputs");
+                assert_eq!(out.reports.len(), ref_out.reports.len(), "{ctx}: chunks");
+                for (a, b) in out.reports.iter().zip(&ref_out.reports) {
+                    assert_eq!(a.makespan_cycles, b.makespan_cycles, "{ctx}: makespan");
+                    assert_eq!(a.total_cycles, b.total_cycles, "{ctx}: total cycles");
+                }
+                assert_eq!(total_retries(out), total_retries(ref_out), "{ctx}: retries");
+                trace.matches(ref_trace).unwrap_or_else(|e| {
+                    panic!("{ctx}: trace diverged: {e}");
+                });
+            }
+        }
+    }
+}
+
+#[test]
+fn expired_deadline_is_a_prompt_typed_partial_and_the_pool_survives() {
+    let spec = StencilSpec::dim2(24, 14, symmetric_taps(1), y_taps(1)).unwrap();
+    let compiled = compiled_for(&spec, 2);
+    let input = XorShift::new(7).normal_vec(spec.grid_points());
+
+    for exec in [ExecMode::Pooled, ExecMode::Sequential] {
+        let machine = compiled.options.machine.clone();
+        let session = Session::new(Arc::clone(&compiled), machine)
+            .with_exec(exec)
+            .with_deadline(Some(Duration::ZERO));
+        let t0 = Instant::now();
+        let out = session.run(&input).unwrap();
+        // Prompt: an already-expired deadline must not simulate first.
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "{exec:?}: cancellation was not prompt"
+        );
+        match out.outcome {
+            Outcome::DeadlineExceeded {
+                completed_tasks,
+                total_tasks,
+            } => {
+                assert_eq!(completed_tasks, 0, "{exec:?}");
+                assert!(total_tasks > 0, "{exec:?}");
+            }
+            Outcome::Complete => panic!("{exec:?}: zero deadline completed"),
+        }
+        assert!(out.reports.is_empty(), "{exec:?}: partial run reported chunks");
+        assert_eq!(out.output, input, "{exec:?}: partial output is the last full grid");
+
+        // The same session runs to completion once the deadline lifts:
+        // no leaked tasks, no poisoned pool, no stuck cancel flag.
+        let session = session.with_deadline(None);
+        let full = session.run(&input).unwrap();
+        assert_eq!(full.outcome, Outcome::Complete, "{exec:?}");
+        let clean = session_for(&compiled, SimCore::Event, ExecMode::Sequential, None)
+            .run(&input)
+            .unwrap();
+        assert_eq!(full.output, clean.output, "{exec:?}: post-deadline run diverged");
+    }
+}
+
+#[test]
+fn faulted_runs_replay_deterministically_within_a_session() {
+    // The same armed session, run twice: fault draws are keyed on
+    // stable coordinates, so the second run is a bitwise replay of the
+    // first — reports, retries, outputs.
+    let spec = StencilSpec::dim2(24, 14, symmetric_taps(1), y_taps(1)).unwrap();
+    let compiled = compiled_for(&spec, 2);
+    let input = XorShift::new(9).normal_vec(spec.grid_points());
+    let plan = FaultPlan::parse("seed=13 fill=30 stall=10 extra=4").unwrap();
+    for core in [SimCore::Dense, SimCore::Event] {
+        let s = session_for(&compiled, core, ExecMode::Pooled, Some(plan.clone()));
+        let (a, ta) = s.run_recorded(&input).unwrap();
+        let (b, tb) = s.run_recorded(&input).unwrap();
+        assert_eq!(a.output, b.output, "{core}: outputs");
+        assert_eq!(total_retries(&a), total_retries(&b), "{core}: retries");
+        tb.matches(&ta)
+            .unwrap_or_else(|e| panic!("{core}: replay diverged: {e}"));
+    }
+}
