@@ -7,10 +7,12 @@
 //! check (outputs, cycles and memory stats are asserted equal).
 //! `EXPERIMENTS.md` §Perf records the before/after trajectory; the same
 //! numbers are written to `BENCH_sim.json` for machines (CI uploads it
-//! as an artifact on every push). The halo-exchange section runs the
-//! same compiled workload under `--halo reload` and `--halo exchange`
-//! (bitwise-asserted equal) and writes its DRAM-traffic differential to
-//! `BENCH_exchange.json` for `EXPERIMENTS.md` §Exchange. The trace
+//! as an artifact on every push). The halo-exchange section sweeps the
+//! same compiled workload through `--halo reload`, `--halo
+//! exchange-free` and the hop-priced `--halo exchange` (all three
+//! bitwise-asserted equal) and writes the DRAM-traffic and hop-latency
+//! differentials to `BENCH_exchange.json` for `EXPERIMENTS.md`
+//! §Exchange. The trace
 //! section records a session run, replays it on the other scheduler
 //! core (cycle counts asserted equal record-for-record) and writes
 //! `BENCH_replay.json`. The fault section runs the same workload
@@ -150,6 +152,8 @@ fn sim_throughput(
 struct HaloRun {
     mean_s: f64,
     dram_reads: u64,
+    makespan: u64,
+    hop_cycles: u64,
     output: Vec<f64>,
 }
 
@@ -172,6 +176,7 @@ fn time_halo(
     let mut dram = 0u64;
     let mut exchanged = 0u64;
     let mut makespan = 0u64;
+    let mut hop_cycles = 0u64;
     let mut frac = 0.0f64;
     let mut output = Vec::new();
     let case = format!("{name}/{halo}");
@@ -180,13 +185,14 @@ fn time_halo(
         dram = out.reports.iter().map(|r| r.dram_point_reads()).sum();
         exchanged = out.reports.iter().map(|r| r.exchanged_points).sum();
         makespan = out.reports.iter().map(|r| r.makespan_cycles).sum();
+        hop_cycles = out.reports.iter().map(|r| r.exchanged_hop_cycles()).sum();
         frac = out.final_report().redundant_read_fraction;
         output = out.output;
     });
     println!(
-        "  -> {} sim cycles, {} DRAM point reads, {} exchanged points, \
-         final-chunk redundancy {:.4}",
-        makespan, dram, exchanged, frac
+        "  -> {} sim cycles, {} DRAM point reads, {} exchanged points \
+         (+{} hop cyc), final-chunk redundancy {:.4}",
+        makespan, dram, exchanged, hop_cycles, frac
     );
     sink.record(
         &stats,
@@ -194,19 +200,25 @@ fn time_halo(
             ("sim_cycles", makespan as f64),
             ("dram_point_reads", dram as f64),
             ("exchanged_points", exchanged as f64),
+            ("exchanged_hop_cycles", hop_cycles as f64),
             ("redundant_read_fraction_last", frac),
         ],
     );
     HaloRun {
         mean_s: stats.mean_s,
         dram_reads: dram,
+        makespan,
+        hop_cycles,
         output,
     }
 }
 
-/// §Exchange — reload-vs-exchange differential on one workload: same
-/// compiled plan twice, outputs asserted bitwise equal, steady-state
-/// DRAM traffic reported for both.
+/// §Exchange — the halo-movement sweep on one compiled workload:
+/// reload, free exchange and hop-priced exchange, outputs asserted
+/// bitwise equal across all three. Reload vs exchange measures the
+/// steady-state DRAM-traffic differential; priced vs free isolates the
+/// latency the hop/bandwidth channel model adds on the same shipped
+/// points.
 fn halo_exchange_bench(
     name: &str,
     spec: &StencilSpec,
@@ -215,17 +227,38 @@ fn halo_exchange_bench(
     sink: &mut bench::JsonSink,
 ) {
     let reload = time_halo(name, spec, steps, base, HaloMode::Reload, sink);
+    let free = time_halo(name, spec, steps, base, HaloMode::ExchangeFree, sink);
     let exchange = time_halo(name, spec, steps, base, HaloMode::Exchange, sink);
     assert_eq!(
         reload.output, exchange.output,
         "{name}: exchange must be bitwise-identical to reload"
     );
+    assert_eq!(
+        free.output, exchange.output,
+        "{name}: pricing must be bitwise-identical to free exchange"
+    );
+    assert_eq!(free.hop_cycles, 0, "{name}: free exchange paid hops");
+    assert!(
+        exchange.hop_cycles > 0,
+        "{name}: priced exchange paid no hops"
+    );
+    assert!(
+        exchange.makespan >= free.makespan,
+        "{name}: hop pricing made the run faster"
+    );
     println!(
-        "  == DRAM point reads {} -> {} ({:.1}% saved), wall {:.3}s -> {:.3}s",
+        "  == DRAM point reads {} -> {} ({:.1}% saved); hop pricing: \
+         {} -> {} sim cycles (+{:.2}%, {} hop cyc); \
+         wall {:.3}s / {:.3}s / {:.3}s",
         reload.dram_reads,
         exchange.dram_reads,
         100.0 * (1.0 - exchange.dram_reads as f64 / reload.dram_reads.max(1) as f64),
+        free.makespan,
+        exchange.makespan,
+        100.0 * (exchange.makespan as f64 / free.makespan.max(1) as f64 - 1.0),
+        exchange.hop_cycles,
         reload.mean_s,
+        free.mean_s,
         exchange.mean_s,
     );
 }

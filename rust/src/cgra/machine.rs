@@ -38,6 +38,10 @@ pub struct Machine {
     /// Network hops traversed per cycle (the paper estimates PE-to-PE
     /// communication ~6x faster than V100 register-to-SMEM).
     pub hops_per_cycle: usize,
+    /// Words per cycle an inter-tile boundary link can carry (the
+    /// bandwidth cap on one producer->consumer halo channel in the
+    /// priced exchange model).
+    pub link_words_per_cycle: usize,
 }
 
 impl Default for Machine {
@@ -62,7 +66,57 @@ impl Machine {
             mshr_per_load: 160,
             max_instr_per_pe: 16,
             hops_per_cycle: 4,
+            link_words_per_cycle: 8,
         }
+    }
+
+    /// Check every field for physical sense. Division sites downstream
+    /// (`hops.div_ceil(hops_per_cycle)` in placement and the exchange
+    /// pricer, `bw_gbps / clock_ghz` in the roofline) assume these
+    /// bounds, so a bad machine must be rejected at the config /
+    /// `CompileOptions` boundary instead of panicking mid-compile.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        use anyhow::ensure;
+        ensure!(
+            self.clock_ghz.is_finite() && self.clock_ghz > 0.0,
+            "machine: clock_ghz = {} (must be finite and > 0)",
+            self.clock_ghz
+        );
+        ensure!(
+            self.bw_gbps.is_finite() && self.bw_gbps > 0.0,
+            "machine: bw_gbps = {} (must be finite and > 0)",
+            self.bw_gbps
+        );
+        ensure!(
+            self.grid_rows >= 1 && self.grid_cols >= 1,
+            "machine: grid {}x{} (both extents must be >= 1)",
+            self.grid_rows,
+            self.grid_cols
+        );
+        ensure!(self.mac_pes >= 1, "machine: mac_pes = 0 (must be >= 1)");
+        ensure!(
+            self.cache_line >= 8,
+            "machine: cache_line = {} (must hold at least one 8-byte word)",
+            self.cache_line
+        );
+        ensure!(
+            self.mshr_per_load >= 1,
+            "machine: mshr_per_load = 0 (must be >= 1)"
+        );
+        ensure!(
+            self.max_instr_per_pe >= 1,
+            "machine: max_instr_per_pe = 0 (must be >= 1)"
+        );
+        ensure!(
+            self.hops_per_cycle >= 1,
+            "machine: hops_per_cycle = 0 (must be >= 1; hop latency divides by it)"
+        );
+        ensure!(
+            self.link_words_per_cycle >= 1,
+            "machine: link_words_per_cycle = 0 (must be >= 1; the exchange \
+             bandwidth cap divides by it)"
+        );
+        Ok(())
     }
 
     /// A small fabric for unit tests (forces instruction packing).
@@ -127,5 +181,30 @@ mod tests {
     fn grid_holds_more_than_macs() {
         let m = Machine::paper();
         assert!(m.total_pes() > m.mac_pes);
+    }
+
+    #[test]
+    fn validate_accepts_the_paper_machine() {
+        assert!(Machine::paper().validate().is_ok());
+        assert!(Machine::tiny().validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_fields() {
+        let cases: Vec<(&str, Machine)> = vec![
+            ("hops_per_cycle", Machine { hops_per_cycle: 0, ..Machine::paper() }),
+            ("clock_ghz", Machine { clock_ghz: 0.0, ..Machine::paper() }),
+            ("clock_ghz", Machine { clock_ghz: f64::NAN, ..Machine::paper() }),
+            ("bw_gbps", Machine { bw_gbps: -1.0, ..Machine::paper() }),
+            ("grid", Machine { grid_rows: 0, ..Machine::paper() }),
+            ("mac_pes", Machine { mac_pes: 0, ..Machine::paper() }),
+            ("cache_line", Machine { cache_line: 4, ..Machine::paper() }),
+            ("mshr_per_load", Machine { mshr_per_load: 0, ..Machine::paper() }),
+            ("link_words_per_cycle", Machine { link_words_per_cycle: 0, ..Machine::paper() }),
+        ];
+        for (field, m) in cases {
+            let err = m.validate().unwrap_err().to_string();
+            assert!(err.contains(field), "{field}: {err}");
+        }
     }
 }

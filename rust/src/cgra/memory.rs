@@ -39,6 +39,77 @@ use crate::util::fault::{FaultPlan, MAX_FILL_RETRIES};
 /// Handle for an outstanding memory operation.
 pub type Ticket = u32;
 
+/// Cycles one halo word spends in the network for a transfer spanning
+/// `mesh_hops` tile-mesh hops on machine `m`: the mesh distance is
+/// scaled to PE hops by the fabric span (a neighboring tile sits a full
+/// grid away), then divided by the per-cycle hop rate. With the span
+/// at least `hops_per_cycle` (every realistic machine) the result is
+/// strictly monotone in `mesh_hops` — a far neighbor always costs more
+/// cycles than a near one.
+pub fn mesh_hop_cycles(mesh_hops: usize, m: &Machine) -> u64 {
+    let pe_hops = (mesh_hops * m.grid_rows.max(m.grid_cols)) as u64;
+    pe_hops.div_ceil(m.hops_per_cycle.max(1) as u64)
+}
+
+/// One priced region of a fabric-resident input buffer: a
+/// local-coordinate box `[lo, hi)` (relative to the tile's input box,
+/// x-fastest row-major addressing) plus the latency surcharge its
+/// boundary link adds. Each region models one producer -> consumer
+/// boundary and owns an independent bandwidth bucket.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CostRegion {
+    pub lo: [usize; 3],
+    pub hi: [usize; 3],
+    /// Network cycles added on top of hit latency
+    /// (see [`mesh_hop_cycles`]).
+    pub hop_cycles: u64,
+}
+
+/// Hop-latency pricing for a fabric-resident input buffer (the warm
+/// halo-exchange chunks). Loads whose local address falls in a region
+/// complete at `hit_latency + hop_cycles` after the cycle the region's
+/// link can start the transfer (at most [`ExchangeCost::link_words`]
+/// starts per cycle per region, FIFO); addresses matching no region are
+/// truly resident and stay at flat hit latency. **First match wins**,
+/// so callers order regions specific-to-general (neighbor transfers,
+/// then the own-output box at zero cost, then the ring catch-all).
+///
+/// Every completion is a pure function of the load-issue sequence
+/// (issue cycle + address), which both scheduler cores reproduce
+/// bit-identically — so pricing needs no new arbiter machinery and
+/// [`MemSys::advance_to`] is untouched.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExchangeCost {
+    /// Local input-box extents `[ex, ey, ez]` for address decode:
+    /// `addr = (z * ey + y) * ex + x`.
+    pub ext: [usize; 3],
+    /// Ordered priced regions (first match wins).
+    pub regions: Vec<CostRegion>,
+    /// Transfers one boundary link can start per cycle
+    /// ([`Machine::link_words_per_cycle`]).
+    pub link_words: u64,
+}
+
+impl ExchangeCost {
+    /// Index of the first region containing local word address `addr`,
+    /// if any.
+    fn region_of(&self, addr: u64) -> Option<usize> {
+        let ex = self.ext[0] as u64;
+        let ey = self.ext[1] as u64;
+        let x = (addr % ex) as usize;
+        let y = ((addr / ex) % ey) as usize;
+        let z = (addr / (ex * ey)) as usize;
+        self.regions.iter().position(|r| {
+            x >= r.lo[0]
+                && x < r.hi[0]
+                && y >= r.lo[1]
+                && y < r.hi[1]
+                && z >= r.lo[2]
+                && z < r.hi[2]
+        })
+    }
+}
+
 const UNGRANTED: u64 = u64::MAX;
 const NO_TAG: u64 = u64::MAX;
 /// End-of-chain sentinel for the intrusive fill-waiter lists.
@@ -97,6 +168,12 @@ pub struct MemSys {
     /// from this tile's previous chunk), so loads complete at hit
     /// latency without touching the cache or DRAM.
     fabric_resident: bool,
+    /// Hop-latency pricing for the resident buffer (`None` = the free
+    /// PR 6 model: every resident load at flat hit latency).
+    exchange_cost: Option<ExchangeCost>,
+    /// Per-region link state `(cycle, starts_used)` — the issue-time
+    /// bandwidth bucket each [`CostRegion`] drains.
+    link_buckets: Vec<(u64, u64)>,
     /// Armed fault plan, if any. `None` (the default) is the
     /// zero-overhead path: the grant loop's only extra work is one
     /// `not_before` compare against the constant 0.
@@ -135,6 +212,8 @@ impl MemSys {
             resolved: Vec::new(),
             record_resolved: false,
             fabric_resident: false,
+            exchange_cost: None,
+            link_buckets: Vec::new(),
             fault: None,
             fill_attempts: 0,
             stats: MemStats::default(),
@@ -155,6 +234,17 @@ impl MemSys {
     /// read is identical either way, so outputs cannot differ.
     pub fn set_fabric_resident(&mut self, on: bool) {
         self.fabric_resident = on;
+    }
+
+    /// Arm hop-latency pricing for the fabric-resident buffer (or
+    /// disarm with `None`). Only meaningful while fabric-resident;
+    /// resets every region's link bucket.
+    pub fn set_exchange_cost(&mut self, cost: Option<ExchangeCost>) {
+        self.link_buckets.clear();
+        if let Some(c) = &cost {
+            self.link_buckets.resize(c.regions.len(), (0, 0));
+        }
+        self.exchange_cost = cost;
     }
 
     /// Preallocate for a run that will issue at most `tickets` tickets
@@ -296,9 +386,29 @@ impl MemSys {
             // Exchange hit: the word is already on fabric. Completion is
             // known at issue (like a cache hit with no line-arrival
             // bound), so the event core's sleep-until-completion path
-            // works unchanged and no resolved record is needed.
+            // works unchanged and no resolved record is needed. With a
+            // cost model armed, words inside a priced region pay the
+            // boundary link's hop latency and queue behind its per-cycle
+            // start budget — still issue-time-known.
             let t = self.new_ticket();
-            self.tickets[t as usize] = now + self.hit_latency;
+            let flat = now + self.hit_latency;
+            let mut done = flat;
+            if let Some(cost) = &self.exchange_cost {
+                if let Some(r) = cost.region_of(addr) {
+                    let b = &mut self.link_buckets[r];
+                    if now > b.0 {
+                        *b = (now, 0);
+                    }
+                    if b.1 >= cost.link_words {
+                        b.0 += 1;
+                        b.1 = 0;
+                    }
+                    b.1 += 1;
+                    done = b.0 + self.hit_latency + cost.regions[r].hop_cycles;
+                    self.stats.exchanged_hop_cycles += done - flat;
+                }
+            }
+            self.tickets[t as usize] = done;
             self.stats.exchanged += 1;
             return (val, t);
         }
@@ -596,6 +706,94 @@ mod tests {
         assert!(!m.busy(), "no fill was queued");
         m.step(6);
         assert_eq!(m.stats.dram_read_bytes, 0);
+    }
+
+    #[test]
+    fn mesh_hop_cycles_is_strictly_monotone_on_the_paper_machine() {
+        let m = Machine::paper();
+        assert_eq!(mesh_hop_cycles(0, &m), 0);
+        for hops in 1..6 {
+            assert!(
+                mesh_hop_cycles(hops + 1, &m) > mesh_hop_cycles(hops, &m),
+                "hops {hops}"
+            );
+        }
+    }
+
+    #[test]
+    fn priced_exchange_adds_hop_latency_and_queues_on_the_link() {
+        let mut m = mk((0..64).map(|i| i as f64).collect());
+        m.set_fabric_resident(true);
+        m.set_exchange_cost(Some(ExchangeCost {
+            ext: [64, 1, 1],
+            regions: vec![
+                CostRegion { lo: [0, 0, 0], hi: [4, 1, 1], hop_cycles: 8 },
+                CostRegion { lo: [4, 0, 0], hi: [8, 1, 1], hop_cycles: 16 },
+            ],
+            link_words: 2,
+        }));
+        let hit = Machine::paper().cache_hit_latency as u64;
+        // Two near-region loads start this cycle; the third and fourth
+        // queue behind the 2-per-cycle link cap.
+        let done: Vec<u64> = (0..4)
+            .map(|a| {
+                let (_, t) = m.load(a, 5);
+                m.completion(t).unwrap()
+            })
+            .collect();
+        assert_eq!(done, vec![5 + hit + 8, 5 + hit + 8, 6 + hit + 8, 6 + hit + 8]);
+        // A far-region load is strictly costlier than a near one issued
+        // at the same cycle (its link is independent and idle).
+        let (_, t_far) = m.load(4, 5);
+        assert_eq!(m.completion(t_far), Some(5 + hit + 16));
+        // Outside every region: truly resident, flat hit latency.
+        let (_, t_res) = m.load(40, 5);
+        assert_eq!(m.completion(t_res), Some(5 + hit));
+        assert_eq!(m.stats.exchanged, 6, "all resident loads count as exchanged");
+        assert_eq!(m.stats.exchanged_hop_cycles, 8 + 8 + 9 + 9 + 16);
+        assert_eq!(m.stats.hits + m.stats.misses + m.stats.merged, 0);
+        assert!(!m.busy(), "pricing never queues arbiter transactions");
+    }
+
+    #[test]
+    fn unpriced_fabric_residency_is_unchanged_by_the_cost_machinery() {
+        // `set_exchange_cost(None)` (the default) must reproduce the
+        // PR 6 free model exactly.
+        let mut a = mk((0..64).map(|i| i as f64).collect());
+        let mut b = mk((0..64).map(|i| i as f64).collect());
+        a.set_fabric_resident(true);
+        b.set_fabric_resident(true);
+        b.set_exchange_cost(None);
+        for addr in [0u64, 17, 63] {
+            let (va, ta) = a.load(addr, 3);
+            let (vb, tb) = b.load(addr, 3);
+            assert_eq!(va.to_bits(), vb.to_bits());
+            assert_eq!(a.completion(ta), b.completion(tb));
+        }
+        assert_eq!(a.stats, b.stats);
+        assert_eq!(a.stats.exchanged_hop_cycles, 0);
+    }
+
+    #[test]
+    fn priced_exchange_reads_the_same_values_as_free() {
+        // The pricer changes completion cycles only — functional reads
+        // are identical, the root of the bitwise differential suite.
+        let grid: Vec<f64> = (0..32).map(|i| (i as f64) * 1.5 - 3.0).collect();
+        let mut free = mk(grid.clone());
+        let mut priced = mk(grid);
+        free.set_fabric_resident(true);
+        priced.set_fabric_resident(true);
+        priced.set_exchange_cost(Some(ExchangeCost {
+            ext: [32, 1, 1],
+            regions: vec![CostRegion { lo: [0, 0, 0], hi: [32, 1, 1], hop_cycles: 11 }],
+            link_words: 1,
+        }));
+        for addr in 0..32u64 {
+            let (vf, _) = free.load(addr, 2);
+            let (vp, tp) = priced.load(addr, 2);
+            assert_eq!(vf.to_bits(), vp.to_bits(), "addr {addr}");
+            assert!(priced.completion(tp).unwrap() > 2 + free.hit_latency);
+        }
     }
 
     #[test]

@@ -34,6 +34,7 @@ pub mod sim;
 pub mod stats;
 
 pub use machine::Machine;
+pub use memory::{mesh_hop_cycles, CostRegion, ExchangeCost};
 pub use sim::{PlacedGraph, SimCore, SimResult, Simulator};
 
 /// A value flowing through the fabric, tagged with the grid coordinates

@@ -636,6 +636,18 @@ impl Simulator {
         self
     }
 
+    /// Arm hop-latency pricing for the fabric-resident buffer (warm
+    /// halo-exchange chunks): loads inside a priced region complete at
+    /// `hit_latency + hop_cycles` behind a per-boundary bandwidth cap
+    /// (see [`super::memory::ExchangeCost`]). Completion cycles stay
+    /// issue-time-known pure functions of the load sequence, so both
+    /// scheduler cores remain bit-identical and outputs cannot change —
+    /// only cycle counts and the hop-surcharge counter move.
+    pub fn with_exchange_cost(mut self, cost: Option<super::memory::ExchangeCost>) -> Self {
+        self.mem.set_exchange_cost(cost);
+        self
+    }
+
     /// Arm a deterministic fault-injection plan for this run (see the
     /// module docs). `None` — or a plan with every percentage at 0 —
     /// leaves the run bit-identical to an unfaulted one.

@@ -20,6 +20,11 @@ pub struct MemStats {
     /// value never touches the cache or DRAM — a neighboring tile (or
     /// this tile's previous chunk) already holds it on fabric.
     pub exchanged: u64,
+    /// Surcharge cycles the hop-latency exchange pricer added on top of
+    /// flat hit latency across all exchanged loads (network hops plus
+    /// boundary-link queueing). Always 0 in the free exchange model and
+    /// in reload mode.
+    pub exchanged_hop_cycles: u64,
     /// Line fills that failed transiently (injected via
     /// `util::fault::FaultPlan`) and were re-queued with exponential
     /// backoff. Always 0 when no fault plan is armed.
@@ -43,6 +48,7 @@ impl MemStats {
             conflict_misses,
             evictions,
             exchanged,
+            exchanged_hop_cycles,
             retries,
             dram_read_bytes,
             dram_write_bytes,
@@ -55,6 +61,7 @@ impl MemStats {
         self.conflict_misses += conflict_misses;
         self.evictions += evictions;
         self.exchanged += exchanged;
+        self.exchanged_hop_cycles += exchanged_hop_cycles;
         self.retries += retries;
         self.dram_read_bytes += dram_read_bytes;
         self.dram_write_bytes += dram_write_bytes;
@@ -224,6 +231,7 @@ mod tests {
             conflict_misses: 6,
             evictions: 7,
             exchanged: 10,
+            exchanged_hop_cycles: 12,
             retries: 11,
             dram_read_bytes: 8,
             dram_write_bytes: 9,
@@ -241,6 +249,7 @@ mod tests {
                 conflict_misses: 12,
                 evictions: 14,
                 exchanged: 20,
+                exchanged_hop_cycles: 24,
                 retries: 22,
                 dram_read_bytes: 16,
                 dram_write_bytes: 18,

@@ -334,11 +334,15 @@ USAGE: scgra <info|dfg|roofline|compile|run|compare|validate> [--flags]
                         per DRAM round-trip, only the first layer loads
                         and only the last stores; host = one round-trip
                         per step)
-  --halo H              chunk-boundary halo movement: exchange|reload
-                        (default exchange: after the cold first chunk,
-                        halos ship over in-fabric channels — zero
-                        redundant DRAM reads; reload re-reads them from
-                        DRAM every chunk, the differential baseline)
+  --halo H              chunk-boundary halo movement:
+                        exchange|exchange-free|reload (default exchange:
+                        after the cold first chunk, halos ship over
+                        in-fabric channels — zero redundant DRAM reads —
+                        priced per Manhattan hop and boundary-link
+                        bandwidth; exchange-free ships them at flat hit
+                        latency; reload re-reads them from DRAM every
+                        chunk, the differential baseline. All three are
+                        bitwise-identical on values)
   --sim-core C          scheduler core: dense|event (default event; both
                         are bit-identical — event skips idle cycles)
   --trace record FILE   fingerprint every tile task (cycles, fires,
@@ -641,16 +645,24 @@ fn cmd_run(args: &Args, m: &Machine, cfg: Option<&Config>) -> Result<()> {
         100.0 * first.redundant_read_fraction,
     );
     for (i, r) in reports.iter().enumerate() {
+        let spill = if r.exchange_spilled {
+            format!(", {} points spilled", r.spilled_points)
+        } else {
+            String::new()
+        };
         println!(
-            "chunk {i}: {} step(s), {} tiles, makespan {} cyc, {} loads \
-             ({} from DRAM, {} exchanged), {:.1} GFLOPS \
+            "chunk {i}: {} step(s), {} tiles, makespan {} cyc \
+             (ring critical {}), {} loads ({} from DRAM, {} exchanged, \
+             +{} hop cyc{spill}), {:.1} GFLOPS \
              ({:.0}% of single-step roofline)",
             r.fused_steps,
             r.strips,
             r.makespan_cycles,
+            r.ring_critical_cycles,
             r.total_loads(),
             r.dram_point_reads(),
             r.exchanged_points,
+            r.exchanged_hop_cycles(),
             r.gflops,
             100.0 * r.gflops
                 / (tiles as f64 * machine.roofline_gflops(spec.arithmetic_intensity())),
@@ -901,6 +913,11 @@ mod tests {
         run(&sv(&[
             "run", "--shape", "star", "--dims", "24,16", "--workers", "2",
             "--tiles", "2", "--steps", "4", "--fuse", "spatial", "--halo", "reload",
+        ]))
+        .unwrap();
+        run(&sv(&[
+            "run", "--shape", "star", "--dims", "24,16", "--workers", "2",
+            "--tiles", "2", "--steps", "4", "--fuse", "spatial", "--halo", "exchange-free",
         ]))
         .unwrap();
         assert!(run(&sv(&["run", "--stencil", "3pt", "--halo", "teleport"])).is_err());

@@ -99,6 +99,12 @@ pub enum HaloMode {
     /// is zero.
     #[default]
     Exchange,
+    /// [`HaloMode::Exchange`] with every transfer priced at zero:
+    /// exchanged loads complete at flat hit latency regardless of how
+    /// many mesh hops the halo face crossed. This is the pre-pricing
+    /// exchange model, kept as a differential baseline — priced and
+    /// free runs must produce bitwise-identical grids.
+    ExchangeFree,
     /// Every chunk re-reads its full input box (grid + halo overlap)
     /// from DRAM — the pre-exchange behaviour, kept as the differential
     /// baseline.
@@ -106,13 +112,20 @@ pub enum HaloMode {
 }
 
 impl HaloMode {
-    /// Parse a CLI/config value (`exchange|reload`).
+    /// Parse a CLI/config value (`exchange|exchange-free|reload`).
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s {
             "exchange" => HaloMode::Exchange,
+            "exchange-free" => HaloMode::ExchangeFree,
             "reload" => HaloMode::Reload,
-            other => bail!("unknown halo mode `{other}` (exchange|reload)"),
+            other => bail!("unknown halo mode `{other}` (exchange|exchange-free|reload)"),
         })
+    }
+
+    /// True for both exchange flavours: warm chunks keep tile inputs
+    /// fabric-resident (where the residency plan allows).
+    pub fn is_exchange(self) -> bool {
+        matches!(self, HaloMode::Exchange | HaloMode::ExchangeFree)
     }
 }
 
@@ -120,6 +133,7 @@ impl std::fmt::Display for HaloMode {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.pad(match self {
             HaloMode::Exchange => "exchange",
+            HaloMode::ExchangeFree => "exchange-free",
             HaloMode::Reload => "reload",
         })
     }
@@ -243,6 +257,9 @@ pub struct CompiledStage {
     /// chunk (`None` for the first stage — its first chunk is the cold
     /// DRAM read).
     pub entry_exchange: Option<ExchangeSchedule>,
+    /// Which tiles can honour exchange-mode fabric residency on warm
+    /// chunks, and the DRAM consequence for the ones that cannot.
+    pub residency: ResidencyPlan,
 }
 
 impl CompiledStage {
@@ -283,6 +300,50 @@ pub fn ring_stages(spec: &StencilSpec, plan: &DecompPlan) -> Vec<Vec<Tile>> {
                 .collect()
         })
         .collect()
+}
+
+/// Which tiles of a stage can actually honour [`HaloMode::Exchange`]'s
+/// fabric residency. A warm chunk's tile keeps its whole input box in
+/// on-fabric buffers, but those buffers share the per-tile token budget
+/// with the §IV pipeline state. A tile whose pipeline tokens plus input
+/// box exceed the budget cannot hold the box and must **spill**:
+/// re-load its input through the cache every warm chunk (exactly the
+/// [`HaloMode::Reload`] path), while covered tiles stay resident. The
+/// plan is compiled here, once, so the session and the roofline agree
+/// on the DRAM-traffic consequence before anything executes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ResidencyPlan {
+    /// Per-tile verdict, indexed like `plan.tiles`: `true` = the tile's
+    /// input box fits on fabric alongside its pipeline state.
+    pub resident: Vec<bool>,
+    /// Input points of the spilling tiles — the extra DRAM point-reads
+    /// every warm chunk pays under exchange.
+    pub spilled_points: usize,
+}
+
+impl ResidencyPlan {
+    /// Budget check per tile: §IV pipeline tokens for the tile's
+    /// sub-spec at the plan's depth, plus the input box itself.
+    pub fn build(spec: &StencilSpec, plan: &DecompPlan, fabric_tokens: usize) -> Self {
+        let mut resident = Vec::with_capacity(plan.tiles.len());
+        let mut spilled_points = 0;
+        for t in &plan.tiles {
+            let pipeline =
+                temporal::required_tokens(&t.sub_spec(spec), plan.workers, plan.fused_steps);
+            let fits = pipeline + t.in_points() <= fabric_tokens;
+            if !fits {
+                spilled_points += t.in_points();
+            }
+            resident.push(fits);
+        }
+        Self { resident, spilled_points }
+    }
+
+    /// True when every tile keeps its input on fabric (no warm-chunk
+    /// DRAM reads at all under exchange).
+    pub fn fully_resident(&self) -> bool {
+        self.spilled_points == 0
+    }
 }
 
 /// The immutable product of [`compile`]: plan + placed graphs +
@@ -513,7 +574,15 @@ impl CompiledStencil {
                 tiles: decomp::tiles_for_cuts_depth(&spec, cuts, fused_steps),
             };
             let prev = stages.last().map(|s: &CompiledStage| s.plan.clone());
-            stages.push(stage(&spec, workers, &options.machine, plan, repeats, prev.as_ref())?);
+            stages.push(stage(
+                &spec,
+                workers,
+                &options.machine,
+                options.fabric_tokens,
+                plan,
+                repeats,
+                prev.as_ref(),
+            )?);
         }
         ensure!(!stages.is_empty(), "compiled artifact has no stages");
         let covered: usize = stages.iter().map(|s| s.steps()).sum();
@@ -521,12 +590,14 @@ impl CompiledStencil {
             covered == steps,
             "compiled artifact stages advance {covered} step(s) but declare {steps}"
         );
-        let analysis = roofline::analyze_tiled(
+        let analysis = roofline::analyze_tiled_halo(
             &spec,
             &options.machine,
             workers,
             &stages[0].plan,
             options.tiles,
+            options.halo,
+            stages[0].residency.spilled_points,
         );
         Ok(Self { spec, steps, workers, options, stages, analysis })
     }
@@ -566,6 +637,9 @@ pub fn compile(
         ));
     }
     validate_parsed_spec(spec).map_err(|e| ScgraError::InfeasibleSpec(e.to_string()))?;
+    opts.machine
+        .validate()
+        .map_err(|e| ScgraError::InvalidMachine(e.to_string()))?;
     compile_inner(spec, steps, opts).map_err(classify_planning)
 }
 
@@ -586,17 +660,18 @@ fn compile_inner(spec: &StencilSpec, steps: usize, opts: &CompileOptions) -> Res
     let stages = match opts.fuse {
         FuseMode::Host => {
             let plan = decomp::plan(spec, w, opts.fabric_tokens, opts.decomp, opts.tiles)?;
-            vec![stage(spec, w, &opts.machine, plan, steps, None)?]
+            vec![stage(spec, w, &opts.machine, opts.fabric_tokens, plan, steps, None)?]
         }
         FuseMode::Spatial | FuseMode::Auto => {
             let probe =
                 decomp::plan_fused(spec, w, opts.fabric_tokens, opts.decomp, opts.tiles, steps)?;
             let depth = probe.fused_steps;
             if depth == 1 {
-                vec![stage(spec, w, &opts.machine, probe, steps, None)?]
+                vec![stage(spec, w, &opts.machine, opts.fabric_tokens, probe, steps, None)?]
             } else {
                 let (full, rem) = (steps / depth, steps % depth);
-                let mut v = vec![stage(spec, w, &opts.machine, probe, full, None)?];
+                let mut v =
+                    vec![stage(spec, w, &opts.machine, opts.fabric_tokens, probe, full, None)?];
                 if rem > 0 {
                     // rem < depth, so a depth-rem plan is always
                     // feasible (buffering is monotone in depth) and the
@@ -610,13 +685,29 @@ fn compile_inner(spec: &StencilSpec, steps: usize, opts: &CompileOptions) -> Res
                         rem,
                     )?;
                     let prev = v[0].plan.clone();
-                    v.push(stage(spec, w, &opts.machine, tail, 1, Some(&prev))?);
+                    v.push(stage(
+                        spec,
+                        w,
+                        &opts.machine,
+                        opts.fabric_tokens,
+                        tail,
+                        1,
+                        Some(&prev),
+                    )?);
                 }
                 v
             }
         }
     };
-    let analysis = roofline::analyze_tiled(spec, &opts.machine, w, &stages[0].plan, opts.tiles);
+    let analysis = roofline::analyze_tiled_halo(
+        spec,
+        &opts.machine,
+        w,
+        &stages[0].plan,
+        opts.tiles,
+        opts.halo,
+        stages[0].residency.spilled_points,
+    );
     Ok(CompiledStencil {
         spec: spec.clone(),
         steps,
@@ -636,6 +727,7 @@ fn stage(
     spec: &StencilSpec,
     w: usize,
     machine: &Machine,
+    fabric_tokens: usize,
     plan: DecompPlan,
     repeats: usize,
     prev: Option<&DecompPlan>,
@@ -652,6 +744,7 @@ fn stage(
     }
     let intra_exchange = ExchangeSchedule::build(spec, &plan, &plan);
     let entry_exchange = prev.map(|p| ExchangeSchedule::build(spec, &plan, p));
+    let residency = ResidencyPlan::build(spec, &plan, fabric_tokens);
     Ok(CompiledStage {
         plan,
         repeats,
@@ -660,6 +753,7 @@ fn stage(
         ring_graphs,
         intra_exchange,
         entry_exchange,
+        residency,
     })
 }
 
@@ -823,7 +917,7 @@ fn options_text(o: &CompileOptions, steps: usize) -> String {
         "[machine]\nclock_ghz = {}\ngrid_rows = {}\ngrid_cols = {}\nmac_pes = {}\n\
          bw_gbps = {}\ndram_latency = {}\ncache_kib = {}\ncache_line = {}\n\
          cache_hit_latency = {}\nmshr_per_load = {}\nmax_instr_per_pe = {}\n\
-         hops_per_cycle = {}\n\
+         hops_per_cycle = {}\nlink_words_per_cycle = {}\n\
          [options]\nworkers = {}\ntiles = {}\nfabric_tokens = {}\n\
          decomp = \"{}\"\nfuse = \"{}\"\nhalo = \"{}\"\nsteps = {}\n",
         m.clock_ghz,
@@ -838,6 +932,7 @@ fn options_text(o: &CompileOptions, steps: usize) -> String {
         m.mshr_per_load,
         m.max_instr_per_pe,
         m.hops_per_cycle,
+        m.link_words_per_cycle,
         o.workers,
         o.tiles,
         o.fabric_tokens,
@@ -1177,6 +1272,7 @@ mod tests {
             assert_eq!(a.intra_exchange, b.intra_exchange);
             assert_eq!(a.entry_exchange, b.entry_exchange);
             assert_eq!(a.ring_graphs.len(), b.ring_graphs.len());
+            assert_eq!(a.residency, b.residency);
         }
         // Artifacts that predate the halo line parse to the default.
         let stripped: String = c
@@ -1187,5 +1283,81 @@ mod tests {
             .collect();
         let old = CompiledStencil::parse(&stripped).unwrap();
         assert_eq!(old.options.halo, HaloMode::Exchange);
+    }
+
+    #[test]
+    fn halo_mode_exchange_free_parses_displays_and_round_trips() {
+        assert_eq!(HaloMode::parse("exchange-free").unwrap(), HaloMode::ExchangeFree);
+        assert_eq!(HaloMode::ExchangeFree.to_string(), "exchange-free");
+        assert!(HaloMode::Exchange.is_exchange());
+        assert!(HaloMode::ExchangeFree.is_exchange());
+        assert!(!HaloMode::Reload.is_exchange());
+        let spec = StencilSpec::heat2d(24, 16, 0.2);
+        let opts = CompileOptions::default()
+            .with_workers(2)
+            .with_halo(HaloMode::ExchangeFree);
+        let c = compile(&spec, 2, &opts).unwrap();
+        let back = CompiledStencil::parse(&c.to_text()).unwrap();
+        assert_eq!(back.options.halo, HaloMode::ExchangeFree);
+        assert_eq!(
+            back.options.machine.link_words_per_cycle,
+            c.options.machine.link_words_per_cycle
+        );
+        // Artifacts that predate the link-bandwidth field parse to the
+        // paper default.
+        let stripped: String = c
+            .to_text()
+            .lines()
+            .filter(|l| !l.starts_with("link_words_per_cycle"))
+            .map(|l| format!("{l}\n"))
+            .collect();
+        let old = CompiledStencil::parse(&stripped).unwrap();
+        assert_eq!(
+            old.options.machine.link_words_per_cycle,
+            Machine::paper().link_words_per_cycle
+        );
+    }
+
+    #[test]
+    fn compile_rejects_a_degenerate_machine_with_a_typed_error() {
+        let spec = StencilSpec::heat2d(16, 10, 0.2);
+        let m = Machine { hops_per_cycle: 0, ..Machine::paper() };
+        let opts = CompileOptions::default().with_workers(1).with_machine(m);
+        let e = compile(&spec, 1, &opts).unwrap_err();
+        assert_eq!(e.kind(), "invalid-machine");
+        assert!(e.to_string().contains("hops_per_cycle"), "{e}");
+        assert!(!e.is_transient());
+    }
+
+    #[test]
+    fn residency_plan_spills_when_the_box_overflows_the_budget() {
+        let spec = StencilSpec::heat2d(40, 24, 0.2);
+        let opts = CompileOptions::default()
+            .with_workers(2)
+            .with_tiles(2)
+            .with_fuse(FuseMode::Spatial);
+        let c = compile(&spec, 6, &opts).unwrap();
+        let st = &c.stages[0];
+        // The default budget holds every tile's input box.
+        assert!(st.residency.fully_resident());
+        assert_eq!(st.residency.resident.len(), st.plan.tiles.len());
+        assert_eq!(c.analysis.spilled_points, 0);
+        // Against a budget that cannot hold any box, every tile spills
+        // and the point count is exact.
+        let tight = ResidencyPlan::build(&spec, &st.plan, 0);
+        assert!(tight.resident.iter().all(|r| !r));
+        assert!(!tight.fully_resident());
+        assert_eq!(tight.spilled_points, st.plan.total_input_points());
+        // The spill feeds the roofline's warm-chunk byte count: the
+        // effective intensity drops below the clean exchange value.
+        let m = &c.options.machine;
+        let clean = roofline::analyze_tiled_halo(
+            &spec, m, c.workers, &st.plan, 2, HaloMode::Exchange, 0,
+        );
+        let spilled = roofline::analyze_tiled_halo(
+            &spec, m, c.workers, &st.plan, 2, HaloMode::Exchange, tight.spilled_points,
+        );
+        assert!(spilled.effective_ai < clean.effective_ai);
+        assert_eq!(spilled.spilled_points, tight.spilled_points);
     }
 }

@@ -69,9 +69,13 @@ impl Config {
     }
 
     /// Build a [`Machine`] from `[machine]`, defaulting to the paper's.
+    /// The result is validated ([`Machine::validate`]) so degenerate
+    /// fields — a zero `hops_per_cycle` that later arithmetic divides
+    /// by, a non-positive clock — are rejected here, at the config
+    /// boundary, instead of panicking mid-placement.
     pub fn machine(&self) -> Result<Machine> {
         let d = Machine::paper();
-        Ok(Machine {
+        let m = Machine {
             clock_ghz: self.num("machine", "clock_ghz", d.clock_ghz)?,
             grid_rows: self.num("machine", "grid_rows", d.grid_rows)?,
             grid_cols: self.num("machine", "grid_cols", d.grid_cols)?,
@@ -84,7 +88,14 @@ impl Config {
             mshr_per_load: self.num("machine", "mshr_per_load", d.mshr_per_load)?,
             max_instr_per_pe: self.num("machine", "max_instr_per_pe", d.max_instr_per_pe)?,
             hops_per_cycle: self.num("machine", "hops_per_cycle", d.hops_per_cycle)?,
-        })
+            link_words_per_cycle: self.num(
+                "machine",
+                "link_words_per_cycle",
+                d.link_words_per_cycle,
+            )?,
+        };
+        m.validate()?;
+        Ok(m)
     }
 
     /// Build a [`StencilSpec`] from `[stencil]`:
@@ -448,8 +459,30 @@ tiles = 16
         assert_eq!(c.run_params().unwrap().halo, HaloMode::Reload);
         let c = Config::parse("[run]\nhalo = \"exchange\"\n").unwrap();
         assert_eq!(c.run_params().unwrap().halo, HaloMode::Exchange);
+        let c = Config::parse("[run]\nhalo = \"exchange-free\"\n").unwrap();
+        assert_eq!(c.run_params().unwrap().halo, HaloMode::ExchangeFree);
         let c = Config::parse("[run]\nhalo = \"teleport\"\n").unwrap();
         assert!(c.run_params().is_err());
+    }
+
+    #[test]
+    fn degenerate_machine_toml_is_a_typed_rejection_not_a_panic() {
+        // hops_per_cycle = 0 used to survive parsing and only blow up
+        // as a divide-by-zero deep inside placement; the config
+        // boundary now rejects it with the offending field named.
+        for (toml, field) in [
+            ("[machine]\nhops_per_cycle = 0\n", "hops_per_cycle"),
+            ("[machine]\nlink_words_per_cycle = 0\n", "link_words_per_cycle"),
+            ("[machine]\nclock_ghz = 0.0\n", "clock_ghz"),
+            ("[machine]\nbw_gbps = -1.0\n", "bw_gbps"),
+            ("[machine]\ngrid_rows = 0\n", "grid_rows"),
+        ] {
+            let c = Config::parse(toml).unwrap();
+            let e = c.machine().unwrap_err().to_string();
+            assert!(e.contains(field), "`{e}` should name `{field}`");
+        }
+        // The paper default (empty TOML) still passes validation.
+        assert!(Config::parse("").unwrap().machine().is_ok());
     }
 
     #[test]

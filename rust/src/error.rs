@@ -34,6 +34,11 @@ pub enum ScgraError {
     /// larger than the serve path will buffer, or no decomposition
     /// fits the fabric token budget.
     OverBudget(String),
+    /// The machine description is unusable: a zero `hops_per_cycle`
+    /// (a divisor in hop-latency math), a non-positive clock or
+    /// bandwidth, an empty PE grid. Rejected at the `compile`/config
+    /// boundary, before any planning arithmetic can divide by it.
+    InvalidMachine(String),
     /// Filesystem failure while reading or writing an artifact.
     Io(String),
     /// A tile task panicked (the pool itself recovers and respawns —
@@ -63,6 +68,7 @@ impl ScgraError {
             Self::MalformedArtifact(_) => "malformed-artifact",
             Self::InfeasibleSpec(_) => "infeasible-spec",
             Self::OverBudget(_) => "over-budget",
+            Self::InvalidMachine(_) => "invalid-machine",
             Self::Io(_) => "io",
             Self::PoolPoisoned(_) => "pool-poisoned",
             Self::Deadlock(_) => "deadlock",
@@ -103,6 +109,7 @@ impl fmt::Display for ScgraError {
             Self::MalformedArtifact(m)
             | Self::InfeasibleSpec(m)
             | Self::OverBudget(m)
+            | Self::InvalidMachine(m)
             | Self::Io(m)
             | Self::PoolPoisoned(m)
             | Self::Deadlock(m)

@@ -88,6 +88,9 @@ pub struct TiledAnalysis {
     pub halo_points: usize,
     /// Fraction of the grid read more than once (`Σ inputs / grid - 1`).
     pub redundant_read_fraction: f64,
+    /// Input points of tiles the residency plan spills under exchange
+    /// (0 under reload, where every point reloads anyway).
+    pub spilled_points: usize,
     /// Arithmetic intensity with halo re-reads *and* the fused depth
     /// accounted: all fused layers' FLOPs against one grid round-trip.
     pub effective_ai: f64,
@@ -108,15 +111,22 @@ pub fn analyze_tiled(
     plan: &DecompPlan,
     array_tiles: usize,
 ) -> TiledAnalysis {
-    analyze_tiled_halo(spec, m, w, plan, array_tiles, HaloMode::Reload)
+    analyze_tiled_halo(spec, m, w, plan, array_tiles, HaloMode::Reload, 0)
 }
 
-/// [`analyze_tiled`] with the halo mode made explicit: under
-/// [`HaloMode::Exchange`] the geometric overlap moves over in-fabric
-/// channels instead of DRAM, so the redundant-read term drops out of the
+/// [`analyze_tiled`] with the halo mode made explicit: under either
+/// exchange flavour the geometric overlap moves over in-fabric channels
+/// instead of DRAM, so the redundant-read term drops out of the
 /// steady-state byte count and the effective intensity recovers the
 /// halo-free fused value. `Reload` charges the plan's full overlap — the
 /// differential baseline.
+///
+/// `spilled_points` is the residency plan's warm-chunk DRAM consequence
+/// ([`crate::compile::ResidencyPlan::spilled_points`]): input points of
+/// tiles whose boxes do not fit on fabric, which re-read through the
+/// cache every warm chunk even under exchange. Under `Reload` the term
+/// is ignored — every point already reloads.
+#[allow(clippy::too_many_arguments)]
 pub fn analyze_tiled_halo(
     spec: &StencilSpec,
     m: &Machine,
@@ -124,16 +134,19 @@ pub fn analyze_tiled_halo(
     plan: &DecompPlan,
     array_tiles: usize,
     halo: HaloMode,
+    spilled_points: usize,
 ) -> TiledAnalysis {
     let base = analyze(spec, m, w);
-    let redundant = match halo {
-        HaloMode::Reload => plan.redundant_read_fraction(spec),
-        HaloMode::Exchange => 0.0,
+    let grid = spec.grid_points() as f64;
+    let (redundant, spilled) = match halo {
+        HaloMode::Reload => (plan.redundant_read_fraction(spec), 0),
+        HaloMode::Exchange | HaloMode::ExchangeFree => (0.0, spilled_points),
     };
     let fused_steps = plan.fused_steps.max(1);
-    // One fused chunk: read the grid (1 + redundant) times, write it
-    // once, compute fused_steps trapezoid layers.
-    let bytes = (2.0 + redundant) * spec.grid_points() as f64 * BYTES_PER_POINT;
+    // One fused chunk: read the grid (1 + redundant) times plus the
+    // spilled boxes, write it once, compute fused_steps trapezoid
+    // layers.
+    let bytes = (2.0 + redundant + spilled as f64 / grid) * grid * BYTES_PER_POINT;
     let effective_ai = temporal::total_flops(spec, fused_steps) / bytes;
     let tile_roof = m.roofline_gflops(effective_ai);
     TiledAnalysis {
@@ -142,6 +155,7 @@ pub fn analyze_tiled_halo(
         fused_steps,
         halo_points: plan.halo_points(),
         redundant_read_fraction: redundant,
+        spilled_points: spilled,
         effective_ai,
         attainable_gflops_tile: tile_roof,
         attainable_gflops_array: array_tiles as f64 * tile_roof,
@@ -265,8 +279,8 @@ mod tests {
         let multi =
             decomp::plan(&spec, w, decomp::DEFAULT_FABRIC_TOKENS, DecompKind::Pencil, 16)
                 .unwrap();
-        let reload = analyze_tiled_halo(&spec, &m, w, &multi, 16, HaloMode::Reload);
-        let exch = analyze_tiled_halo(&spec, &m, w, &multi, 16, HaloMode::Exchange);
+        let reload = analyze_tiled_halo(&spec, &m, w, &multi, 16, HaloMode::Reload, 0);
+        let exch = analyze_tiled_halo(&spec, &m, w, &multi, 16, HaloMode::Exchange, 0);
         assert!(reload.redundant_read_fraction > 0.0);
         assert_eq!(exch.redundant_read_fraction, 0.0);
         assert!(exch.effective_ai > reload.effective_ai);
@@ -274,6 +288,19 @@ mod tests {
         // whole-grid single-step value again.
         assert!((exch.effective_ai - exch.base.arithmetic_intensity).abs() < 1e-12);
         assert!(exch.attainable_gflops_tile >= reload.attainable_gflops_tile);
+        // The free-pricing flavour keeps exchange's byte model: pricing
+        // changes cycles, never traffic.
+        let free = analyze_tiled_halo(&spec, &m, w, &multi, 16, HaloMode::ExchangeFree, 0);
+        assert_eq!(free, exch);
+        // Spilled boxes re-read through the cache every warm chunk, so
+        // they deflate the effective intensity; reload ignores the term
+        // (every point reloads anyway).
+        let spill = analyze_tiled_halo(&spec, &m, w, &multi, 16, HaloMode::Exchange, 1000);
+        assert_eq!(spill.spilled_points, 1000);
+        assert!(spill.effective_ai < exch.effective_ai);
+        let rl = analyze_tiled_halo(&spec, &m, w, &multi, 16, HaloMode::Reload, 1000);
+        assert_eq!(rl.spilled_points, 0);
+        assert_eq!(rl, reload);
     }
 
     #[test]

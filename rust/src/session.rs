@@ -26,17 +26,30 @@
 //!    input, and the final band — exactly the ring — is copied into the
 //!    chunk output. That makes every chunk bitwise-equal to the
 //!    iterated oracle on the **full** grid, not just the valid box.
-//! 3. **Halo exchange** — under [`HaloMode::Exchange`] (the default)
+//!    Because the bands read the scratch copy, the ring chain is data-
+//!    independent of the fused tiles: in pooled mode the fused batch
+//!    and the band stages share the pool (bands fill tile slots as
+//!    fused tasks drain), and the reported makespan is
+//!    `max(fused makespan, ring critical path)` — the only dependency
+//!    gate is band `s` → band `s+1`, whose boxes actually intersect.
+//!    The bands never serialize behind the whole fused trapezoid.
+//! 3. **Halo exchange** — under either exchange flavour (the default)
 //!    tiles retain their buffers across chunks, so every chunk after
-//!    the cold first one finds its whole input fabric-resident: the
+//!    the cold first one finds its input fabric-resident: the
 //!    compile-time [`ExchangeSchedule`] says which neighbor shipped
-//!    each halo face, the simulators run with
-//!    [`Simulator::with_fabric_resident`] (loads complete at hit
-//!    latency, no cache/DRAM traffic — a timing/accounting change only,
-//!    so exchange and reload runs are bitwise-identical), and the
-//!    report's `redundant_read_fraction` drops to zero.
-//!    [`HaloMode::Reload`] keeps the old re-read-everything behaviour
-//!    as the differential baseline.
+//!    each halo face, and the simulators run with
+//!    [`Simulator::with_fabric_resident`]. Under [`HaloMode::Exchange`]
+//!    each exchanged load is additionally **priced** by its compile-time
+//!    Manhattan hop distance and a per-boundary link-bandwidth cap
+//!    ([`crate::cgra::ExchangeCost`]): completion slips to
+//!    `hit + hops/hops_per_cycle` cycles, so far neighbors cost more
+//!    than near ones. Pricing is timing/accounting only — priced
+//!    ([`HaloMode::Exchange`]), free ([`HaloMode::ExchangeFree`]) and
+//!    reload ([`HaloMode::Reload`]) runs are bitwise-identical on
+//!    values. Tiles whose input box overflows the fabric token budget
+//!    cannot actually hold it: the artifact's
+//!    [`crate::compile::ResidencyPlan`] spills them back to the cache
+//!    path and the report carries the spilled points explicitly.
 //!
 //! Because each simulator run is deterministic and tile outputs merge
 //! into disjoint owned boxes, the pooled execution is **bitwise
@@ -75,12 +88,14 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, ensure, Result};
 
 use crate::cgra::stats::MemStats;
-use crate::cgra::{Machine, PlacedGraph, SimCore, SimResult, Simulator};
+use crate::cgra::{
+    mesh_hop_cycles, CostRegion, ExchangeCost, Machine, PlacedGraph, SimCore, SimResult, Simulator,
+};
 use crate::error::ScgraError;
 use crate::util::fault::FaultPlan;
 use crate::compile::{CompiledStage, CompiledStencil, HaloMode};
 use crate::stencil::decomp::{DecompKind, Tile};
-use crate::stencil::exchange::ExchangeSchedule;
+use crate::stencil::exchange::{ExchangeSchedule, TileExchange, RING_MESH_HOPS};
 use crate::stencil::{temporal, StencilSpec};
 use crate::util::trace::{hash_f64s, Trace, TraceRecord};
 
@@ -95,6 +110,13 @@ pub struct TileTask {
     /// with the same input extents (the graph depends only on dims and
     /// the worker count, not the data).
     pub graph: Arc<PlacedGraph>,
+    /// Warm-chunk fabric residency for *this* task: true when the
+    /// chunk is warm under exchange **and** the residency plan covers
+    /// the tile. Spilled tiles run with the plain cache/DRAM path.
+    pub resident: bool,
+    /// Hop-latency pricing for this task's fabric-resident loads
+    /// (`None` = free exchange, reload, or a spilled/cold task).
+    pub cost: Option<ExchangeCost>,
 }
 
 /// How tile tasks are executed.
@@ -130,7 +152,6 @@ struct BatchDone {
 struct BatchParams {
     machine: Machine,
     core: SimCore,
-    resident: bool,
     /// Armed fault plan forwarded to every simulator in the batch.
     fault: Option<FaultPlan>,
     /// Absolute wall-clock deadline for the whole run, if any.
@@ -191,9 +212,11 @@ fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
 
 /// Simulate one tile task (shared by pool workers and sequential mode).
 fn simulate_task(p: &BatchParams, task: TileTask) -> Result<SimResult> {
-    let mut sim = Simulator::from_placed(&task.graph, &p.machine, task.input.clone(), task.input)
+    let TileTask { input, graph, resident, cost, .. } = task;
+    let mut sim = Simulator::from_placed(&graph, &p.machine, input.clone(), input)
         .with_core(p.core)
-        .with_fabric_resident(p.resident)
+        .with_fabric_resident(resident)
+        .with_exchange_cost(cost)
         .with_fault_plan(p.fault.clone());
     if let Some(c) = &p.cancel {
         sim = sim.with_cancel(Arc::clone(c));
@@ -345,6 +368,17 @@ impl TilePool {
                 return Ok(BatchOutput::Deadline { completed: 0, total: n });
             }
         }
+        let batch = self.enqueue(params, tasks);
+        self.wait(&batch)
+    }
+
+    /// Enqueue a batch without blocking — the overlap path: the chunk's
+    /// fused batch goes in first, the ring band batches queue behind it
+    /// (workers drain the front batch's *unclaimed* tasks, so bands
+    /// start as soon as every fused task is claimed, concurrently with
+    /// the in-flight fused stragglers). Pair with [`TilePool::wait`].
+    fn enqueue(&self, params: &BatchParams, tasks: VecDeque<TileTask>) -> Arc<TileBatch> {
+        let n = tasks.len();
         self.respawn_dead_workers();
         let batch = Arc::new(TileBatch {
             params: params.clone(),
@@ -353,11 +387,22 @@ impl TilePool {
             done_cv: Condvar::new(),
             n_tasks: n,
         });
-        {
+        if n > 0 {
             let mut q = lock_or_recover(&self.shared.queue);
             q.push_back(Arc::clone(&batch));
             self.shared.work_cv.notify_all();
         }
+        batch
+    }
+
+    /// Block until an enqueued batch completes (or its deadline
+    /// expires); same contract as [`TilePool::submit`].
+    fn wait(&self, batch: &Arc<TileBatch>) -> Result<BatchOutput> {
+        let n = batch.n_tasks;
+        if n == 0 {
+            return Ok(BatchOutput::Done(Vec::new()));
+        }
+        let params = &batch.params;
         let mut done = lock_or_recover(&batch.done);
         while done.completed < n {
             let Some(deadline) = params.deadline else {
@@ -494,11 +539,22 @@ pub struct RunReport {
     /// Fraction of the grid this chunk read from DRAM more than once.
     /// Equal to the plan's geometric overlap for cold chunks and reload
     /// mode; 0 for a warm exchange chunk (the halo arrived over fabric
-    /// channels instead).
+    /// channels instead — spilled tiles' re-reads are reported
+    /// separately in [`Self::spilled_points`]).
     pub redundant_read_fraction: f64,
     /// Points this chunk received through in-fabric halo exchange
-    /// instead of DRAM (0 for cold chunks and reload mode).
+    /// instead of DRAM (0 for cold chunks, reload mode, and the tiles
+    /// the residency plan spilled).
     pub exchanged_points: u64,
+    /// Input points of tiles that could **not** stay fabric-resident on
+    /// this warm chunk (the residency plan's spill): they re-read their
+    /// boxes through the cache exactly like reload mode. 0 for cold
+    /// chunks, reload mode and fully-resident stages.
+    pub spilled_points: u64,
+    /// True when this warm exchange chunk had at least one spilled
+    /// tile — the explicit flag that the chunk fell back to the reload
+    /// path for part of the grid.
+    pub exchange_spilled: bool,
     /// Boundary-ring points the time-tiled band stages computed and
     /// merged into the output (0 at fused depth 1 — there is no ring).
     pub ring_points: u64,
@@ -506,8 +562,15 @@ pub struct RunReport {
     /// `per_tile` so [`Self::total_loads`] stays the §IV fused-pipeline
     /// currency.
     pub ring_mem: MemStats,
-    /// Slowest tile's total cycles — the parallel makespan.
+    /// Chunk makespan: the fused batch's slowest hardware tile,
+    /// overlapped with the ring chain — `max(fused makespan,
+    /// ring critical path)`. The bands read a scratch copy of the chunk
+    /// input, so they are data-independent of the fused tiles; the only
+    /// serialization is band `s` → band `s+1` (telescoping boxes).
     pub makespan_cycles: u64,
+    /// Critical path of the time-tiled ring chain: Σ over band stages
+    /// of the slowest band in that stage (0 at fused depth 1).
+    pub ring_critical_cycles: u64,
     /// Sum of cycles across tiles (serial-equivalent work).
     pub total_cycles: u64,
     pub total_flops: f64,
@@ -539,6 +602,13 @@ impl RunReport {
             .iter()
             .map(|t| t.mem.loads - t.mem.exchanged)
             .sum()
+    }
+
+    /// Surcharge cycles the hop-latency pricer added to this chunk's
+    /// exchanged loads (network hops + boundary-link queueing). Always
+    /// 0 under [`HaloMode::ExchangeFree`], reload mode and cold chunks.
+    pub fn exchanged_hop_cycles(&self) -> u64 {
+        self.per_tile.iter().map(|t| t.mem.exchanged_hop_cycles).sum()
     }
 }
 
@@ -748,7 +818,7 @@ impl Session {
                 // finds the previous chunk's results fabric-resident —
                 // via the intra-stage schedule between repeats, or the
                 // entry schedule when crossing into the tail stage.
-                let exchange = if halo == HaloMode::Exchange && !reports.is_empty() {
+                let exchange = if halo.is_exchange() && !reports.is_empty() {
                     Some(if rep_i == 0 {
                         stage.entry_exchange.as_ref().unwrap_or(&stage.intra_exchange)
                     } else {
@@ -766,6 +836,7 @@ impl Session {
                     src,
                     stage,
                     exchange,
+                    halo,
                     reports.len() as u32,
                     trace.as_deref_mut(),
                     self.fault.as_ref(),
@@ -846,15 +917,146 @@ enum ChunkOutput {
     Deadline { completed: usize, total: usize },
 }
 
+/// Lower one tile's compile-time [`TileExchange`] into the simulator's
+/// [`ExchangeCost`]: one priced region per neighbor transfer (latency =
+/// [`mesh_hop_cycles`] of its mesh Manhattan distance), the tile's own
+/// previous-output box at zero surcharge, then the single-step-interior
+/// catch-all that prices ring points at [`RING_MESH_HOPS`]. Region
+/// order is the first-match-wins order [`ExchangeCost`] documents;
+/// addresses matching nothing (the immutable grid frame) stay at flat
+/// hit latency. Boxes arrive in global grid coordinates and are
+/// rebased to the tile's input box, matching [`Tile::extract`]'s
+/// row-major flattening.
+fn exchange_cost(te: &TileExchange, tile: &Tile, m: &Machine) -> ExchangeCost {
+    let local = |g: [usize; 3]| [g[0] - tile.in_lo[0], g[1] - tile.in_lo[1], g[2] - tile.in_lo[2]];
+    let mut regions = Vec::with_capacity(te.from_tiles.len() + 2);
+    for tr in &te.from_tiles {
+        regions.push(CostRegion {
+            lo: local(tr.lo),
+            hi: local(tr.hi),
+            hop_cycles: mesh_hop_cycles(tr.mesh_hops, m),
+        });
+    }
+    if let Some((lo, hi)) = te.own_box {
+        regions.push(CostRegion {
+            lo: local(lo),
+            hi: local(hi),
+            hop_cycles: 0,
+        });
+    }
+    if let Some((lo, hi)) = te.interior_box {
+        regions.push(CostRegion {
+            lo: local(lo),
+            hi: local(hi),
+            hop_cycles: mesh_hop_cycles(RING_MESH_HOPS, m),
+        });
+    }
+    ExchangeCost {
+        ext: [tile.in_extent(0), tile.in_extent(1), tile.in_extent(2)],
+        regions,
+        link_words: m.link_words_per_cycle.max(1) as u64,
+    }
+}
+
+/// Accounting from one chunk's completed ring chain.
+#[derive(Default)]
+struct RingRun {
+    /// The scratch grid after the final band (empty when the stage has
+    /// no ring).
+    cur: Vec<f64>,
+    mem: MemStats,
+    outputs: u64,
+    /// Sum of every band task's cycles (feeds `total_cycles`).
+    cycles: u64,
+    /// Critical path through the band chain: the sum over stages of the
+    /// slowest band in that stage — the only serialization the
+    /// telescoping band boxes actually force.
+    critical: u64,
+    /// Buffered trace records (phases 1..), appended after the fused
+    /// batch's phase-0 records so the trace order is execution-mode
+    /// independent.
+    trace: Vec<TraceRecord>,
+}
+
+/// What the ring chain produced.
+enum RingOut {
+    Done(Box<RingRun>),
+    Deadline { completed: usize, total: usize },
+}
+
+/// Advance the boundary ring through the stage's time-tiled band tiles
+/// against a scratch copy of the chunk input. Band stage `s` depends
+/// only on stage `s-1` (their boxes intersect); nothing here reads the
+/// fused tiles' outputs, so in pooled mode the caller may enqueue the
+/// fused batch first and let the bands overlap its stragglers.
+fn run_ring(
+    exec: ExecRef<'_>,
+    params: &BatchParams,
+    spec: &StencilSpec,
+    input: &[f64],
+    stage: &CompiledStage,
+    chunk: u32,
+    want_trace: bool,
+) -> Result<RingOut> {
+    let mut run = RingRun::default();
+    if stage.ring.is_empty() {
+        return Ok(RingOut::Done(Box::new(run)));
+    }
+    let mut cur = input.to_vec();
+    for (band_i, bands) in stage.ring.iter().enumerate() {
+        let tasks: VecDeque<TileTask> = bands
+            .iter()
+            .enumerate()
+            .map(|(id, t)| TileTask {
+                id,
+                tile: *t,
+                input: t.extract(spec, &cur),
+                graph: Arc::clone(
+                    &stage.ring_graphs[&[t.in_extent(0), t.in_extent(1), t.in_extent(2)]],
+                ),
+                resident: false,
+                cost: None,
+            })
+            .collect();
+        let results = match exec.run_batch(params, tasks)? {
+            BatchOutput::Done(r) => r,
+            BatchOutput::Deadline { completed, total } => {
+                return Ok(RingOut::Deadline { completed, total })
+            }
+        };
+        if want_trace {
+            trace_batch(&mut run.trace, chunk, band_i as u32 + 1, &results);
+        }
+        let mut stage_max = 0u64;
+        for (_, _, tile, res) in results {
+            tile.merge(spec, &mut cur, &res.output);
+            stage_max = stage_max.max(res.stats.cycles);
+            run.cycles += res.stats.cycles;
+            run.mem.accumulate(&res.stats.mem);
+            run.outputs += tile.out_points() as u64;
+        }
+        run.critical += stage_max;
+    }
+    run.cur = cur;
+    Ok(RingOut::Done(Box::new(run)))
+}
+
 /// Execute one chunk: decompose `input` per the stage's plan, run every
 /// fused tile task through the execution backend against the shared
-/// placed graphs, merge the owned outputs, then advance the boundary
+/// placed graphs, merge the owned outputs, and advance the boundary
 /// ring through the stage's time-tiled band tiles so the chunk output
 /// equals the iterated oracle on the full grid. `exchange` is `Some`
-/// for a warm chunk under [`HaloMode::Exchange`]: every simulator runs
-/// fabric-resident and the schedule's shipped-point count lands in the
-/// report. With a `trace` sink, fingerprints are appended per batch
-/// (fused tiles = phase 0, ring bands = phase 1..) in task order.
+/// for a warm chunk under an exchange-flavoured `halo`: tiles the
+/// stage's [`crate::compile::ResidencyPlan`] covers run fabric-resident
+/// (priced per hop under [`HaloMode::Exchange`], flat under
+/// [`HaloMode::ExchangeFree`]); spilled tiles fall back to the
+/// cache/DRAM path and their points land in the report's
+/// `spilled_points`. In pooled mode the ring chain overlaps the fused
+/// batch (the bands read a scratch input copy, so the only dependency
+/// gates are band→band); the reported makespan is
+/// `max(fused makespan, ring critical path)`. With a `trace` sink,
+/// fingerprints are appended per batch (fused tiles = phase 0, ring
+/// bands = phase 1..) in task order regardless of overlap.
 /// `fault`/`deadline`/`cancel` thread the session's resilience state
 /// into every batch (see [`BatchParams`]).
 #[allow(clippy::too_many_arguments)]
@@ -867,6 +1069,7 @@ fn execute_chunk(
     input: &[f64],
     stage: &CompiledStage,
     exchange: Option<&ExchangeSchedule>,
+    halo: HaloMode,
     chunk: u32,
     mut trace: Option<&mut Vec<TraceRecord>>,
     fault: Option<&FaultPlan>,
@@ -881,11 +1084,10 @@ fn execute_chunk(
     );
     let t0 = Instant::now();
     let plan = &stage.plan;
-    let resident = exchange.is_some();
+    let warm = exchange.is_some();
     let params = BatchParams {
         machine: machine.clone(),
         core,
-        resident,
         fault: fault.cloned(),
         deadline,
         cancel: cancel.map(Arc::clone),
@@ -894,22 +1096,74 @@ fn execute_chunk(
         .tiles
         .iter()
         .enumerate()
-        .map(|(id, t)| TileTask {
-            id,
-            tile: *t,
-            input: t.extract(spec, input),
-            graph: Arc::clone(&stage.graphs[&[t.in_extent(0), t.in_extent(1), t.in_extent(2)]]),
+        .map(|(id, t)| {
+            let resident = warm && stage.residency.resident[id];
+            let cost = match exchange {
+                Some(ex) if resident && halo == HaloMode::Exchange => {
+                    Some(exchange_cost(&ex.tiles[id], t, machine))
+                }
+                _ => None,
+            };
+            TileTask {
+                id,
+                tile: *t,
+                input: t.extract(spec, input),
+                graph: Arc::clone(&stage.graphs[&[t.in_extent(0), t.in_extent(1), t.in_extent(2)]]),
+                resident,
+                cost,
+            }
         })
         .collect();
     let n_tasks = tasks.len();
-    let results = match exec.run_batch(&params, tasks)? {
+
+    // Fused batch + ring chain. Pooled: enqueue the fused batch without
+    // blocking, run the bands (their batches queue behind it — workers
+    // start them as soon as every fused task is claimed, overlapping the
+    // fused stragglers), then collect the fused results. The fused wait
+    // always happens before a ring failure propagates, so no batch is
+    // abandoned mid-flight. Sequential keeps the natural order: fused
+    // first, then bands.
+    let (fused_out, ring_out) = match exec {
+        ExecRef::Pool(pool) => {
+            // Mirror `submit`'s short-circuit: an already-expired
+            // deadline is deterministic, nothing gets queued.
+            if let Some(dl) = deadline {
+                if Instant::now() >= dl {
+                    if let Some(c) = cancel {
+                        c.store(true, Ordering::Release);
+                    }
+                    return Ok(ChunkOutput::Deadline {
+                        completed: 0,
+                        total: n_tasks,
+                    });
+                }
+            }
+            let fused = pool.enqueue(&params, tasks);
+            let ring = run_ring(exec, &params, spec, input, stage, chunk, trace.is_some());
+            let fused_out = pool.wait(&fused);
+            (fused_out?, ring?)
+        }
+        ExecRef::Sequential => {
+            let fused_out = exec.run_batch(&params, tasks)?;
+            let ring = run_ring(exec, &params, spec, input, stage, chunk, trace.is_some())?;
+            (fused_out, ring)
+        }
+    };
+    let results = match fused_out {
         BatchOutput::Done(r) => r,
         BatchOutput::Deadline { completed, total } => {
             return Ok(ChunkOutput::Deadline { completed, total })
         }
     };
+    let mut ring = match ring_out {
+        RingOut::Done(r) => r,
+        RingOut::Deadline { completed, total } => {
+            return Ok(ChunkOutput::Deadline { completed, total })
+        }
+    };
     if let Some(sink) = trace.as_deref_mut() {
         trace_batch(sink, chunk, 0, &results);
+        sink.append(&mut ring.trace);
     }
 
     // Merge owned outputs into the global grid (boundary = input copy).
@@ -923,62 +1177,36 @@ fn execute_chunk(
         rep.halo_points += tile.halo_points() as u64;
         rep.mem.accumulate(&res.stats.mem);
     }
-    let mut makespan = per_tile.iter().map(|t| t.cycles).max().unwrap_or(0);
-    let mut total_cycles: u64 = per_tile.iter().map(|t| t.cycles).sum();
+    let fused_makespan = per_tile.iter().map(|t| t.cycles).max().unwrap_or(0);
+    let makespan = fused_makespan.max(ring.critical);
+    let total_cycles: u64 = per_tile.iter().map(|t| t.cycles).sum::<u64>() + ring.cycles;
 
-    // Time-tiled ring stages: band s advances the boundary ring to step
-    // s against a scratch copy of the chunk input; bands run after the
-    // fused trapezoid (a sequential barrier per stage), and the final
-    // band — exactly interior ∖ valid_box — lands in the chunk output.
-    let mut ring_mem = MemStats::default();
-    let mut ring_outputs: u64 = 0;
-    if !stage.ring.is_empty() {
-        let mut cur = input.to_vec();
-        for (band_i, bands) in stage.ring.iter().enumerate() {
-            let tasks: VecDeque<TileTask> = bands
-                .iter()
-                .enumerate()
-                .map(|(id, t)| TileTask {
-                    id,
-                    tile: *t,
-                    input: t.extract(spec, &cur),
-                    graph: Arc::clone(
-                        &stage.ring_graphs[&[t.in_extent(0), t.in_extent(1), t.in_extent(2)]],
-                    ),
-                })
-                .collect();
-            let results = match exec.run_batch(&params, tasks)? {
-                BatchOutput::Done(r) => r,
-                BatchOutput::Deadline { completed, total } => {
-                    return Ok(ChunkOutput::Deadline { completed, total })
-                }
-            };
-            if let Some(sink) = trace.as_deref_mut() {
-                trace_batch(sink, chunk, band_i as u32 + 1, &results);
-            }
-            let mut stage_max = 0u64;
-            for (_, _, tile, res) in results {
-                tile.merge(spec, &mut cur, &res.output);
-                stage_max = stage_max.max(res.stats.cycles);
-                total_cycles += res.stats.cycles;
-                ring_mem.accumulate(&res.stats.mem);
-                ring_outputs += tile.out_points() as u64;
-            }
-            makespan += stage_max;
-        }
-        if let Some(last) = stage.ring.last() {
-            for t in last {
-                copy_box(spec, &mut output, &cur, t.out_lo, t.out_hi);
-            }
+    // The final band — exactly interior ∖ valid_box — lands in the
+    // chunk output.
+    if let Some(last) = stage.ring.last() {
+        for t in last {
+            copy_box(spec, &mut output, &ring.cur, t.out_lo, t.out_hi);
         }
     }
     let ring_points = stage.ring_points() as u64;
+    // Spilled tiles reload through the cache: only tiles the residency
+    // plan covers actually receive shipped points.
+    let exchanged_points = exchange
+        .map(|ex| {
+            ex.tiles
+                .iter()
+                .enumerate()
+                .filter(|(id, _)| stage.residency.resident[*id])
+                .map(|(_, te)| te.exchanged())
+                .sum::<usize>()
+        })
+        .unwrap_or(0) as u64;
 
     // Exact FLOP count from the spec (MUL = 1, MAC = 2 per output):
     // fused plans sum the per-layer trapezoid interiors, plus one
     // application per ring-band output.
     let total_flops = temporal::total_flops(spec, plan.fused_steps)
-        + ring_outputs as f64 * spec.flops_per_output();
+        + ring.outputs as f64 * spec.flops_per_output();
 
     let gflops = if makespan > 0 {
         total_flops * machine.clock_ghz / makespan as f64
@@ -992,15 +1220,22 @@ fn execute_chunk(
         cuts: plan.cuts,
         fused_steps: plan.fused_steps,
         halo_points: plan.halo_points() as u64,
-        redundant_read_fraction: if resident {
+        redundant_read_fraction: if warm {
             0.0
         } else {
             plan.redundant_read_fraction(spec)
         },
-        exchanged_points: exchange.map(|s| s.exchanged_points()).unwrap_or(0) as u64,
+        exchanged_points,
+        spilled_points: if warm {
+            stage.residency.spilled_points as u64
+        } else {
+            0
+        },
+        exchange_spilled: warm && !stage.residency.fully_resident(),
         ring_points,
-        ring_mem,
+        ring_mem: ring.mem,
         makespan_cycles: makespan,
+        ring_critical_cycles: ring.critical,
         total_cycles,
         total_flops,
         per_tile,
@@ -1021,12 +1256,11 @@ mod tests {
         Session::new(Arc::new(compile(spec, steps, &opts).unwrap()), machine)
     }
 
-    /// Plain batch parameters: event core, cold, no faults, no deadline.
+    /// Plain batch parameters: event core, no faults, no deadline.
     fn batch_params(machine: &Machine) -> BatchParams {
         BatchParams {
             machine: machine.clone(),
             core: SimCore::Event,
-            resident: false,
             fault: None,
             deadline: None,
             cancel: None,
@@ -1133,6 +1367,8 @@ mod tests {
             tile,
             input: Vec::new(), // wrong length -> out-of-bounds load
             graph,
+            resident: false,
+            cost: None,
         };
 
         let pool = TilePool::new(2);
@@ -1188,6 +1424,8 @@ mod tests {
                 input: t.extract(&spec, &input),
                 graph: Arc::clone(&stage.graphs
                     [&[t.in_extent(0), t.in_extent(1), t.in_extent(2)]]),
+                resident: false,
+                cost: None,
             })
             .collect();
         tasks.front_mut().unwrap().input = Vec::new(); // poison the first
@@ -1323,6 +1561,8 @@ mod tests {
                     graph: Arc::clone(
                         &stage.graphs[&[t.in_extent(0), t.in_extent(1), t.in_extent(2)]],
                     ),
+                    resident: false,
+                    cost: None,
                 })
                 .collect()
         };

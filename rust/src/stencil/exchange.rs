@@ -24,16 +24,50 @@
 //! output boxes tile the valid region, the ring and the frame are
 //! disjoint from them and each other), so
 //! `resident + exchanged == in_points` per tile — the invariant the
-//! accounting tests pin. The schedule is pure geometry computed at
-//! compile time; at run time a non-cold exchange chunk simply runs with
-//! the whole input buffer fabric-resident
-//! ([`crate::cgra::sim::Simulator::with_fabric_resident`]), which is a
-//! timing/accounting change only and therefore cannot perturb values —
-//! the basis of the exchange-vs-reload bitwise differential suite.
+//! accounting tests pin.
+//!
+//! # Priced transfers
+//!
+//! Each [`Transfer`] also carries the **Manhattan mesh distance**
+//! between producer and consumer ([`mesh_coords`] ranks every tile's
+//! output origin per axis, recovering the logical tile grid the cuts
+//! induce) and the global-coordinate intersection box it covers. At run
+//! time the session converts mesh hops into a per-load latency
+//! surcharge and a per-boundary bandwidth cap
+//! ([`crate::cgra::memory::ExchangeCost`]): a warm exchange chunk still
+//! runs with the whole input buffer fabric-resident, but loads landing
+//! inside a transfer's box complete at
+//! `hit_latency + hop_cycles` and at most `link_words_per_cycle`
+//! transfers start per cycle per boundary. Ring points are priced at
+//! [`RING_MESH_HOPS`] (the bands run somewhere on the fabric; one mesh
+//! hop is the nearest-neighbor assumption). The surcharge is a pure
+//! function of the load-issue sequence, so it changes *timing and
+//! accounting only* and cannot perturb values — the basis of the
+//! priced-vs-free-vs-reload bitwise differential suite.
 
 use super::decomp::{DecompPlan, Tile};
 use super::spec::StencilSpec;
 use super::temporal;
+
+/// Mesh distance charged for boundary-ring points (see module docs).
+pub const RING_MESH_HOPS: usize = 1;
+
+/// One producer -> consumer halo transfer at a chunk boundary: the
+/// intersection of the receiving tile's input box with a *different*
+/// tile's previous output box.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Transfer {
+    /// Source tile index in the previous chunk's plan.
+    pub src: usize,
+    /// Points shipped.
+    pub points: usize,
+    /// Manhattan distance between producer and consumer on the logical
+    /// tile mesh (1 = face neighbor, 2 = edge/diagonal, ...).
+    pub mesh_hops: usize,
+    /// Covered box `[lo, hi)` in global grid coordinates.
+    pub lo: [usize; 3],
+    pub hi: [usize; 3],
+}
 
 /// Where one receiving tile's input box comes from at a chunk boundary.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -41,18 +75,57 @@ pub struct TileExchange {
     /// Points already on this tile: own previous outputs + immutable
     /// grid frame.
     pub resident: usize,
-    /// `(source tile index, points)` for every neighbor whose previous
-    /// output box overlaps this tile's input box.
-    pub from_tiles: Vec<(usize, usize)>,
+    /// One priced transfer per neighbor whose previous output box
+    /// overlaps this tile's input box.
+    pub from_tiles: Vec<Transfer>,
     /// Points from the previous chunk's time-tiled boundary ring.
     pub from_ring: usize,
+    /// Intersection of this tile's input box with its *own* previous
+    /// output box (`None` when empty): loads here are unpriced.
+    pub own_box: Option<([usize; 3], [usize; 3])>,
+    /// Intersection of this tile's input box with the single-step
+    /// interior — the catch-all that prices ring points after the
+    /// specific transfer/own boxes have matched (frame points fall
+    /// outside it and stay unpriced).
+    pub interior_box: Option<([usize; 3], [usize; 3])>,
 }
 
 impl TileExchange {
     /// Points shipped over fabric channels (everything not resident).
     pub fn exchanged(&self) -> usize {
-        self.from_ring + self.from_tiles.iter().map(|&(_, n)| n).sum::<usize>()
+        self.from_ring + self.from_tiles.iter().map(|t| t.points).sum::<usize>()
     }
+}
+
+/// Logical mesh coordinate of every tile: the per-axis rank of its
+/// output origin among the plan's distinct cut positions. Tiles of one
+/// plan tile the valid box on an axis-aligned grid, so ranking `out_lo`
+/// per axis recovers the (x, y, z) tile-grid position the decomposition
+/// induced — the geometry hop distances are measured on.
+pub fn mesh_coords(plan: &DecompPlan) -> Vec<[usize; 3]> {
+    let mut axis_starts: [Vec<usize>; 3] = Default::default();
+    for (a, starts) in axis_starts.iter_mut().enumerate() {
+        let mut v: Vec<usize> = plan.tiles.iter().map(|t| t.out_lo[a]).collect();
+        v.sort_unstable();
+        v.dedup();
+        *starts = v;
+    }
+    plan.tiles
+        .iter()
+        .map(|t| {
+            let mut c = [0usize; 3];
+            for a in 0..3 {
+                c[a] = axis_starts[a]
+                    .binary_search(&t.out_lo[a])
+                    .expect("tile origin is one of the plan's cut positions");
+            }
+            c
+        })
+        .collect()
+}
+
+fn manhattan(a: [usize; 3], b: [usize; 3]) -> usize {
+    (0..3).map(|i| a[i].abs_diff(b[i])).sum()
 }
 
 /// The per-chunk exchange schedule: one [`TileExchange`] per tile of
@@ -71,6 +144,25 @@ fn isect(alo: [usize; 3], ahi: [usize; 3], blo: [usize; 3], bhi: [usize; 3]) -> 
         .product()
 }
 
+/// The intersection box itself, `None` when empty.
+fn isect_box(
+    alo: [usize; 3],
+    ahi: [usize; 3],
+    blo: [usize; 3],
+    bhi: [usize; 3],
+) -> Option<([usize; 3], [usize; 3])> {
+    let mut lo = [0usize; 3];
+    let mut hi = [0usize; 3];
+    for a in 0..3 {
+        lo[a] = alo[a].max(blo[a]);
+        hi[a] = ahi[a].min(bhi[a]);
+        if lo[a] >= hi[a] {
+            return None;
+        }
+    }
+    Some((lo, hi))
+}
+
 impl ExchangeSchedule {
     /// Partition every receiving tile's input box by source. `prev` is
     /// the plan of the chunk whose results are on fabric; tiles are
@@ -87,19 +179,36 @@ impl ExchangeSchedule {
             dims[2] - radii[2],
         ];
         let (vlo, vhi) = temporal::valid_box(spec, prev.fused_steps);
+        let recv_coords = mesh_coords(plan);
+        let prev_coords = mesh_coords(prev);
         let tiles = plan
             .tiles
             .iter()
             .enumerate()
-            .map(|(t, tile)| Self::tile_exchange(tile, t, prev, ilo, ihi, vlo, vhi))
+            .map(|(t, tile)| {
+                Self::tile_exchange(
+                    tile,
+                    recv_coords[t],
+                    t,
+                    prev,
+                    &prev_coords,
+                    ilo,
+                    ihi,
+                    vlo,
+                    vhi,
+                )
+            })
             .collect();
         Self { tiles }
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn tile_exchange(
         tile: &Tile,
+        coord: [usize; 3],
         t: usize,
         prev: &DecompPlan,
+        prev_coords: &[[usize; 3]],
         ilo: [usize; 3],
         ihi: [usize; 3],
         vlo: [usize; 3],
@@ -110,18 +219,26 @@ impl ExchangeSchedule {
         let interior = isect(lo, hi, ilo, ihi);
         let frame = total - interior;
         let mut own = 0usize;
+        let mut own_box = None;
         let mut from_tiles = Vec::new();
         let mut in_valid = 0usize;
         for (u, p) in prev.tiles.iter().enumerate() {
+            let Some((blo, bhi)) = isect_box(lo, hi, p.out_lo, p.out_hi) else {
+                continue;
+            };
             let v = isect(lo, hi, p.out_lo, p.out_hi);
             in_valid += v;
-            if v == 0 {
-                continue;
-            }
             if u == t {
                 own += v;
+                own_box = Some((blo, bhi));
             } else {
-                from_tiles.push((u, v));
+                from_tiles.push(Transfer {
+                    src: u,
+                    points: v,
+                    mesh_hops: manhattan(coord, prev_coords[u]).max(1),
+                    lo: blo,
+                    hi: bhi,
+                });
             }
         }
         // Previous output boxes tile the previous valid box exactly, so
@@ -132,6 +249,8 @@ impl ExchangeSchedule {
             resident: own + frame,
             from_tiles,
             from_ring,
+            own_box,
+            interior_box: isect_box(lo, hi, ilo, ihi),
         }
     }
 
@@ -205,10 +324,16 @@ mod tests {
                 .map(|(u, &n)| (u, n))
                 .collect();
             want.sort_unstable();
-            let mut got = ex.from_tiles.clone();
+            let mut got: Vec<(usize, usize)> =
+                ex.from_tiles.iter().map(|tr| (tr.src, tr.points)).collect();
             got.sort_unstable();
             assert_eq!(got, want, "tile {t} sources");
             assert_eq!(ex.resident + ex.exchanged(), tile.in_points(), "tile {t} total");
+            for tr in &ex.from_tiles {
+                let vol: usize = (0..3).map(|a| tr.hi[a] - tr.lo[a]).product();
+                assert_eq!(vol, tr.points, "tile {t} transfer box volume");
+                assert!(tr.mesh_hops >= 1, "tile {t} transfer hops");
+            }
         }
     }
 
@@ -267,5 +392,88 @@ mod tests {
             s.tiles[0].from_ring,
             crate::stencil::temporal::ring_point_count(&spec, 2)
         );
+    }
+
+    #[test]
+    fn single_tile_unfused_is_fully_resident() {
+        // Degenerate case: one tile, depth 1 — no neighbors, no ring.
+        // The partition must still be exact with zero exchanged points.
+        let spec = StencilSpec::heat2d(26, 18, 0.2);
+        let p = plan_of(&spec, DecompKind::Slab, 1, 1);
+        assert_eq!(p.tiles.len(), 1);
+        let s = ExchangeSchedule::build(&spec, &p, &p);
+        let ex = &s.tiles[0];
+        assert!(ex.from_tiles.is_empty());
+        assert_eq!(ex.from_ring, 0);
+        assert_eq!(ex.exchanged(), 0);
+        assert_eq!(ex.resident, p.tiles[0].in_points());
+        check_partition(&spec, &p, &p);
+    }
+
+    #[test]
+    fn zero_radius_axes_keep_the_partition_exact() {
+        // 1-D spec: ry = rz = 0. Axes with zero radius contribute no
+        // halo, transfers run along x only, and
+        // `resident + exchanged == in_points` must hold per tile.
+        let spec = StencilSpec::dim1(40, symmetric_taps(2)).unwrap();
+        for steps in [1usize, 2] {
+            let p = plan_of(&spec, DecompKind::Slab, 3, steps);
+            assert!(p.tiles.len() >= 2);
+            check_partition(&spec, &p, &p);
+            let s = ExchangeSchedule::build(&spec, &p, &p);
+            for ex in &s.tiles {
+                for tr in &ex.from_tiles {
+                    // x-neighbor transfers only: full extent on y/z.
+                    assert_eq!((tr.lo[1], tr.hi[1]), (0, 1));
+                    assert_eq!((tr.lo[2], tr.hi[2]), (0, 1));
+                }
+            }
+            assert!(s.tiles.iter().any(|ex| !ex.from_tiles.is_empty()));
+        }
+    }
+
+    #[test]
+    fn mesh_coords_rank_the_tile_grid() {
+        let spec = StencilSpec::heat2d(26, 18, 0.2);
+        let p = plan_of(&spec, DecompKind::Block, 4, 1);
+        let coords = mesh_coords(&p);
+        assert_eq!(coords.len(), p.tiles.len());
+        // Coordinates are unique and bounded by the per-axis cut counts.
+        let mut seen = coords.clone();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), coords.len(), "duplicate mesh coordinate");
+        for c in &coords {
+            for a in 0..3 {
+                assert!(c[a] < p.cuts[a].max(1), "coord {c:?} axis {a}");
+            }
+        }
+    }
+
+    #[test]
+    fn transfer_hops_follow_mesh_distance() {
+        // A 2x2 block plan: face neighbors are 1 mesh hop, the diagonal
+        // corner is 2 — strictly farther, which is what makes the
+        // priced latency model able to distinguish near from far.
+        let spec = StencilSpec::heat2d(26, 18, 0.2);
+        let p = plan_of(&spec, DecompKind::Block, 4, 1);
+        assert_eq!((p.cuts[0], p.cuts[1]), (2, 2), "expected a 2x2 block plan");
+        let coords = mesh_coords(&p);
+        let s = ExchangeSchedule::build(&spec, &p, &p);
+        let mut saw = [false, false]; // [face, diagonal]
+        for (t, ex) in s.tiles.iter().enumerate() {
+            for tr in &ex.from_tiles {
+                let want = (0..3)
+                    .map(|a| coords[t][a].abs_diff(coords[tr.src][a]))
+                    .sum::<usize>();
+                assert_eq!(tr.mesh_hops, want, "tile {t} <- {}", tr.src);
+                match want {
+                    1 => saw[0] = true,
+                    2 => saw[1] = true,
+                    _ => panic!("unexpected distance {want} on a 2x2 mesh"),
+                }
+            }
+        }
+        assert!(saw[0] && saw[1], "plan exposes both near and far transfers");
     }
 }

@@ -5,10 +5,17 @@
 //! previous chunk's faces fabric-resident, so their loads bypass the
 //! cache/DRAM model, but the *values* flowing through the MAC chains
 //! are untouched. The contract is therefore strict bitwise equality —
-//! `==`, never a tolerance — between exchange runs, reload runs, and
-//! the iterated golden oracle on the FULL grid, across shapes
-//! (star/box), ranks (1/2/3-D), decompositions (slab/pencil/block),
-//! both simulator cores, and fused depths 1–3.
+//! `==`, never a tolerance — between priced exchange runs
+//! ([`HaloMode::Exchange`]), flat exchange runs
+//! ([`HaloMode::ExchangeFree`]), reload runs, and the iterated golden
+//! oracle on the FULL grid, across shapes (star/box), ranks (1/2/3-D),
+//! decompositions (slab/pencil/block), both simulator cores, both
+//! execution modes, and fused depths 1–3. On top of the value contract
+//! this suite pins the hop-latency pricing (far neighbors strictly
+//! costlier than near ones), the ring/interior overlap (makespan =
+//! `max(fused, ring critical)`, trace order independent of overlap),
+//! and the residency spill fallback (reported spill == measured DRAM
+//! traffic).
 //!
 //! Every test here plans and builds graphs, and one test pins
 //! process-wide `stencil::metrics` deltas, so all tests serialize on a
@@ -16,10 +23,11 @@
 
 use std::sync::{Arc, Mutex, MutexGuard};
 
-use stencil_cgra::cgra::SimCore;
+use stencil_cgra::cgra::{mesh_hop_cycles, SimCore};
 use stencil_cgra::compile::{compile, CompileOptions, FuseMode, HaloMode};
-use stencil_cgra::session::{RunOutcome, Session};
+use stencil_cgra::session::{ExecMode, RunOutcome, Session};
 use stencil_cgra::stencil::decomp::DecompKind;
+use stencil_cgra::stencil::exchange::ExchangeSchedule;
 use stencil_cgra::stencil::spec::{symmetric_taps, y_taps, z_taps};
 use stencil_cgra::stencil::{metrics, StencilSpec};
 use stencil_cgra::util::rng::XorShift;
@@ -276,4 +284,200 @@ fn exchange_does_zero_extra_planning_or_graph_work() {
     assert_eq!(p3, p2, "exchange run must not plan");
     assert_eq!(g3, g2, "exchange run must not build graphs");
     assert_eq!(a.output, b.output);
+}
+
+#[test]
+fn priced_free_and_reload_are_bitwise_identical_across_cores_and_exec_modes() {
+    let _g = lock();
+    // The full pricing matrix: hop-priced exchange, flat exchange and
+    // reload must produce the same bits as the iterated oracle on both
+    // sim cores and both execution backends. Pricing shows up only in
+    // the accounting: priced warm chunks carry a positive hop-cycle
+    // surcharge; the free flavour and reload never do.
+    let spec = StencilSpec::heat2d(24, 8, 0.2);
+    let mut rng = XorShift::new(0x3B17_EE08);
+    let x = rng.normal_vec(spec.grid_points());
+    let want = stencil_ref_steps(&spec, &x, 4);
+    let base = CompileOptions::default()
+        .with_workers(2)
+        .with_tiles(4)
+        .with_decomp(DecompKind::Block)
+        .with_fuse(FuseMode::Spatial);
+    for core in [SimCore::Event, SimCore::Dense] {
+        for exec in [ExecMode::Pooled, ExecMode::Sequential] {
+            let mut outs = Vec::new();
+            for halo in [HaloMode::Exchange, HaloMode::ExchangeFree, HaloMode::Reload] {
+                let opts = base.clone().with_halo(halo);
+                let compiled = Arc::new(compile(&spec, 4, &opts).unwrap());
+                let machine = compiled.options.machine.clone();
+                let out = Session::new(compiled, machine)
+                    .with_sim_core(core)
+                    .with_exec(exec)
+                    .run(&x)
+                    .unwrap();
+                assert_eq!(
+                    out.output, want,
+                    "core={core} exec={exec:?} halo={halo}: oracle mismatch"
+                );
+                outs.push(out);
+            }
+            let (priced, free, reload) = (&outs[0], &outs[1], &outs[2]);
+            assert!(priced.reports.len() >= 2, "need warm chunks to price");
+            assert!(
+                priced.reports[1..]
+                    .iter()
+                    .all(|r| r.exchanged_hop_cycles() > 0),
+                "core={core} exec={exec:?}: priced warm chunks must pay hops"
+            );
+            for (label, out) in [("free", free), ("reload", reload)] {
+                assert!(
+                    out.reports.iter().all(|r| r.exchanged_hop_cycles() == 0),
+                    "core={core} exec={exec:?}: {label} run priced something"
+                );
+            }
+            // Pricing never changes what is shipped, only when it lands.
+            for (p, f) in priced.reports.iter().zip(&free.reports) {
+                assert_eq!(p.exchanged_points, f.exchanged_points);
+                assert_eq!(p.total_loads(), f.total_loads());
+            }
+        }
+    }
+}
+
+#[test]
+fn far_neighbors_price_strictly_higher_than_near_on_one_plan() {
+    let _g = lock();
+    // A 2x2 block plan has both face neighbors (1 mesh hop) and the
+    // diagonal (2 hops) inside one schedule; the channel model must
+    // price the far transfer strictly above the near one.
+    let spec = StencilSpec::heat2d(26, 18, 0.2);
+    let base = CompileOptions::default()
+        .with_workers(2)
+        .with_tiles(4)
+        .with_decomp(DecompKind::Block)
+        .with_fuse(FuseMode::Host);
+    let compiled = compile(&spec, 2, &base).unwrap();
+    let machine = &compiled.options.machine;
+    let plan = compiled.plan();
+    assert_eq!((plan.cuts[0], plan.cuts[1]), (2, 2), "need a 2x2 mesh");
+    let sched = ExchangeSchedule::build(&spec, plan, plan);
+    let hops: Vec<usize> = sched
+        .tiles
+        .iter()
+        .flat_map(|te| te.from_tiles.iter().map(|t| t.mesh_hops))
+        .collect();
+    assert!(hops.contains(&1), "no face-neighbor transfer: {hops:?}");
+    assert!(hops.contains(&2), "no diagonal transfer: {hops:?}");
+    let near = mesh_hop_cycles(1, machine);
+    let far = mesh_hop_cycles(2, machine);
+    assert!(near > 0, "even one mesh hop crosses the PE grid");
+    assert!(
+        far > near,
+        "diagonal ({far} cyc) must out-price the face neighbor ({near} cyc)"
+    );
+}
+
+#[test]
+fn ring_overlap_reports_max_not_sum_and_never_reorders_the_trace() {
+    let _g = lock();
+    // Fused chunks with a boundary ring: the bands overlap the fused
+    // batch in pooled mode, so the chunk makespan is
+    // max(fused makespan, ring critical path) — recomputable from the
+    // report — never the old fused + Σ(band maxima) serialization. The
+    // overlap must be timing-only: the recorded trace (phase 0 = fused,
+    // phases 1.. = bands, in task order) is bitwise identical between
+    // the pooled/overlapped and sequential backends.
+    // ny = 6 caps the trapezoid at depth 2 (needs ny > 2T), so steps = 4
+    // compiles to two depth-2 chunks — every chunk has a ring.
+    let spec = StencilSpec::heat2d(30, 6, 0.2);
+    let mut rng = XorShift::new(0x0F17_EE09);
+    let x = rng.normal_vec(spec.grid_points());
+    let base = CompileOptions::default()
+        .with_workers(2)
+        .with_tiles(2)
+        .with_decomp(DecompKind::Slab)
+        .with_fuse(FuseMode::Spatial);
+    let compiled = Arc::new(compile(&spec, 4, &base).unwrap());
+    assert_eq!(compiled.fused_steps(), 2, "geometry must cap the depth at 2");
+    let machine = compiled.options.machine.clone();
+    let session = Session::new(compiled, machine);
+    let (pooled, pooled_trace) = session.run_recorded(&x).unwrap();
+    let (seq, seq_trace) = session
+        .clone()
+        .with_exec(ExecMode::Sequential)
+        .run_recorded(&x)
+        .unwrap();
+    assert_eq!(pooled.output, seq.output);
+    assert_eq!(
+        pooled_trace.records, seq_trace.records,
+        "overlap must not reorder or change the trace"
+    );
+    for (i, r) in pooled.reports.iter().enumerate() {
+        assert!(r.ring_points > 0, "chunk {i} has no ring to overlap");
+        assert!(r.ring_critical_cycles > 0, "chunk {i} ring ran for free");
+        let fused_max = r.per_tile.iter().map(|t| t.cycles).max().unwrap();
+        assert_eq!(
+            r.makespan_cycles,
+            fused_max.max(r.ring_critical_cycles),
+            "chunk {i}: makespan must be the overlapped max, not a sum"
+        );
+        assert!(
+            r.makespan_cycles < fused_max + r.ring_critical_cycles,
+            "chunk {i}: ring still serializes behind the fused batch"
+        );
+    }
+}
+
+#[test]
+fn forced_spill_falls_back_to_reload_and_reports_it() {
+    let _g = lock();
+    // A tile whose input box overflows the fabric token budget cannot
+    // stay resident: it must transparently fall back to the cache/DRAM
+    // reload path (bitwise-identical values) while the report carries
+    // the spill explicitly — and the reported spilled points must equal
+    // the DRAM point reads actually measured on the warm chunks
+    // (read-once per input point at depth 1).
+    let spec = StencilSpec::heat2d(24, 8, 0.2);
+    let mut rng = XorShift::new(0x5F11_EE0A);
+    let x = rng.normal_vec(spec.grid_points());
+    let base = CompileOptions::default()
+        .with_workers(2)
+        .with_tiles(2)
+        .with_decomp(DecompKind::Slab)
+        .with_fuse(FuseMode::Host);
+    let clean = Arc::new(compile(&spec, 3, &base).unwrap());
+    let mut spilled = compile(&spec, 3, &base).unwrap();
+    let st = &mut spilled.stages[0];
+    st.residency.resident[0] = false;
+    st.residency.spilled_points = st.plan.tiles[0].in_points();
+    let expect_spill = st.residency.spilled_points as u64;
+    let spilled = Arc::new(spilled);
+
+    let machine = clean.options.machine.clone();
+    let a = Session::new(Arc::clone(&clean), machine.clone()).run(&x).unwrap();
+    let b = Session::new(Arc::clone(&spilled), machine).run(&x).unwrap();
+    assert_eq!(a.output, b.output, "spilling must not change the values");
+    assert_eq!(b.output, stencil_ref_steps(&spec, &x, 3));
+
+    assert!(!a.reports[0].exchange_spilled, "cold chunks never spill");
+    assert_eq!(a.reports[0].spilled_points, 0);
+    for (i, (c, s)) in a.reports.iter().zip(&b.reports).enumerate().skip(1) {
+        assert!(!c.exchange_spilled, "clean warm chunk {i} spilled");
+        assert_eq!(c.dram_point_reads(), 0);
+        assert!(s.exchange_spilled, "spilled warm chunk {i} not flagged");
+        assert_eq!(s.spilled_points, expect_spill, "warm chunk {i}");
+        assert_eq!(
+            s.dram_point_reads(),
+            expect_spill,
+            "warm chunk {i}: reported spill != measured DRAM reads"
+        );
+        assert!(
+            s.exchanged_points < c.exchanged_points,
+            "warm chunk {i}: the spilled tile must stop exchanging"
+        );
+        assert!(
+            s.exchanged_points > 0,
+            "warm chunk {i}: the resident tile must keep exchanging"
+        );
+    }
 }
