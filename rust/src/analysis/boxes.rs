@@ -1,0 +1,126 @@
+//! Shared `[lo, hi)` box arithmetic — one implementation for build time
+//! and check time.
+//!
+//! The exchange builder ([`crate::stencil::exchange`]) and the static
+//! verifier's coverage rule ([`super::exchange`]) reason about the same
+//! geometry: axis-aligned half-open boxes over the global grid. Both
+//! call into this module, so the invariant the builder asserts in debug
+//! builds (`resident + exchanged == in_points`, via
+//! [`valid_coverage_violation`]) and the diagnostic `scgra check` emits
+//! on a tampered artifact are one computation, not two that can drift.
+//!
+//! Everything here is total: empty and inverted boxes have volume 0,
+//! intersections saturate, nothing panics on hostile inputs — the
+//! verifier runs on untrusted artifacts.
+
+/// Volume of a `[lo, hi)` box (0 when empty or inverted).
+pub fn volume(lo: [usize; 3], hi: [usize; 3]) -> usize {
+    (0..3).map(|a| hi[a].saturating_sub(lo[a])).product()
+}
+
+/// Volume of the intersection of two `[lo, hi)` boxes.
+pub fn isect(alo: [usize; 3], ahi: [usize; 3], blo: [usize; 3], bhi: [usize; 3]) -> usize {
+    (0..3)
+        .map(|a| ahi[a].min(bhi[a]).saturating_sub(alo[a].max(blo[a])))
+        .product()
+}
+
+/// The intersection box itself, `None` when empty.
+pub fn isect_box(
+    alo: [usize; 3],
+    ahi: [usize; 3],
+    blo: [usize; 3],
+    bhi: [usize; 3],
+) -> Option<([usize; 3], [usize; 3])> {
+    let mut lo = [0usize; 3];
+    let mut hi = [0usize; 3];
+    for a in 0..3 {
+        lo[a] = alo[a].max(blo[a]);
+        hi[a] = ahi[a].min(bhi[a]);
+        if lo[a] >= hi[a] {
+            return None;
+        }
+    }
+    Some((lo, hi))
+}
+
+/// True when `[ilo, ihi)` lies entirely inside `[olo, ohi)`. An empty
+/// inner box is contained in anything.
+pub fn contains_box(olo: [usize; 3], ohi: [usize; 3], ilo: [usize; 3], ihi: [usize; 3]) -> bool {
+    volume(ilo, ihi) == 0 || (0..3).all(|a| olo[a] <= ilo[a] && ihi[a] <= ohi[a])
+}
+
+/// The coverage invariant the exchange schedule rests on: within a
+/// receiving tile's input box `[in_lo, in_hi)`, the points owned by the
+/// `owned` boxes must exactly equal the points inside the valid box
+/// `[vlo, vhi)`. The caller guarantees the `owned` boxes are pairwise
+/// disjoint (previous output boxes tile the valid region; the verifier
+/// checks disjointness separately before relying on this), so summed
+/// intersection volumes count each covered point once. Returns a prose
+/// description of the discrepancy, `None` when the invariant holds.
+pub fn valid_coverage_violation(
+    in_lo: [usize; 3],
+    in_hi: [usize; 3],
+    owned: &[([usize; 3], [usize; 3])],
+    vlo: [usize; 3],
+    vhi: [usize; 3],
+) -> Option<String> {
+    let covered: usize = owned.iter().map(|&(lo, hi)| isect(in_lo, in_hi, lo, hi)).sum();
+    let valid = isect(in_lo, in_hi, vlo, vhi);
+    (covered != valid).then(|| {
+        format!(
+            "{} boxes cover {covered} point(s) of the input box but the \
+             valid box holds {valid}",
+            owned.len()
+        )
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn volumes_and_intersections_are_total() {
+        assert_eq!(volume([0, 0, 0], [4, 3, 2]), 24);
+        assert_eq!(volume([5, 0, 0], [4, 3, 2]), 0, "inverted box is empty");
+        assert_eq!(isect([0, 0, 0], [4, 1, 1], [2, 0, 0], [6, 1, 1]), 2);
+        assert_eq!(isect([0, 0, 0], [2, 1, 1], [2, 0, 0], [4, 1, 1]), 0);
+        assert_eq!(
+            isect_box([0, 0, 0], [4, 4, 1], [2, 2, 0], [6, 6, 1]),
+            Some(([2, 2, 0], [4, 4, 1]))
+        );
+        assert_eq!(isect_box([0, 0, 0], [2, 2, 1], [2, 2, 0], [4, 4, 1]), None);
+    }
+
+    #[test]
+    fn containment_handles_empty_boxes() {
+        assert!(contains_box([0, 0, 0], [8, 8, 1], [2, 2, 0], [4, 4, 1]));
+        assert!(!contains_box([0, 0, 0], [8, 8, 1], [2, 2, 0], [9, 4, 1]));
+        assert!(contains_box([0, 0, 0], [1, 1, 1], [5, 5, 5], [5, 5, 5]));
+    }
+
+    #[test]
+    fn coverage_violation_reports_the_discrepancy() {
+        // Input box [0,8), valid box [1,7), covered by [1,4) + [4,7).
+        let hold = valid_coverage_violation(
+            [0, 0, 0],
+            [8, 1, 1],
+            &[([1, 0, 0], [4, 1, 1]), ([4, 0, 0], [7, 1, 1])],
+            [1, 0, 0],
+            [7, 1, 1],
+        );
+        assert!(hold.is_none());
+        // Drop the second box: 3 covered vs 6 valid.
+        let broke = valid_coverage_violation(
+            [0, 0, 0],
+            [8, 1, 1],
+            &[([1, 0, 0], [4, 1, 1])],
+            [1, 0, 0],
+            [7, 1, 1],
+        )
+        .unwrap();
+        assert!(broke.contains("cover 3"), "{broke}");
+        assert!(broke.contains("holds 6"), "{broke}");
+    }
+}

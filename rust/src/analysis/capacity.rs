@@ -1,0 +1,97 @@
+//! Capacity/residency feasibility — re-derive every tile's token demand
+//! and replay the residency plan against `fabric_tokens` (rule ids and
+//! soundness argument in the [`super`] module docs).
+
+use crate::compile::CompiledStencil;
+use crate::stencil::temporal;
+
+use super::{Diagnostic, Location, Severity};
+
+/// Run the `capacity/*` rules over every stage's residency plan.
+pub fn check(c: &CompiledStencil, diags: &mut Vec<Diagnostic>) {
+    let budget = c.options.fabric_tokens;
+    for (s, st) in c.stages.iter().enumerate() {
+        let plan = &st.plan;
+        if st.residency.resident.len() != plan.tiles.len() {
+            diags.push(Diagnostic {
+                rule: "capacity/plan-shape",
+                severity: Severity::Error,
+                location: Location::stage(s).with_object("residency".to_string()),
+                message: format!(
+                    "residency plan covers {} tile(s) but the stage has {}",
+                    st.residency.resident.len(),
+                    plan.tiles.len()
+                ),
+                evidence: format!(
+                    "residency={} tiles={}",
+                    st.residency.resident.len(),
+                    plan.tiles.len()
+                ),
+            });
+            continue;
+        }
+
+        let mut spilled = 0usize;
+        for (t, (tile, &resident)) in
+            plan.tiles.iter().zip(&st.residency.resident).enumerate()
+        {
+            // The same arithmetic ResidencyPlan::build runs: §IV
+            // pipeline tokens for the tile's sub-spec at this depth,
+            // plus the input box the warm chunk would keep on fabric.
+            let pipeline =
+                temporal::required_tokens(&tile.sub_spec(&c.spec), plan.workers, plan.fused_steps);
+            let need = pipeline.saturating_add(tile.in_points());
+            let fits = need <= budget;
+            if !resident {
+                spilled = spilled.saturating_add(tile.in_points());
+            }
+            if resident && !fits {
+                diags.push(Diagnostic {
+                    rule: "capacity/resident-overflow",
+                    severity: Severity::Error,
+                    location: Location::tile(s, t),
+                    message: format!(
+                        "tile marked resident needs {need} token(s) \
+                         (pipeline {pipeline} + input {}) against a budget of {budget}",
+                        tile.in_points()
+                    ),
+                    evidence: format!(
+                        "pipeline={pipeline} input={} budget={budget}",
+                        tile.in_points()
+                    ),
+                });
+            } else if !resident && fits {
+                diags.push(Diagnostic {
+                    rule: "capacity/needless-spill",
+                    severity: Severity::Warn,
+                    location: Location::tile(s, t),
+                    message: format!(
+                        "tile spills {} point(s) to DRAM every warm chunk although \
+                         {need} token(s) fit the budget of {budget}",
+                        tile.in_points()
+                    ),
+                    evidence: format!(
+                        "pipeline={pipeline} input={} budget={budget}",
+                        tile.in_points()
+                    ),
+                });
+            }
+        }
+
+        if st.residency.spilled_points != spilled {
+            diags.push(Diagnostic {
+                rule: "capacity/spill-accounting",
+                severity: Severity::Error,
+                location: Location::stage(s).with_object("residency".to_string()),
+                message: format!(
+                    "recorded spilled_points {} but the spilling tiles' inputs sum to {spilled}",
+                    st.residency.spilled_points
+                ),
+                evidence: format!(
+                    "recorded={} derived={spilled}",
+                    st.residency.spilled_points
+                ),
+            });
+        }
+    }
+}

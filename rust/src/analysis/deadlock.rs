@@ -1,0 +1,323 @@
+//! Structural deadlock-freedom of every placed channel graph — the
+//! static analogue of the runtime quiet-period detector (rule ids and
+//! soundness argument in the [`super`] module docs).
+
+use std::collections::VecDeque;
+
+use crate::cgra::PlacedGraph;
+use crate::compile::CompiledStencil;
+
+use super::{Diagnostic, Location, Severity};
+
+/// Run the `deadlock/*` rules over every placed graph (fused and ring)
+/// of every stage, in sorted-key order so reports are deterministic.
+pub fn check(c: &CompiledStencil, diags: &mut Vec<Diagnostic>) {
+    for (s, st) in c.stages.iter().enumerate() {
+        for (label, graphs) in [("graph", &st.graphs), ("ring graph", &st.ring_graphs)] {
+            let mut keys: Vec<&[usize; 3]> = graphs.keys().collect();
+            keys.sort_unstable();
+            for k in keys {
+                let name = format!("{label} {}x{}x{}", k[0], k[1], k[2]);
+                check_graph(s, &name, &graphs[k], diags);
+            }
+        }
+    }
+}
+
+fn check_graph(stage: usize, name: &str, pg: &PlacedGraph, diags: &mut Vec<Diagnostic>) {
+    let chans = pg.channels();
+
+    // Per-channel floors: a zero-capacity channel is a certain deadlock
+    // (the first push never gets a credit); capacity < latency + 2 loses
+    // the streaming-rate sufficiency argument placement establishes.
+    for (i, f) in chans.iter().enumerate() {
+        let (cap, lat) = (f.capacity(), f.latency());
+        let loc = Location::object(stage, format!("{name} chan {i}"));
+        if cap == 0 {
+            diags.push(Diagnostic {
+                rule: "deadlock/zero-capacity",
+                severity: Severity::Error,
+                location: loc,
+                message: format!(
+                    "channel {} -> {} has zero capacity: its producer can never push",
+                    node_name(pg, f.src_node()),
+                    node_name(pg, f.dst_node())
+                ),
+                evidence: format!("capacity=0 latency={lat}"),
+            });
+        } else if (cap as u64) < lat.saturating_add(2) {
+            diags.push(Diagnostic {
+                rule: "deadlock/streaming-floor",
+                severity: Severity::Warn,
+                location: loc,
+                message: format!(
+                    "channel {} -> {} cannot stream at full rate: capacity {cap} < latency {lat} + 2",
+                    node_name(pg, f.src_node()),
+                    node_name(pg, f.dst_node())
+                ),
+                evidence: format!("capacity={cap} latency={lat}"),
+            });
+        }
+    }
+
+    // Directed forward cycle: no topological firing order exists at all.
+    if let Some(cycle) = directed_cycle(pg) {
+        let names: Vec<&str> = cycle.iter().map(|&id| pg.node_name(id)).collect();
+        diags.push(Diagnostic {
+            rule: "deadlock/forward-cycle",
+            severity: Severity::Error,
+            location: Location::object(stage, name.to_string()),
+            message: format!(
+                "directed dependency cycle through {} node(s): no firing order exists",
+                cycle.len()
+            ),
+            evidence: format!("cycle: {}", names.join(" -> ")),
+        });
+        // The undirected analysis below would double-report the same
+        // structure; the forward cycle is already fatal.
+        return;
+    }
+
+    // Fundamental-cycle buffering: every undirected cycle needs
+    // Σ capacity >= Σ latency + len (one in-flight token per channel on
+    // top of every full latency window). Checking the spanning-tree
+    // basis covers the violation the runtime detector would find.
+    for cycle in fundamental_cycles(pg) {
+        let sum_cap: u128 = cycle.iter().map(|&e| chans[e].capacity() as u128).sum();
+        let sum_lat: u128 = cycle.iter().map(|&e| chans[e].latency() as u128).sum();
+        let need = sum_lat + cycle.len() as u128;
+        if sum_cap < need {
+            let members: Vec<String> = cycle
+                .iter()
+                .map(|&e| {
+                    format!(
+                        "chan {e} ({} -> {})",
+                        node_name(pg, chans[e].src_node()),
+                        node_name(pg, chans[e].dst_node())
+                    )
+                })
+                .collect();
+            diags.push(Diagnostic {
+                rule: "deadlock/cycle-buffering",
+                severity: Severity::Error,
+                location: Location::object(stage, name.to_string()),
+                message: format!(
+                    "cycle of {} channel(s) underbuffered: Σcapacity {sum_cap} < \
+                     Σlatency {sum_lat} + {} in-flight token(s)",
+                    cycle.len(),
+                    cycle.len()
+                ),
+                evidence: format!("cycle: [{}]", members.join(", ")),
+            });
+        }
+    }
+}
+
+fn node_name(pg: &PlacedGraph, id: u32) -> &str {
+    if (id as usize) < pg.node_count() {
+        pg.node_name(id as usize)
+    } else {
+        "<unbound>"
+    }
+}
+
+/// Find a directed cycle in the channel graph (Kahn peel + walk), or
+/// `None` when the graph is a DAG — which `dfg::validate` guarantees
+/// for anything placement accepted, so a hit here means tampering.
+fn directed_cycle(pg: &PlacedGraph) -> Option<Vec<usize>> {
+    let n = pg.node_count();
+    let mut indeg = vec![0usize; n];
+    let mut out: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut inn: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for f in pg.channels() {
+        let (s, d) = (f.src_node() as usize, f.dst_node() as usize);
+        if s < n && d < n {
+            out[s].push(d);
+            inn[d].push(s);
+            indeg[d] += 1;
+        }
+    }
+    let mut q: VecDeque<usize> = (0..n).filter(|&v| indeg[v] == 0).collect();
+    let mut removed = 0usize;
+    while let Some(v) = q.pop_front() {
+        removed += 1;
+        for &d in &out[v] {
+            indeg[d] -= 1;
+            if indeg[d] == 0 {
+                q.push_back(d);
+            }
+        }
+    }
+    if removed == n {
+        return None;
+    }
+    // A residue node (indeg > 0 after the peel) always has an in-edge
+    // from another residue node — but not necessarily an out-edge into
+    // the residue (a sink fed by a cycle survives the peel too). So
+    // walk *backward* over predecessors, which must revisit a node
+    // within n steps; the reversed path is then a forward cycle.
+    let start = (0..n).find(|&v| indeg[v] > 0)?;
+    let mut seen = vec![usize::MAX; n];
+    let mut path = Vec::new();
+    let mut v = start;
+    loop {
+        if seen[v] != usize::MAX {
+            let mut cyc = path.split_off(seen[v]);
+            cyc.reverse();
+            return Some(cyc);
+        }
+        seen[v] = path.len();
+        path.push(v);
+        v = *inn[v].iter().find(|&&s| indeg[s] > 0)?;
+    }
+}
+
+/// The fundamental cycles of the *undirected* channel graph: a DFS
+/// spanning forest plus one cycle per non-tree channel (closed through
+/// the tree via the endpoints' lowest common ancestor). Each cycle is a
+/// list of channel indices; self-loop channels are 1-cycles. This basis
+/// spans the cycle space, so a buffering bound that holds on every
+/// per-channel floor plus every basis cycle holds on all cycles.
+pub fn fundamental_cycles(pg: &PlacedGraph) -> Vec<Vec<usize>> {
+    let n = pg.node_count();
+    let chans = pg.channels();
+    let mut cycles = Vec::new();
+    let mut adj: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n];
+    for (e, f) in chans.iter().enumerate() {
+        let (s, d) = (f.src_node() as usize, f.dst_node() as usize);
+        if s >= n || d >= n {
+            continue;
+        }
+        if s == d {
+            cycles.push(vec![e]);
+            continue;
+        }
+        adj[s].push((d, e));
+        adj[d].push((s, e));
+    }
+
+    let mut parent_node = vec![usize::MAX; n];
+    let mut parent_edge = vec![usize::MAX; n];
+    let mut depth = vec![0usize; n];
+    let mut visited = vec![false; n];
+    let mut tree = vec![false; chans.len()];
+    let mut stack = Vec::new();
+    for root in 0..n {
+        if visited[root] {
+            continue;
+        }
+        visited[root] = true;
+        stack.push(root);
+        while let Some(u) = stack.pop() {
+            for &(v, e) in &adj[u] {
+                if !visited[v] {
+                    visited[v] = true;
+                    parent_node[v] = u;
+                    parent_edge[v] = e;
+                    depth[v] = depth[u] + 1;
+                    tree[e] = true;
+                    stack.push(v);
+                }
+            }
+        }
+    }
+
+    for (e, f) in chans.iter().enumerate() {
+        if tree[e] {
+            continue;
+        }
+        let (mut u, mut v) = (f.src_node() as usize, f.dst_node() as usize);
+        if u >= n || v >= n || u == v {
+            continue;
+        }
+        // Close the cycle through the LCA; the climb is bounded by the
+        // tree depth, with a hard cap as a tamper backstop.
+        let mut cyc = vec![e];
+        let mut fuel = 2 * n + 2;
+        while depth[u] > depth[v] && fuel > 0 {
+            cyc.push(parent_edge[u]);
+            u = parent_node[u];
+            fuel -= 1;
+        }
+        while depth[v] > depth[u] && fuel > 0 {
+            cyc.push(parent_edge[v]);
+            v = parent_node[v];
+            fuel -= 1;
+        }
+        while u != v && fuel > 0 {
+            cyc.push(parent_edge[u]);
+            u = parent_node[u];
+            cyc.push(parent_edge[v]);
+            v = parent_node[v];
+            fuel -= 1;
+        }
+        if u == v {
+            cycles.push(cyc);
+        }
+    }
+    cycles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgra::Machine;
+    use crate::stencil::spec::symmetric_taps;
+    use crate::stencil::{build_graph, StencilSpec};
+
+    fn placed_1d() -> PlacedGraph {
+        let spec = StencilSpec::dim1(24, symmetric_taps(2)).unwrap();
+        let g = build_graph(&spec, 2).unwrap();
+        PlacedGraph::new(g, &Machine::paper()).unwrap()
+    }
+
+    #[test]
+    fn placed_graphs_have_fundamental_cycles_and_pass_the_buffering_bound() {
+        let pg = placed_1d();
+        let cycles = fundamental_cycles(&pg);
+        // Reader broadcast + MAC-chain reconvergence guarantee the
+        // undirected graph is not a forest — the rule is non-vacuous.
+        assert!(!cycles.is_empty(), "1-D mapped graph should have reconvergent paths");
+        let chans = pg.channels();
+        for cyc in &cycles {
+            assert!(!cyc.is_empty());
+            let cap: u128 = cyc.iter().map(|&e| chans[e].capacity() as u128).sum();
+            let lat: u128 = cyc.iter().map(|&e| chans[e].latency() as u128).sum();
+            assert!(cap >= lat + cyc.len() as u128, "placed cycle underbuffered");
+        }
+        // Placement's acyclicity carries over.
+        assert!(directed_cycle(&pg).is_none());
+    }
+
+    #[test]
+    fn underbuffering_every_channel_on_a_cycle_trips_the_rule() {
+        let mut pg = placed_1d();
+        let cyc = fundamental_cycles(&pg)[0].clone();
+        for &e in &cyc {
+            let lat = pg.channels()[e].latency() as usize;
+            pg.override_channel_capacity(e, lat);
+        }
+        let mut diags = Vec::new();
+        check_graph(0, "graph 24x1x1", &pg, &mut diags);
+        assert!(
+            diags.iter().any(|d| d.rule == "deadlock/cycle-buffering"
+                && d.severity == Severity::Error
+                && d.location.object.as_deref() == Some("graph 24x1x1")),
+            "{diags:?}"
+        );
+        // The shrunken channels also lose the streaming floor.
+        assert!(diags.iter().any(|d| d.rule == "deadlock/streaming-floor"));
+    }
+
+    #[test]
+    fn zero_capacity_is_an_error_with_the_channel_named() {
+        let mut pg = placed_1d();
+        pg.override_channel_capacity(0, 0);
+        let mut diags = Vec::new();
+        check_graph(1, "graph 24x1x1", &pg, &mut diags);
+        let d = diags.iter().find(|d| d.rule == "deadlock/zero-capacity").unwrap();
+        assert_eq!(d.severity, Severity::Error);
+        assert_eq!(d.location.stage, Some(1));
+        assert_eq!(d.location.object.as_deref(), Some("graph 24x1x1 chan 0"));
+    }
+}

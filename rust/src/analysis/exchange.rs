@@ -1,0 +1,270 @@
+//! Exchange-schedule soundness — prove each tile's recorded
+//! resident/own/transfer/ring regions partition its input box (rule ids
+//! and soundness argument in the [`super`] module docs).
+
+use crate::compile::CompiledStencil;
+use crate::stencil::decomp::DecompPlan;
+use crate::stencil::exchange::ExchangeSchedule;
+use crate::stencil::temporal;
+
+use super::boxes;
+use super::{Diagnostic, Location, Severity};
+
+/// Run the `exchange/*` rules over every chunk boundary of every stage:
+/// the intra-stage schedule (previous chunk = this stage's own plan)
+/// and, for stage `i > 0`, the entry schedule from stage `i - 1`.
+pub fn check(c: &CompiledStencil, diags: &mut Vec<Diagnostic>) {
+    for (s, st) in c.stages.iter().enumerate() {
+        check_boundary(c, s, "intra-exchange", &st.intra_exchange, &st.plan, &st.plan, diags);
+        if let Some(entry) = &st.entry_exchange {
+            let Some(prev) = s.checked_sub(1).and_then(|p| c.stages.get(p)) else {
+                diags.push(Diagnostic {
+                    rule: "exchange/tile-count",
+                    severity: Severity::Error,
+                    location: Location::stage(s).with_object("entry-exchange".to_string()),
+                    message: "first stage carries an entry exchange but has no predecessor".into(),
+                    evidence: format!("stages={}", c.stages.len()),
+                });
+                continue;
+            };
+            check_boundary(c, s, "entry-exchange", entry, &st.plan, &prev.plan, diags);
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn check_boundary(
+    c: &CompiledStencil,
+    stage: usize,
+    kind: &str,
+    sched: &ExchangeSchedule,
+    plan: &DecompPlan,
+    prev: &DecompPlan,
+    diags: &mut Vec<Diagnostic>,
+) {
+    if sched.tiles.len() != plan.tiles.len() {
+        diags.push(Diagnostic {
+            rule: "exchange/tile-count",
+            severity: Severity::Error,
+            location: Location::stage(stage).with_object(kind.to_string()),
+            message: format!(
+                "schedule covers {} tile(s) but the plan has {}",
+                sched.tiles.len(),
+                plan.tiles.len()
+            ),
+            evidence: format!("schedule={} plan={}", sched.tiles.len(), plan.tiles.len()),
+        });
+        return;
+    }
+
+    // Zero link bandwidth makes any positive transfer demand
+    // unsatisfiable: no finite drain rate exists. Machine::validate
+    // rejects this up front, so a hit means a tampered artifact.
+    if c.options.machine.link_words_per_cycle == 0 && sched.exchanged_points() > 0 {
+        diags.push(Diagnostic {
+            rule: "exchange/link-capacity",
+            severity: Severity::Error,
+            location: Location::stage(stage).with_object(kind.to_string()),
+            message: format!(
+                "{} exchanged point(s) but link_words_per_cycle = 0: the boundary can never drain",
+                sched.exchanged_points()
+            ),
+            evidence: format!("demand={} rate=0", sched.exchanged_points()),
+        });
+    }
+
+    let spec = &c.spec;
+    let dims = [spec.nx, spec.ny, spec.nz];
+    let radii = [spec.rx, spec.ry, spec.rz];
+    let ilo = radii;
+    let ihi = [
+        dims[0].saturating_sub(radii[0]),
+        dims[1].saturating_sub(radii[1]),
+        dims[2].saturating_sub(radii[2]),
+    ];
+    let (vlo, vhi) = temporal::valid_box(spec, prev.fused_steps);
+
+    for (t, (tile, ex)) in plan.tiles.iter().zip(&sched.tiles).enumerate() {
+        let (lo, hi) = (tile.in_lo, tile.in_hi);
+        let at = |obj: String| Location::tile(stage, t).with_object(obj);
+
+        // Ownership: every transfer's declared producer exists, is a
+        // different tile, and its previous output box contains the
+        // shipped box; the box itself lies in the receiver's input and
+        // its volume matches the priced point count.
+        let mut regions: Vec<(String, [usize; 3], [usize; 3])> = Vec::new();
+        for (j, tr) in ex.from_tiles.iter().enumerate() {
+            let vol = boxes::volume(tr.lo, tr.hi);
+            if vol != tr.points {
+                diags.push(Diagnostic {
+                    rule: "exchange/transfer-volume",
+                    severity: Severity::Error,
+                    location: at(format!("{kind} transfer {j}")),
+                    message: format!(
+                        "transfer box [{:?}, {:?}) holds {vol} point(s) but prices {}",
+                        tr.lo, tr.hi, tr.points
+                    ),
+                    evidence: format!("volume={vol} points={}", tr.points),
+                });
+            }
+            let owner_ok = match prev.tiles.get(tr.src) {
+                Some(p) if tr.src != t => boxes::contains_box(p.out_lo, p.out_hi, tr.lo, tr.hi),
+                _ => false,
+            };
+            if !owner_ok || !boxes::contains_box(lo, hi, tr.lo, tr.hi) {
+                diags.push(Diagnostic {
+                    rule: "exchange/ownership",
+                    severity: Severity::Error,
+                    location: at(format!("{kind} transfer {j}")),
+                    message: format!(
+                        "transfer from tile {} ships box [{:?}, {:?}) it does not own \
+                         (or outside the receiver's input box)",
+                        tr.src, tr.lo, tr.hi
+                    ),
+                    evidence: format!(
+                        "src={} prev_tiles={} receiver_in=[{:?}, {:?})",
+                        tr.src,
+                        prev.tiles.len(),
+                        lo,
+                        hi
+                    ),
+                });
+            }
+            if tr.mesh_hops == 0 {
+                diags.push(Diagnostic {
+                    rule: "exchange/ownership",
+                    severity: Severity::Error,
+                    location: at(format!("{kind} transfer {j}")),
+                    message: format!("transfer from tile {} prices zero mesh hops", tr.src),
+                    evidence: "mesh_hops=0".to_string(),
+                });
+            }
+            regions.push((format!("transfer {j} (from tile {})", tr.src), tr.lo, tr.hi));
+        }
+
+        // Own box: exactly the intersection of the input box with this
+        // tile's previous output box (slot `t` keeps its buffer).
+        let want_own = prev
+            .tiles
+            .get(t)
+            .and_then(|p| boxes::isect_box(lo, hi, p.out_lo, p.out_hi));
+        if ex.own_box != want_own {
+            diags.push(Diagnostic {
+                rule: "exchange/ownership",
+                severity: Severity::Error,
+                location: at(format!("{kind} own box")),
+                message: format!(
+                    "recorded own box {:?} is not the input ∩ previous-output intersection {:?}",
+                    ex.own_box, want_own
+                ),
+                evidence: format!("recorded={:?} derived={:?}", ex.own_box, want_own),
+            });
+        }
+        if let Some((olo, ohi)) = ex.own_box {
+            regions.push(("own box".to_string(), olo, ohi));
+        }
+
+        // Pairwise disjointness of the priced regions — first-match
+        // pricing is only well-defined (and the coverage sum only
+        // counts each point once) when no two regions overlap.
+        for a in 0..regions.len() {
+            for b in a + 1..regions.len() {
+                let (na, alo, ahi) = &regions[a];
+                let (nb, blo, bhi) = &regions[b];
+                let shared = boxes::isect(*alo, *ahi, *blo, *bhi);
+                if shared > 0 {
+                    diags.push(Diagnostic {
+                        rule: "exchange/overlap",
+                        severity: Severity::Error,
+                        location: at(format!("{kind} {na} ∩ {nb}")),
+                        message: format!("{na} and {nb} overlap on {shared} point(s)"),
+                        evidence: format!(
+                            "[{alo:?}, {ahi:?}) ∩ [{blo:?}, {bhi:?}) = {shared}"
+                        ),
+                    });
+                }
+            }
+        }
+
+        // Coverage: within the input box, the owned regions (transfers
+        // + own box) must cover exactly the previous chunk's valid box —
+        // the builder's debug assertion, promoted to a diagnostic
+        // through the same `boxes` implementation.
+        let owned: Vec<([usize; 3], [usize; 3])> =
+            regions.iter().map(|&(_, rlo, rhi)| (rlo, rhi)).collect();
+        if let Some(why) = boxes::valid_coverage_violation(lo, hi, &owned, vlo, vhi) {
+            diags.push(Diagnostic {
+                rule: "exchange/coverage",
+                severity: Severity::Error,
+                location: at(kind.to_string()),
+                message: format!("input box not covered: {why}"),
+                evidence: format!("in=[{lo:?}, {hi:?}) valid=[{vlo:?}, {vhi:?})"),
+            });
+        }
+
+        // Ring accounting: the ring is the single-step interior minus
+        // the previous valid box, clipped to this input box.
+        let interior = boxes::isect(lo, hi, ilo, ihi);
+        let want_ring = interior.saturating_sub(boxes::isect(lo, hi, vlo, vhi));
+        if ex.from_ring != want_ring {
+            diags.push(Diagnostic {
+                rule: "exchange/ring-accounting",
+                severity: Severity::Error,
+                location: at(kind.to_string()),
+                message: format!(
+                    "recorded {} ring point(s); box arithmetic derives {want_ring}",
+                    ex.from_ring
+                ),
+                evidence: format!(
+                    "interior∩in={interior} valid∩in={} recorded={}",
+                    boxes::isect(lo, hi, vlo, vhi),
+                    ex.from_ring
+                ),
+            });
+        }
+
+        // Interior box: the catch-all pricing region must be exactly
+        // input ∩ single-step interior.
+        let want_interior = boxes::isect_box(lo, hi, ilo, ihi);
+        if ex.interior_box != want_interior {
+            diags.push(Diagnostic {
+                rule: "exchange/ring-accounting",
+                severity: Severity::Error,
+                location: at(format!("{kind} interior box")),
+                message: format!(
+                    "recorded interior box {:?} differs from input ∩ interior {:?}",
+                    ex.interior_box, want_interior
+                ),
+                evidence: format!("recorded={:?} derived={:?}", ex.interior_box, want_interior),
+            });
+        }
+
+        // Resident accounting: frame (outside the interior) plus the own
+        // box — and the partition total `resident + exchanged ==
+        // in_points` the runtime accounting tests pin dynamically.
+        let in_points = tile.in_points();
+        let own_points = ex.own_box.map(|(olo, ohi)| boxes::volume(olo, ohi)).unwrap_or(0);
+        let want_resident = in_points.saturating_sub(interior) + own_points;
+        if ex.resident != want_resident
+            || ex.resident.saturating_add(ex.exchanged()) != in_points
+        {
+            diags.push(Diagnostic {
+                rule: "exchange/resident-accounting",
+                severity: Severity::Error,
+                location: at(kind.to_string()),
+                message: format!(
+                    "resident {} + exchanged {} must equal in_points {in_points} \
+                     (derived resident {want_resident})",
+                    ex.resident,
+                    ex.exchanged()
+                ),
+                evidence: format!(
+                    "frame={} own={own_points} ring={} transfers={}",
+                    in_points.saturating_sub(interior),
+                    ex.from_ring,
+                    ex.from_tiles.iter().map(|tr| tr.points).sum::<usize>()
+                ),
+            });
+        }
+    }
+}

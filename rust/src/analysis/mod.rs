@@ -1,0 +1,454 @@
+//! `scgra check` — a static verifier for compiled stencil artifacts.
+//!
+//! Every property the runtime can discover the hard way (a deadlock
+//! forensic report, a halo coverage hole, a residency overflow) is
+//! decidable from the [`CompiledStencil`] alone, because the paper's
+//! whole premise (§III–§V) is that the mapping is fixed at configure
+//! time. This module proves those properties **before a single cycle is
+//! simulated**: [`check`] runs four rule families over the artifact and
+//! returns a typed [`Report`] of [`Diagnostic`]s, rendered as text or
+//! JSON and gated by [`CheckLevel`] at compile time, load time
+//! (`CompiledStencil::load_checked`) and on the command line
+//! (`scgra check [--artifact F] [--format text|json] [--deny warn]`).
+//!
+//! # Rule families and their soundness arguments
+//!
+//! **Deadlock-freedom** ([`deadlock`], rules `deadlock/*`). The placed
+//! channel graph stalls only when a dependency cycle runs out of
+//! buffering. The rules are layered so that a clean verdict is a proof,
+//! not a heuristic:
+//! * `deadlock/forward-cycle` (Error): a *directed* cycle in the channel
+//!   graph is a certain deadlock — no topological firing order exists.
+//!   Placement validates acyclicity, so this fires only on tampered
+//!   state; the exact cycle is reported.
+//! * `deadlock/zero-capacity` (Error): a zero-capacity channel can never
+//!   accept its first token; the producer blocks forever.
+//! * `deadlock/streaming-floor` (Warn): a channel with
+//!   `capacity < latency + 2` cannot stream at full rate (one slot per
+//!   in-flight cycle plus one being pushed and one being popped).
+//!   Placement repairs every channel to `capacity >= latency + 2`,
+//!   which is the per-channel *sufficient* condition: it implies
+//!   `Σ capacity >= Σ latency + 2·len` around **every** undirected
+//!   cycle, so a graph with no streaming-floor warning is deadlock-free
+//!   by construction. The warning marks exactly where that sufficiency
+//!   argument is lost.
+//! * `deadlock/cycle-buffering` (Error): the static analogue of the
+//!   runtime quiet-period detector. For every fundamental cycle of the
+//!   undirected channel graph (spanning-tree basis — polynomial, one
+//!   cycle per non-tree channel) the rule demands
+//!   `Σ capacity >= Σ latency + len`: enough slots to hold one
+//!   in-flight token per channel while every latency window is full. A
+//!   violation is reported with the exact cycle (channel ids and node
+//!   names). Passing the basis is a *necessary* condition on the whole
+//!   cycle space; the proof of sufficiency is the per-channel floor
+//!   above — the two rules together are why the clean sweep in
+//!   `tests/static_check.rs` can cross-check against the runtime
+//!   detector on the `tests/sim_cores.rs` fixtures.
+//!
+//! **Exchange-schedule soundness** ([`exchange`], rules `exchange/*`).
+//! For every stage, boundary (intra-stage and stage-entry) and tile,
+//! the recorded [`crate::stencil::exchange::TileExchange`] must
+//! partition the tile's input box: transfer boxes and the own box
+//! pairwise disjoint (`exchange/overlap`), together covering exactly
+//! the intersection with the previous chunk's valid box
+//! (`exchange/coverage`, via [`boxes::valid_coverage_violation`] — the
+//! same implementation the builder debug-asserts), every transfer's
+//! declared producer actually owning the shipped box
+//! (`exchange/ownership`), ring and resident counts re-derived from box
+//! arithmetic (`exchange/ring-accounting`, `exchange/resident-
+//! accounting` — the promoted `resident + exchanged == in_points`
+//! assertion), and the per-boundary link demand satisfiable under
+//! `Machine::link_words_per_cycle` (`exchange/link-capacity`: any
+//! positive drain rate bounds every finite transfer; zero is
+//! unsatisfiable). Disjointness + exact coverage + ring/resident
+//! accounting together prove the partition, because the five classes
+//! (own, transfers, ring, frame, nothing) are exhaustive by
+//! construction once their volumes add up to `in_points`.
+//!
+//! **Capacity/residency feasibility** ([`capacity`], rules
+//! `capacity/*`). Re-derives the §IV pipeline token demand per tile
+//! (`temporal::required_tokens` on the tile's sub-spec at the plan's
+//! depth) and replays the [`crate::compile::ResidencyPlan`] decision
+//! against `fabric_tokens`: a tile marked resident whose demand
+//! overflows the budget is an Error (the simulator would overcommit
+//! fabric storage); a spilled tile the budget would have admitted is a
+//! Warn (correct but needlessly slow); the recorded `spilled_points`
+//! must equal the sum over spilled tiles (Error otherwise). The
+//! re-derivation is the same arithmetic `ResidencyPlan::build` runs, so
+//! agreement is exact, not approximate.
+//!
+//! **Plan-consistency lints** ([`plan`], rules `plan/*`). Everything
+//! the decomposition planner guarantees and later layers assume:
+//! fused-depth trapezoid halos inside the grid (`plan/halo-bounds`,
+//! also applied to the time-tiled ring tiles), a fused depth whose
+//! valid box is non-empty (`plan/depth-exceeds-grid`), stages covering
+//! the declared steps exactly (`plan/step-accounting`) with the tail
+//! stage at depth `steps % depth` (`plan/tail-depth`),
+//! `DecompPlan::layer_workers` monotone non-increasing
+//! (`plan/layer-workers`), and placement mesh coordinates in-bounds
+//! and injective (`plan/mesh-bounds`, `plan/mesh-injective`).
+//!
+//! The analyzer never simulates and never panics: all box math is
+//! saturating ([`boxes`]), all indexing is checked, and every rule is
+//! written to be provably silent on any artifact `compile` can produce
+//! — which is what lets Error-level checking run inside `compile`
+//! itself by default in debug builds (see [`CheckLevel`]).
+
+pub mod boxes;
+pub mod capacity;
+pub mod deadlock;
+pub mod exchange;
+pub mod plan;
+
+use crate::compile::CompiledStencil;
+use crate::error::ScgraError;
+
+/// How much static analysis a compile/load should run and enforce.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CheckLevel {
+    /// No analysis.
+    Off,
+    /// Run every rule; fail on Error diagnostics.
+    Errors,
+    /// Run every rule; fail on Error *and* Warn diagnostics (the
+    /// `--deny warn` posture).
+    Full,
+}
+
+impl Default for CheckLevel {
+    /// Error-level checking is on by default in debug builds — every
+    /// `compile` in the test suite doubles as a clean-sweep fixture —
+    /// and off in release builds, where the artifact is trusted and
+    /// compile latency counts.
+    fn default() -> Self {
+        if cfg!(debug_assertions) {
+            CheckLevel::Errors
+        } else {
+            CheckLevel::Off
+        }
+    }
+}
+
+impl CheckLevel {
+    /// Parse a CLI/config/artifact value (`off|errors|full`).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "off" => CheckLevel::Off,
+            "errors" => CheckLevel::Errors,
+            "full" => CheckLevel::Full,
+            other => anyhow::bail!("unknown check level `{other}` (off|errors|full)"),
+        })
+    }
+}
+
+impl std::fmt::Display for CheckLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.pad(match self {
+            CheckLevel::Off => "off",
+            CheckLevel::Errors => "errors",
+            CheckLevel::Full => "full",
+        })
+    }
+}
+
+/// Diagnostic severity, ordered worst-first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Error,
+    Warn,
+    Info,
+}
+
+impl Severity {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warn => "warn",
+            Severity::Info => "info",
+        }
+    }
+}
+
+/// Where in the artifact a diagnostic points.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Location {
+    /// Stage index in `CompiledStencil::stages`.
+    pub stage: Option<usize>,
+    /// Tile index in the stage's `plan.tiles`.
+    pub tile: Option<usize>,
+    /// Finer-grained object: a placed graph key, a channel id, a
+    /// transfer source.
+    pub object: Option<String>,
+}
+
+impl Location {
+    pub fn stage(stage: usize) -> Self {
+        Self { stage: Some(stage), ..Self::default() }
+    }
+
+    pub fn tile(stage: usize, tile: usize) -> Self {
+        Self { stage: Some(stage), tile: Some(tile), object: None }
+    }
+
+    pub fn object(stage: usize, object: impl Into<String>) -> Self {
+        Self { stage: Some(stage), tile: None, object: Some(object.into()) }
+    }
+
+    pub fn with_object(mut self, object: impl Into<String>) -> Self {
+        self.object = Some(object.into());
+        self
+    }
+}
+
+impl std::fmt::Display for Location {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut parts: Vec<String> = Vec::new();
+        if let Some(s) = self.stage {
+            parts.push(format!("stage {s}"));
+        }
+        if let Some(t) = self.tile {
+            parts.push(format!("tile {t}"));
+        }
+        if let Some(o) = &self.object {
+            parts.push(o.clone());
+        }
+        if parts.is_empty() {
+            f.write_str("artifact")
+        } else {
+            f.write_str(&parts.join(" / "))
+        }
+    }
+}
+
+/// One verified fact about the artifact: which rule, how severe, where,
+/// what is wrong, and the numbers that prove it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Stable rule id, `family/rule` (e.g. `deadlock/cycle-buffering`).
+    pub rule: &'static str,
+    pub severity: Severity,
+    pub location: Location,
+    /// One-line statement of the violation.
+    pub message: String,
+    /// The concrete quantities behind the verdict (cycle members,
+    /// volumes, budgets) — machine-grepable evidence.
+    pub evidence: String,
+}
+
+/// The outcome of [`check`]: every diagnostic, worst-first.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Report {
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn error_count(&self) -> usize {
+        self.count(Severity::Error)
+    }
+
+    pub fn warn_count(&self) -> usize {
+        self.count(Severity::Warn)
+    }
+
+    fn count(&self, s: Severity) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == s).count()
+    }
+
+    /// True when no rule found anything at all.
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Human-readable rendering, one block per diagnostic plus a
+    /// summary line (`check: clean` on an empty report).
+    pub fn to_text(&self) -> String {
+        let mut s = String::new();
+        for d in &self.diagnostics {
+            s.push_str(&format!(
+                "{}[{}] {}: {}\n  evidence: {}\n",
+                d.severity.as_str(),
+                d.rule,
+                d.location,
+                d.message,
+                d.evidence
+            ));
+        }
+        if self.is_clean() {
+            s.push_str("check: clean (0 diagnostics)\n");
+        } else {
+            s.push_str(&format!(
+                "check: {} error(s), {} warning(s), {} info\n",
+                self.error_count(),
+                self.warn_count(),
+                self.count(Severity::Info)
+            ));
+        }
+        s
+    }
+
+    /// Machine-readable rendering (hand-rolled JSON — no serde in the
+    /// offline vendor set).
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\"diagnostics\":[");
+        for (i, d) in self.diagnostics.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"rule\":\"{}\",\"severity\":\"{}\",\"location\":\"{}\",\
+                 \"message\":\"{}\",\"evidence\":\"{}\"}}",
+                json_escape(d.rule),
+                d.severity.as_str(),
+                json_escape(&d.location.to_string()),
+                json_escape(&d.message),
+                json_escape(&d.evidence)
+            ));
+        }
+        s.push_str(&format!(
+            "],\"errors\":{},\"warnings\":{},\"clean\":{}}}",
+            self.error_count(),
+            self.warn_count(),
+            self.is_clean()
+        ));
+        s
+    }
+
+    /// Enforce `level`: Ok when the report passes, otherwise
+    /// [`ScgraError::AnalysisFailed`] carrying the offending
+    /// diagnostics rendered as text.
+    pub fn gate(&self, level: CheckLevel) -> Result<(), ScgraError> {
+        let denied = |d: &Diagnostic| match level {
+            CheckLevel::Off => false,
+            CheckLevel::Errors => d.severity == Severity::Error,
+            CheckLevel::Full => d.severity <= Severity::Warn,
+        };
+        let offending: Vec<&Diagnostic> = self.diagnostics.iter().filter(|d| denied(d)).collect();
+        if offending.is_empty() {
+            return Ok(());
+        }
+        let mut msg = format!("static analysis rejected the artifact ({} diagnostic(s)):", offending.len());
+        for d in offending {
+            msg.push_str(&format!(
+                "\n  {}[{}] {}: {}",
+                d.severity.as_str(),
+                d.rule,
+                d.location,
+                d.message
+            ));
+        }
+        Err(ScgraError::AnalysisFailed(msg))
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Run every rule family over `c` (analyzed against the machine it was
+/// compiled for, `c.options.machine`) and return the full report,
+/// errors first. Zero simulation: the rules read the artifact's placed
+/// graphs, exchange schedules and plans, and re-derive the invariants
+/// the execution layer assumes.
+pub fn check(c: &CompiledStencil) -> Report {
+    let mut diagnostics = Vec::new();
+    deadlock::check(c, &mut diagnostics);
+    exchange::check(c, &mut diagnostics);
+    capacity::check(c, &mut diagnostics);
+    plan::check(c, &mut diagnostics);
+    // Worst-first, stable within a severity so rule order is
+    // deterministic (rule families run in a fixed order and each walks
+    // stages/tiles/sorted graph keys in order).
+    diagnostics.sort_by_key(|d| d.severity);
+    Report { diagnostics }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diag(rule: &'static str, severity: Severity) -> Diagnostic {
+        Diagnostic {
+            rule,
+            severity,
+            location: Location::tile(0, 3),
+            message: "msg with \"quotes\"".into(),
+            evidence: "a=1\tb=2".into(),
+        }
+    }
+
+    #[test]
+    fn check_level_parses_and_defaults_by_build_profile() {
+        assert_eq!(CheckLevel::parse("off").unwrap(), CheckLevel::Off);
+        assert_eq!(CheckLevel::parse("errors").unwrap(), CheckLevel::Errors);
+        assert_eq!(CheckLevel::parse("full").unwrap(), CheckLevel::Full);
+        assert!(CheckLevel::parse("paranoid").is_err());
+        let want = if cfg!(debug_assertions) { CheckLevel::Errors } else { CheckLevel::Off };
+        assert_eq!(CheckLevel::default(), want);
+        assert_eq!(CheckLevel::Full.to_string(), "full");
+    }
+
+    #[test]
+    fn locations_render_hierarchically() {
+        assert_eq!(Location::default().to_string(), "artifact");
+        assert_eq!(Location::stage(1).to_string(), "stage 1");
+        assert_eq!(Location::tile(0, 3).to_string(), "stage 0 / tile 3");
+        assert_eq!(
+            Location::object(2, "graph 8x6x1").with_object("graph 8x6x1 chan 4").to_string(),
+            "stage 2 / graph 8x6x1 chan 4"
+        );
+    }
+
+    #[test]
+    fn report_renders_text_and_json() {
+        let empty = Report::default();
+        assert!(empty.is_clean());
+        assert!(empty.to_text().contains("check: clean"));
+        assert!(empty.to_json().contains("\"clean\":true"));
+
+        let r = Report {
+            diagnostics: vec![diag("plan/halo-bounds", Severity::Error), diag("x/y", Severity::Warn)],
+        };
+        let text = r.to_text();
+        assert!(text.contains("error[plan/halo-bounds] stage 0 / tile 3"), "{text}");
+        assert!(text.contains("1 error(s), 1 warning(s)"), "{text}");
+        let json = r.to_json();
+        assert!(json.contains("\"rule\":\"plan/halo-bounds\""), "{json}");
+        assert!(json.contains("msg with \\\"quotes\\\""), "{json}");
+        assert!(json.contains("a=1\\tb=2"), "{json}");
+        assert!(json.contains("\"errors\":1,\"warnings\":1,\"clean\":false"), "{json}");
+    }
+
+    #[test]
+    fn gate_enforces_the_level() {
+        let r = Report { diagnostics: vec![diag("x/warn-only", Severity::Warn)] };
+        assert!(r.gate(CheckLevel::Off).is_ok());
+        assert!(r.gate(CheckLevel::Errors).is_ok(), "warns pass at Errors level");
+        let e = r.gate(CheckLevel::Full).unwrap_err();
+        assert_eq!(e.kind(), "analysis-failed");
+        assert!(e.to_string().contains("x/warn-only"), "{e}");
+        assert!(!e.is_transient());
+
+        let r = Report { diagnostics: vec![diag("x/err", Severity::Error)] };
+        let e = r.gate(CheckLevel::Errors).unwrap_err();
+        assert!(e.to_string().contains("x/err"), "{e}");
+        assert!(e.to_string().contains("stage 0 / tile 3"), "{e}");
+    }
+
+    #[test]
+    fn severity_orders_worst_first() {
+        assert!(Severity::Error < Severity::Warn);
+        assert!(Severity::Warn < Severity::Info);
+    }
+}

@@ -1,0 +1,177 @@
+//! Plan-consistency lints — the decomposition and placement invariants
+//! later layers assume without re-checking (rule ids and soundness
+//! argument in the [`super`] module docs).
+
+use crate::compile::CompiledStencil;
+use crate::stencil::decomp::Tile;
+use crate::stencil::exchange::mesh_coords;
+
+use super::boxes;
+use super::{Diagnostic, Location, Severity};
+
+/// Run the `plan/*` rules over every stage's plan, ring schedule and
+/// mesh placement, plus the workload-level step accounting.
+pub fn check(c: &CompiledStencil, diags: &mut Vec<Diagnostic>) {
+    let dims = [c.spec.nx, c.spec.ny, c.spec.nz];
+    let radii = [c.spec.rx, c.spec.ry, c.spec.rz];
+
+    for (s, st) in c.stages.iter().enumerate() {
+        let plan = &st.plan;
+
+        // Trapezoid feasibility: a fused depth whose halo eats the whole
+        // grid leaves no valid box for any tile to own.
+        for a in 0..3 {
+            if radii[a] > 0 && 2 * radii[a] * plan.fused_steps >= dims[a] {
+                diags.push(Diagnostic {
+                    rule: "plan/depth-exceeds-grid",
+                    severity: Severity::Error,
+                    location: Location::stage(s).with_object(format!("axis {a}")),
+                    message: format!(
+                        "fused depth {} with radius {} leaves no interior on a \
+                         {}-point axis",
+                        plan.fused_steps, radii[a], dims[a]
+                    ),
+                    evidence: format!(
+                        "2 * {} * {} >= {}",
+                        radii[a], plan.fused_steps, dims[a]
+                    ),
+                });
+            }
+        }
+
+        // Halo bounds, for the fused tiles and every ring layer's tiles.
+        for (t, tile) in plan.tiles.iter().enumerate() {
+            check_tile_bounds(Location::tile(s, t), tile, dims, diags);
+        }
+        for (l, layer) in st.ring.iter().enumerate() {
+            for (t, tile) in layer.iter().enumerate() {
+                let loc = Location::object(s, format!("ring layer {l} tile {t}"));
+                check_tile_bounds(loc, tile, dims, diags);
+            }
+        }
+
+        // Worker taper: layer ℓ of the fused trapezoid writes a narrower
+        // interior than layer ℓ-1, so its useful worker count can never
+        // grow. `layer_workers` is a pure function of the plan, so a
+        // violation means the formula itself regressed — worth flagging,
+        // not fatal.
+        let lw = plan.layer_workers(&c.spec);
+        if lw.windows(2).any(|w| w[1] > w[0]) {
+            diags.push(Diagnostic {
+                rule: "plan/layer-workers",
+                severity: Severity::Warn,
+                location: Location::stage(s).with_object("layer workers".to_string()),
+                message: "per-layer worker counts are not monotone non-increasing".to_string(),
+                evidence: format!("layer_workers={lw:?}"),
+            });
+        }
+
+        // Mesh placement: coordinates must stay inside the cut grid and
+        // name each tile uniquely — hop pricing and exchange routing
+        // both index by them.
+        let coords = mesh_coords(plan);
+        for (t, coord) in coords.iter().enumerate() {
+            for a in 0..3 {
+                if coord[a] >= plan.cuts[a].max(1) {
+                    diags.push(Diagnostic {
+                        rule: "plan/mesh-bounds",
+                        severity: Severity::Error,
+                        location: Location::tile(s, t),
+                        message: format!(
+                            "mesh coordinate {coord:?} exceeds the plan's cut grid {:?}",
+                            plan.cuts
+                        ),
+                        evidence: format!("axis={a} coord={} cuts={}", coord[a], plan.cuts[a]),
+                    });
+                }
+            }
+        }
+        let mut seen = coords.clone();
+        seen.sort_unstable();
+        seen.dedup();
+        if seen.len() != coords.len() {
+            diags.push(Diagnostic {
+                rule: "plan/mesh-injective",
+                severity: Severity::Error,
+                location: Location::stage(s).with_object("mesh coords".to_string()),
+                message: format!(
+                    "{} tile(s) share a mesh coordinate: transfers cannot be routed uniquely",
+                    coords.len() - seen.len() + 1
+                ),
+                evidence: format!("coords={coords:?}"),
+            });
+        }
+    }
+
+    // Step accounting: the stages must advance exactly the declared
+    // step count, and a two-stage schedule's tail must be the remainder
+    // `steps % depth` run exactly once.
+    let covered: usize = c.stages.iter().map(|s| s.steps()).sum();
+    if covered != c.steps {
+        diags.push(Diagnostic {
+            rule: "plan/step-accounting",
+            severity: Severity::Error,
+            location: Location::default(),
+            message: format!("stages advance {covered} step(s) but the artifact declares {}", c.steps),
+            evidence: format!("covered={covered} declared={}", c.steps),
+        });
+    }
+    if c.stages.len() == 2 {
+        let depth = c.stages[0].plan.fused_steps.max(1);
+        let rem = c.steps % depth;
+        let tail = &c.stages[1];
+        if tail.plan.fused_steps != rem || tail.repeats != 1 {
+            diags.push(Diagnostic {
+                rule: "plan/tail-depth",
+                severity: Severity::Error,
+                location: Location::stage(1),
+                message: format!(
+                    "tail stage should run once at depth {rem} (= {} % {depth}); \
+                     found depth {} x {} repeat(s)",
+                    c.steps, tail.plan.fused_steps, tail.repeats
+                ),
+                evidence: format!(
+                    "steps={} depth={depth} tail_depth={} tail_repeats={}",
+                    c.steps, tail.plan.fused_steps, tail.repeats
+                ),
+            });
+        }
+    } else if c.stages.len() > 2 {
+        diags.push(Diagnostic {
+            rule: "plan/stage-count",
+            severity: Severity::Warn,
+            location: Location::default(),
+            message: format!(
+                "{} stages: the compiler only ever emits one full stage plus an \
+                 optional tail",
+                c.stages.len()
+            ),
+            evidence: format!("stages={}", c.stages.len()),
+        });
+    }
+}
+
+fn check_tile_bounds(
+    location: Location,
+    tile: &Tile,
+    dims: [usize; 3],
+    diags: &mut Vec<Diagnostic>,
+) {
+    let out_ok = boxes::volume(tile.out_lo, tile.out_hi) > 0
+        && boxes::contains_box(tile.in_lo, tile.in_hi, tile.out_lo, tile.out_hi);
+    let in_ok = boxes::contains_box([0, 0, 0], dims, tile.in_lo, tile.in_hi)
+        && boxes::volume(tile.in_lo, tile.in_hi) > 0;
+    if !out_ok || !in_ok {
+        diags.push(Diagnostic {
+            rule: "plan/halo-bounds",
+            severity: Severity::Error,
+            location,
+            message: format!(
+                "tile boxes out of bounds: need nonempty out [{:?}, {:?}) ⊆ \
+                 in [{:?}, {:?}) ⊆ grid [{:?}]",
+                tile.out_lo, tile.out_hi, tile.in_lo, tile.in_hi, dims
+            ),
+            evidence: format!("out_ok={out_ok} in_ok={in_ok}"),
+        });
+    }
+}

@@ -152,6 +152,23 @@ impl Fifo {
         self.latency
     }
 
+    /// Credit capacity — the exact in-flight token limit the static
+    /// deadlock rules reason about.
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.capacity as usize
+    }
+
+    /// Overwrite the credit capacity without re-ringing the arena —
+    /// including to zero, which [`Fifo::new`] rejects. Exists solely so
+    /// the static analyzer's mutation tests can seed the defects the
+    /// `deadlock/*` rules must catch; a graph altered this way must
+    /// never be simulated (the ring mask no longer covers the capacity).
+    #[doc(hidden)]
+    pub fn set_capacity(&mut self, capacity: usize) {
+        self.capacity = capacity as u32;
+    }
+
     /// Ring slots this channel occupies in the arena (power of two).
     #[inline]
     pub fn ring_slots(&self) -> usize {

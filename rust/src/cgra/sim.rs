@@ -551,6 +551,34 @@ impl PlacedGraph {
     pub fn node_count(&self) -> usize {
         self.node_count
     }
+
+    /// The pristine placed channels — capacities, latencies and node
+    /// endpoints — for the static deadlock analysis (read-only; runs
+    /// clone their own cursors).
+    pub fn channels(&self) -> &[Fifo] {
+        &self.chans
+    }
+
+    /// Name of node `id`, for diagnostics.
+    pub fn node_name(&self, id: usize) -> &str {
+        &self.names[id]
+    }
+
+    /// Quiet-period threshold the runtime deadlock detector uses — the
+    /// dynamic counterpart the static `deadlock/*` verdict is
+    /// cross-checked against.
+    pub fn deadlock_quiet(&self) -> u64 {
+        self.deadlock_quiet
+    }
+
+    /// Overwrite one channel's credit capacity in the *template*.
+    /// Exists solely so the analyzer's mutation tests can seed
+    /// underbuffered cycles; a graph altered this way must never be
+    /// simulated (see [`Fifo::set_capacity`]).
+    #[doc(hidden)]
+    pub fn override_channel_capacity(&mut self, chan: usize, capacity: usize) {
+        self.chans[chan].set_capacity(capacity);
+    }
 }
 
 impl Simulator {

@@ -6,6 +6,7 @@
 //! scgra dfg      --stencil S [-w N] [--dot F] [--asm F]   §V emitters
 //! scgra roofline [--stencil S] [--tiles N]                §VI analysis
 //! scgra compile  --stencil S [--steps N] [--out F]        phase 1: plan + place
+//! scgra check    [--artifact F | spec flags] [--format text|json] [--deny warn]
 //! scgra run      --stencil S [-w N] [--tiles N] [--decomp K] [--steps N] [--fuse M] [--halo H]
 //! scgra run      --artifact F                             phase 2: execute a saved artifact
 //! scgra run      ... --trace record F | --trace replay F  deterministic replay check
@@ -14,9 +15,11 @@
 //! scgra validate                                          3-layer check
 //! ```
 //!
-//! Parsing is strict: flags outside the whitelist and malformed values
-//! are [`ScgraError::Usage`] errors naming the offending token, so a
-//! typo can never be silently ignored.
+//! Parsing is strict: flags outside the invoked subcommand's whitelist
+//! and malformed values are [`ScgraError::Usage`] errors naming the
+//! offending token *and the subcommand* (`unknown flag \`--out\` for
+//! \`scgra check\``), so a typo — or a flag that only another
+//! subcommand accepts — can never be silently ignored.
 //!
 //! Every planning path funnels through one flag-assembly point,
 //! `CompileOptions::from_args` (workers/tiles/decomp/fuse/fabric
@@ -46,6 +49,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 
+use crate::analysis::CheckLevel;
 use crate::cgra::{Machine, SimCore};
 use crate::compile::{compile, CompileOptions, CompiledStencil, FuseMode, HaloMode};
 use crate::config::{Config, RunParams};
@@ -67,19 +71,22 @@ pub struct Args {
     flags: HashMap<String, String>,
 }
 
-/// Every flag any subcommand accepts. `Args::parse` is strict: a token
-/// outside this list is a [`ScgraError::Usage`] error naming the token,
-/// not a silently ignored key.
+/// Every flag any subcommand accepts — the union of the per-subcommand
+/// lists below, used as the fallback whitelist when the subcommand
+/// itself is unknown (so `scgra frobnicate` reports the bad *command*,
+/// not a misleading flag error).
 const KNOWN_FLAGS: &[&str] = &[
     "artifact",
     "asm",
     "config",
     "deadline",
     "decomp",
+    "deny",
     "dims",
     "dot",
     "fabric-tokens",
     "fault",
+    "format",
     "fuse",
     "halo",
     "help",
@@ -95,9 +102,41 @@ const KNOWN_FLAGS: &[&str] = &[
     "workers",
 ];
 
+/// Flags the planning subcommands share: the workload selectors plus
+/// everything `CompileOptions::from_args` consumes.
+const PLAN_FLAGS: &[&str] = &[
+    "config", "decomp", "dims", "fabric-tokens", "fuse", "halo", "help",
+    "radii", "shape", "stencil", "tiles", "workers",
+];
+
+/// Per-subcommand flag whitelist. `Args::parse` rejects a flag outside
+/// the invoked subcommand's list with a usage error naming both the
+/// token and the subcommand, so a flag that only *another* subcommand
+/// accepts (`scgra check --out x`) fails loudly instead of being
+/// parsed and silently ignored.
+fn allowed_flags(cmd: &str) -> Vec<&'static str> {
+    let extra: &[&str] = match cmd {
+        "info" | "compare" | "validate" => return vec!["config", "help"],
+        "dfg" => &["asm", "dot"],
+        "roofline" => &[],
+        "compile" => &["out", "steps"],
+        "check" => &["artifact", "deny", "format", "steps"],
+        "run" => &[
+            "artifact", "deadline", "fault", "seed", "sim-core", "steps", "trace",
+        ],
+        // Unknown command: accept the union so `run` reports the bad
+        // command itself rather than a misleading flag error.
+        _ => return KNOWN_FLAGS.to_vec(),
+    };
+    let mut all = PLAN_FLAGS.to_vec();
+    all.extend_from_slice(extra);
+    all
+}
+
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Self> {
         let cmd = argv.first().cloned().unwrap_or_else(|| "help".into());
+        let allowed = allowed_flags(&cmd);
         let mut flags = HashMap::new();
         let mut i = 1;
         while i < argv.len() {
@@ -113,9 +152,9 @@ impl Args {
             };
             // `-w` is the documented short form of `--workers`.
             let key = if key == "w" { "workers" } else { key };
-            if !KNOWN_FLAGS.contains(&key) {
+            if !allowed.contains(&key) {
                 return Err(ScgraError::Usage(format!(
-                    "unknown flag `--{key}` (see `scgra help`)"
+                    "unknown flag `--{key}` for `scgra {cmd}` (see `scgra help`)"
                 ))
                 .into());
             }
@@ -177,6 +216,7 @@ impl CompileOptions {
                 Some(s) => HaloMode::parse(s)?,
                 None => defaults.halo,
             },
+            check: defaults.check,
         })
     }
 }
@@ -307,6 +347,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "dfg" => cmd_dfg(&args, &machine, run_defaults.as_ref()),
         "roofline" => cmd_roofline(&args, &machine, run_defaults.as_ref()),
         "compile" => cmd_compile(&args, &machine, run_defaults.as_ref()),
+        "check" => cmd_check(&args, &machine, run_defaults.as_ref()),
         "run" => cmd_run(&args, &machine, run_defaults.as_ref()),
         "compare" => cmd_compare(&machine),
         "validate" => cmd_validate(&machine),
@@ -315,7 +356,7 @@ pub fn run(argv: &[String]) -> Result<()> {
 }
 
 const HELP: &str = "scgra — stencils on a coarse-grained reconfigurable spatial architecture
-USAGE: scgra <info|dfg|roofline|compile|run|compare|validate> [--flags]
+USAGE: scgra <info|dfg|roofline|compile|check|run|compare|validate> [--flags]
   --stencil NAME        workload preset (default paper2d):
                         paper1d|paper2d|heat2d|heat3d|acoustic3d|box9|box27|3pt
   --shape star|box      custom workload shape (with --dims; default star)
@@ -361,9 +402,14 @@ USAGE: scgra <info|dfg|roofline|compile|run|compare|validate> [--flags]
   --fabric-tokens N     per-tile on-fabric token budget (default 65536)
   --out FILE            where `compile` writes the artifact
                         (default compiled_stencil.txt)
-  --artifact FILE       `run` a saved compiled artifact instead of
-                        planning: spec, steps and plan come from the
-                        file (compile once, execute many)
+  --artifact FILE       `run` or `check` a saved compiled artifact
+                        instead of planning: spec, steps and plan come
+                        from the file (compile once, execute many; `run`
+                        re-checks a loaded artifact at the errors level
+                        before executing it)
+  --format text|json    `check` report rendering (default text)
+  --deny warn           `check` exits nonzero on warnings too, not just
+                        errors (the CI posture)
   --dot FILE / --asm FILE   emit Graphviz / assembly (dfg)
   --config FILE         TOML machine/run config ([run] decomp = \"pencil\")
 
@@ -511,6 +557,51 @@ fn cmd_compile(args: &Args, m: &Machine, cfg: Option<&Config>) -> Result<()> {
     Ok(())
 }
 
+/// `scgra check` — run the static verifier (the `analysis` module's
+/// four rule families) over a saved artifact or a fresh compile, print
+/// the report as text or JSON, and exit nonzero when the gate denies:
+/// errors always, warnings too under `--deny warn`.
+fn cmd_check(args: &Args, m: &Machine, cfg: Option<&Config>) -> Result<()> {
+    let deny_level = match args.get("deny") {
+        None => CheckLevel::Errors,
+        Some("warn") => CheckLevel::Full,
+        Some(other) => {
+            return Err(ScgraError::Usage(format!(
+                "--deny {other}: only `warn` can be denied (errors always are)"
+            ))
+            .into())
+        }
+    };
+    let compiled = match args.get("artifact") {
+        // An untrusted artifact is exactly what the analyzer is for:
+        // plain `load` (structural parse only), then every rule below.
+        Some(path) => CompiledStencil::load(path)?,
+        None => {
+            let defaults = run_defaults(cfg)?;
+            let spec = resolve_spec(args, cfg, "paper2d")?;
+            // The full report below is the product; don't let the
+            // compile-time gate pre-empt it with an errors-only subset.
+            let opts = CompileOptions::from_args(args, m, &defaults)?
+                .with_check(CheckLevel::Off);
+            let steps = args.num("steps", defaults.steps)?;
+            anyhow::ensure!(steps >= 1, "--steps must be >= 1 (got {steps})");
+            compile(&spec, steps, &opts)?
+        }
+    };
+    let report = crate::analysis::check(&compiled);
+    match args.get("format").unwrap_or("text") {
+        "text" => print!("{}", report.to_text()),
+        "json" => println!("{}", report.to_json()),
+        other => {
+            return Err(
+                ScgraError::Usage(format!("--format {other}: expected text|json")).into(),
+            )
+        }
+    }
+    report.gate(deny_level)?;
+    Ok(())
+}
+
 fn cmd_run(args: &Args, m: &Machine, cfg: Option<&Config>) -> Result<()> {
     let defaults = run_defaults(cfg)?;
     let sim_core = match args.get("sim-core") {
@@ -543,7 +634,10 @@ fn cmd_run(args: &Args, m: &Machine, cfg: Option<&Config>) -> Result<()> {
     // file), or compile here from the flags.
     let compiled = match args.get("artifact") {
         Some(path) => {
-            let c = CompiledStencil::load(path)?;
+            // A saved artifact is untrusted input to the executor:
+            // re-verify the error-level invariants (deadlock-freedom,
+            // exchange partition, residency budget) before simulating.
+            let c = CompiledStencil::load_checked(path, CheckLevel::Errors)?;
             println!("loaded artifact {path}: {}", c.manifest_meta().name);
             c
         }
@@ -784,6 +878,57 @@ mod tests {
         // A bare `-` or non-flag token is also named.
         let e = Args::parse(&sv(&["run", "oops"])).unwrap_err();
         assert!(e.to_string().contains("`oops`"), "{e}");
+    }
+
+    #[test]
+    fn flags_are_scoped_to_their_subcommand() {
+        // `--out` belongs to `compile`; `check` must name itself.
+        let e = Args::parse(&sv(&["check", "--out", "x.txt"])).unwrap_err();
+        assert!(
+            e.to_string().contains("unknown flag `--out` for `scgra check`"),
+            "{e}"
+        );
+        // `--trace` belongs to `run`, not `compile`.
+        let e = Args::parse(&sv(&["compile", "--trace", "record", "/tmp/t"])).unwrap_err();
+        assert!(e.to_string().contains("for `scgra compile`"), "{e}");
+        // The shared planning flags still parse everywhere they apply.
+        for cmd in ["dfg", "roofline", "compile", "check", "run"] {
+            Args::parse(&sv(&[cmd, "--stencil", "3pt", "--tiles", "2"])).unwrap();
+        }
+    }
+
+    #[test]
+    fn check_command_is_clean_on_a_fresh_compile() {
+        run(&sv(&[
+            "check", "--shape", "star", "--dims", "24,16", "--workers", "2",
+            "--tiles", "2", "--steps", "4",
+        ]))
+        .unwrap();
+        // JSON + deny-warn is the CI invocation; a fresh compile has
+        // zero diagnostics, so even the strict gate passes.
+        run(&sv(&[
+            "check", "--stencil", "3pt", "--deny", "warn", "--format", "json",
+        ]))
+        .unwrap();
+        let e = run(&sv(&["check", "--stencil", "3pt", "--format", "yaml"])).unwrap_err();
+        assert!(e.to_string().contains("--format yaml"), "{e}");
+        let e = run(&sv(&["check", "--stencil", "3pt", "--deny", "info"])).unwrap_err();
+        assert!(e.to_string().contains("--deny info"), "{e}");
+    }
+
+    #[test]
+    fn check_command_verifies_a_saved_artifact() {
+        let path = std::env::temp_dir()
+            .join(format!("scgra_cli_check_{}.txt", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        run(&sv(&[
+            "compile", "--shape", "star", "--dims", "20,12", "--workers", "2",
+            "--tiles", "2", "--steps", "2", "--out", path.as_str(),
+        ]))
+        .unwrap();
+        run(&sv(&["check", "--artifact", path.as_str(), "--deny", "warn"])).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(run(&sv(&["check", "--artifact", "/nonexistent/a.txt"])).is_err());
     }
 
     #[test]

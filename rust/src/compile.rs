@@ -38,6 +38,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::analysis::CheckLevel;
 use crate::cgra::{Machine, PlacedGraph};
 use crate::config::Config;
 use crate::error::ScgraError;
@@ -156,6 +157,10 @@ pub struct CompileOptions {
     pub fuse: FuseMode,
     /// Halo sourcing at chunk boundaries (exchange vs DRAM reload).
     pub halo: HaloMode,
+    /// How much of the static analyzer ([`crate::analysis`]) runs over
+    /// the freshly compiled artifact before it is returned (default:
+    /// Error-level rules in debug builds, off in release).
+    pub check: CheckLevel,
 }
 
 impl Default for CompileOptions {
@@ -168,6 +173,7 @@ impl Default for CompileOptions {
             decomp: DecompKind::Auto,
             fuse: FuseMode::Auto,
             halo: HaloMode::Exchange,
+            check: CheckLevel::default(),
         }
     }
 }
@@ -213,6 +219,11 @@ impl CompileOptions {
 
     pub fn with_halo(mut self, halo: HaloMode) -> Self {
         self.halo = halo;
+        self
+    }
+
+    pub fn with_check(mut self, check: CheckLevel) -> Self {
+        self.check = check;
         self
     }
 
@@ -535,6 +546,11 @@ impl CompiledStencil {
                 None => HaloMode::default(),
                 Some(v) => HaloMode::parse(v)?,
             },
+            // Same tolerance for pre-analyzer artifacts.
+            check: match c.get("options", "check") {
+                None => CheckLevel::default(),
+                Some(v) => CheckLevel::parse(v)?,
+            },
         };
         let steps: usize = cfg_num(&c, "options", "steps")?;
         let workers: usize = cfg_num(&c, "options", "resolved_workers")?;
@@ -610,6 +626,21 @@ impl CompiledStencil {
             .map_err(|e| ScgraError::Io(format!("reading {}: {e}", path.as_ref().display())))?;
         Self::parse(&text)
     }
+
+    /// [`Self::load`] followed by the static verifier at `check` —
+    /// the untrusted-artifact entry point: structural parsing already
+    /// rejects malformed text, and the analyzer then proves the
+    /// *well-formed* plan is actually sound (deadlock-free buffering,
+    /// exchange partition, residency arithmetic) before anything
+    /// executes it. Denied diagnostics come back as
+    /// [`ScgraError::AnalysisFailed`].
+    pub fn load_checked(path: impl AsRef<Path>, check: CheckLevel) -> Result<Self, ScgraError> {
+        let c = Self::load(path)?;
+        if check != CheckLevel::Off {
+            crate::analysis::check(&c).gate(check)?;
+        }
+        Ok(c)
+    }
 }
 
 /// Compile `steps` applications of `spec` under `opts` into an
@@ -640,7 +671,15 @@ pub fn compile(
     opts.machine
         .validate()
         .map_err(|e| ScgraError::InvalidMachine(e.to_string()))?;
-    compile_inner(spec, steps, opts).map_err(classify_planning)
+    let compiled = compile_inner(spec, steps, opts).map_err(classify_planning)?;
+    // The static verifier runs over the finished artifact before anyone
+    // can execute it; every rule is provably silent on a sound compile,
+    // so in debug builds (where the default is Errors) this doubles as
+    // a free clean-sweep over the whole test suite's compile matrix.
+    if opts.check != CheckLevel::Off {
+        crate::analysis::check(&compiled).gate(opts.check)?;
+    }
+    Ok(compiled)
 }
 
 /// Map a planning failure onto the public classification: budget
@@ -919,7 +958,7 @@ fn options_text(o: &CompileOptions, steps: usize) -> String {
          cache_hit_latency = {}\nmshr_per_load = {}\nmax_instr_per_pe = {}\n\
          hops_per_cycle = {}\nlink_words_per_cycle = {}\n\
          [options]\nworkers = {}\ntiles = {}\nfabric_tokens = {}\n\
-         decomp = \"{}\"\nfuse = \"{}\"\nhalo = \"{}\"\nsteps = {}\n",
+         decomp = \"{}\"\nfuse = \"{}\"\nhalo = \"{}\"\ncheck = \"{}\"\nsteps = {}\n",
         m.clock_ghz,
         m.grid_rows,
         m.grid_cols,
@@ -939,6 +978,7 @@ fn options_text(o: &CompileOptions, steps: usize) -> String {
         o.decomp,
         o.fuse,
         o.halo,
+        o.check,
         steps,
     )
 }

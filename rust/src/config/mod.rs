@@ -9,6 +9,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::analysis::CheckLevel;
 use crate::cgra::{Machine, SimCore};
 use crate::compile::{CompileOptions, FuseMode, HaloMode};
 use crate::stencil::decomp::{self, DecompKind};
@@ -237,6 +238,10 @@ impl Config {
             None => HaloMode::default(),
             Some(v) => HaloMode::parse(v)?,
         };
+        let check = match self.get("run", "check") {
+            None => CheckLevel::default(),
+            Some(v) => CheckLevel::parse(v)?,
+        };
         let deadline_ms = match self.get("run", "deadline") {
             None => None,
             Some(v) => {
@@ -258,6 +263,7 @@ impl Config {
             sim_core,
             fuse,
             halo,
+            check,
             trace: self.get("run", "trace").map(|s| s.to_string()),
             deadline_ms,
             fault: self.fault_plan()?,
@@ -277,6 +283,7 @@ impl Config {
             decomp: p.decomp,
             fuse: p.fuse,
             halo: p.halo,
+            check: p.check,
         })
     }
 }
@@ -299,6 +306,9 @@ pub struct RunParams {
     /// Chunk-boundary halo movement (default exchange: in-fabric
     /// channels, no redundant DRAM reads after the cold chunk).
     pub halo: HaloMode,
+    /// Static-analysis level the compile runs at
+    /// (`check = "off|errors|full"`, default per build profile).
+    pub check: CheckLevel,
     /// Deterministic trace capture/replay: `record PATH` or
     /// `replay PATH` (see [`crate::util::trace::TraceMode`]); `None`
     /// runs untraced.
@@ -326,6 +336,7 @@ impl Default for RunParams {
             sim_core: SimCore::default(),
             fuse: FuseMode::Auto,
             halo: HaloMode::default(),
+            check: CheckLevel::default(),
             trace: None,
             deadline_ms: None,
             fault: None,

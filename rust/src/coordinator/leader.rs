@@ -14,6 +14,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::analysis::CheckLevel;
 use crate::cgra::{Machine, SimCore};
 use crate::compile::{self, CompileOptions};
 use crate::session::{RunReport, Session};
@@ -97,6 +98,7 @@ impl Coordinator {
             decomp: self.decomp,
             fuse: self.fuse,
             halo: self.halo,
+            check: CheckLevel::default(),
         }
     }
 

@@ -55,6 +55,10 @@ pub enum ScgraError {
         total_tasks: usize,
         deadline_ms: u64,
     },
+    /// Static analysis rejected the compiled artifact: the message is
+    /// the denied `scgra check` diagnostics (rule ids, locations,
+    /// one-line findings), rendered worst-first.
+    AnalysisFailed(String),
     /// Command-line usage error (unknown flag, malformed value).
     Usage(String),
     /// Anything else that escaped classification.
@@ -73,6 +77,7 @@ impl ScgraError {
             Self::PoolPoisoned(_) => "pool-poisoned",
             Self::Deadlock(_) => "deadlock",
             Self::DeadlineExceeded { .. } => "deadline-exceeded",
+            Self::AnalysisFailed(_) => "analysis-failed",
             Self::Usage(_) => "usage",
             Self::Internal(_) => "internal",
         }
@@ -113,6 +118,7 @@ impl fmt::Display for ScgraError {
             | Self::Io(m)
             | Self::PoolPoisoned(m)
             | Self::Deadlock(m)
+            | Self::AnalysisFailed(m)
             | Self::Usage(m)
             | Self::Internal(m) => f.write_str(m),
             Self::DeadlineExceeded {

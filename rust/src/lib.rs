@@ -80,6 +80,11 @@
 //!   [`compile::CompiledStencil`] (plan + placed per-tile-shape DFGs +
 //!   roofline analysis), with an LRU [`compile::CompileCache`] and
 //!   save/load in the runtime's manifest schema.
+//! * [`analysis`] — the static verifier behind `scgra check`: four rule
+//!   families (deadlock buffering, exchange-partition soundness,
+//!   residency feasibility, plan lints) proving a compiled artifact
+//!   executable *before* any simulation, gated at compile/load time by
+//!   [`analysis::CheckLevel`].
 //! * [`session`] — phase 2: execution. [`session::Session`] is a
 //!   `Send + Sync` executor over a compiled artifact: the 16-tile
 //!   leader/worker engine with halo/redundant-load accounting per
@@ -108,6 +113,9 @@
 //! checks the stitched output against the oracle. See
 //! `examples/acoustic_3d.rs` for the library-level version.
 
+#![forbid(unsafe_code)]
+
+pub mod analysis;
 pub mod cgra;
 pub mod cli;
 pub mod compile;
@@ -123,6 +131,7 @@ pub mod stencil;
 pub mod util;
 pub mod verify;
 
+pub use analysis::{check, CheckLevel, Diagnostic, Report, Severity};
 pub use compile::{compile, CompileCache, CompileOptions, CompiledStencil, FuseMode};
 pub use error::ScgraError;
 pub use session::{ExecMode, Outcome, RunOutcome, RunReport, Session};

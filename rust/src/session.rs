@@ -931,6 +931,14 @@ fn exchange_cost(te: &TileExchange, tile: &Tile, m: &Machine) -> ExchangeCost {
     let local = |g: [usize; 3]| [g[0] - tile.in_lo[0], g[1] - tile.in_lo[1], g[2] - tile.in_lo[2]];
     let mut regions = Vec::with_capacity(te.from_tiles.len() + 2);
     for tr in &te.from_tiles {
+        // The rebase assumes what the verifier's `exchange/ownership`
+        // rule checks statically: every transfer box sits inside this
+        // tile's input box (otherwise `local` would underflow).
+        debug_assert!(
+            crate::analysis::boxes::contains_box(tile.in_lo, tile.in_hi, tr.lo, tr.hi),
+            "transfer box from tile {} escapes the receiver's input box",
+            tr.src
+        );
         regions.push(CostRegion {
             lo: local(tr.lo),
             hi: local(tr.hi),

@@ -137,31 +137,11 @@ pub struct ExchangeSchedule {
     pub tiles: Vec<TileExchange>,
 }
 
-/// Volume of the intersection of two `[lo, hi)` boxes.
-fn isect(alo: [usize; 3], ahi: [usize; 3], blo: [usize; 3], bhi: [usize; 3]) -> usize {
-    (0..3)
-        .map(|a| ahi[a].min(bhi[a]).saturating_sub(alo[a].max(blo[a])))
-        .product()
-}
-
-/// The intersection box itself, `None` when empty.
-fn isect_box(
-    alo: [usize; 3],
-    ahi: [usize; 3],
-    blo: [usize; 3],
-    bhi: [usize; 3],
-) -> Option<([usize; 3], [usize; 3])> {
-    let mut lo = [0usize; 3];
-    let mut hi = [0usize; 3];
-    for a in 0..3 {
-        lo[a] = alo[a].max(blo[a]);
-        hi[a] = ahi[a].min(bhi[a]);
-        if lo[a] >= hi[a] {
-            return None;
-        }
-    }
-    Some((lo, hi))
-}
+// Box arithmetic is shared with the static verifier
+// (`crate::analysis::boxes`): the coverage invariant asserted below in
+// debug builds and the `exchange/coverage` diagnostic `scgra check`
+// emits are one implementation, so they cannot drift apart.
+use crate::analysis::boxes::{isect, isect_box};
 
 impl ExchangeSchedule {
     /// Partition every receiving tile's input box by source. `prev` is
@@ -243,7 +223,19 @@ impl ExchangeSchedule {
         }
         // Previous output boxes tile the previous valid box exactly, so
         // anything of the interior outside them is the boundary ring.
-        debug_assert_eq!(in_valid, isect(lo, hi, vlo, vhi));
+        // Asserted through the same coverage computation the verifier's
+        // `exchange/coverage` rule runs on saved artifacts.
+        #[cfg(debug_assertions)]
+        {
+            let owned: Vec<_> =
+                prev.tiles.iter().map(|p| (p.out_lo, p.out_hi)).collect();
+            if let Some(why) =
+                crate::analysis::boxes::valid_coverage_violation(lo, hi, &owned, vlo, vhi)
+            {
+                panic!("tile {t}: {why}");
+            }
+            debug_assert_eq!(in_valid, isect(lo, hi, vlo, vhi));
+        }
         let from_ring = interior - in_valid;
         TileExchange {
             resident: own + frame,

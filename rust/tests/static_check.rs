@@ -1,0 +1,302 @@
+//! Acceptance suite for the `scgra check` static verifier
+//! (`stencil_cgra::analysis`).
+//!
+//! Two halves, mirroring the analyzer's contract:
+//!
+//! * **Clean sweep** — every artifact `compile` can produce must carry
+//!   zero diagnostics, errors *and* warnings, across star/box shapes,
+//!   1/2/3-D ranks, slab/pencil/block decompositions, and single-step /
+//!   fused / tail-stage step counts. This is load-bearing: debug builds
+//!   run Error-level checking inside `compile` itself, so a single
+//!   false positive would fail the whole test suite.
+//! * **Mutation pins** — each rule family must catch a seeded defect
+//!   and report the *exact* rule id and location, the way a register
+//!   file test pins one bit at a time: an underbuffered channel cycle
+//!   (`deadlock/cycle-buffering`), a dropped halo transfer
+//!   (`exchange/coverage`), a zero-bandwidth boundary link
+//!   (`exchange/link-capacity`), a fabric budget the residency plan
+//!   contradicts (`capacity/resident-overflow`, `capacity/needless-
+//!   spill`), and a tile box escaping the grid (`plan/halo-bounds`).
+//!
+//! The final test closes the loop the ISSUE demands: fixtures that pass
+//! the static deadlock rules also run to completion under the runtime
+//! quiet-period detector — the dynamic check the `deadlock/*` family is
+//! the static analogue of.
+
+use std::sync::Arc;
+
+use stencil_cgra::analysis::deadlock::fundamental_cycles;
+use stencil_cgra::analysis::{check, CheckLevel, Severity};
+use stencil_cgra::compile::{compile, CompileOptions, CompiledStencil};
+use stencil_cgra::session::Session;
+use stencil_cgra::stencil::decomp::DecompKind;
+use stencil_cgra::stencil::spec::{symmetric_taps, uniform_box_taps, y_taps, z_taps};
+use stencil_cgra::stencil::StencilSpec;
+use stencil_cgra::util::rng::XorShift;
+
+fn opts(tiles: usize, kind: DecompKind) -> CompileOptions {
+    CompileOptions::default()
+        .with_workers(2)
+        .with_tiles(tiles)
+        .with_decomp(kind)
+}
+
+/// The standard mutation fixture: two slab tiles of a radius-2 1-D
+/// star, two fused steps — small, but with real halo transfers, a
+/// residency plan, placed graphs with reconvergent channel paths, and
+/// (depth permitting) a boundary ring.
+fn two_tile_1d() -> CompiledStencil {
+    let spec = StencilSpec::dim1(96, symmetric_taps(2)).unwrap();
+    compile(&spec, 2, &opts(2, DecompKind::Slab)).unwrap()
+}
+
+#[test]
+fn clean_sweep_across_shapes_ranks_and_decompositions() {
+    let cases: Vec<(StencilSpec, DecompKind, usize)> = vec![
+        (StencilSpec::dim1(96, symmetric_taps(2)).unwrap(), DecompKind::Slab, 4),
+        (
+            StencilSpec::dim2(28, 20, symmetric_taps(1), y_taps(1)).unwrap(),
+            DecompKind::Slab,
+            2,
+        ),
+        (
+            StencilSpec::dim2(32, 24, symmetric_taps(2), y_taps(2)).unwrap(),
+            DecompKind::Block,
+            4,
+        ),
+        (
+            StencilSpec::box2d(28, 22, 1, 1, uniform_box_taps(1, 1, 0)).unwrap(),
+            DecompKind::Slab,
+            2,
+        ),
+        (
+            StencilSpec::dim3(16, 12, 10, symmetric_taps(1), y_taps(1), z_taps(1)).unwrap(),
+            DecompKind::Pencil,
+            4,
+        ),
+        (
+            StencilSpec::box3d(14, 12, 10, 1, 1, 1, uniform_box_taps(1, 1, 1)).unwrap(),
+            DecompKind::Block,
+            8,
+        ),
+    ];
+    // steps = 1 (host), 3 (fused + tail stage when depth 2 fits), 4
+    // (fused, chunk-aligned) — the three stage-schedule shapes.
+    for (spec, kind, tiles) in &cases {
+        for steps in [1usize, 3, 4] {
+            let c = compile(spec, steps, &opts(*tiles, *kind)).unwrap();
+            let report = check(&c);
+            assert!(
+                report.is_clean(),
+                "dims {:?} kind={kind} tiles={tiles} steps={steps} not clean:\n{}",
+                spec.dims(),
+                report.to_text()
+            );
+            // The strictest gate passes too — `--deny warn` in CI runs
+            // exactly this over the example artifacts.
+            report.gate(CheckLevel::Full).unwrap();
+        }
+    }
+}
+
+#[test]
+fn the_compile_gate_accepts_full_checking_on_clean_plans() {
+    // Explicit Full-level checking inside compile() (stricter than the
+    // debug default) on a two-stage fused schedule.
+    let spec = StencilSpec::dim2(24, 16, symmetric_taps(1), y_taps(1)).unwrap();
+    let o = opts(2, DecompKind::Slab).with_check(CheckLevel::Full);
+    let c = compile(&spec, 3, &o).unwrap();
+    assert_eq!(c.options.check, CheckLevel::Full);
+}
+
+#[test]
+fn load_checked_accepts_a_clean_saved_artifact() {
+    let c = two_tile_1d();
+    let path = std::env::temp_dir().join(format!(
+        "scgra_static_check_{}.txt",
+        std::process::id()
+    ));
+    c.save(&path).unwrap();
+    let back = CompiledStencil::load_checked(&path, CheckLevel::Full).unwrap();
+    assert_eq!(back.options, c.options, "check level survives the round trip");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn underbuffering_a_channel_cycle_is_pinned_to_the_buffering_rule() {
+    let mut c = two_tile_1d();
+    let key = {
+        let mut ks: Vec<[usize; 3]> = c.stages[0].graphs.keys().copied().collect();
+        ks.sort_unstable();
+        ks[0]
+    };
+    {
+        let arc = c.stages[0].graphs.get_mut(&key).unwrap();
+        let pg = Arc::get_mut(arc).expect("compile leaves each placed graph unshared");
+        let cycles = fundamental_cycles(pg);
+        assert!(!cycles.is_empty(), "1-D mapped graphs have reconvergent paths");
+        // Shrink EVERY channel on one fundamental cycle to capacity ==
+        // latency. One channel alone is not enough: placement gives the
+        // others `capacity >= latency + 2`, whose summed slack covers a
+        // single missing in-flight slot.
+        for &e in &cycles[0] {
+            let lat = pg.channels()[e].latency() as usize;
+            pg.override_channel_capacity(e, lat);
+        }
+    }
+    let report = check(&c);
+    let d = report
+        .diagnostics
+        .iter()
+        .find(|d| d.rule == "deadlock/cycle-buffering")
+        .unwrap_or_else(|| panic!("buffering rule silent:\n{}", report.to_text()));
+    assert_eq!(d.severity, Severity::Error);
+    assert_eq!(d.location.stage, Some(0));
+    let obj = d.location.object.as_deref().unwrap();
+    assert!(obj.starts_with("graph "), "location names the placed graph: {obj}");
+    assert!(d.evidence.contains("chan"), "evidence lists the cycle: {}", d.evidence);
+    // The same shrink also trips the per-channel streaming floor.
+    assert!(report.diagnostics.iter().any(|d| d.rule == "deadlock/streaming-floor"));
+    assert!(report.gate(CheckLevel::Errors).is_err());
+}
+
+#[test]
+fn dropping_a_transfer_is_pinned_to_the_coverage_rule() {
+    let mut c = two_tile_1d();
+    let ex = &mut c.stages[0].intra_exchange.tiles[0];
+    assert!(!ex.from_tiles.is_empty(), "two slab tiles exchange halos");
+    ex.from_tiles.remove(0);
+    let report = check(&c);
+    let d = report
+        .diagnostics
+        .iter()
+        .find(|d| d.rule == "exchange/coverage")
+        .unwrap_or_else(|| panic!("coverage rule silent:\n{}", report.to_text()));
+    assert_eq!(d.severity, Severity::Error);
+    assert_eq!(d.location.stage, Some(0));
+    assert_eq!(d.location.tile, Some(0));
+    // The partition total `resident + exchanged == in_points` breaks
+    // with the missing transfer — the promoted builder assertion.
+    assert!(
+        report.diagnostics.iter().any(|d| d.rule == "exchange/resident-accounting"),
+        "{}",
+        report.to_text()
+    );
+}
+
+#[test]
+fn zero_link_bandwidth_is_pinned_to_the_link_capacity_rule() {
+    let mut c = two_tile_1d();
+    assert!(c.stages[0].intra_exchange.exchanged_points() > 0);
+    c.options.machine.link_words_per_cycle = 0;
+    let report = check(&c);
+    let d = report
+        .diagnostics
+        .iter()
+        .find(|d| d.rule == "exchange/link-capacity")
+        .unwrap_or_else(|| panic!("link rule silent:\n{}", report.to_text()));
+    assert_eq!(d.severity, Severity::Error);
+    assert_eq!(d.location.stage, Some(0));
+    assert_eq!(d.location.object.as_deref(), Some("intra-exchange"));
+}
+
+#[test]
+fn lying_about_the_fabric_budget_is_pinned_to_resident_overflow() {
+    let mut c = two_tile_1d();
+    assert!(
+        c.stages[0].residency.resident.iter().all(|&r| r),
+        "fixture is fully resident under the default budget"
+    );
+    c.options.fabric_tokens = 0;
+    let report = check(&c);
+    let d = report
+        .diagnostics
+        .iter()
+        .find(|d| d.rule == "capacity/resident-overflow")
+        .unwrap_or_else(|| panic!("overflow rule silent:\n{}", report.to_text()));
+    assert_eq!(d.severity, Severity::Error);
+    assert_eq!(d.location.stage, Some(0));
+    assert_eq!(d.location.tile, Some(0));
+    assert!(report.gate(CheckLevel::Errors).is_err());
+}
+
+#[test]
+fn a_needless_spill_warns_but_passes_the_error_gate() {
+    let mut c = two_tile_1d();
+    // A *consistent* lie: tile 0 spills although it fits, and the
+    // recorded spill total says so. Only the Warn-level policy rule can
+    // object — which is exactly the `--deny warn` distinction.
+    let in_pts = c.stages[0].plan.tiles[0].in_points();
+    c.stages[0].residency.resident[0] = false;
+    c.stages[0].residency.spilled_points += in_pts;
+    let report = check(&c);
+    assert_eq!(report.error_count(), 0, "{}", report.to_text());
+    let d = report
+        .diagnostics
+        .iter()
+        .find(|d| d.rule == "capacity/needless-spill")
+        .unwrap_or_else(|| panic!("spill rule silent:\n{}", report.to_text()));
+    assert_eq!(d.severity, Severity::Warn);
+    assert_eq!(d.location.tile, Some(0));
+    report.gate(CheckLevel::Errors).unwrap();
+    assert!(report.gate(CheckLevel::Full).is_err(), "deny-warn rejects it");
+}
+
+#[test]
+fn an_out_of_grid_tile_is_pinned_to_halo_bounds() {
+    let mut c = two_tile_1d();
+    let nx = c.spec.nx;
+    c.stages[0].plan.tiles[0].in_hi[0] = nx + 3;
+    let report = check(&c);
+    let d = report
+        .diagnostics
+        .iter()
+        .find(|d| d.rule == "plan/halo-bounds")
+        .unwrap_or_else(|| panic!("bounds rule silent:\n{}", report.to_text()));
+    assert_eq!(d.severity, Severity::Error);
+    assert_eq!(d.location.stage, Some(0));
+    assert_eq!(d.location.tile, Some(0));
+}
+
+#[test]
+fn static_deadlock_verdict_matches_the_runtime_detector() {
+    // Fixtures shaped like the cross-core differential suite's: the
+    // runtime quiet-period detector (`deadlock: no progress ...`) runs
+    // over exactly these placed graphs. A clean `deadlock/*` verdict
+    // must mean the simulation completes — if it ever deadlocked, the
+    // static analogue missed a cycle and this test fails loudly.
+    let cases: Vec<(StencilSpec, usize, usize)> = vec![
+        (StencilSpec::dim1(64, symmetric_taps(2)).unwrap(), 1, 1),
+        (
+            StencilSpec::dim2(24, 16, symmetric_taps(1), y_taps(1)).unwrap(),
+            2,
+            2,
+        ),
+        (
+            StencilSpec::dim3(12, 10, 8, symmetric_taps(1), y_taps(1), z_taps(1)).unwrap(),
+            2,
+            1,
+        ),
+    ];
+    for (spec, tiles, steps) in cases {
+        let c = compile(&spec, steps, &opts(tiles, DecompKind::Auto)).unwrap();
+        let report = check(&c);
+        assert!(
+            report.diagnostics.iter().all(|d| !d.rule.starts_with("deadlock/")),
+            "dims {:?}: {}",
+            spec.dims(),
+            report.to_text()
+        );
+        let machine = c.options.machine.clone();
+        let mut rng = XorShift::new(5);
+        let input = rng.normal_vec(spec.grid_points());
+        if let Err(e) = Session::new(Arc::new(c), machine).run(&input) {
+            panic!(
+                "dims {:?}: runtime failed ({}) although the static deadlock \
+                 verdict was clean: {e}",
+                spec.dims(),
+                e.kind()
+            );
+        }
+    }
+}
